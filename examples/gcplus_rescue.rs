@@ -1,0 +1,81 @@
+//! GC⁺ rescue demo (paper §VI): on a network where the standard binary GC
+//! decoder is effectively dead (P_O ≈ 1), the complementary decoder turns
+//! the *same* received rows into recovered local models — and client-to-
+//! client outages *help*, by raising the rank of the received coefficients
+//! (Lemma 2).
+//!
+//!     cargo run --release --example gcplus_rescue
+//!
+//! Pure coding layer with synthetic payloads; exact decode errors printed.
+
+use cogc::gc::GcCode;
+use cogc::linalg::rank;
+use cogc::network::{Network, Realization};
+use cogc::outage::mc::{gcplus_recovery, RecoveryMode};
+use cogc::outage::overall_outage;
+use cogc::sim::{simulate_round, Decoder, Outcome};
+use cogc::util::rng::Rng;
+
+fn main() {
+    let (m, s, tr) = (10, 7, 2);
+    let net = Network::conn_tier("poor", m); // p_c2s = 0.75, p_c2c = 0.8
+    let mut rng = Rng::new(2025);
+
+    println!("network: p(client->PS outage) = 0.75, p(client->client outage) = 0.8\n");
+
+    // 1. standard GC is dead
+    let code = GcCode::generate(m, s, &mut rng);
+    let po = overall_outage(&net, &code);
+    println!("standard GC decoder: P_O = {po:.6}  ->  E[rounds/success] = {:.0}", 1.0 / (1.0 - po));
+
+    // 2. the rank story: perturbation raises rank above M - s = 3
+    println!("\nrank of received coefficients (Lemma 2): unperturbed rank(B) = {}", m - s);
+    for trial in 0..5 {
+        let code = GcCode::generate(m, s, &mut rng);
+        let real = Realization::sample(&net, &mut rng);
+        let perturbed = cogc::gc::gcplus::perturb(&code, &real);
+        println!(
+            "  trial {trial}: rank(B perturbed) = {} (erasures broke the cyclic structure)",
+            rank(&perturbed)
+        );
+    }
+
+    // 3. GC+ decodes payloads exactly
+    println!("\nGC+ on synthetic payloads (t_r = {tr}, exact decode errors):");
+    let mut decoded_rounds = 0;
+    for round in 0..10 {
+        let r = simulate_round(&net, m, s, 64, Decoder::GcPlus { tr }, &mut rng);
+        match &r.outcome {
+            Outcome::Standard { .. } => println!("  round {round}: standard GC decoded (lucky round)"),
+            Outcome::Full => {
+                decoded_rounds += 1;
+                println!("  round {round}: FULL recovery, max decode err {:.2e}", r.decode_err);
+            }
+            Outcome::Partial { k4 } => {
+                decoded_rounds += 1;
+                println!(
+                    "  round {round}: partial recovery of {:?}, max decode err {:.2e}",
+                    k4, r.decode_err
+                );
+            }
+            Outcome::None => println!("  round {round}: nothing decodable this round"),
+        }
+    }
+    println!("  -> {decoded_rounds}/10 rounds recovered information the standard decoder discards");
+
+    // 4. aggregate statistics, both repetition modes
+    println!("\nrecovery statistics over 2000 rounds:");
+    for (mode, name) in [
+        (RecoveryMode::FixedTr(tr), "fixed t_r = 2        "),
+        (RecoveryMode::UntilDecode { tr, max_blocks: 50 }, "until-decode (Alg. 1)"),
+    ] {
+        let st = gcplus_recovery(&net, m, s, mode, 2000, &mut rng);
+        println!(
+            "  {name}: full {:.3}  partial {:.3}  none {:.3}  (mean attempts {:.1})",
+            st.p_full(),
+            st.p_partial(),
+            st.p_none(),
+            st.mean_attempts()
+        );
+    }
+}

@@ -1,0 +1,68 @@
+//! Outage analysis walk-through (paper §IV–§V): closed-form P_O vs
+//! Monte-Carlo, the P₁/P₂/P₃ subcase decomposition, cost-efficient code
+//! design, and the Theorem-1 convergence-bound numerics.
+//!
+//!     cargo run --release --example outage_analysis
+//!
+//! Needs no artifacts — pure coding-theory layer.
+
+use cogc::gc::GcCode;
+use cogc::network::Network;
+use cogc::outage::theory::{expected_rounds_between_success, theorem1_bound, Theorem1Params};
+use cogc::outage::{self, design};
+use cogc::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(42);
+    let m = 10;
+
+    println!("== closed form vs Monte-Carlo (M={m}) ==");
+    println!("{:>3} {:>6} {:>6} {:>10} {:>10} {:>26}", "s", "p_m", "p_mk", "P_O exact", "P_O mc", "P1 + P2 + P3");
+    for &(s, pm, pmk) in &[(7usize, 0.4, 0.25), (7, 0.75, 0.5), (3, 0.2, 0.2), (5, 0.1, 0.1)] {
+        let net = Network::homogeneous(m, pm, pmk);
+        let code = GcCode::generate(m, s, &mut rng);
+        let exact = outage::overall_outage(&net, &code);
+        let mc = outage::estimate_outage(&net, &code, 40_000, &mut rng);
+        let (p1, p2, p3) = outage::subcase_probs(&net, &code);
+        println!(
+            "{s:>3} {pm:>6.2} {pmk:>6.2} {exact:>10.5} {mc:>10.5} {:>8.5}+{:>8.5}+{:>8.5}",
+            p1, p2, p3
+        );
+        assert!((p1 + p2 + p3 - exact).abs() < 1e-9);
+    }
+
+    println!("\n== Remark 4: expected rounds between successful recoveries ==");
+    for &po in &[0.1, 0.5, 0.9, 0.99] {
+        println!("  P_O = {po:<5}  E[R] = {:.1}", expected_rounds_between_success(po));
+    }
+
+    println!("\n== cost-efficient design (eq. 21): p = 0.1, target P_O* = 0.5 ==");
+    let net = Network::homogeneous(m, 0.1, 0.1);
+    println!("{:>3} {:>10} {:>12} {:>14}", "s", "P_O", "tx/round", "tx/success");
+    for d in design::sweep(&net, 1) {
+        println!(
+            "{:>3} {:>10.6} {:>12.2} {:>14.2}",
+            d.s, d.p_o, d.tx_per_round, d.tx_per_success
+        );
+    }
+    let pick = design::cost_efficient_s(&net, 0.5, 1).unwrap();
+    println!("=> s* = {} (P_O = {:.4}), vs default s = 7", pick.s, pick.p_o);
+
+    println!("\n== Theorem 1: epsilon(P_O) at T = 1e7, M = 10, I = 5 ==");
+    for &po in &[0.1, 0.3, 0.6, 0.9] {
+        let b = theorem1_bound(&Theorem1Params {
+            m,
+            t: 10_000_000,
+            i: 5,
+            p_o: po,
+            p_c2s: vec![0.3; m],
+            sigma2: 1.0,
+            d2: vec![1.0; m],
+            f_gap: 10.0,
+        });
+        println!(
+            "  P_O = {po:<4}  eps = {:>10.5}  (valid: {})",
+            b.epsilon, b.valid
+        );
+    }
+}

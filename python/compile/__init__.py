@@ -1,0 +1,6 @@
+"""Build-time compile path: L1 Pallas kernels + L2 JAX models + AOT lowering.
+
+Nothing in this package runs on the request path; ``make artifacts`` invokes
+``compile.aot`` once and the rust coordinator consumes ``artifacts/`` from
+then on.
+"""

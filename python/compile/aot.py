@@ -1,0 +1,162 @@
+"""AOT pipeline: lower every L2 step to HLO *text* + write the manifest.
+
+HLO text (never ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. Lowered with ``return_tuple=True``
+and unwrapped with ``to_tuple1()``/``decompose()`` on the rust side.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts [--m 10 --tr 2]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+from .models import common as cm
+
+F32, I32, U32 = jnp.float32, jnp.int32, jnp.uint32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def entry_arity(text: str) -> int:
+    """Count ENTRY-computation parameters (jax strips unused arguments when
+    lowering, so the artifact arity can be smaller than the python
+    signature; the rust runtime adapts via the manifest)."""
+    entry = text[text.index("ENTRY") :]
+    entry = entry[: entry.index("\n}")]
+    return entry.count(" parameter(")
+
+
+def lower_to_file(fn, args, path: str) -> int:
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+# Per-model data plumbing: (input specs, manifest metadata).
+def model_io(name: str, batch: int):
+    if name == "transformer":
+        cfg = model_lib.transformer.CONFIG
+        x = spec((batch, cfg.seq_len), I32)
+        y = spec((batch, cfg.seq_len), I32)
+        meta = {
+            "kind": "lm",
+            "vocab": cfg.vocab,
+            "seq_len": cfg.seq_len,
+            "d_model": cfg.d_model,
+            "n_head": cfg.n_head,
+            "n_layer": cfg.n_layer,
+        }
+    else:
+        model = model_lib.MODELS[name]
+        x = spec((batch,) + model.IMAGE_SHAPE, F32)
+        y = spec((batch,), I32)
+        meta = {
+            "kind": "classifier",
+            "image_shape": list(model.IMAGE_SHAPE),
+            "num_classes": model.NUM_CLASSES,
+        }
+    return x, y, meta
+
+
+DEFAULT_BATCH = {"mnist_cnn": 32, "cifar_cnn": 32, "transformer": 8}
+
+
+def build(out_dir: str, m: int, tr: int, names, batches=None, verbose=True):
+    os.makedirs(out_dir, exist_ok=True)
+    batches = dict(DEFAULT_BATCH, **(batches or {}))
+    mt = m * tr
+    manifest = {"m": m, "tr": tr, "mt": mt, "models": {}}
+
+    for name in names:
+        model = model_lib.MODELS[name]
+        d = model.D
+        batch = batches[name]
+        x, y, meta = model_io(name, batch)
+        if name == "transformer":
+            train_fn, eval_fn = model_lib.make_transformer_steps()
+        else:
+            train_fn, eval_fn = model_lib.make_classifier_steps(model)
+        encode_fn, decode_fn = model_lib.make_coded_ops(m, mt, d)
+        apply_fn = model_lib.make_sgd_apply()
+
+        files = {}
+        arities = {}
+
+        def emit(tag, fn, args, files=files, arities=arities, name=name):
+            path = f"{name}.{tag}.hlo.txt"
+            full = os.path.join(out_dir, path)
+            n = lower_to_file(fn, args, full)
+            files[tag] = path
+            arities[tag] = entry_arity(open(full).read())
+            if verbose:
+                print(f"  {path}: {n} chars, {arities[tag]} params")
+
+        if verbose:
+            print(f"[aot] {name}: D={d} batch={batch}")
+        emit("train", train_fn, (spec((d,)), x, y, spec((), U32), spec((), F32))),
+        emit("eval", eval_fn, (spec((d,)), x, y))
+        emit("encode", encode_fn, (spec((m, m)), spec((m, d))))
+        emit("decode", decode_fn, (spec((m, mt)), spec((mt, d))))
+        emit("sgd", apply_fn, (spec((d,)), spec((d,)), spec((), F32)))
+
+        manifest["models"][name] = {
+            "d": d,
+            "batch": batch,
+            "x_shape": list(x.shape),
+            "x_dtype": str(x.dtype),
+            "y_shape": list(y.shape),
+            "y_dtype": str(y.dtype),
+            "meta": meta,
+            "artifacts": files,
+            "arities": arities,
+            "params": [
+                {
+                    "name": t.name,
+                    "shape": list(t.shape),
+                    "init": t.init,
+                    "fan_in": t.fan_in,
+                }
+                for t in model.SPECS
+            ],
+        }
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"[aot] wrote {out_dir}/manifest.json")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--m", type=int, default=10, help="number of clients M")
+    ap.add_argument("--tr", type=int, default=2, help="max GC+ repeats t_r")
+    ap.add_argument(
+        "--models", nargs="*", default=list(model_lib.MODELS), help="models to build"
+    )
+    args = ap.parse_args()
+    build(args.out, args.m, args.tr, args.models)
+
+
+if __name__ == "__main__":
+    main()

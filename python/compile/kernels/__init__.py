@@ -1,0 +1,6 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO modules)."""
+
+from .coded_matmul import coded_matmul
+from .sgd import sgd_apply
+
+__all__ = ["coded_matmul", "sgd_apply"]

@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: coded gradient combine  O[R, D] = W[R, K] @ S[K, D].
+
+This is the numeric hot-spot of gradient coding: every encode (partial sums
+``s_m = sum_k b_mk * dg_k``), every standard-GC combinator application
+(``a_f @ S``) and every GC+ decode transform is an instance of a short-K
+matmul of a small coefficient panel against a stack of flat gradient
+vectors.
+
+TPU mapping (see DESIGN.md `Hardware-Adaptation`): the coefficient panel
+W (R x K, at most ~20x20 floats) stays resident in VMEM for the whole
+kernel; the gradient stack S is streamed HBM->VMEM one D-tile at a time
+via the BlockSpec grid, and each output tile is written exactly once.
+The kernel is bandwidth-bound (arithmetic intensity ~ 2K/(4*(1+R/K))
+flop/byte), so the streaming schedule is the roofline-optimal shape.
+
+Lowered with ``interpret=True``: the CPU PJRT client cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO, which is what
+the rust runtime loads.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default D-axis tile. VMEM budget at K<=24, R<=10 (f32):
+#   W panel 24x10 (~1 KB, resident) + S tile 24x32768 (3.1 MB)
+#   + O tile 10x32768 (1.3 MB)  =>  ~4.4 MB double-buffered < 16 MB VMEM.
+# Large tiles matter twice over: on TPU they amortize the HBM->VMEM DMA per
+# grid step; under interpret=True (the CPU artifact path) every grid step
+# lowers to a serial HLO loop iteration with dynamic-slice overhead, so the
+# step count directly sets the wallclock (measured 36ms -> ~1ms on the
+# D=51480 encode when moving 512 -> 32768; see EXPERIMENTS.md §Perf).
+DEFAULT_TILE_D = 65536
+
+
+def _kernel(w_ref, s_ref, o_ref, *, acc_dtype):
+    """One grid step: multiply the resident panel against one S tile."""
+    w = w_ref[...]
+    s = s_ref[...]
+    acc = jnp.dot(
+        w.astype(acc_dtype), s.astype(acc_dtype), preferred_element_type=acc_dtype
+    )
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def coded_matmul(w, s, *, tile_d: int = DEFAULT_TILE_D, interpret: bool = True):
+    """Compute ``w @ s`` with the Pallas coded-combine kernel.
+
+    Args:
+      w: ``[R, K]`` coefficient panel (perturbed GC coefficients ``b_mk`` /
+         combinator rows ``a_f`` / GC+ decode transform rows).
+      s: ``[K, D]`` stacked flat gradient vectors.
+      tile_d: block length along the D axis; D is zero-padded up to a
+         multiple of the tile so every grid step sees a full block.
+      interpret: lower to plain HLO (required for CPU PJRT execution).
+
+    Returns:
+      ``[R, D]`` combined gradients, in ``s.dtype``.
+    """
+    if w.ndim != 2 or s.ndim != 2:
+        raise ValueError(f"coded_matmul expects 2-D operands, got {w.shape}, {s.shape}")
+    r, k = w.shape
+    k2, d = s.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: W is {w.shape}, S is {s.shape}")
+
+    td = min(tile_d, max(d, 1))
+    d_pad = pl.cdiv(d, td) * td
+    if d_pad != d:
+        s = jnp.pad(s, ((0, 0), (0, d_pad - d)))
+    grid = (d_pad // td,)
+
+    out = pl.pallas_call(
+        partial(_kernel, acc_dtype=jnp.float32),
+        grid=grid,
+        in_specs=[
+            # Coefficient panel: resident, same block every grid step.
+            pl.BlockSpec((r, k), lambda i: (0, 0)),
+            # Gradient stack: stream one D tile per step.
+            pl.BlockSpec((k, td), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((r, td), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((r, d_pad), s.dtype),
+        interpret=interpret,
+    )(w, s)
+    return out[:, :d]

@@ -1,0 +1,22 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: pytest (python/tests/test_kernels.py)
+sweeps shapes and dtypes with hypothesis and asserts the Pallas kernels match
+these references to tight tolerances.
+"""
+
+import jax.numpy as jnp
+
+
+def coded_matmul_ref(w, s):
+    """``[R,K] @ [K,D]`` with f32 accumulation, result in ``s.dtype``."""
+    acc = jnp.dot(
+        w.astype(jnp.float32), s.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return acc.astype(s.dtype)
+
+
+def sgd_apply_ref(params, grad, lr):
+    """``params - lr * grad``."""
+    return params - jnp.asarray(lr, params.dtype) * grad

@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: fused SGD apply  p' = p - lr * g over a flat D-vector.
+
+Used inside every L2 train step (the local SGD iteration of eq. (2) in the
+paper) and as a standalone artifact for the PS-side global update
+``g_r <- g_{r-1} + dg_r`` (lr = -1).
+
+The flat parameter vector is viewed as ``[1, D]`` and streamed through VMEM
+one tile at a time; the learning rate rides along as a (1,1) block that maps
+to the same element for every grid step.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM at f32: 3 vectors x 262144 x 4 B = 3 MB per grid step — comfortably
+# inside a TPU core's VMEM; and few serial loop iterations on the
+# interpret=True CPU path (see coded_matmul.py for why step count matters).
+DEFAULT_TILE_D = 262144
+
+
+def _kernel(lr_ref, p_ref, g_ref, o_ref):
+    o_ref[...] = p_ref[...] - lr_ref[0, 0] * g_ref[...]
+
+
+def sgd_apply(params, grad, lr, *, tile_d: int = DEFAULT_TILE_D, interpret: bool = True):
+    """Return ``params - lr * grad`` (all ``f32[D]``, ``lr`` scalar)."""
+    if params.shape != grad.shape or params.ndim != 1:
+        raise ValueError(f"shape mismatch: {params.shape} vs {grad.shape}")
+    (d,) = params.shape
+    td = min(tile_d, max(d, 1))
+    d_pad = pl.cdiv(d, td) * td
+    p = params.reshape(1, d)
+    g = grad.reshape(1, d)
+    if d_pad != d:
+        p = jnp.pad(p, ((0, 0), (0, d_pad - d)))
+        g = jnp.pad(g, ((0, 0), (0, d_pad - d)))
+    lr2 = jnp.asarray(lr, params.dtype).reshape(1, 1)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(d_pad // td,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, td), lambda i: (0, i)),
+            pl.BlockSpec((1, td), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, td), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, d_pad), params.dtype),
+        interpret=interpret,
+    )(lr2, p, g)
+    return out[0, :d]

@@ -1,0 +1,95 @@
+"""L2 step factories: the jittable functions that become AOT artifacts.
+
+Each model contributes five artifacts (all flat-parameter, fixed shapes):
+
+  train_step(flat[D], x, y, seed u32[], lr f32[]) -> (flat'[D], loss[])
+      one local SGD iteration of paper eq. (2); the parameter update is the
+      L1 fused ``sgd_apply`` Pallas kernel.
+  eval_step(flat[D], x, y) -> (loss[], correct[])
+  coded_encode(W[M,M],  S[M,D])  -> [M,D]    gradient-sharing partial sums,
+      paper eq. (8): rows of W are the erasure-masked b_m; S stacks dg_k.
+  coded_decode(W[M,MT], S[MT,D]) -> [M,D]    standard-GC combinator rows /
+      GC+ decode transform (MT = M * t_r stacked rows, zero-padded).
+  sgd_apply(p[D], g[D], lr[]) -> [D]         PS-side global update.
+
+Both coded ops are the L1 ``coded_matmul`` Pallas kernel, so the entire
+runtime compute surface is covered by kernel + model HLO modules.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import coded_matmul, sgd_apply
+from .models import cifar_cnn, mnist_cnn, transformer
+from .models import common as cm
+
+
+def make_classifier_steps(model):
+    """(train_step, eval_step) for an image-classification model module."""
+
+    def loss_fn(flat, x, y, key):
+        logits = model.apply(flat, x, key=key, train=True)
+        return cm.nll_loss(logits, y)
+
+    def train_step(flat, x, y, seed, lr):
+        key = jax.random.PRNGKey(seed)
+        loss, grad = jax.value_and_grad(loss_fn)(flat, x, y, key)
+        new_flat = sgd_apply(flat, grad, lr)
+        return new_flat, loss
+
+    def eval_step(flat, x, y):
+        logits = model.apply(flat, x, train=False)
+        loss = cm.nll_loss(logits, y)
+        correct = jnp.sum((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+        return loss, correct
+
+    return train_step, eval_step
+
+
+def make_transformer_steps(cfg=transformer.CONFIG):
+    """(train_step, eval_step) for the decoder-only LM."""
+
+    def loss_fn(flat, tokens, targets):
+        return transformer.next_token_loss(flat, tokens, targets, cfg)
+
+    def train_step(flat, tokens, targets, seed, lr):
+        del seed  # no dropout in the LM; kept for a uniform artifact signature
+        loss, grad = jax.value_and_grad(loss_fn)(flat, tokens, targets)
+        new_flat = sgd_apply(flat, grad, lr)
+        return new_flat, loss
+
+    def eval_step(flat, tokens, targets):
+        logits = transformer.apply(flat, tokens, train=False, cfg=cfg)
+        logp = jax.nn.log_softmax(logits)
+        picked = jnp.take_along_axis(logp, targets[:, :, None], axis=2)[:, :, 0]
+        loss = -jnp.mean(picked)
+        correct = jnp.sum((jnp.argmax(logits, axis=2) == targets).astype(jnp.float32))
+        return loss, correct
+
+    return train_step, eval_step
+
+
+def make_coded_ops(m: int, mt: int, d: int):
+    """(encode, decode) coded-combine graph functions for a model of size d."""
+
+    def coded_encode(w, s):
+        return coded_matmul(w, s)
+
+    def coded_decode(w, s):
+        return coded_matmul(w, s)
+
+    return coded_encode, coded_decode
+
+
+def make_sgd_apply():
+    def apply_fn(p, g, lr):
+        return sgd_apply(p, g, lr)
+
+    return apply_fn
+
+
+MODELS = {
+    "mnist_cnn": mnist_cnn,
+    "cifar_cnn": cifar_cnn,
+    "transformer": transformer,
+}

@@ -1,0 +1,5 @@
+"""L2 model zoo: the paper's Table-II CNNs plus the e2e transformer."""
+
+from . import cifar_cnn, mnist_cnn, transformer
+
+__all__ = ["mnist_cnn", "cifar_cnn", "transformer"]

@@ -1,0 +1,36 @@
+"""Paper Table II CIFAR-10 model:
+C(3,32) - R - M - C(32,32) - R - M - L(256) - R - L(64) - R - L(10).
+
+3x3 convs, stride 1, padding 1; 2x2 max-pool (32 -> 16 -> 8); NLL loss.
+"""
+
+import jax
+
+from . import common as cm
+
+NAME = "cifar_cnn"
+IMAGE_SHAPE = (3, 32, 32)
+NUM_CLASSES = 10
+
+SPECS = (
+    cm.conv_spec("conv1", 3, 32)
+    + cm.conv_spec("conv2", 32, 32)
+    + cm.linear_spec("fc1", 32 * 8 * 8, 256)
+    + cm.linear_spec("fc2", 256, 64)
+    + cm.linear_spec("fc3", 64, NUM_CLASSES)
+)
+
+D = cm.total_size(SPECS)
+
+
+def apply(flat, x, *, key=None, train: bool):
+    """Forward pass. ``x``: f32[B,3,32,32] -> logits f32[B,10]."""
+    p = cm.unpack(flat, SPECS)
+    h = jax.nn.relu(cm.conv2d(x, p["conv1.w"], p["conv1.b"]))
+    h = cm.maxpool2(h)
+    h = jax.nn.relu(cm.conv2d(h, p["conv2.w"], p["conv2.b"]))
+    h = cm.maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ p["fc1.w"] + p["fc1.b"])
+    h = jax.nn.relu(h @ p["fc2.w"] + p["fc2.b"])
+    return h @ p["fc3.w"] + p["fc3.b"]

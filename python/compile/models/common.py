@@ -1,0 +1,118 @@
+"""Flat-parameter model plumbing shared by all L2 models.
+
+Every model is described by a list of :class:`TensorSpec`; its parameters
+live in a single ``f32[D]`` vector (the paper's model-as-a-vector
+abstraction, g in R^D). ``pack``/``unpack`` convert between the flat vector
+and the per-tensor pytree; ``init_flat`` draws a fresh initialization.
+
+The same spec (name, shape, init scheme, fan_in) is exported into
+``artifacts/manifest.json`` so the rust coordinator can initialize parameter
+vectors without any python on the runtime path.
+"""
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class TensorSpec:
+    name: str
+    shape: Tuple[int, ...]
+    # "uniform_fanin": U(-1/sqrt(fan_in), 1/sqrt(fan_in))  (torch Linear/Conv default)
+    # "zeros", "ones", "normal:<std>"
+    init: str
+    fan_in: int = 0
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+def total_size(specs: List[TensorSpec]) -> int:
+    return sum(t.size for t in specs)
+
+
+def unpack(flat, specs: List[TensorSpec]):
+    """Split ``f32[D]`` into the per-tensor dict (zero-copy reshapes)."""
+    out = {}
+    off = 0
+    for t in specs:
+        out[t.name] = flat[off : off + t.size].reshape(t.shape)
+        off += t.size
+    return out
+
+
+def pack(tree: dict, specs: List[TensorSpec]):
+    """Concatenate per-tensor values back into the flat ``f32[D]`` vector."""
+    return jnp.concatenate([tree[t.name].reshape(-1) for t in specs])
+
+
+def init_flat(key, specs: List[TensorSpec]):
+    """Draw a fresh flat parameter vector (python-side, used in tests)."""
+    chunks = []
+    for t in specs:
+        key, sub = jax.random.split(key)
+        if t.init == "zeros":
+            chunks.append(jnp.zeros((t.size,), jnp.float32))
+        elif t.init == "ones":
+            chunks.append(jnp.ones((t.size,), jnp.float32))
+        elif t.init == "uniform_fanin":
+            bound = 1.0 / np.sqrt(max(t.fan_in, 1))
+            chunks.append(
+                jax.random.uniform(sub, (t.size,), jnp.float32, -bound, bound)
+            )
+        elif t.init.startswith("normal:"):
+            std = float(t.init.split(":", 1)[1])
+            chunks.append(std * jax.random.normal(sub, (t.size,), jnp.float32))
+        else:
+            raise ValueError(f"unknown init scheme {t.init!r} for {t.name}")
+    return jnp.concatenate(chunks)
+
+
+def conv_spec(name: str, cin: int, cout: int, k: int = 3):
+    """Conv2d weight+bias specs with torch-default fan-in init."""
+    fan = cin * k * k
+    return [
+        TensorSpec(f"{name}.w", (cout, cin, k, k), "uniform_fanin", fan),
+        TensorSpec(f"{name}.b", (cout,), "uniform_fanin", fan),
+    ]
+
+
+def linear_spec(name: str, nin: int, nout: int):
+    """Linear weight+bias specs with torch-default fan-in init."""
+    return [
+        TensorSpec(f"{name}.w", (nin, nout), "uniform_fanin", nin),
+        TensorSpec(f"{name}.b", (nout,), "uniform_fanin", nin),
+    ]
+
+
+# -- layer helpers (NCHW, OIHW) ------------------------------------------------
+
+def conv2d(x, w, b, *, stride=1, padding="SAME"):
+    y = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding, dimension_numbers=("NCHW", "OIHW", "NCHW")
+    )
+    return y + b[None, :, None, None]
+
+
+def maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    )
+
+
+def dropout(x, key, rate: float):
+    keep = 1.0 - rate
+    mask = jax.random.bernoulli(key, keep, x.shape)
+    return jnp.where(mask, x / keep, 0.0)
+
+
+def nll_loss(logits, labels):
+    """Negative log-likelihood (paper Table II) over int labels."""
+    logp = jax.nn.log_softmax(logits)
+    picked = jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    return -jnp.mean(picked)

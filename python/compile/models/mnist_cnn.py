@@ -1,0 +1,37 @@
+"""Paper Table II MNIST model: C(1,10) - C(10,20) - D - L(50) - L(10).
+
+Conv layers are 3x3, stride 1, padding 1, each followed by ReLU and 2x2
+max-pool (28 -> 14 -> 7); dropout p=0.2 before the classifier head; NLL loss.
+"""
+
+import jax
+
+from . import common as cm
+
+NAME = "mnist_cnn"
+IMAGE_SHAPE = (1, 28, 28)
+NUM_CLASSES = 10
+DROPOUT = 0.2
+
+SPECS = (
+    cm.conv_spec("conv1", 1, 10)
+    + cm.conv_spec("conv2", 10, 20)
+    + cm.linear_spec("fc1", 20 * 7 * 7, 50)
+    + cm.linear_spec("fc2", 50, NUM_CLASSES)
+)
+
+D = cm.total_size(SPECS)
+
+
+def apply(flat, x, *, key=None, train: bool):
+    """Forward pass. ``x``: f32[B,1,28,28] -> logits f32[B,10]."""
+    p = cm.unpack(flat, SPECS)
+    h = jax.nn.relu(cm.conv2d(x, p["conv1.w"], p["conv1.b"]))
+    h = cm.maxpool2(h)
+    h = jax.nn.relu(cm.conv2d(h, p["conv2.w"], p["conv2.b"]))
+    h = cm.maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    if train:
+        h = cm.dropout(h, key, DROPOUT)
+    h = jax.nn.relu(h @ p["fc1.w"] + p["fc1.b"])
+    return h @ p["fc2.w"] + p["fc2.b"]

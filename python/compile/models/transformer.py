@@ -1,0 +1,119 @@
+"""Decoder-only transformer LM for the end-to-end driver (examples/e2e_transformer).
+
+Pre-norm GPT-style blocks: LN -> causal MHA -> residual, LN -> MLP(4x, GELU)
+-> residual; learned positional embeddings; untied LM head; next-token
+cross-entropy loss.
+
+The size is set by CONFIG; the default ("base") is a ~0.9M-parameter model
+sized so the full CoGC stack (M clients x I local steps x hundreds of
+rounds) runs in CPU-PJRT minutes. Scale knobs are d_model/n_layer/vocab —
+the architecture is the standard one and scales to 100M+ unchanged.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common as cm
+from .common import TensorSpec
+
+NAME = "transformer"
+
+
+@dataclass(frozen=True)
+class Config:
+    vocab: int = 256
+    seq_len: int = 32
+    d_model: int = 128
+    n_head: int = 4
+    n_layer: int = 4
+
+    @property
+    def d_head(self):
+        return self.d_model // self.n_head
+
+
+CONFIG = Config()
+
+
+def build_specs(cfg: Config = CONFIG):
+    d = cfg.d_model
+    specs = [
+        TensorSpec("tok_emb", (cfg.vocab, d), "normal:0.02"),
+        TensorSpec("pos_emb", (cfg.seq_len, d), "normal:0.02"),
+    ]
+    for i in range(cfg.n_layer):
+        pre = f"layer{i}."
+        specs += [
+            TensorSpec(pre + "ln1.g", (d,), "ones"),
+            TensorSpec(pre + "ln1.b", (d,), "zeros"),
+            TensorSpec(pre + "attn.wqkv", (d, 3 * d), "uniform_fanin", d),
+            TensorSpec(pre + "attn.bqkv", (3 * d,), "zeros"),
+            TensorSpec(pre + "attn.wo", (d, d), "uniform_fanin", d),
+            TensorSpec(pre + "attn.bo", (d,), "zeros"),
+            TensorSpec(pre + "ln2.g", (d,), "ones"),
+            TensorSpec(pre + "ln2.b", (d,), "zeros"),
+            TensorSpec(pre + "mlp.w1", (d, 4 * d), "uniform_fanin", d),
+            TensorSpec(pre + "mlp.b1", (4 * d,), "zeros"),
+            TensorSpec(pre + "mlp.w2", (4 * d, d), "uniform_fanin", 4 * d),
+            TensorSpec(pre + "mlp.b2", (d,), "zeros"),
+        ]
+    specs += [
+        TensorSpec("lnf.g", (d,), "ones"),
+        TensorSpec("lnf.b", (d,), "zeros"),
+        TensorSpec("head.w", (d, cfg.vocab), "uniform_fanin", d),
+        TensorSpec("head.b", (cfg.vocab,), "zeros"),
+    ]
+    return specs
+
+
+SPECS = build_specs()
+D = cm.total_size(SPECS)
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _attention(x, p, pre, cfg: Config):
+    bsz, t, d = x.shape
+    qkv = x @ p[pre + "attn.wqkv"] + p[pre + "attn.bqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(z):
+        return z.reshape(bsz, t, cfg.n_head, cfg.d_head).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    att = (q @ k.transpose(0, 1, 3, 2)) / np.sqrt(cfg.d_head)
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(causal[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    y = (att @ v).transpose(0, 2, 1, 3).reshape(bsz, t, d)
+    return y @ p[pre + "attn.wo"] + p[pre + "attn.bo"]
+
+
+def apply(flat, tokens, *, key=None, train: bool = True, cfg: Config = CONFIG):
+    """``tokens``: i32[B, T] -> logits f32[B, T, vocab]."""
+    p = cm.unpack(flat, build_specs(cfg))
+    t = tokens.shape[1]
+    x = p["tok_emb"][tokens] + p["pos_emb"][None, :t]
+    for i in range(cfg.n_layer):
+        pre = f"layer{i}."
+        x = x + _attention(_layernorm(x, p[pre + "ln1.g"], p[pre + "ln1.b"]), p, pre, cfg)
+        h = _layernorm(x, p[pre + "ln2.g"], p[pre + "ln2.b"])
+        h = jax.nn.gelu(h @ p[pre + "mlp.w1"] + p[pre + "mlp.b1"])
+        x = x + h @ p[pre + "mlp.w2"] + p[pre + "mlp.b2"]
+    x = _layernorm(x, p["lnf.g"], p["lnf.b"])
+    return x @ p["head.w"] + p["head.b"]
+
+
+def next_token_loss(flat, tokens, targets, cfg: Config = CONFIG):
+    """Mean cross-entropy of predicting ``targets`` from ``tokens``."""
+    logits = apply(flat, tokens, train=True, cfg=cfg)
+    logp = jax.nn.log_softmax(logits)
+    picked = jnp.take_along_axis(logp, targets[:, :, None], axis=2)[:, :, 0]
+    return -jnp.mean(picked)

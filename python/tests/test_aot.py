@@ -1,0 +1,62 @@
+"""AOT pipeline: HLO text artifacts + manifest are well-formed."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    # Lower only the (cheap) mnist model at a tiny batch; the full build is
+    # exercised by `make artifacts`.
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.build(
+        out, m=4, tr=2, names=["mnist_cnn"], batches={"mnist_cnn": 2}, verbose=False
+    )
+    return out, manifest
+
+
+def test_manifest_contents(built):
+    out, manifest = built
+    with open(os.path.join(out, "manifest.json")) as f:
+        on_disk = json.load(f)
+    assert on_disk == json.loads(json.dumps(manifest))
+    assert on_disk["m"] == 4 and on_disk["tr"] == 2 and on_disk["mt"] == 8
+    mm = on_disk["models"]["mnist_cnn"]
+    assert mm["d"] == 51480
+    assert mm["x_shape"] == [2, 1, 28, 28]
+    assert sorted(mm["artifacts"]) == ["decode", "encode", "eval", "sgd", "train"]
+    assert sum(
+        int(__import__("numpy").prod(p["shape"])) for p in mm["params"]
+    ) == mm["d"]
+
+
+def test_hlo_text_artifacts(built):
+    out, manifest = built
+    for tag, path in manifest["models"]["mnist_cnn"]["artifacts"].items():
+        full = os.path.join(out, path)
+        assert os.path.exists(full), full
+        text = open(full).read()
+        assert text.startswith("HloModule"), f"{path} is not HLO text"
+        assert "ENTRY" in text
+
+
+def test_train_artifact_has_expected_arity(built):
+    """flat, x, y, seed, lr = 5 parameters (unused args must not be stripped)."""
+    out, manifest = built
+    text = open(os.path.join(out, manifest["models"]["mnist_cnn"]["artifacts"]["train"])).read()
+    entry = text[text.index("ENTRY") :]
+    entry = entry[: entry.index("\n}")]
+    n_params = entry.count(" parameter(")
+    assert n_params == 5, f"expected 5 entry parameters, found {n_params}"
+
+
+def test_encode_decode_shapes(built):
+    out, manifest = built
+    enc = open(os.path.join(out, manifest["models"]["mnist_cnn"]["artifacts"]["encode"])).read()
+    dec = open(os.path.join(out, manifest["models"]["mnist_cnn"]["artifacts"]["decode"])).read()
+    assert "f32[4,51480]" in enc  # [M, D]
+    assert "f32[8,51480]" in dec  # [MT, D]

@@ -1,0 +1,149 @@
+"""L2 model correctness: pack/unpack, shapes, and learning signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as model_lib
+from compile.models import cifar_cnn, mnist_cnn, transformer
+from compile.models import common as cm
+
+
+@pytest.mark.parametrize("model", [mnist_cnn, cifar_cnn, transformer])
+def test_pack_unpack_roundtrip(model):
+    flat = cm.init_flat(jax.random.PRNGKey(0), model.SPECS)
+    assert flat.shape == (model.D,)
+    tree = cm.unpack(flat, model.SPECS)
+    again = cm.pack(tree, model.SPECS)
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(again))
+
+
+def test_param_counts():
+    # Hand-computed from the Table-II architectures.
+    assert mnist_cnn.D == (10 * 9 + 10) + (20 * 10 * 9 + 20) + (980 * 50 + 50) + (50 * 10 + 10)
+    assert cifar_cnn.D == (32 * 27 + 32) + (32 * 32 * 9 + 32) + (2048 * 256 + 256) + (
+        256 * 64 + 64
+    ) + (64 * 10 + 10)
+    assert transformer.D == cm.total_size(transformer.build_specs())
+
+
+@pytest.mark.parametrize("model", [mnist_cnn, cifar_cnn])
+def test_classifier_shapes(model):
+    flat = cm.init_flat(jax.random.PRNGKey(0), model.SPECS)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4,) + model.IMAGE_SHAPE)
+    logits = model.apply(flat, x, train=False)
+    assert logits.shape == (4, model.NUM_CLASSES)
+    logits_t = model.apply(flat, x, key=jax.random.PRNGKey(2), train=True)
+    assert logits_t.shape == (4, model.NUM_CLASSES)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_transformer_shapes():
+    cfg = transformer.CONFIG
+    flat = cm.init_flat(jax.random.PRNGKey(0), transformer.SPECS)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, cfg.seq_len), 0, cfg.vocab)
+    logits = transformer.apply(flat, toks)
+    assert logits.shape == (2, cfg.seq_len, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_transformer_causality():
+    """Changing a future token must not change past logits."""
+    cfg = transformer.CONFIG
+    flat = cm.init_flat(jax.random.PRNGKey(0), transformer.SPECS)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, cfg.seq_len), 0, cfg.vocab)
+    toks2 = toks.at[0, -1].set((toks[0, -1] + 1) % cfg.vocab)
+    l1 = np.asarray(transformer.apply(flat, toks))
+    l2 = np.asarray(transformer.apply(flat, toks2))
+    np.testing.assert_allclose(l1[0, :-1], l2[0, :-1], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(l1[0, -1], l2[0, -1])
+
+
+@pytest.mark.parametrize("name", ["mnist_cnn", "cifar_cnn"])
+def test_classifier_train_step_learns(name):
+    model = model_lib.MODELS[name]
+    train_step, eval_step = model_lib.make_classifier_steps(model)
+    train_step = jax.jit(train_step)
+    flat = cm.init_flat(jax.random.PRNGKey(0), model.SPECS)
+    # Easy separable batch: class = sign pattern of channel means.
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (16,) + model.IMAGE_SHAPE)
+    y = jnp.arange(16, dtype=jnp.int32) % model.NUM_CLASSES
+    x = x + 3.0 * y[:, None, None, None].astype(jnp.float32) / model.NUM_CLASSES
+    first = None
+    for i in range(40):
+        flat, loss = train_step(flat, x, y, jnp.uint32(i), jnp.float32(0.05))
+        if first is None:
+            first = float(loss)
+    assert float(loss) < 0.7 * first, f"loss {first} -> {float(loss)}"
+    ev_loss, correct = jax.jit(eval_step)(flat, x, y)
+    assert 0 <= float(correct) <= 16
+    assert np.isfinite(float(ev_loss))
+
+
+def test_transformer_train_step_learns():
+    train_step, eval_step = model_lib.make_transformer_steps()
+    train_step = jax.jit(train_step)
+    cfg = transformer.CONFIG
+    flat = cm.init_flat(jax.random.PRNGKey(0), transformer.SPECS)
+    toks = jnp.tile(jnp.arange(cfg.seq_len, dtype=jnp.int32) % 17, (4, 1))
+    targets = (toks + 1) % 17
+    first = None
+    for i in range(30):
+        flat, loss = train_step(flat, toks, targets, jnp.uint32(i), jnp.float32(0.05))
+        if first is None:
+            first = float(loss)
+    assert float(loss) < 0.5 * first, f"loss {first} -> {float(loss)}"
+    ev_loss, correct = jax.jit(eval_step)(flat, toks, targets)
+    assert 0 <= float(correct) <= 4 * cfg.seq_len
+
+
+def test_train_step_uses_pallas_sgd():
+    """The train step's update must equal p - lr*grad exactly (fused kernel)."""
+    model = mnist_cnn
+    train_step, _ = model_lib.make_classifier_steps(model)
+    flat = cm.init_flat(jax.random.PRNGKey(0), model.SPECS)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4,) + model.IMAGE_SHAPE)
+    y = jnp.array([0, 1, 2, 3], jnp.int32)
+
+    def loss_fn(f):
+        logits = model.apply(f, x, key=jax.random.PRNGKey(7), train=True)
+        return cm.nll_loss(logits, y)
+
+    new_flat, _ = train_step(flat, x, y, jnp.uint32(0), jnp.float32(0.1))
+    # independent grad at the same dropout key (seed 0 -> PRNGKey(0))
+    grad = jax.grad(
+        lambda f: cm.nll_loss(
+            model.apply(f, x, key=jax.random.PRNGKey(0), train=True), y
+        )
+    )(flat)
+    np.testing.assert_allclose(
+        np.asarray(new_flat), np.asarray(flat - 0.1 * grad), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_dropout_seed_changes_loss():
+    model = mnist_cnn
+    train_step, _ = model_lib.make_classifier_steps(model)
+    flat = cm.init_flat(jax.random.PRNGKey(0), model.SPECS)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8,) + model.IMAGE_SHAPE)
+    y = jnp.zeros((8,), jnp.int32)
+    _, l0 = train_step(flat, x, y, jnp.uint32(0), jnp.float32(0.0))
+    _, l1 = train_step(flat, x, y, jnp.uint32(12345), jnp.float32(0.0))
+    assert float(l0) != float(l1)
+
+
+def test_init_schemes():
+    specs = [
+        cm.TensorSpec("z", (3, 3), "zeros"),
+        cm.TensorSpec("o", (2,), "ones"),
+        cm.TensorSpec("n", (4000,), "normal:0.02"),
+        cm.TensorSpec("u", (4000,), "uniform_fanin", 100),
+    ]
+    flat = cm.init_flat(jax.random.PRNGKey(0), specs)
+    t = cm.unpack(flat, specs)
+    assert np.all(np.asarray(t["z"]) == 0)
+    assert np.all(np.asarray(t["o"]) == 1)
+    assert abs(float(jnp.std(t["n"])) - 0.02) < 0.002
+    assert float(jnp.max(jnp.abs(t["u"]))) <= 0.1 + 1e-6

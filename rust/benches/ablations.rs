@@ -1,0 +1,135 @@
+//! Ablation benches for the design choices called out in DESIGN.md:
+//!
+//!  A1  exact vs approximate (paper Algorithm 2) GC⁺ detection — recovery
+//!      rates and cost;
+//!  A2  t_r sweep — how stacking depth buys reliability (Lemma 3 in action);
+//!  A3  s sweep on a fixed network — the non-monotone P_O(s) the §V design
+//!      problem optimizes over;
+//!  A4  Pallas vs native combine, end-to-end training round;
+//!  A5  Design 1 vs Design 2 — update guarantee vs attempt cost.
+
+use cogc::bench::Suite;
+use cogc::coordinator::{Aggregator, Design, TrainConfig, Trainer};
+use cogc::gc::{self, GcCode};
+use cogc::metrics::Table;
+use cogc::network::{Network, Realization};
+use cogc::outage::mc::{gcplus_recovery, RecoveryMode};
+use cogc::outage::{self};
+use cogc::runtime::{default_artifacts_dir, CombineImpl, Engine, Manifest};
+use cogc::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(17);
+
+    // ── A1: exact vs approximate detection ──────────────────────────────
+    let mut t = Table::new(
+        "A1: GC+ exact vs Algorithm-2 approximate detection (M=10 s=7 t_r=2, 600 rounds/setting)",
+        &["setting", "exact_decode_rate", "approx_decode_rate", "exact_mean_k4", "approx_mean_k4"],
+    );
+    for setting in 1..=4usize {
+        let net = Network::fig6_setting(setting, 10);
+        let (mut ex_dec, mut ap_dec, mut ex_k4, mut ap_k4) = (0usize, 0usize, 0usize, 0usize);
+        let rounds = 600;
+        for _ in 0..rounds {
+            let attempts: Vec<gc::Attempt> = (0..2)
+                .map(|_| {
+                    let code = GcCode::generate(10, 7, &mut rng);
+                    gc::Attempt::observe(&code, &Realization::sample(&net, &mut rng))
+                })
+                .collect();
+            let stacked = gc::stack_attempts(&attempts);
+            if stacked.rows == 0 {
+                continue;
+            }
+            let ex = gc::decode(&stacked);
+            let ap = gc::decode_approx(&stacked);
+            if !ex.k4.is_empty() {
+                ex_dec += 1;
+                ex_k4 += ex.k4.len();
+            }
+            if !ap.k4.is_empty() {
+                ap_dec += 1;
+                ap_k4 += ap.k4.len();
+            }
+        }
+        t.row(&[
+            setting.to_string(),
+            format!("{:.4}", ex_dec as f64 / rounds as f64),
+            format!("{:.4}", ap_dec as f64 / rounds as f64),
+            format!("{:.2}", ex_k4 as f64 / ex_dec.max(1) as f64),
+            format!("{:.2}", ap_k4 as f64 / ap_dec.max(1) as f64),
+        ]);
+    }
+    t.print();
+
+    // ── A2: t_r sweep ────────────────────────────────────────────────────
+    let mut t = Table::new(
+        "A2: stacking depth t_r vs GC+ outcomes (setting 2: p_m=0.4, p_mk=0.5)",
+        &["t_r", "p_full", "p_partial", "p_none"],
+    );
+    let net = Network::fig6_setting(2, 10);
+    for tr in 1..=4usize {
+        let st = gcplus_recovery(&net, 10, 7, RecoveryMode::FixedTr(tr), 500, &mut rng);
+        t.rowf(&[tr as f64, st.p_full(), st.p_partial(), st.p_none()]);
+    }
+    t.print();
+
+    // ── A3: s sweep (non-monotone P_O) ──────────────────────────────────
+    let mut t = Table::new(
+        "A3: P_O(s) non-monotonicity across networks (closed form)",
+        &["s", "po_p0.1", "po_p0.3", "po_p0.5"],
+    );
+    for s in 1..10usize {
+        let code = GcCode::generate(10, s, &mut rng);
+        let row: Vec<f64> = std::iter::once(s as f64)
+            .chain([0.1, 0.3, 0.5].iter().map(|&p| {
+                outage::overall_outage(&Network::homogeneous(10, p, p), &code)
+            }))
+            .collect();
+        t.rowf(&row);
+    }
+    t.print();
+
+    // ── A4 + A5: end-to-end round ablations (need artifacts) ───────────
+    let engine = Engine::cpu().expect("pjrt");
+    let man = Manifest::load(&default_artifacts_dir()).expect("run `make artifacts`");
+    let net = Network::homogeneous(man.m, 0.3, 0.3);
+    let mut suite = Suite::new("ablations: end-to-end round");
+    for (label, imp) in [("pallas", CombineImpl::Pallas), ("native", CombineImpl::Native)] {
+        let mut cfg = TrainConfig::new(
+            "mnist_cnn",
+            Aggregator::GcPlus { tr: 2, until_decode: false, max_blocks: 1 },
+        );
+        cfg.rounds = 2;
+        cfg.per_client = 40;
+        cfg.eval_batches = 1;
+        cfg.combine = imp;
+        let t0 = std::time::Instant::now();
+        let mut trainer = Trainer::new(&engine, &man, cfg, net.clone()).unwrap();
+        let log = trainer.run().unwrap();
+        println!(
+            "A4 combine={label}: 2 rounds in {:.2}s (outcomes: {:?})",
+            t0.elapsed().as_secs_f64(),
+            log.rounds.iter().map(|r| r.outcome.clone()).collect::<Vec<_>>()
+        );
+    }
+    for (label, design) in [("design1_retry", Design::RetryUntilSuccess), ("design2_skip", Design::SkipRound)] {
+        let mut cfg = TrainConfig::new(
+            "mnist_cnn",
+            Aggregator::CoGc { design, attempts: if design == Design::RetryUntilSuccess { 50 } else { 1 } },
+        );
+        cfg.rounds = 4;
+        cfg.per_client = 40;
+        cfg.eval_batches = 1;
+        let net_harsh = Network::homogeneous(man.m, 0.5, 0.1);
+        let mut trainer = Trainer::new(&engine, &man, cfg, net_harsh).unwrap();
+        let log = trainer.run().unwrap();
+        println!(
+            "A5 {label}: {} updates / 4 rounds, {} attempts, {} transmissions",
+            log.updates(),
+            log.rounds.iter().map(|r| r.attempts).sum::<usize>(),
+            log.total_transmissions()
+        );
+    }
+    suite.finish();
+}

@@ -1,0 +1,23 @@
+//! Bench + regeneration harness for Fig. 10 (communication cost of the
+//! cost-efficient GC design vs regular GC). Reduced target/rounds by
+//! default; full run: `cogc fig10 --rounds 100 --target 0.85`.
+
+use cogc::figures;
+
+fn main() {
+    let rounds: usize = std::env::var("COGC_BENCH_ROUNDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(6);
+    let target: f64 = std::env::var("COGC_BENCH_TARGET")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.35);
+    let t0 = std::time::Instant::now();
+    let table = figures::fig10(rounds, target, 42).expect("fig10");
+    table.print();
+    println!(
+        "\n== bench fig10_cost: target acc {target}, cap {rounds} rounds, {:.1}s ==",
+        t0.elapsed().as_secs_f64()
+    );
+}

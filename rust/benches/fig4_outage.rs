@@ -1,0 +1,42 @@
+//! Bench + regeneration harness for Fig. 4 (P_O vs s).
+//!
+//!     cargo bench --bench fig4_outage
+//!
+//! Prints the paper's data series (reduced MC trials; `cogc fig4` runs the
+//! full version) and times the closed-form evaluation hot path.
+
+use cogc::bench::Suite;
+use cogc::figures;
+use cogc::gc::GcCode;
+use cogc::network::Network;
+use cogc::outage;
+use cogc::util::rng::Rng;
+
+fn main() {
+    // ── the figure itself (reduced trials) ──────────────────────────────
+    figures::fig4(2_000, 42).print();
+
+    // ── timing ──────────────────────────────────────────────────────────
+    let mut rng = Rng::new(1);
+    let net = Network::homogeneous(10, 0.4, 0.25);
+    let code = GcCode::generate(10, 7, &mut rng);
+    let net_het = Network::heterogeneous(10, (0.0, 0.9), (0.0, 0.9), &mut rng);
+
+    let mut suite = Suite::new("fig4: outage analysis");
+    suite.bench("overall_outage closed-form (M=10)", || {
+        cogc::bench::black_box(outage::overall_outage(&net, &code));
+    });
+    suite.bench("subcase_probs P1/P2/P3 joint DP (M=10)", || {
+        cogc::bench::black_box(outage::subcase_probs(&net_het, &code));
+    });
+    suite.bench("full s-sweep x 5 cases (fig4 inner loop)", || {
+        for s in 1..10 {
+            let c = GcCode::generate(10, s, &mut rng);
+            cogc::bench::black_box(outage::overall_outage(&net, &c));
+        }
+    });
+    suite.bench_throughput("monte-carlo outage rounds", 1000.0, "rounds", || {
+        cogc::bench::black_box(outage::estimate_outage(&net, &code, 1000, &mut rng));
+    });
+    suite.finish();
+}

@@ -1,0 +1,47 @@
+//! Bench + regeneration harness for Fig. 6 (GC⁺ recovery statistics).
+//!
+//!     cargo bench --bench fig6_recovery
+
+use cogc::bench::Suite;
+use cogc::figures;
+use cogc::network::Network;
+use cogc::outage::mc::{gcplus_recovery, RecoveryMode};
+use cogc::util::rng::Rng;
+
+fn main() {
+    // the figure's series (reduced trials; `cogc fig6` for full)
+    figures::fig6(400, 42).print();
+
+    let mut suite = Suite::new("fig6: GC+ recovery simulation");
+    let mut rng = Rng::new(2);
+    for setting in [2usize, 4] {
+        let net = Network::fig6_setting(setting, 10);
+        suite.bench_throughput(
+            &format!("gcplus_recovery fixed t_r=2, setting {setting}"),
+            50.0,
+            "rounds",
+            || {
+                cogc::bench::black_box(gcplus_recovery(
+                    &net,
+                    10,
+                    7,
+                    RecoveryMode::FixedTr(2),
+                    50,
+                    &mut rng,
+                ));
+            },
+        );
+    }
+    let net = Network::fig6_setting(3, 10);
+    suite.bench_throughput("gcplus_recovery until-decode, setting 3", 20.0, "rounds", || {
+        cogc::bench::black_box(gcplus_recovery(
+            &net,
+            10,
+            7,
+            RecoveryMode::UntilDecode { tr: 2, max_blocks: 50 },
+            20,
+            &mut rng,
+        ));
+    });
+    suite.finish();
+}

@@ -1,0 +1,111 @@
+//! Hot-path microbenchmarks: the per-round compute surface of the
+//! coordinator — coded combines (Pallas artifact vs native rust), RREF
+//! decode, code generation, combinator solve, and single train steps.
+//!
+//!     cargo bench --bench hotpath
+//!
+//! The numbers here feed EXPERIMENTS.md §Perf.
+
+use cogc::bench::Suite;
+use cogc::gc::{self, GcCode};
+use cogc::linalg::{rref_with_transform, Matrix};
+use cogc::network::{Network, Realization};
+use cogc::outage::exact::poisson_binomial_pmf;
+use cogc::runtime::{
+    coded::native_combine, default_artifacts_dir, Batch, CodedKernels, CombineImpl, Engine,
+    InputKind, Manifest, ModelRuntime,
+};
+use cogc::util::rng::Rng;
+
+fn main() {
+    let engine = Engine::cpu().expect("pjrt");
+    let man = Manifest::load(&default_artifacts_dir()).expect("artifacts — run `make artifacts`");
+    let mut rng = Rng::new(7);
+    let mut suite = Suite::new("hotpath");
+
+    // ── coded combine: Pallas vs native, per model size ─────────────────
+    for name in ["mnist_cnn", "cifar_cnn", "transformer"] {
+        let spec = man.model(name).unwrap().clone();
+        let d = spec.d;
+        let pallas = CodedKernels::load(&engine, &man, &spec, CombineImpl::Pallas).unwrap();
+        let w = Matrix::from_fn(man.m, man.m, |i, j| {
+            if i == j || rng.bernoulli(0.7) { rng.normal() } else { 0.0 }
+        });
+        let grads: Vec<f32> = (0..man.m * d).map(|_| rng.normal() as f32).collect();
+        let flops = (2 * man.m * man.m * d) as f64;
+        suite.bench_throughput(&format!("encode pallas   {name} (D={d})"), flops, "flop", || {
+            cogc::bench::black_box(pallas.encode(&w, &grads).unwrap());
+        });
+        suite.bench_throughput(&format!("encode native   {name} (D={d})"), flops, "flop", || {
+            cogc::bench::black_box(native_combine(&w, &grads, d));
+        });
+        let wd = Matrix::from_fn(man.m, man.mt, |_, _| {
+            if rng.bernoulli(0.3) { rng.normal() } else { 0.0 }
+        });
+        let stacked: Vec<f32> = (0..man.mt * d).map(|_| rng.normal() as f32).collect();
+        let dflops = (2 * man.m * man.mt * d) as f64;
+        suite.bench_throughput(&format!("decode pallas   {name} (D={d})"), dflops, "flop", || {
+            cogc::bench::black_box(pallas.decode(&wd, &stacked).unwrap());
+        });
+        suite.bench_throughput(&format!("decode native   {name} (D={d})"), dflops, "flop", || {
+            cogc::bench::black_box(native_combine(&wd, &stacked, d));
+        });
+    }
+
+    // ── coding-layer primitives ─────────────────────────────────────────
+    let net = Network::fig6_setting(2, 10);
+    suite.bench("GcCode::generate M=10 s=7", || {
+        cogc::bench::black_box(GcCode::generate(10, 7, &mut rng));
+    });
+    let code = GcCode::generate(10, 7, &mut rng);
+    suite.bench("find_combinator (3 received rows)", || {
+        cogc::bench::black_box(gc::find_combinator(&code, &[1, 4, 8]));
+    });
+    let stacked = {
+        let a1 = gc::Attempt::observe(&code, &Realization::sample(&net, &mut rng));
+        let code2 = GcCode::generate(10, 7, &mut rng);
+        let a2 = gc::Attempt::observe(&code2, &Realization::sample(&net, &mut rng));
+        gc::stack_attempts(&[a1, a2])
+    };
+    if stacked.rows > 0 {
+        suite.bench(&format!("gcplus decode rref ({}x10 stack)", stacked.rows), || {
+            cogc::bench::black_box(gc::decode(&stacked));
+        });
+        suite.bench("rref_with_transform (stack)", || {
+            cogc::bench::black_box(rref_with_transform(&stacked));
+        });
+    }
+    let ps = vec![0.42; 10];
+    suite.bench("poisson_binomial_pmf M=10", || {
+        cogc::bench::black_box(poisson_binomial_pmf(&ps));
+    });
+
+    // ── model runtime: single train/eval steps ──────────────────────────
+    for name in ["mnist_cnn", "cifar_cnn", "transformer"] {
+        let model = ModelRuntime::load(&engine, &man, name).unwrap();
+        let params = model.init_params(&mut rng);
+        let spec = &model.spec;
+        let batch = match spec.kind {
+            InputKind::Image => Batch::Image {
+                x: (0..spec.x_elems()).map(|_| rng.normal() as f32).collect(),
+                y: (0..spec.y_elems()).map(|_| rng.below(spec.num_classes) as i32).collect(),
+            },
+            InputKind::Tokens => Batch::Tokens {
+                x: (0..spec.x_elems()).map(|_| rng.below(spec.num_classes) as i32).collect(),
+                y: (0..spec.y_elems()).map(|_| rng.below(spec.num_classes) as i32).collect(),
+            },
+        };
+        suite.bench(&format!("train_step {name}"), || {
+            cogc::bench::black_box(model.train_step(&params, &batch, 0, 0.01).unwrap());
+        });
+        suite.bench(&format!("eval_step  {name}"), || {
+            cogc::bench::black_box(model.eval_step(&params, &batch).unwrap());
+        });
+        let g: Vec<f32> = (0..spec.d).map(|_| rng.normal() as f32).collect();
+        suite.bench(&format!("sgd_apply  {name} (D={})", spec.d), || {
+            cogc::bench::black_box(model.sgd_apply(&params, &g, 0.01).unwrap());
+        });
+    }
+
+    suite.finish();
+}

@@ -1,0 +1,192 @@
+//! Micro-benchmark harness (substrate — criterion is not available offline).
+//!
+//! `cargo bench` targets use this via `harness = false`: each bench binary
+//! builds a `Suite`, registers closures, and `run()` prints a stable table
+//! (name, iters, mean, p50, p95, min) plus optional throughput. Benchmarks
+//! auto-calibrate the iteration count to a target measurement window.
+//!
+//! Figure benches additionally print the paper's data series (CSV) so that
+//! `cargo bench` regenerates every table/figure shape end-to-end.
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box;
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Stats {
+    pub fn mean_s(&self) -> f64 {
+        self.mean_ns / 1e9
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:8.1}ns")
+    } else if ns < 1e6 {
+        format!("{:8.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:8.2}ms", ns / 1e6)
+    } else {
+        format!("{:8.3}s ", ns / 1e9)
+    }
+}
+
+/// Measure `f` by sampling: warm up, then collect `samples` timed batches.
+pub fn measure<F: FnMut()>(mut f: F, target: Duration, samples: usize) -> Stats {
+    // Calibrate batch size so one batch is ~ target/samples.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(50));
+    let per_sample = target.as_secs_f64() / samples as f64;
+    let batch = (per_sample / once.as_secs_f64()).clamp(1.0, 1e7) as u64;
+
+    // Warmup (~10% of target).
+    let warm_end = Instant::now() + target / 10;
+    while Instant::now() < warm_end {
+        f();
+    }
+
+    let mut times: Vec<f64> = Vec::with_capacity(samples);
+    let mut total_iters = 0u64;
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = t.elapsed().as_nanos() as f64 / batch as f64;
+        times.push(dt);
+        total_iters += batch;
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let pct = |q: f64| times[((times.len() - 1) as f64 * q) as usize];
+    Stats {
+        iters: total_iters,
+        mean_ns: mean,
+        p50_ns: pct(0.5),
+        p95_ns: pct(0.95),
+        min_ns: times[0],
+        max_ns: *times.last().unwrap(),
+    }
+}
+
+pub struct Suite {
+    name: String,
+    target: Duration,
+    samples: usize,
+    results: Vec<(String, Stats, Option<String>)>,
+}
+
+impl Suite {
+    pub fn new(name: &str) -> Self {
+        // COGC_BENCH_FAST=1 shrinks the window for CI-style smoke runs.
+        let fast = std::env::var("COGC_BENCH_FAST").is_ok();
+        Suite {
+            name: name.to_string(),
+            target: if fast { Duration::from_millis(200) } else { Duration::from_secs(1) },
+            samples: if fast { 10 } else { 30 },
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_target(mut self, d: Duration) -> Self {
+        self.target = d;
+        self
+    }
+
+    /// Register + run one benchmark.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> &mut Self {
+        let stats = measure(f, self.target, self.samples);
+        self.results.push((name.to_string(), stats, None));
+        self
+    }
+
+    /// Benchmark with a throughput annotation (`units` per iteration).
+    pub fn bench_throughput<F: FnMut()>(&mut self, name: &str, units: f64, unit_name: &str, f: F) {
+        let stats = measure(f, self.target, self.samples);
+        let rate = units / stats.mean_s();
+        let ann = if rate > 1e9 {
+            format!("{:7.2} G{unit_name}/s", rate / 1e9)
+        } else if rate > 1e6 {
+            format!("{:7.2} M{unit_name}/s", rate / 1e6)
+        } else if rate > 1e3 {
+            format!("{:7.2} k{unit_name}/s", rate / 1e3)
+        } else {
+            format!("{rate:7.2} {unit_name}/s")
+        };
+        self.results.push((name.to_string(), stats, Some(ann)));
+    }
+
+    /// Print the results table.
+    pub fn finish(&self) {
+        println!("\n== bench suite: {} ==", self.name);
+        println!(
+            "{:<44} {:>10} {:>10} {:>10} {:>10}  {}",
+            "benchmark", "mean", "p50", "p95", "min", "throughput"
+        );
+        for (name, s, ann) in &self.results {
+            println!(
+                "{:<44} {} {} {} {}  {}",
+                name,
+                fmt_ns(s.mean_ns),
+                fmt_ns(s.p50_ns),
+                fmt_ns(s.p95_ns),
+                fmt_ns(s.min_ns),
+                ann.as_deref().unwrap_or("")
+            );
+        }
+    }
+
+    pub fn results(&self) -> &[(String, Stats, Option<String>)] {
+        &self.results
+    }
+}
+
+/// Keep a value alive / opaque to the optimizer.
+pub fn keep<T>(x: T) -> T {
+    bb(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_is_sane() {
+        let mut acc = 0u64;
+        let s = measure(
+            || {
+                acc = acc.wrapping_add(black_box(1));
+            },
+            Duration::from_millis(20),
+            5,
+        );
+        assert!(s.iters > 0);
+        assert!(s.mean_ns > 0.0);
+        assert!(s.min_ns <= s.mean_ns * 1.5);
+        assert!(s.p50_ns <= s.p95_ns);
+    }
+
+    #[test]
+    fn suite_collects_results() {
+        std::env::set_var("COGC_BENCH_FAST", "1");
+        let mut suite = Suite::new("test").with_target(Duration::from_millis(10));
+        suite.bench("noop", || {
+            black_box(0);
+        });
+        suite.bench_throughput("bytes", 1024.0, "B", || {
+            black_box([0u8; 16]);
+        });
+        assert_eq!(suite.results().len(), 2);
+    }
+}

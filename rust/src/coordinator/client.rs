@@ -1,0 +1,37 @@
+//! Per-client state: current parameters and the local data shard.
+
+use crate::data::{ImageShard, TokenShard};
+use crate::runtime::Batch;
+
+/// A client's data source.
+#[derive(Clone)]
+pub enum Shard {
+    Image(ImageShard),
+    Tokens(TokenShard),
+}
+
+impl Shard {
+    pub fn next_batch(&mut self) -> Batch {
+        match self {
+            Shard::Image(s) => s.next_batch(),
+            Shard::Tokens(s) => s.next_batch(),
+        }
+    }
+}
+
+/// One federated client.
+pub struct ClientState {
+    pub id: usize,
+    /// The latest local model `g_{m,r}` (kept across rounds for Design 2's
+    /// broadcast fallback, eq. (7)).
+    pub params: Vec<f32>,
+    pub shard: Shard,
+    /// Cumulative local training steps (diagnostics).
+    pub steps: usize,
+}
+
+impl ClientState {
+    pub fn new(id: usize, params: Vec<f32>, shard: Shard) -> ClientState {
+        ClientState { id, params, shard, steps: 0 }
+    }
+}

@@ -1,0 +1,99 @@
+//! Training-run configuration: which aggregation protocol, which model,
+//! which network, which data partition.
+
+use crate::data::Partition;
+use crate::runtime::CombineImpl;
+
+/// PS-side aggregation protocol (the paper's §VII comparison set).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Aggregator {
+    /// FL with perfect connectivity (the paper's ideal benchmark (iii)).
+    Ideal,
+    /// FL over intermittent uplinks: average whichever updates arrive
+    /// (benchmark (iv), update rule of eq. (23)).
+    Intermittent,
+    /// CoGC with the standard (binary) GC decoder (§III).
+    CoGc { design: Design, attempts: usize },
+    /// CoGC with the GC⁺ complementary decoder (§VI, Algorithm 1).
+    GcPlus { tr: usize, until_decode: bool, max_blocks: usize },
+    /// Tandon-style dataset-replication GC: partial sums are computed from
+    /// replicated data (no client-to-client erasure exposure, (s+1)× the
+    /// local compute), uplinks still fail. The paper's Fig. 1 baseline.
+    TandonReplicated { attempts: usize },
+}
+
+/// The paper's two update-rule designs for standard CoGC (§III).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Design {
+    /// Design 1: repeat communication until the PS recovers the model
+    /// (bounded here by `attempts`; a real system would retry forever).
+    RetryUntilSuccess,
+    /// Design 2: on failure, skip the update and continue local training.
+    SkipRound,
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Model name in the manifest (mnist_cnn / cifar_cnn / transformer).
+    pub model: String,
+    /// Straggler tolerance s of the cyclic code.
+    pub s: usize,
+    /// Total training rounds T.
+    pub rounds: usize,
+    /// Local SGD iterations per round I.
+    pub local_iters: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub aggregator: Aggregator,
+    pub partition: Partition,
+    /// Training examples per client (images) / tokens per client (LM).
+    pub per_client: usize,
+    /// Held-out eval batches per evaluation.
+    pub eval_batches: usize,
+    /// Evaluate every this many rounds (1 = every round).
+    pub eval_every: usize,
+    /// Coded-combine implementation (Pallas artifacts vs native rust).
+    pub combine: CombineImpl,
+    /// Synthetic dataset separability (class-mean signal strength).
+    pub signal: f64,
+}
+
+impl TrainConfig {
+    pub fn new(model: &str, aggregator: Aggregator) -> TrainConfig {
+        TrainConfig {
+            model: model.to_string(),
+            s: 7,
+            rounds: 100,
+            local_iters: 5,
+            lr: match model {
+                "cifar_cnn" => 0.02,
+                "transformer" => 0.05,
+                _ => 0.005,
+            },
+            seed: 0,
+            aggregator,
+            partition: match model {
+                "cifar_cnn" => Partition::Dirichlet(0.35),
+                "transformer" => Partition::Iid, // token shards are contiguous
+                _ => Partition::OneClassPerClient,
+            },
+            per_client: 200,
+            eval_batches: 8,
+            eval_every: 1,
+            combine: CombineImpl::Pallas,
+            signal: 2.0,
+        }
+    }
+
+    /// Tag used in logs/CSV column names.
+    pub fn tag(&self) -> String {
+        match self.aggregator {
+            Aggregator::Ideal => "ideal".into(),
+            Aggregator::Intermittent => "intermittent".into(),
+            Aggregator::CoGc { design: Design::RetryUntilSuccess, .. } => "cogc_d1".into(),
+            Aggregator::CoGc { design: Design::SkipRound, .. } => "cogc".into(),
+            Aggregator::GcPlus { .. } => "gcplus".into(),
+            Aggregator::TandonReplicated { .. } => "tandon".into(),
+        }
+    }
+}

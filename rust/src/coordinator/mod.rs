@@ -1,0 +1,11 @@
+//! L3 coordinator: the CoGC training system — clients, PS aggregation
+//! protocols (ideal / intermittent / CoGC / GC⁺ / replicated-GC), and the
+//! round engine gluing the gradient-coding layer to the PJRT runtime.
+
+pub mod client;
+pub mod config;
+pub mod trainer;
+
+pub use client::{ClientState, Shard};
+pub use config::{Aggregator, Design, TrainConfig};
+pub use trainer::Trainer;

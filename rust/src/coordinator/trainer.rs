@@ -1,0 +1,510 @@
+//! The CoGC training loop (paper §III Fig. 3, §VI Algorithm 1) plus the
+//! §VII baselines — the end-to-end coordinator tying the gradient-coding
+//! layer to the PJRT model runtime.
+//!
+//! Per round: broadcast (eq. (7)) → I-step local SGD (eq. (2), the AOT
+//! train artifact) → gradient-sharing encode (eq. (8), the Pallas
+//! `coded_matmul` artifact) → uplink over the erasure network → decode
+//! (standard combinator eq. (9) or GC⁺ Algorithm 2) → global update
+//! (eq. (10)/(23), the Pallas `sgd_apply` artifact).
+
+use super::client::{ClientState, Shard};
+use super::config::{Aggregator, Design, TrainConfig};
+use crate::data::{class_means, partition, ImageDataset, ImageShard, TokenDataset, TokenShard};
+use crate::gc::{self, GcCode};
+use crate::linalg::Matrix;
+use crate::metrics::{RoundRecord, RunLog};
+use crate::network::{Network, Realization};
+use crate::runtime::{CodedKernels, Engine, InputKind, Manifest, ModelRuntime};
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// Outcome of the aggregation step of one round.
+struct AggResult {
+    /// Mean update to apply to the global model (None = no update).
+    delta: Option<Vec<f32>>,
+    outcome: &'static str,
+    k4: usize,
+    attempts: usize,
+    transmissions: usize,
+}
+
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub net: Network,
+    model: ModelRuntime,
+    coded: CodedKernels,
+    m: usize,
+    mt: usize,
+    d: usize,
+    clients: Vec<ClientState>,
+    global: Vec<f32>,
+    /// Whether the previous round updated the global model (eq. (7)).
+    updated_last: bool,
+    eval_shard: Shard,
+    /// Denominator for accuracy per eval batch.
+    eval_denom: f64,
+    rng: Rng,
+}
+
+impl Trainer {
+    pub fn new(
+        engine: &Engine,
+        man: &Manifest,
+        cfg: TrainConfig,
+        net: Network,
+    ) -> anyhow::Result<Trainer> {
+        anyhow::ensure!(net.m == man.m, "network M={} but artifacts built for M={}", net.m, man.m);
+        let model = ModelRuntime::load(engine, man, &cfg.model)?;
+        let coded = CodedKernels::load(engine, man, &model.spec, cfg.combine)?;
+        let mut rng = Rng::new(cfg.seed ^ 0xC0_6C);
+        let m = man.m;
+        let d = model.spec.d;
+
+        // data
+        let (clients, eval_shard, eval_denom) = match model.spec.kind {
+            InputKind::Image => {
+                let elems = model.spec.x_elems() / model.spec.batch;
+                let classes = model.spec.num_classes;
+                let means = class_means(elems, classes, &mut rng);
+                let train = Arc::new(ImageDataset::synth_with_means(
+                    cfg.per_client * m,
+                    &means,
+                    cfg.signal,
+                    &mut rng,
+                ));
+                let test = Arc::new(ImageDataset::synth_with_means(
+                    (cfg.eval_batches * model.spec.batch).max(model.spec.batch),
+                    &means,
+                    cfg.signal,
+                    &mut rng,
+                ));
+                let shards = partition(&train, m, cfg.partition, &mut rng);
+                let clients: Vec<ClientState> = shards
+                    .into_iter()
+                    .enumerate()
+                    .map(|(id, idx)| {
+                        let shard = Shard::Image(ImageShard::new(
+                            train.clone(),
+                            idx,
+                            model.spec.batch,
+                            rng.split(id as u64 + 1000),
+                        ));
+                        ClientState::new(id, Vec::new(), shard)
+                    })
+                    .collect();
+                let eval = Shard::Image(ImageShard::new(
+                    test.clone(),
+                    (0..test.n).collect(),
+                    model.spec.batch,
+                    rng.split(999),
+                ));
+                (clients, eval, model.spec.batch as f64)
+            }
+            InputKind::Tokens => {
+                let seq = model.spec.x_shape[1];
+                let batch = model.spec.batch;
+                let train = Arc::new(TokenDataset::synth(
+                    cfg.per_client * m,
+                    model.spec.num_classes,
+                    0.05,
+                    &mut rng,
+                ));
+                let test = Arc::new(TokenDataset::synth(
+                    (batch * seq * (cfg.eval_batches + 2)).max(4 * seq),
+                    model.spec.num_classes,
+                    0.05,
+                    &mut rng,
+                ));
+                let mut shards = TokenShard::split(train, m, batch, seq, &mut rng);
+                let clients: Vec<ClientState> = shards
+                    .drain(..)
+                    .enumerate()
+                    .map(|(id, s)| ClientState::new(id, Vec::new(), Shard::Tokens(s)))
+                    .collect();
+                let hi = test.tokens.len();
+                let eval = Shard::Tokens(TokenShard::new(test, 0, hi, batch, seq, rng.split(999)));
+                (clients, eval, (batch * seq) as f64)
+            }
+        };
+
+        let global = model.init_params(&mut rng.split(7));
+        let mut clients = clients;
+        for c in &mut clients {
+            c.params = global.clone();
+        }
+        Ok(Trainer {
+            cfg,
+            net,
+            model,
+            coded,
+            m,
+            mt: man.mt,
+            d,
+            clients,
+            global,
+            updated_last: true,
+            eval_shard,
+            eval_denom,
+            rng,
+        })
+    }
+
+    /// Run the full training loop, returning the per-round log.
+    pub fn run(&mut self) -> anyhow::Result<RunLog> {
+        let mut log = RunLog::new(&format!("{}/{}", self.cfg.model, self.cfg.tag()));
+        for round in 0..self.cfg.rounds {
+            let rec = self.round(round)?;
+            if crate::util::logging::enabled(crate::util::logging::Level::Debug) {
+                crate::debug!(
+                    "round {round}: outcome={} acc={:.3} loss={:.3}",
+                    rec.outcome,
+                    rec.test_acc,
+                    rec.train_loss
+                );
+            }
+            log.push(rec);
+        }
+        Ok(log)
+    }
+
+    /// Run until test accuracy first reaches `target` (Fig. 10 protocol);
+    /// returns the log truncated at the hit (or the full `rounds` budget).
+    pub fn run_until_acc(&mut self, target: f64) -> anyhow::Result<RunLog> {
+        let mut log = RunLog::new(&format!("{}/{}@{}", self.cfg.model, self.cfg.tag(), target));
+        for round in 0..self.cfg.rounds {
+            let rec = self.round(round)?;
+            let hit = rec.test_acc.is_finite() && rec.test_acc >= target;
+            log.push(rec);
+            if hit {
+                break;
+            }
+        }
+        Ok(log)
+    }
+
+    pub fn global_params(&self) -> &[f32] {
+        &self.global
+    }
+
+    fn round(&mut self, round: usize) -> anyhow::Result<RoundRecord> {
+        // ── 1. broadcast (eq. (7)) ────────────────────────────────────────
+        let broadcast_always = !matches!(self.cfg.aggregator, Aggregator::CoGc { .. });
+        if self.updated_last || broadcast_always {
+            for c in &mut self.clients {
+                c.params.copy_from_slice(&self.global);
+            }
+        } // else: clients continue from their latest local models
+
+        // ── 2. local training (eq. (2)) ───────────────────────────────────
+        let mut deltas = vec![0.0f32; self.m * self.d];
+        let mut train_loss = 0.0f64;
+        for ci in 0..self.m {
+            let start: Vec<f32> = self.clients[ci].params.clone();
+            let mut params = start.clone();
+            let mut last_loss = 0.0f32;
+            for it in 0..self.cfg.local_iters {
+                let batch = self.clients[ci].shard.next_batch();
+                let seed = (round * 1_000_003 + ci * 1009 + it) as u32;
+                let (new_params, loss) =
+                    self.model.train_step(&params, &batch, seed, self.cfg.lr)?;
+                params = new_params;
+                last_loss = loss;
+                self.clients[ci].steps += 1;
+            }
+            train_loss += last_loss as f64;
+            for j in 0..self.d {
+                deltas[ci * self.d + j] = params[j] - start[j];
+            }
+            self.clients[ci].params = params;
+        }
+        train_loss /= self.m as f64;
+
+        // ── 3. communication + decode ─────────────────────────────────────
+        let agg = self.aggregate(&deltas)?;
+
+        // ── 4. global update ──────────────────────────────────────────────
+        let updated = agg.delta.is_some();
+        if let Some(delta) = &agg.delta {
+            // g_r <- g_{r-1} + delta  via the fused Pallas sgd kernel (lr=-1)
+            self.global = self.model.sgd_apply(&self.global, delta, -1.0)?;
+        }
+        self.updated_last = updated;
+
+        // ── 5. evaluation ─────────────────────────────────────────────────
+        let (test_loss, test_acc) = if round % self.cfg.eval_every == 0
+            || round + 1 == self.cfg.rounds
+        {
+            self.evaluate()?
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+
+        Ok(RoundRecord {
+            round,
+            updated,
+            outcome: agg.outcome.to_string(),
+            k4: agg.k4,
+            attempts: agg.attempts,
+            transmissions: agg.transmissions,
+            train_loss,
+            test_loss,
+            test_acc,
+        })
+    }
+
+    fn evaluate(&mut self) -> anyhow::Result<(f64, f64)> {
+        let mut loss = 0.0f64;
+        let mut correct = 0.0f64;
+        for _ in 0..self.cfg.eval_batches {
+            let batch = self.eval_shard.next_batch();
+            let (l, c) = self.model.eval_step(&self.global, &batch)?;
+            loss += l as f64;
+            correct += c as f64;
+        }
+        let nb = self.cfg.eval_batches as f64;
+        Ok((loss / nb, correct / (nb * self.eval_denom)))
+    }
+
+    // ── aggregation protocols ────────────────────────────────────────────
+
+    fn aggregate(&mut self, deltas: &[f32]) -> anyhow::Result<AggResult> {
+        match self.cfg.aggregator {
+            Aggregator::Ideal => Ok(self.agg_subset_mean(deltas, &(0..self.m).collect::<Vec<_>>(), "ideal", 0)),
+            Aggregator::Intermittent => {
+                let real = Realization::sample(&self.net, &mut self.rng);
+                let received: Vec<usize> =
+                    (0..self.m).filter(|&i| real.tau[i]).collect();
+                let tx = self.m; // every client attempts its uplink
+                if received.is_empty() {
+                    Ok(AggResult {
+                        delta: None,
+                        outcome: "none",
+                        k4: 0,
+                        attempts: 1,
+                        transmissions: tx,
+                    })
+                } else {
+                    Ok(self.agg_subset_mean(deltas, &received, "subset", tx))
+                }
+            }
+            Aggregator::CoGc { design, attempts } => {
+                self.agg_cogc(deltas, design, attempts, /*replicated=*/ false)
+            }
+            Aggregator::TandonReplicated { attempts } => {
+                self.agg_cogc(deltas, Design::SkipRound, attempts, /*replicated=*/ true)
+            }
+            Aggregator::GcPlus { tr, until_decode, max_blocks } => {
+                self.agg_gcplus(deltas, tr, until_decode, max_blocks)
+            }
+        }
+    }
+
+    /// Mean over an explicit subset (ideal / intermittent baselines) — the
+    /// unbiased-given-uniform-subsets rule of eq. (23).
+    fn agg_subset_mean(
+        &self,
+        deltas: &[f32],
+        subset: &[usize],
+        outcome: &'static str,
+        transmissions: usize,
+    ) -> AggResult {
+        let mut delta = vec![0.0f32; self.d];
+        for &ci in subset {
+            let row = &deltas[ci * self.d..(ci + 1) * self.d];
+            for (o, v) in delta.iter_mut().zip(row) {
+                *o += v;
+            }
+        }
+        let inv = 1.0 / subset.len() as f32;
+        for o in &mut delta {
+            *o *= inv;
+        }
+        AggResult {
+            delta: Some(delta),
+            outcome,
+            k4: subset.len(),
+            attempts: 1,
+            transmissions,
+        }
+    }
+
+    /// Standard CoGC (§III) — optionally with Tandon-style replication
+    /// (perfect sharing phase, uplink erasure only).
+    fn agg_cogc(
+        &mut self,
+        deltas: &[f32],
+        design: Design,
+        attempts: usize,
+        replicated: bool,
+    ) -> anyhow::Result<AggResult> {
+        let max_attempts = match design {
+            Design::RetryUntilSuccess => attempts.max(50),
+            Design::SkipRound => attempts.max(1),
+        };
+        let mut tx = 0usize;
+        // the gradient stack is identical across attempts: build its device
+        // literal once (saves an M·D host copy per retry — §Perf)
+        let prepared = self.coded.prepare_grads(deltas)?;
+        for attempt in 0..max_attempts {
+            let code = GcCode::generate(self.m, self.cfg.s, &mut self.rng);
+            let mut real = Realization::sample(&self.net, &mut self.rng);
+            if replicated {
+                // dataset replication: partial sums never see c2c erasure
+                real.t = vec![vec![true; self.m]; self.m];
+            }
+            let att = gc::Attempt::observe(&code, &real);
+            // sharing phase: s transmissions per client (none when replicated)
+            tx += if replicated { 0 } else { self.cfg.s * self.m };
+            // uplinks: only complete partial sums are transmitted
+            tx += att.complete.len();
+            if att.complete.len() < self.m - self.cfg.s {
+                continue; // binary failure — try again or give up
+            }
+            let Some(a) = gc::find_combinator(&code, &att.complete) else {
+                continue;
+            };
+            // partial sums S = B̂ · Δ  (the Pallas encode artifact)
+            let sums = self.coded.encode_prepared(&att.perturbed, &prepared, deltas)?;
+            // PS-side combinator application (eq. (9)): a single row dot —
+            // native combine (the M×MT Pallas decode shape would compute
+            // M·D outputs for 1 needed row; see §Perf)
+            let sums_m = Matrix::from_rows(&[a]);
+            let out = crate::runtime::coded::native_combine(&sums_m, &sums, self.d);
+            // exact sum / M  (eq. (9))
+            let inv = 1.0 / self.m as f32;
+            let delta: Vec<f32> = out[..self.d].iter().map(|x| x * inv).collect();
+            return Ok(AggResult {
+                delta: Some(delta),
+                outcome: "standard",
+                k4: self.m,
+                attempts: attempt + 1,
+                transmissions: tx,
+            });
+        }
+        Ok(AggResult {
+            delta: None,
+            outcome: "none",
+            k4: 0,
+            attempts: max_attempts,
+            transmissions: tx,
+        })
+    }
+
+    /// GC⁺ (§VI, Algorithm 1): stack complete *and* incomplete partial sums
+    /// across attempts; decode every recoverable local update.
+    fn agg_gcplus(
+        &mut self,
+        deltas: &[f32],
+        tr: usize,
+        until_decode: bool,
+        max_blocks: usize,
+    ) -> anyhow::Result<AggResult> {
+        let blocks = if until_decode { max_blocks.max(1) } else { 1 };
+        let mut tx = 0usize;
+        let mut attempts_used = 0usize;
+        let mut observed: Vec<gc::Attempt> = Vec::new();
+        // payload rows delivered to the PS, in stack order
+        let mut payload_rows: Vec<Vec<f32>> = Vec::new();
+        // one gradient literal for the whole round (§Perf)
+        let prepared = self.coded.prepare_grads(deltas)?;
+
+        for _ in 0..blocks {
+            for _ in 0..tr {
+                attempts_used += 1;
+                let code = GcCode::generate(self.m, self.cfg.s, &mut self.rng);
+                let real = Realization::sample(&self.net, &mut self.rng);
+                let att = gc::Attempt::observe(&code, &real);
+                tx += self.cfg.s * self.m + self.m; // all partial sums are uplinked
+                let sums = self.coded.encode_prepared(&att.perturbed, &prepared, deltas)?;
+                // standard-GC shortcut (Algorithm 1's first branch)
+                if att.complete.len() >= self.m - self.cfg.s {
+                    if let Some(a) = gc::find_combinator(&code, &att.complete) {
+                        let a_m = Matrix::from_rows(&[a]);
+                        let out =
+                            crate::runtime::coded::native_combine(&a_m, &sums, self.d);
+                        let inv = 1.0 / self.m as f32;
+                        let delta: Vec<f32> = out[..self.d].iter().map(|x| x * inv).collect();
+                        return Ok(AggResult {
+                            delta: Some(delta),
+                            outcome: "standard",
+                            k4: self.m,
+                            attempts: attempts_used,
+                            transmissions: tx,
+                        });
+                    }
+                }
+                for &r in &att.delivered {
+                    payload_rows.push(sums[r * self.d..(r + 1) * self.d].to_vec());
+                }
+                observed.push(att);
+            }
+            // complementary decode over everything received so far
+            let stacked_coeffs = gc::stack_attempts(&observed);
+            if stacked_coeffs.rows == 0 {
+                continue;
+            }
+            let dec = gc::decode(&stacked_coeffs);
+            if dec.k4.is_empty() {
+                continue;
+            }
+            let rows = stacked_coeffs.rows;
+            let delta = if rows <= self.mt {
+                // Pallas path: pad weights to [M, MT] and payload to [MT, D]
+                let w = gc::gcplus::pad_weights(&dec, self.m, self.mt);
+                let mut stacked = vec![0.0f32; self.mt * self.d];
+                for (i, row) in payload_rows.iter().enumerate() {
+                    stacked[i * self.d..(i + 1) * self.d].copy_from_slice(row);
+                }
+                let out = self.coded.decode(&w, &stacked)?;
+                // mean over K4 (eq. (23))
+                let mut delta = vec![0.0f32; self.d];
+                for &client in &dec.k4 {
+                    let row = &out[client * self.d..(client + 1) * self.d];
+                    for (o, v) in delta.iter_mut().zip(row) {
+                        *o += v;
+                    }
+                }
+                let inv = 1.0 / dec.k4.len() as f32;
+                for o in &mut delta {
+                    *o *= inv;
+                }
+                delta
+            } else {
+                // native fallback for stacks beyond the AOT shape
+                let mut flat = vec![0.0f32; rows * self.d];
+                for (i, row) in payload_rows.iter().enumerate() {
+                    flat[i * self.d..(i + 1) * self.d].copy_from_slice(row);
+                }
+                let out = crate::runtime::coded::native_combine(&dec.weights, &flat, self.d);
+                let mut delta = vec![0.0f32; self.d];
+                for i in 0..dec.k4.len() {
+                    let row = &out[i * self.d..(i + 1) * self.d];
+                    for (o, v) in delta.iter_mut().zip(row) {
+                        *o += v;
+                    }
+                }
+                let inv = 1.0 / dec.k4.len() as f32;
+                for o in &mut delta {
+                    *o *= inv;
+                }
+                delta
+            };
+            let outcome = if dec.k4.len() == self.m { "full" } else { "partial" };
+            return Ok(AggResult {
+                delta: Some(delta),
+                outcome,
+                k4: dec.k4.len(),
+                attempts: attempts_used,
+                transmissions: tx,
+            });
+        }
+        Ok(AggResult {
+            delta: None,
+            outcome: "none",
+            k4: 0,
+            attempts: attempts_used,
+            transmissions: tx,
+        })
+    }
+}

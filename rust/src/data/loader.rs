@@ -1,0 +1,159 @@
+//! Batch loaders: assemble fixed-shape `runtime::Batch`es from shards.
+
+use super::synth::{ImageDataset, TokenDataset};
+use crate::runtime::Batch;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// A client's shard of an image dataset with epoch-shuffled batching.
+#[derive(Clone)]
+pub struct ImageShard {
+    ds: Arc<ImageDataset>,
+    indices: Vec<usize>,
+    batch: usize,
+    cursor: usize,
+    order: Vec<usize>,
+    rng: Rng,
+}
+
+impl ImageShard {
+    pub fn new(ds: Arc<ImageDataset>, indices: Vec<usize>, batch: usize, rng: Rng) -> Self {
+        assert!(!indices.is_empty());
+        let order: Vec<usize> = (0..indices.len()).collect();
+        let mut s = ImageShard { ds, indices, batch, cursor: 0, order, rng };
+        s.reshuffle();
+        s
+    }
+
+    fn reshuffle(&mut self) {
+        self.rng.shuffle(&mut self.order);
+        self.cursor = 0;
+    }
+
+    /// Next batch (wraps with reshuffle; repeats examples when the shard is
+    /// smaller than the batch — fixed artifact shapes require full batches).
+    pub fn next_batch(&mut self) -> Batch {
+        let elems = self.ds.elems;
+        let mut x = Vec::with_capacity(self.batch * elems);
+        let mut y = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            if self.cursor >= self.order.len() {
+                self.reshuffle();
+            }
+            let idx = self.indices[self.order[self.cursor]];
+            self.cursor += 1;
+            let (img, label) = self.ds.example(idx);
+            x.extend_from_slice(img);
+            y.push(label);
+        }
+        Batch::Image { x, y }
+    }
+
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+}
+
+/// A client's contiguous slice of the token stream.
+#[derive(Clone)]
+pub struct TokenShard {
+    ds: Arc<TokenDataset>,
+    lo: usize,
+    hi: usize,
+    batch: usize,
+    seq: usize,
+    rng: Rng,
+}
+
+impl TokenShard {
+    pub fn new(ds: Arc<TokenDataset>, lo: usize, hi: usize, batch: usize, seq: usize, rng: Rng) -> Self {
+        assert!(hi > lo + seq + 1, "token shard too small");
+        TokenShard { ds, lo, hi, batch, seq, rng }
+    }
+
+    /// Split the stream into `m` contiguous shards.
+    pub fn split(
+        ds: Arc<TokenDataset>,
+        m: usize,
+        batch: usize,
+        seq: usize,
+        rng: &mut Rng,
+    ) -> Vec<TokenShard> {
+        let per = ds.tokens.len() / m;
+        (0..m)
+            .map(|i| {
+                TokenShard::new(ds.clone(), i * per, (i + 1) * per, batch, seq, rng.split(i as u64))
+            })
+            .collect()
+    }
+
+    pub fn next_batch(&mut self) -> Batch {
+        let mut x = Vec::with_capacity(self.batch * self.seq);
+        let mut y = Vec::with_capacity(self.batch * self.seq);
+        for _ in 0..self.batch {
+            let off = self.rng.range(self.lo, self.hi - self.seq - 1);
+            let (cx, cy) = self.ds.window(off, self.seq);
+            x.extend_from_slice(cx);
+            y.extend_from_slice(cy);
+        }
+        Batch::Tokens { x, y }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_batches_have_fixed_shape_and_cycle() {
+        let ds = Arc::new(ImageDataset::synth(50, 4, 10, 1.0, &mut Rng::new(1)));
+        let mut shard = ImageShard::new(ds.clone(), (0..10).collect(), 8, Rng::new(2));
+        for _ in 0..5 {
+            match shard.next_batch() {
+                Batch::Image { x, y } => {
+                    assert_eq!(x.len(), 32);
+                    assert_eq!(y.len(), 8);
+                    // labels come only from the shard (indices 0..10)
+                    for label in y {
+                        assert!((0..10).contains(&label));
+                    }
+                }
+                _ => panic!("wrong batch kind"),
+            }
+        }
+    }
+
+    #[test]
+    fn small_shard_repeats_examples() {
+        let ds = Arc::new(ImageDataset::synth(50, 4, 10, 1.0, &mut Rng::new(1)));
+        let mut shard = ImageShard::new(ds, vec![3], 4, Rng::new(2));
+        match shard.next_batch() {
+            // only example #3 exists; labels are i % 10 -> all 3s
+            Batch::Image { y, .. } => assert_eq!(y, vec![3, 3, 3, 3]),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn token_shards_are_disjoint_ranges() {
+        let ds = Arc::new(TokenDataset::synth(4000, 32, 0.05, &mut Rng::new(3)));
+        let shards = TokenShard::split(ds, 4, 2, 16, &mut Rng::new(4));
+        assert_eq!(shards.len(), 4);
+        for (i, s) in shards.iter().enumerate() {
+            assert_eq!(s.lo, i * 1000);
+            assert_eq!(s.hi, (i + 1) * 1000);
+        }
+        let mut s0 = shards[0].clone();
+        match s0.next_batch() {
+            Batch::Tokens { x, y } => {
+                assert_eq!(x.len(), 32);
+                assert_eq!(y.len(), 32);
+            }
+            _ => panic!(),
+        }
+    }
+}

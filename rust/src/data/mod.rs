@@ -1,0 +1,9 @@
+//! Synthetic data + non-IID partitioning + batch loading.
+
+pub mod loader;
+pub mod partition;
+pub mod synth;
+
+pub use loader::{ImageShard, TokenShard};
+pub use partition::{label_entropy, partition, Partition};
+pub use synth::{class_means, ImageDataset, TokenDataset};

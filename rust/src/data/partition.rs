@@ -1,0 +1,179 @@
+//! Non-IID data partitioning across clients (paper §VII):
+//! - MNIST-style: each client holds a single class (extreme non-IID);
+//! - CIFAR-style: Dirichlet(γ)-sampled class proportions per client
+//!   (γ = 0.35 in the paper — moderately non-IID);
+//! - IID: uniform shuffle split (baseline / ablations).
+//!
+//! All partitions are equal-size (the paper assigns equal sample counts).
+
+use super::synth::ImageDataset;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Partition {
+    /// One class per client (requires M == num_classes).
+    OneClassPerClient,
+    /// Dirichlet(γ) class mixture per client.
+    Dirichlet(f64),
+    /// Uniform IID split.
+    Iid,
+}
+
+/// Split `ds` into `m` equal shards of example indices.
+pub fn partition(ds: &ImageDataset, m: usize, kind: Partition, rng: &mut Rng) -> Vec<Vec<usize>> {
+    let per_client = ds.n / m;
+    assert!(per_client > 0, "dataset too small for {m} clients");
+    match kind {
+        Partition::OneClassPerClient => {
+            assert_eq!(
+                m, ds.num_classes,
+                "one-class-per-client needs M == num_classes"
+            );
+            (0..m)
+                .map(|c| {
+                    let mut idx = ds.by_class(c as i32);
+                    rng.shuffle(&mut idx);
+                    idx.truncate(per_client);
+                    assert!(
+                        idx.len() == per_client,
+                        "class {c} has too few samples for an equal shard"
+                    );
+                    idx
+                })
+                .collect()
+        }
+        Partition::Iid => {
+            let mut idx: Vec<usize> = (0..ds.n).collect();
+            rng.shuffle(&mut idx);
+            (0..m).map(|i| idx[i * per_client..(i + 1) * per_client].to_vec()).collect()
+        }
+        Partition::Dirichlet(gamma) => {
+            // per-class pools
+            let mut pools: Vec<Vec<usize>> = (0..ds.num_classes)
+                .map(|c| {
+                    let mut v = ds.by_class(c as i32);
+                    rng.shuffle(&mut v);
+                    v
+                })
+                .collect();
+            let mut shards = Vec::with_capacity(m);
+            for _ in 0..m {
+                let props = rng.dirichlet(gamma, ds.num_classes);
+                let mut quota: Vec<usize> =
+                    props.iter().map(|p| (p * per_client as f64).floor() as usize).collect();
+                // distribute the rounding remainder to the largest proportions
+                let mut assigned: usize = quota.iter().sum();
+                let mut order: Vec<usize> = (0..ds.num_classes).collect();
+                order.sort_by(|&a, &b| props[b].partial_cmp(&props[a]).unwrap());
+                let mut oi = 0;
+                while assigned < per_client {
+                    quota[order[oi % ds.num_classes]] += 1;
+                    assigned += 1;
+                    oi += 1;
+                }
+                let mut shard = Vec::with_capacity(per_client);
+                for (c, q) in quota.iter().enumerate() {
+                    let take = (*q).min(pools[c].len());
+                    shard.extend(pools[c].drain(..take));
+                }
+                // pool exhaustion: fill from whatever classes remain
+                while shard.len() < per_client {
+                    if let Some(pool) = pools.iter_mut().find(|p| !p.is_empty()) {
+                        shard.push(pool.pop().unwrap());
+                    } else {
+                        break;
+                    }
+                }
+                assert_eq!(shard.len(), per_client, "dataset exhausted during partition");
+                shards.push(shard);
+            }
+            shards
+        }
+    }
+}
+
+/// Shannon entropy (nats) of a shard's label distribution — a non-IID-ness
+/// diagnostic used in tests and the data report.
+pub fn label_entropy(ds: &ImageDataset, shard: &[usize]) -> f64 {
+    let mut counts = vec![0usize; ds.num_classes];
+    for &i in shard {
+        counts[ds.labels[i] as usize] += 1;
+    }
+    let n = shard.len() as f64;
+    counts
+        .iter()
+        .filter(|&&c| c > 0)
+        .map(|&c| {
+            let p = c as f64 / n;
+            -p * p.ln()
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ds(n: usize) -> ImageDataset {
+        ImageDataset::synth(n, 8, 10, 1.0, &mut Rng::new(1))
+    }
+
+    #[test]
+    fn one_class_per_client_is_pure() {
+        let d = ds(1000);
+        let shards = partition(&d, 10, Partition::OneClassPerClient, &mut Rng::new(2));
+        assert_eq!(shards.len(), 10);
+        for (c, shard) in shards.iter().enumerate() {
+            assert_eq!(shard.len(), 100);
+            assert!(shard.iter().all(|&i| d.labels[i] == c as i32));
+            assert!(label_entropy(&d, shard) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn iid_shards_are_mixed_and_disjoint() {
+        let d = ds(1000);
+        let shards = partition(&d, 10, Partition::Iid, &mut Rng::new(3));
+        let mut seen = std::collections::BTreeSet::new();
+        for shard in &shards {
+            assert_eq!(shard.len(), 100);
+            for &i in shard {
+                assert!(seen.insert(i), "index {i} duplicated");
+            }
+            // IID shard entropy close to ln(10)
+            assert!(label_entropy(&d, shard) > 2.0);
+        }
+    }
+
+    #[test]
+    fn dirichlet_is_between_extremes() {
+        let d = ds(2000);
+        let shards = partition(&d, 10, Partition::Dirichlet(0.35), &mut Rng::new(4));
+        let mut seen = std::collections::BTreeSet::new();
+        let mut total_entropy = 0.0;
+        for shard in &shards {
+            assert_eq!(shard.len(), 200);
+            for &i in shard {
+                assert!(seen.insert(i));
+            }
+            total_entropy += label_entropy(&d, shard);
+        }
+        let mean = total_entropy / 10.0;
+        // gamma = 0.35: meaningfully skewed but not single-class
+        assert!(mean > 0.2 && mean < 2.1, "mean shard entropy {mean}");
+    }
+
+    #[test]
+    fn dirichlet_entropy_monotone_in_gamma() {
+        let d = ds(2000);
+        let e_small: f64 = partition(&d, 10, Partition::Dirichlet(0.05), &mut Rng::new(5))
+            .iter()
+            .map(|s| label_entropy(&d, s))
+            .sum();
+        let e_large: f64 = partition(&d, 10, Partition::Dirichlet(10.0), &mut Rng::new(5))
+            .iter()
+            .map(|s| label_entropy(&d, s))
+            .sum();
+        assert!(e_small < e_large, "{e_small} !< {e_large}");
+    }
+}

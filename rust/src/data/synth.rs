@@ -1,0 +1,191 @@
+//! Synthetic datasets (substitution for MNIST / CIFAR-10 downloads — see
+//! DESIGN.md §2).
+//!
+//! The paper's experiments probe *aggregation under unreliable links*, not
+//! vision SOTA: what matters is a classification signal whose quality
+//! degrades when aggregation is biased or missing, plus non-IID label
+//! structure across clients. Class-conditional Gaussian images provide
+//! exactly that: class c has a fixed random mean pattern `μ_c`; samples are
+//! `x = α·μ_c + ε`. Separability is controlled by `signal`.
+//!
+//! The LM corpus for the e2e transformer is a noisy cyclic-pattern stream:
+//! predictable enough to show a clean loss curve, noisy enough not to be
+//! trivially memorized in one step.
+
+use crate::util::rng::Rng;
+
+/// An in-memory labelled image dataset, flattened row-major.
+#[derive(Clone, Debug)]
+pub struct ImageDataset {
+    pub n: usize,
+    /// C*H*W per example.
+    pub elems: usize,
+    pub num_classes: usize,
+    /// `n * elems` f32.
+    pub images: Vec<f32>,
+    /// `n` labels.
+    pub labels: Vec<i32>,
+}
+
+/// Per-class mean patterns shared by a train/test pair.
+pub fn class_means(elems: usize, num_classes: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
+    (0..num_classes)
+        .map(|_| (0..elems).map(|_| rng.normal()).collect())
+        .collect()
+}
+
+impl ImageDataset {
+    /// Class-conditional Gaussian synthesis with balanced labels.
+    pub fn synth(
+        n: usize,
+        elems: usize,
+        num_classes: usize,
+        signal: f64,
+        rng: &mut Rng,
+    ) -> ImageDataset {
+        let means = class_means(elems, num_classes, rng);
+        Self::synth_with_means(n, &means, signal, rng)
+    }
+
+    /// Synthesize from fixed class means (train/test consistency).
+    pub fn synth_with_means(
+        n: usize,
+        means: &[Vec<f64>],
+        signal: f64,
+        rng: &mut Rng,
+    ) -> ImageDataset {
+        let num_classes = means.len();
+        let elems = means[0].len();
+        let mut images = Vec::with_capacity(n * elems);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let c = i % num_classes; // balanced
+            labels.push(c as i32);
+            let mu = &means[c];
+            images.extend((0..elems).map(|j| (signal * mu[j] + rng.normal()) as f32));
+        }
+        ImageDataset { n, elems, num_classes, images, labels }
+    }
+
+    pub fn example(&self, i: usize) -> (&[f32], i32) {
+        (&self.images[i * self.elems..(i + 1) * self.elems], self.labels[i])
+    }
+
+    /// Indices of examples with the given label.
+    pub fn by_class(&self, c: i32) -> Vec<usize> {
+        (0..self.n).filter(|&i| self.labels[i] == c).collect()
+    }
+}
+
+/// A token stream for the LM: noisy repetition of per-segment cyclic
+/// patterns over the vocabulary.
+#[derive(Clone, Debug)]
+pub struct TokenDataset {
+    pub tokens: Vec<i32>,
+    pub vocab: usize,
+}
+
+impl TokenDataset {
+    pub fn synth(len: usize, vocab: usize, noise: f64, rng: &mut Rng) -> TokenDataset {
+        assert!(vocab >= 4);
+        let mut tokens = Vec::with_capacity(len);
+        // segments of cyclic arithmetic progressions with random stride
+        while tokens.len() < len {
+            let start = rng.below(vocab);
+            let stride = 1 + rng.below(7);
+            let seg = 24 + rng.below(40);
+            for k in 0..seg {
+                if tokens.len() >= len {
+                    break;
+                }
+                let t = if rng.bernoulli(noise) {
+                    rng.below(vocab)
+                } else {
+                    (start + k * stride) % vocab
+                };
+                tokens.push(t as i32);
+            }
+        }
+        TokenDataset { tokens, vocab }
+    }
+
+    /// Slice a (context, target) window pair of length `t` at offset `off`.
+    pub fn window(&self, off: usize, t: usize) -> (&[i32], &[i32]) {
+        (&self.tokens[off..off + t], &self.tokens[off + 1..off + t + 1])
+    }
+
+    pub fn max_offset(&self, t: usize) -> usize {
+        self.tokens.len().saturating_sub(t + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_balanced_and_deterministic() {
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let a = ImageDataset::synth(100, 16, 10, 2.0, &mut r1);
+        let b = ImageDataset::synth(100, 16, 10, 2.0, &mut r2);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+        for c in 0..10 {
+            assert_eq!(a.by_class(c).len(), 10);
+        }
+        let (x, y) = a.example(17);
+        assert_eq!(x.len(), 16);
+        assert_eq!(y, 7);
+    }
+
+    #[test]
+    fn classes_are_separable() {
+        // nearest-class-mean classifier on held-out samples should beat
+        // chance by a wide margin at signal = 2.0
+        let mut rng = Rng::new(9);
+        let ds = ImageDataset::synth(400, 32, 10, 2.0, &mut rng);
+        // estimate class means from the first 200
+        let mut means = vec![vec![0.0f64; 32]; 10];
+        let mut counts = vec![0usize; 10];
+        for i in 0..200 {
+            let (x, y) = ds.example(i);
+            counts[y as usize] += 1;
+            for j in 0..32 {
+                means[y as usize][j] += x[j] as f64;
+            }
+        }
+        for c in 0..10 {
+            for j in 0..32 {
+                means[c][j] /= counts[c] as f64;
+            }
+        }
+        let mut correct = 0;
+        for i in 200..400 {
+            let (x, y) = ds.example(i);
+            let pred = (0..10)
+                .min_by(|&a, &b| {
+                    let da: f64 = (0..32).map(|j| (x[j] as f64 - means[a][j]).powi(2)).sum();
+                    let db: f64 = (0..32).map(|j| (x[j] as f64 - means[b][j]).powi(2)).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if pred as i32 == y {
+                correct += 1;
+            }
+        }
+        assert!(correct > 150, "nearest-mean accuracy {correct}/200");
+    }
+
+    #[test]
+    fn token_stream_predictable() {
+        let mut rng = Rng::new(3);
+        let ds = TokenDataset::synth(5000, 64, 0.05, &mut rng);
+        assert_eq!(ds.tokens.len(), 5000);
+        assert!(ds.tokens.iter().all(|&t| (0..64).contains(&t)));
+        let (x, y) = ds.window(100, 32);
+        assert_eq!(x.len(), 32);
+        assert_eq!(&x[1..], &y[..31]); // shifted by one
+        assert!(ds.max_offset(32) == 5000 - 33);
+    }
+}

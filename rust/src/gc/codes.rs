@@ -1,0 +1,291 @@
+//! Cyclic gradient-code construction (paper §II-C, Tandon et al. Alg. 2).
+//!
+//! A code is a pair `(B, A)` with `A·B = 𝟙`. `B` is `M×M`, cyclic, with
+//! `s+1` nonzeros per row (row m is supported on columns
+//! `{m, m+1, …, m+s} mod M`). Rows of `B` are drawn from the null space of a
+//! random `s×M` matrix `H` whose columns sum to zero — this puts the all-one
+//! vector in the row space of any `M−s` rows, which is exactly what makes
+//! the code robust to any `s` stragglers.
+//!
+//! `A` is never materialized (it has `C(M,s)` rows): combinator rows are
+//! solved on demand from the observed straggler pattern
+//! (`gc::combinator::find_combinator`).
+
+use crate::linalg::{rank, solve_consistent, Matrix};
+use crate::util::rng::Rng;
+
+/// Reject codes whose coefficients exceed this magnitude (conditioning
+/// guard: the row solves can blow up when the random `H_supp` block is
+/// nearly singular, which poisons downstream decode numerics).
+pub const MAX_COEFF: f64 = 50.0;
+
+/// Generation is rejection sampling; degenerate draws have small
+/// probability so this bound is never approached in practice.
+const MAX_GENERATE_ATTEMPTS: usize = 1000;
+
+#[derive(Clone, Debug)]
+pub struct GcCode {
+    pub m: usize,
+    pub s: usize,
+    /// `M×M` cyclic allocation matrix.
+    pub b: Matrix,
+    /// The `s×M` parity matrix used in the construction (`H·bᵀ = 0` row-wise).
+    pub h: Matrix,
+}
+
+impl GcCode {
+    /// Cyclic support of row `m`: `{m, m+1, …, m+s} mod M`.
+    pub fn support(m: usize, s: usize, row: usize) -> Vec<usize> {
+        (0..=s).map(|o| (row + o) % m).collect()
+    }
+
+    /// Incoming-neighbor set `K₂(row)` (paper §III): the clients this client
+    /// must hear from — its row support minus itself.
+    pub fn incoming(&self, row: usize) -> Vec<usize> {
+        Self::support(self.m, self.s, row)
+            .into_iter()
+            .filter(|&k| k != row)
+            .collect()
+    }
+
+    /// Outgoing-neighbor set `K₁(col)`: the clients this client's gradient is
+    /// sent to — the rows whose support contains `col`, minus itself.
+    pub fn outgoing(&self, col: usize) -> Vec<usize> {
+        (0..self.m)
+            .filter(|&r| r != col && self.b[(r, col)] != 0.0)
+            .collect()
+    }
+
+    /// Generate a fresh random cyclic code (Tandon Algorithm 2 analogue).
+    ///
+    /// Requires `1 <= s <= M-1`. Each row's coefficients solve
+    /// `H_supp · x = 0` over the row's `s+1` support columns; the null space
+    /// is 1-dimensional w.p. 1, scaled so the diagonal entry is 1 (the
+    /// diagonal is the client's own gradient and must never vanish — the
+    /// rank analysis of Lemma 2 relies on it).
+    ///
+    /// Draws whose row solves are ill-conditioned (coefficients above
+    /// [`MAX_COEFF`]) or that fail the structural checks are rejected and
+    /// redrawn — this keeps every accepted code numerically well-behaved
+    /// for the decode paths (probability of rejection is small).
+    pub fn generate(m: usize, s: usize, rng: &mut Rng) -> GcCode {
+        assert!(m >= 2, "need at least 2 clients");
+        assert!(s >= 1 && s < m, "straggler tolerance s must be in [1, M-1]");
+        for _attempt in 0..MAX_GENERATE_ATTEMPTS {
+            // H: s x M, first M-1 columns ~ N(0,1), last column = -row sums
+            // so that H * 1 = 0 (the all-one vector lies in null(H)).
+            let mut h = Matrix::from_fn(s, m, |_, j| if j + 1 < m { rng.normal() } else { 0.0 });
+            for i in 0..s {
+                let sum: f64 = (0..m - 1).map(|j| h[(i, j)]).sum();
+                h[(i, m - 1)] = -sum;
+            }
+
+            let mut b = Matrix::zeros(m, m);
+            let mut ok = true;
+            'rows: for r in 0..m {
+                let supp = Self::support(m, s, r);
+                // Solve H_supp x = 0 with x[diag position] = 1:
+                // move the diagonal column to the RHS.
+                // H_rest (s x s) * x_rest = -H[:, r]
+                let rest: Vec<usize> = supp.iter().copied().filter(|&c| c != r).collect();
+                let h_rest = Matrix::from_fn(s, s, |i, j| h[(i, rest[j])]);
+                let rhs: Vec<f64> = (0..s).map(|i| -h[(i, r)]).collect();
+                match solve_consistent(&h_rest, &rhs) {
+                    Some(x) => {
+                        b[(r, r)] = 1.0;
+                        for (j, &c) in rest.iter().enumerate() {
+                            b[(r, c)] = x[j];
+                        }
+                    }
+                    None => {
+                        ok = false;
+                        break 'rows;
+                    }
+                }
+            }
+            if !ok || b.max_abs() > MAX_COEFF {
+                continue; // degenerate or ill-conditioned draw; redraw
+            }
+            let code = GcCode { m, s, b, h };
+            if code.structural_check().is_ok() {
+                return code;
+            }
+        }
+        panic!("GcCode::generate failed to draw a well-conditioned code for M={m}, s={s}");
+    }
+
+    /// Cheap invariants used as the accept test inside `generate`:
+    /// cyclic support + unit diagonal, rows in `null(H)`, `rank(B) = M−s`.
+    /// (`verify` additionally checks decodability on straggler patterns.)
+    pub fn structural_check(&self) -> anyhow::Result<()> {
+        let (m, s) = (self.m, self.s);
+        for r in 0..m {
+            let supp = Self::support(m, s, r);
+            anyhow::ensure!((self.b[(r, r)] - 1.0).abs() < 1e-9, "diagonal not 1 at row {r}");
+            for c in 0..m {
+                anyhow::ensure!(
+                    supp.contains(&c) || self.b[(r, c)] == 0.0,
+                    "row {r} has nonzero outside cyclic support at col {c}"
+                );
+            }
+        }
+        let hb = self.h.matmul(&self.b.transpose());
+        anyhow::ensure!(hb.max_abs() < 1e-6, "rows of B are not in null(H)");
+        let rk = rank(&self.b);
+        anyhow::ensure!(rk == m - s, "rank(B) = {rk}, expected M-s = {}", m - s);
+        Ok(())
+    }
+
+    /// Full verification: the structural invariants plus `AB = 𝟙` on
+    /// straggler patterns (every pattern when `C(M,s)` is small, random
+    /// patterns otherwise).
+    pub fn verify(&self, rng: &mut Rng) -> anyhow::Result<()> {
+        let (m, s) = (self.m, self.s);
+        self.structural_check()?;
+        // AB = 1 on straggler patterns
+        let patterns = sample_straggler_patterns(m, s, rng, 32);
+        for pat in patterns {
+            let received: Vec<usize> = (0..m).filter(|i| !pat.contains(i)).collect();
+            anyhow::ensure!(
+                super::combinator::find_combinator(self, &received).is_some(),
+                "no combinator for straggler pattern {pat:?}"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Sample up to `limit` straggler patterns of exactly `s` stragglers
+/// (exhaustive when `C(M,s)` is small).
+pub fn sample_straggler_patterns(
+    m: usize,
+    s: usize,
+    rng: &mut Rng,
+    limit: usize,
+) -> Vec<Vec<usize>> {
+    let total = binomial(m, s);
+    if total <= limit as u128 {
+        // exhaustive enumeration
+        let mut out = Vec::new();
+        let mut comb: Vec<usize> = (0..s).collect();
+        loop {
+            out.push(comb.clone());
+            // next combination
+            let mut i = s;
+            loop {
+                if i == 0 {
+                    return out;
+                }
+                i -= 1;
+                if comb[i] != i + m - s {
+                    break;
+                }
+            }
+            if comb[s - 1] == m - 1 && comb[0] == m - s {
+                return out;
+            }
+            comb[i] += 1;
+            for j in i + 1..s {
+                comb[j] = comb[j - 1] + 1;
+            }
+        }
+    }
+    (0..limit)
+        .map(|_| {
+            let mut idx = rng.sample_indices(m, s);
+            idx.sort();
+            idx
+        })
+        .collect()
+}
+
+/// Binomial coefficient (u128 to survive M up to ~60).
+pub fn binomial(n: usize, k: usize) -> u128 {
+    if k > n {
+        return 0;
+    }
+    let k = k.min(n - k);
+    let mut num: u128 = 1;
+    for i in 0..k {
+        num = num * (n - i) as u128 / (i + 1) as u128;
+    }
+    num
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::Prop;
+
+    #[test]
+    fn support_is_cyclic() {
+        assert_eq!(GcCode::support(5, 2, 3), vec![3, 4, 0]);
+        assert_eq!(GcCode::support(5, 2, 0), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn binomial_known() {
+        assert_eq!(binomial(10, 7), 120);
+        assert_eq!(binomial(10, 0), 1);
+        assert_eq!(binomial(5, 6), 0);
+        assert_eq!(binomial(52, 5), 2_598_960);
+    }
+
+    #[test]
+    fn enumeration_is_exhaustive() {
+        let mut rng = Rng::new(0);
+        let pats = sample_straggler_patterns(5, 2, &mut rng, 100);
+        assert_eq!(pats.len(), 10);
+        let set: std::collections::BTreeSet<_> = pats.iter().cloned().collect();
+        assert_eq!(set.len(), 10);
+    }
+
+    #[test]
+    fn paper_code_m10_s7_verifies() {
+        let mut rng = Rng::new(7);
+        let code = GcCode::generate(10, 7, &mut rng);
+        code.verify(&mut rng).unwrap();
+        assert_eq!(rank(&code.b), 3);
+    }
+
+    #[test]
+    fn prop_codes_verify_across_m_s() {
+        Prop::new(24).forall("code verifies", |rng, _| {
+            let m = rng.range(3, 13);
+            let s = rng.range(1, m);
+            let code = GcCode::generate(m, s, rng);
+            code.verify(rng).unwrap();
+        });
+    }
+
+    #[test]
+    fn neighbor_sets_are_consistent() {
+        let mut rng = Rng::new(3);
+        let code = GcCode::generate(8, 3, &mut rng);
+        for me in 0..8 {
+            let inc = code.incoming(me);
+            assert_eq!(inc.len(), 3);
+            // k is incoming to m  <=>  m is outgoing from k
+            for &k in &inc {
+                assert!(code.outgoing(k).contains(&me));
+            }
+        }
+    }
+
+    #[test]
+    fn all_one_in_row_space_of_any_m_minus_s_rows() {
+        // the essence of straggler tolerance: any M-s rows span 1
+        let mut rng = Rng::new(11);
+        let code = GcCode::generate(7, 3, &mut rng);
+        let pats = sample_straggler_patterns(7, 3, &mut rng, 1000);
+        for pat in pats {
+            let rows: Vec<usize> = (0..7).filter(|i| !pat.contains(i)).collect();
+            let bsub = code.b.select_rows(&rows).transpose(); // M x (M-s)
+            let ones = vec![1.0; 7];
+            assert!(
+                solve_consistent(&bsub, &ones).is_some(),
+                "pattern {pat:?} cannot reconstruct the sum"
+            );
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Standard GC decoding (paper §II-C2, §III): find the combination row
+//! `a_f` for an observed straggler pattern.
+//!
+//! Given the set of clients whose *complete* partial sums reached the PS,
+//! the combinator is a row vector supported on that set with
+//! `a_f · B = 1ᵀ`; applying it to the stacked partial sums recovers the
+//! exact gradient sum (eq. (9)). By the code construction this is solvable
+//! whenever at least `M − s` complete partial sums arrive, and never
+//! solvable otherwise — the binary all-or-nothing behaviour the paper
+//! analyzes.
+
+use super::codes::GcCode;
+use crate::linalg::{solve_consistent, Matrix};
+
+/// Solve for the combinator over the `received` complete partial sums.
+///
+/// Returns the full-length (`M`) coefficient vector with zeros at
+/// non-received positions, or `None` when the pattern is undecodable
+/// (fewer than `M − s` rows received — the "overall outage").
+pub fn find_combinator(code: &GcCode, received: &[usize]) -> Option<Vec<f64>> {
+    let m = code.m;
+    debug_assert!(received.iter().all(|&r| r < m));
+    if received.len() < m - code.s {
+        return None; // information-theoretically impossible
+    }
+    // Solve  B_F^T · a_F = 1  (M equations, |F| unknowns).
+    let bf_t = code.b.select_rows(received).transpose();
+    let ones = vec![1.0; m];
+    let af = solve_consistent(&bf_t, &ones)?;
+    let mut full = vec![0.0; m];
+    for (i, &r) in received.iter().enumerate() {
+        full[r] = af[i];
+    }
+    Some(full)
+}
+
+/// Apply a combinator to stacked partial sums (`M×D`, zero rows for
+/// non-received clients): the exact-sum recovery of eq. (9). This is the
+/// *native* path; the AOT Pallas path routes through `runtime::coded`.
+pub fn apply_combinator(a: &[f64], partial_sums: &Matrix) -> Vec<f64> {
+    assert_eq!(a.len(), partial_sums.rows);
+    let d = partial_sums.cols;
+    let mut out = vec![0.0; d];
+    for (coef, row) in a.iter().zip(0..partial_sums.rows) {
+        if *coef == 0.0 {
+            continue;
+        }
+        let r = partial_sums.row(row);
+        for j in 0..d {
+            out[j] += coef * r[j];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gc::codes::sample_straggler_patterns;
+    use crate::testing::{assert_allclose, Prop};
+    use crate::util::rng::Rng;
+
+    /// End-to-end check on one pattern: encode gradients into partial sums,
+    /// decode with the combinator, compare against the true sum.
+    fn check_pattern(code: &GcCode, received: &[usize], rng: &mut Rng) {
+        let (m, d) = (code.m, 17);
+        let grads = Matrix::from_fn(m, d, |_, _| rng.normal());
+        let sums = code.b.matmul(&grads); // complete partial sums
+        let a = find_combinator(code, received).expect("pattern should decode");
+        // zero out non-received rows, then combine
+        let mut masked = Matrix::zeros(m, d);
+        for &r in received {
+            masked.row_mut(r).copy_from_slice(sums.row(r));
+        }
+        let got = apply_combinator(&a, &masked);
+        let want: Vec<f64> = (0..d).map(|j| (0..m).map(|i| grads[(i, j)]).sum()).collect();
+        assert_allclose(&got, &want, 1e-6);
+    }
+
+    #[test]
+    fn exact_sum_under_max_stragglers() {
+        let mut rng = Rng::new(5);
+        let code = GcCode::generate(10, 7, &mut rng);
+        // all patterns with exactly s stragglers (sampled), plus none
+        for pat in sample_straggler_patterns(10, 7, &mut rng, 40) {
+            let received: Vec<usize> = (0..10).filter(|i| !pat.contains(i)).collect();
+            check_pattern(&code, &received, &mut rng);
+        }
+        check_pattern(&code, &(0..10).collect::<Vec<_>>(), &mut rng);
+    }
+
+    #[test]
+    fn too_few_rows_is_binary_failure() {
+        let mut rng = Rng::new(6);
+        let code = GcCode::generate(8, 3, &mut rng);
+        // only M - s - 1 = 4 received: must fail
+        assert!(find_combinator(&code, &[0, 2, 4, 6]).is_none());
+        assert!(find_combinator(&code, &[]).is_none());
+    }
+
+    #[test]
+    fn prop_any_m_minus_s_subset_decodes() {
+        Prop::new(20).forall("combinator exists", |rng, _| {
+            let m = rng.range(4, 11);
+            let s = rng.range(1, m - 1);
+            let code = GcCode::generate(m, s, rng);
+            // random subset of exactly M - s received rows
+            let mut received = rng.sample_indices(m, m - s);
+            received.sort();
+            check_pattern(&code, &received, rng);
+        });
+    }
+
+    #[test]
+    fn combinator_supported_on_received_only() {
+        let mut rng = Rng::new(9);
+        let code = GcCode::generate(9, 4, &mut rng);
+        let received = vec![1, 3, 4, 6, 8];
+        let a = find_combinator(&code, &received).unwrap();
+        for (i, &coef) in a.iter().enumerate() {
+            if !received.contains(&i) {
+                assert_eq!(coef, 0.0, "coefficient leaked to straggler {i}");
+            }
+        }
+    }
+}

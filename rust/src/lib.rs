@@ -1,0 +1,32 @@
+//! # CoGC — Cooperative Gradient Coding
+//!
+//! Production-grade reproduction of *Cooperative Gradient Coding* (Weng,
+//! Ren, Xiao, Skoglund; CS.DC 2025): a gradient-sharing gradient-coding
+//! framework for federated learning over unreliable links, with the
+//! standard binary GC decoder and the complementary GC⁺ decoder.
+//!
+//! Three layers:
+//! - **L3 (this crate)**: the coordinator — cyclic GC codes, erasure network
+//!   simulation, CoGC round engine, GC/GC⁺ decoding, outage + convergence +
+//!   privacy theory, figure harnesses.
+//! - **L2/L1 (python/, build-time only)**: JAX models + Pallas kernels,
+//!   AOT-lowered to HLO text and executed through the PJRT CPU client
+//!   (`runtime`), never touching python at run time.
+//!
+//! Quickstart: see `examples/quickstart.rs`; figures: `cogc fig4` …
+//! `cogc fig12`; theory: `cogc theory`, `cogc privacy`, `cogc design`.
+
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod figures;
+pub mod gc;
+pub mod linalg;
+pub mod metrics;
+pub mod network;
+pub mod outage;
+pub mod privacy;
+pub mod runtime;
+pub mod sim;
+pub mod testing;
+pub mod util;

@@ -1,0 +1,9 @@
+//! Dense linear algebra substrate: matrices, RREF with transform tracking,
+//! rank, and consistent-system solves. These power the GC code construction
+//! and the GC⁺ complementary decoder.
+
+pub mod matrix;
+pub mod rref;
+
+pub use matrix::Matrix;
+pub use rref::{decodable_columns, rank, rref_with_transform, solve_consistent, Rref};

@@ -1,0 +1,274 @@
+//! Reduced row-echelon form with transform tracking — the decode engine
+//! behind GC⁺ (paper Algorithm 2).
+//!
+//! `rref_with_transform(A)` returns `(E, T, pivots)` with `T · A = E`,
+//! `E` in RREF, and `pivots[j] = Some(row)` for pivot columns. Because the
+//! received partial sums satisfy `S = B̂ · G`, the same transform gives
+//! `T · S = E · G`; any row of `E` that is a unit vector `e_j` decodes the
+//! local model `g_j` as `(T · S)_row = T_row · S`.
+
+use super::matrix::Matrix;
+
+/// Relative pivot tolerance: coefficients are O(1) random reals, so values
+/// below `EPS * max_abs` are treated as exact zeros created by elimination.
+pub const EPS: f64 = 1e-9;
+
+pub struct Rref {
+    /// RREF of the input.
+    pub e: Matrix,
+    /// Row transform with `t · input = e`.
+    pub t: Matrix,
+    /// `pivots[c] = Some(r)` if column `c` has its pivot in row `r`.
+    pub pivots: Vec<Option<usize>>,
+    /// Numerical rank (= number of pivots).
+    pub rank: usize,
+}
+
+/// Compute RREF with partial pivoting, tracking the row transform.
+pub fn rref_with_transform(a: &Matrix) -> Rref {
+    let (n, m) = (a.rows, a.cols);
+    let mut e = a.clone();
+    let mut t = Matrix::identity(n);
+    let scale = a.max_abs().max(1.0);
+    let tol = EPS * scale;
+
+    let mut pivots: Vec<Option<usize>> = vec![None; m];
+    let mut r = 0; // next pivot row
+    for c in 0..m {
+        if r >= n {
+            break;
+        }
+        // partial pivot: largest |entry| in column c at/below row r
+        let (mut best, mut best_abs) = (r, e[(r, c)].abs());
+        for i in (r + 1)..n {
+            let v = e[(i, c)].abs();
+            if v > best_abs {
+                best = i;
+                best_abs = v;
+            }
+        }
+        if best_abs <= tol {
+            continue; // no pivot in this column
+        }
+        if best != r {
+            e.data.swap_chunks(best, r, m);
+            t.data.swap_chunks(best, r, n);
+        }
+        // normalize pivot row
+        let inv = 1.0 / e[(r, c)];
+        for x in e.row_mut(r) {
+            *x *= inv;
+        }
+        for x in t.row_mut(r) {
+            *x *= inv;
+        }
+        e[(r, c)] = 1.0; // exact
+        // eliminate column c from every other row
+        for i in 0..n {
+            if i == r {
+                continue;
+            }
+            let f = e[(i, c)];
+            if f.abs() <= tol {
+                e[(i, c)] = 0.0;
+                continue;
+            }
+            // e[i] -= f * e[r];  t[i] -= f * t[r]
+            let (erow, eref) = row_pair(&mut e, i, r);
+            for (x, p) in erow.iter_mut().zip(eref.iter()) {
+                *x -= f * p;
+            }
+            let (trow, tref) = row_pair(&mut t, i, r);
+            for (x, p) in trow.iter_mut().zip(tref.iter()) {
+                *x -= f * p;
+            }
+            e[(i, c)] = 0.0; // exact
+        }
+        pivots[c] = Some(r);
+        r += 1;
+    }
+
+    // flush sub-tolerance residue so downstream structure checks are exact
+    for x in &mut e.data {
+        if x.abs() <= tol {
+            *x = 0.0;
+        }
+    }
+    Rref { e, t, pivots, rank: r }
+}
+
+/// Numerical rank.
+pub fn rank(a: &Matrix) -> usize {
+    rref_with_transform(a).rank
+}
+
+/// Solve `A x = b` if consistent (free variables set to 0); `None` otherwise.
+pub fn solve_consistent(a: &Matrix, b: &[f64]) -> Option<Vec<f64>> {
+    assert_eq!(a.rows, b.len());
+    let aug = a.hstack(&Matrix::from_rows(&[b.to_vec()]).transpose());
+    let rr = rref_with_transform(&aug);
+    // inconsistent iff the augmented column holds a pivot
+    if rr.pivots[a.cols].is_some() {
+        return None;
+    }
+    let mut x = vec![0.0; a.cols];
+    for (c, p) in rr.pivots[..a.cols].iter().enumerate() {
+        if let Some(r) = p {
+            x[c] = rr.e[(*r, a.cols)];
+        }
+    }
+    // verify (guards borderline numerics)
+    let resid: f64 = a
+        .matvec(&x)
+        .iter()
+        .zip(b)
+        .map(|(y, t)| (y - t) * (y - t))
+        .sum::<f64>()
+        .sqrt();
+    let scale = 1.0 + b.iter().map(|v| v * v).sum::<f64>().sqrt();
+    (resid <= 1e-6 * scale).then_some(x)
+}
+
+/// Decodable columns: indices `j` whose value is pinned by `A`'s row space —
+/// i.e. some row of RREF is exactly the unit vector `e_j` — together with the
+/// transform row that extracts each (`g_j = transform_row · S`).
+pub fn decodable_columns(rr: &Rref) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    for (c, p) in rr.pivots.iter().enumerate() {
+        let Some(r) = *p else { continue };
+        let row = rr.e.row(r);
+        let clean = row
+            .iter()
+            .enumerate()
+            .all(|(j, &v)| j == c || v == 0.0);
+        if clean {
+            out.push((c, r));
+        }
+    }
+    out
+}
+
+// -- helpers -------------------------------------------------------------------
+
+trait SwapChunks {
+    fn swap_chunks(&mut self, i: usize, j: usize, w: usize);
+}
+
+impl SwapChunks for Vec<f64> {
+    fn swap_chunks(&mut self, i: usize, j: usize, w: usize) {
+        if i == j {
+            return;
+        }
+        let (lo, hi) = (i.min(j), i.max(j));
+        let (a, b) = self.split_at_mut(hi * w);
+        a[lo * w..lo * w + w].swap_with_slice(&mut b[..w]);
+    }
+}
+
+/// Mutable access to two distinct rows.
+fn row_pair(m: &mut Matrix, i: usize, r: usize) -> (&mut [f64], &[f64]) {
+    assert_ne!(i, r);
+    let w = m.cols;
+    if i < r {
+        let (a, b) = m.data.split_at_mut(r * w);
+        (&mut a[i * w..i * w + w], &b[..w])
+    } else {
+        let (a, b) = m.data.split_at_mut(i * w);
+        (&mut b[..w], &a[r * w..r * w + w])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn rref_known_small() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0, 3.0], vec![2.0, 4.0, 6.0], vec![1.0, 0.0, 1.0]]);
+        let rr = rref_with_transform(&a);
+        assert_eq!(rr.rank, 2);
+        // T * A == E
+        assert!(rr.t.matmul(&a).approx_eq(&rr.e, 1e-9));
+    }
+
+    #[test]
+    fn rref_identity_full_rank() {
+        let rr = rref_with_transform(&Matrix::identity(5));
+        assert_eq!(rr.rank, 5);
+        assert!(rr.e.approx_eq(&Matrix::identity(5), 0.0));
+    }
+
+    #[test]
+    fn transform_invariant_random() {
+        let mut rng = Rng::new(2024);
+        for trial in 0..50 {
+            let n = 2 + rng.below(8);
+            let m = 2 + rng.below(8);
+            let a = Matrix::from_fn(n, m, |_, _| rng.normal_ms(0.0, 2.0));
+            let rr = rref_with_transform(&a);
+            assert!(
+                rr.t.matmul(&a).approx_eq(&rr.e, 1e-7),
+                "trial {trial}: T*A != E"
+            );
+            assert!(rr.rank <= n.min(m));
+        }
+    }
+
+    #[test]
+    fn random_square_full_rank() {
+        let mut rng = Rng::new(7);
+        let a = Matrix::from_fn(10, 10, |_, _| rng.normal());
+        assert_eq!(rank(&a), 10); // w.p. 1
+    }
+
+    #[test]
+    fn rank_deficient_by_construction() {
+        let mut rng = Rng::new(8);
+        // 6x4 matrix whose rows live in a 2-dim subspace
+        let b1: Vec<f64> = (0..4).map(|_| rng.normal()).collect();
+        let b2: Vec<f64> = (0..4).map(|_| rng.normal()).collect();
+        let rows: Vec<Vec<f64>> = (0..6)
+            .map(|_| {
+                let (c1, c2) = (rng.normal(), rng.normal());
+                (0..4).map(|j| c1 * b1[j] + c2 * b2[j]).collect()
+            })
+            .collect();
+        assert_eq!(rank(&Matrix::from_rows(&rows)), 2);
+    }
+
+    #[test]
+    fn solve_consistent_works() {
+        let a = Matrix::from_rows(&[vec![2.0, 0.0], vec![0.0, 4.0], vec![2.0, 4.0]]);
+        let x = solve_consistent(&a, &[2.0, 8.0, 10.0]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-9 && (x[1] - 2.0).abs() < 1e-9);
+        assert!(solve_consistent(&a, &[2.0, 8.0, 11.0]).is_none());
+    }
+
+    #[test]
+    fn decodable_columns_identity_block() {
+        // rows pin g0 and g1+g2 but only g0 is a unit row
+        let a = Matrix::from_rows(&[vec![1.0, 0.0, 0.0], vec![0.0, 1.0, 1.0]]);
+        let rr = rref_with_transform(&a);
+        let dec = decodable_columns(&rr);
+        assert_eq!(dec.len(), 1);
+        assert_eq!(dec[0].0, 0);
+    }
+
+    #[test]
+    fn decodable_columns_extract_correct_values() {
+        // Random 3-unknown system with enough equations: all decodable, and
+        // the transform rows recover each unknown from the RHS.
+        let mut rng = Rng::new(99);
+        let g = [3.5, -1.25, 0.75];
+        let a = Matrix::from_fn(5, 3, |_, _| rng.normal());
+        let s: Vec<f64> = (0..5).map(|i| (0..3).map(|j| a[(i, j)] * g[j]).sum()).collect();
+        let rr = rref_with_transform(&a);
+        let dec = decodable_columns(&rr);
+        assert_eq!(dec.len(), 3);
+        for (c, r) in dec {
+            let got: f64 = rr.t.row(r).iter().zip(&s).map(|(w, v)| w * v).sum();
+            assert!((got - g[c]).abs() < 1e-8, "g[{c}]: {got} vs {}", g[c]);
+        }
+    }
+}

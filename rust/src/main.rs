@@ -1,0 +1,158 @@
+//! `cogc` — the CoGC launcher.
+//!
+//! Subcommands regenerate every paper figure as CSV on stdout, run custom
+//! training configurations, and expose the analysis tooling:
+//!
+//! ```text
+//! cogc fig4 [--trials 20000]                 outage P_O vs s (Fig. 4)
+//! cogc fig6 [--trials 2000]                  GC+ recovery stats (Fig. 6)
+//! cogc fig7  --network 1|2|3 [--rounds 100]  MNIST curves (Fig. 7)
+//! cogc fig8  --network 1|2|3                 CIFAR curves (Fig. 8)
+//! cogc fig10 [--target 0.85]                 cost-efficient GC (Fig. 10)
+//! cogc fig11 --conn good|moderate|poor       GC+ vs GC, MNIST (Fig. 11)
+//! cogc fig12 --conn good|moderate|poor       GC+ vs GC, CIFAR (Fig. 12)
+//! cogc remark5                               Remark-5 case study
+//! cogc theory                                Theorem-1 / Lemma-5 numerics
+//! cogc privacy [--dim 100]                   Lemma-1 LMIP table
+//! cogc design [--p 0.1] [--target-po 0.5]    eq. (21) design sweep
+//! cogc train --model M --agg A [...]         single training run (CSV log)
+//! cogc info                                  runtime / artifact info
+//! ```
+
+use cogc::coordinator::{Aggregator, Design};
+use cogc::figures;
+use cogc::network::Network;
+use cogc::runtime::{default_artifacts_dir, CombineImpl, Engine, Manifest};
+use cogc::util::cli::Args;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_agg(a: &Args) -> anyhow::Result<Aggregator> {
+    let tr = a.usize_opt("tr", 2)?;
+    let attempts = a.usize_opt("attempts", 1)?;
+    Ok(match a.str_opt("agg", "cogc").as_str() {
+        "ideal" => Aggregator::Ideal,
+        "intermittent" => Aggregator::Intermittent,
+        "cogc" => Aggregator::CoGc { design: Design::SkipRound, attempts },
+        "cogc-d1" => Aggregator::CoGc { design: Design::RetryUntilSuccess, attempts: attempts.max(50) },
+        "gcplus" => Aggregator::GcPlus { tr, until_decode: false, max_blocks: 1 },
+        "gcplus-until" => Aggregator::GcPlus { tr, until_decode: true, max_blocks: 25 },
+        "tandon" => Aggregator::TandonReplicated { attempts },
+        other => anyhow::bail!("unknown --agg {other:?}"),
+    })
+}
+
+fn parse_network(a: &Args, m: usize, seed: u64) -> anyhow::Result<Network> {
+    Ok(match a.str_opt("net", "homogeneous").as_str() {
+        "perfect" => Network::perfect(m),
+        "homogeneous" => {
+            Network::homogeneous(m, a.f64_opt("p-ps", 0.1)?, a.f64_opt("p-cc", 0.1)?)
+        }
+        "paper1" => Network::paper_network(1, m, seed),
+        "paper2" => Network::paper_network(2, m, seed),
+        "paper3" => Network::paper_network(3, m, seed),
+        tier @ ("good" | "moderate" | "poor") => Network::conn_tier(tier, m),
+        other => anyhow::bail!("unknown --net {other:?}"),
+    })
+}
+
+fn run(argv: &[String]) -> anyhow::Result<()> {
+    let args = Args::parse(argv, &["verbose", "native"], true)?;
+    if args.flag("verbose") {
+        cogc::util::logging::set_level(cogc::util::logging::Level::Debug);
+    }
+    let seed = args.u64_opt("seed", 42)?;
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    match sub.as_str() {
+        "fig4" => figures::fig4(args.usize_opt("trials", 20_000)?, seed).print(),
+        "fig6" => figures::fig6(args.usize_opt("trials", 2_000)?, seed).print(),
+        "fig7" | "fig8" => {
+            let model = if sub == "fig7" { "mnist_cnn" } else { "cifar_cnn" };
+            let network = args.usize_opt("network", 1)?;
+            let rounds = args.usize_opt("rounds", 100)?;
+            figures::fig7_8(model, network, rounds, seed)?.print();
+        }
+        "fig10" => figures::fig10(
+            args.usize_opt("rounds", 100)?,
+            args.f64_opt("target", 0.85)?,
+            seed,
+        )?
+        .print(),
+        "fig11" | "fig12" => {
+            let model = if sub == "fig11" { "mnist_cnn" } else { "cifar_cnn" };
+            let conn = args.str_opt("conn", "good");
+            let rounds = args.usize_opt("rounds", 100)?;
+            figures::fig11_12(model, &conn, rounds, seed)?.print();
+        }
+        "remark5" => figures::remark5().print(),
+        "theory" => figures::theory_table().print(),
+        "privacy" => figures::privacy_table(args.usize_opt("dim", 100)?).print(),
+        "design" => figures::design_table(
+            args.f64_opt("p", 0.1)?,
+            args.f64_opt("target-po", 0.5)?,
+            seed,
+        )
+        .print(),
+        "train" => {
+            let model = args.str_opt("model", "mnist_cnn");
+            let agg = parse_agg(&args)?;
+            let net = parse_network(&args, 10, seed)?;
+            let rounds = args.usize_opt("rounds", 50)?;
+            let combine = if args.flag("native") { CombineImpl::Native } else { CombineImpl::Pallas };
+            let log = figures::train_once(&model, agg, net, rounds, seed, combine)?;
+            print!("{}", log.to_csv());
+            eprintln!(
+                "final acc {:.4}, best {:.4}, {} updates, {} transmissions",
+                log.final_acc(),
+                log.best_acc(),
+                log.updates(),
+                log.total_transmissions()
+            );
+        }
+        "info" => {
+            let engine = Engine::cpu()?;
+            println!("platform: {}", engine.platform());
+            let dir = default_artifacts_dir();
+            println!("artifacts: {}", dir.display());
+            let man = Manifest::load(&dir)?;
+            println!("M={} t_r={} MT={}", man.m, man.tr, man.mt);
+            for (name, spec) in &man.models {
+                println!(
+                    "  {name}: D={} batch={} x={:?} artifacts={:?}",
+                    spec.d,
+                    spec.batch,
+                    spec.x_shape,
+                    spec.artifacts.keys().collect::<Vec<_>>()
+                );
+            }
+        }
+        _ => {
+            println!("{}", HELP.trim());
+        }
+    }
+    Ok(())
+}
+
+const HELP: &str = r#"
+cogc — Cooperative Gradient Coding (CoGC + GC+) launcher
+
+figures (CSV on stdout):
+  fig4 fig6 fig7 fig8 fig10 fig11 fig12 remark5 theory privacy design
+
+training:
+  train --model mnist_cnn|cifar_cnn|transformer
+        --agg ideal|intermittent|cogc|cogc-d1|gcplus|gcplus-until|tandon
+        --net perfect|homogeneous|paper1|paper2|paper3|good|moderate|poor
+        [--rounds N] [--seed S] [--p-ps P] [--p-cc P] [--tr T] [--attempts A]
+        [--native]   (native rust combine instead of the Pallas artifacts)
+
+misc:
+  info       show platform + artifact inventory
+  --verbose  debug logging
+"#;

@@ -1,0 +1,202 @@
+//! Metrics: training curves, round events, CSV emission.
+
+use std::fmt::Write as _;
+
+/// One training-round record.
+#[derive(Clone, Debug, Default)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Whether the PS updated the global model this round.
+    pub updated: bool,
+    /// Decode outcome: "standard", "full", "partial", "none", or baseline tag.
+    pub outcome: String,
+    /// Number of local models the update aggregated (0 when no update).
+    pub k4: usize,
+    /// Communication attempts consumed this round.
+    pub attempts: usize,
+    /// Transmissions consumed this round (sharing + uplinks).
+    pub transmissions: usize,
+    /// Mean training loss over clients' local steps this round.
+    pub train_loss: f64,
+    /// Test accuracy of the PS global model (NaN when not evaluated).
+    pub test_acc: f64,
+    /// Test loss of the PS global model (NaN when not evaluated).
+    pub test_loss: f64,
+}
+
+/// Accumulates per-round records and renders CSV.
+#[derive(Clone, Debug, Default)]
+pub struct RunLog {
+    pub name: String,
+    pub rounds: Vec<RoundRecord>,
+}
+
+impl RunLog {
+    pub fn new(name: &str) -> Self {
+        RunLog { name: name.to_string(), rounds: Vec::new() }
+    }
+
+    pub fn push(&mut self, rec: RoundRecord) {
+        self.rounds.push(rec);
+    }
+
+    /// Total transmissions across all rounds.
+    pub fn total_transmissions(&self) -> usize {
+        self.rounds.iter().map(|r| r.transmissions).sum()
+    }
+
+    /// Number of rounds with a successful global update.
+    pub fn updates(&self) -> usize {
+        self.rounds.iter().filter(|r| r.updated).count()
+    }
+
+    /// Final test accuracy (last evaluated round).
+    pub fn final_acc(&self) -> f64 {
+        self.rounds
+            .iter()
+            .rev()
+            .find(|r| r.test_acc.is_finite())
+            .map(|r| r.test_acc)
+            .unwrap_or(f64::NAN)
+    }
+
+    /// Best test accuracy seen.
+    pub fn best_acc(&self) -> f64 {
+        self.rounds
+            .iter()
+            .filter(|r| r.test_acc.is_finite())
+            .map(|r| r.test_acc)
+            .fold(f64::NAN, f64::max)
+    }
+
+    /// First round index whose test accuracy reaches `target`, if any.
+    pub fn rounds_to_acc(&self, target: f64) -> Option<usize> {
+        self.rounds
+            .iter()
+            .find(|r| r.test_acc.is_finite() && r.test_acc >= target)
+            .map(|r| r.round)
+    }
+
+    /// CSV with a `# name` header comment.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "# run: {}", self.name);
+        let _ = writeln!(
+            out,
+            "round,updated,outcome,k4,attempts,transmissions,train_loss,test_loss,test_acc"
+        );
+        for r in &self.rounds {
+            let _ = writeln!(
+                out,
+                "{},{},{},{},{},{},{:.6},{:.6},{:.4}",
+                r.round,
+                r.updated as u8,
+                r.outcome,
+                r.k4,
+                r.attempts,
+                r.transmissions,
+                r.train_loss,
+                r.test_loss,
+                r.test_acc
+            );
+        }
+        out
+    }
+}
+
+/// Generic CSV table builder for figure series.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub comment: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(comment: &str, header: &[&str]) -> Self {
+        Table {
+            comment: comment.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowf(&mut self, cells: &[f64]) {
+        self.row(&cells.iter().map(|x| format!("{x:.6}")).collect::<Vec<_>>());
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        for line in self.comment.lines() {
+            let _ = writeln!(out, "# {line}");
+        }
+        let _ = writeln!(out, "{}", self.header.join(","));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", r.join(","));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_csv());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, acc: f64, updated: bool, tx: usize) -> RoundRecord {
+        RoundRecord {
+            round,
+            updated,
+            outcome: "standard".into(),
+            k4: 10,
+            attempts: 1,
+            transmissions: tx,
+            train_loss: 1.0,
+            test_loss: 0.5,
+            test_acc: acc,
+        }
+    }
+
+    #[test]
+    fn runlog_aggregates() {
+        let mut log = RunLog::new("test");
+        log.push(rec(0, 0.2, true, 80));
+        log.push(rec(1, f64::NAN, false, 75));
+        log.push(rec(2, 0.5, true, 80));
+        assert_eq!(log.updates(), 2);
+        assert_eq!(log.total_transmissions(), 235);
+        assert_eq!(log.final_acc(), 0.5);
+        assert_eq!(log.best_acc(), 0.5);
+        assert_eq!(log.rounds_to_acc(0.4), Some(2));
+        assert_eq!(log.rounds_to_acc(0.9), None);
+        let csv = log.to_csv();
+        assert!(csv.starts_with("# run: test"));
+        assert_eq!(csv.lines().count(), 5);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new("fig4: P_O vs s", &["s", "p_o"]);
+        t.rowf(&[1.0, 0.25]);
+        t.rowf(&[2.0, 0.125]);
+        let csv = t.to_csv();
+        assert!(csv.contains("# fig4"));
+        assert!(csv.contains("s,p_o"));
+        assert_eq!(csv.lines().count(), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.rowf(&[1.0]);
+    }
+}

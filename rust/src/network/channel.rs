@@ -1,0 +1,107 @@
+//! Channel realizations: draw `T(r)` and `tau(r)` for one communication
+//! attempt (paper §II-B). All links are independent Bernoulli erasures.
+
+use super::topology::Network;
+use crate::util::rng::Rng;
+
+/// One realization of the client-to-client link matrix `T(r)` and the
+/// client-to-PS link vector `tau(r)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Realization {
+    /// `t[(m,k)] = true` iff the link from client k to client m is up.
+    /// Diagonal is always true (no transmission to self).
+    pub t: Vec<Vec<bool>>,
+    /// `tau[m] = true` iff the uplink from client m to the PS is up.
+    pub tau: Vec<bool>,
+}
+
+impl Realization {
+    /// Draw a fresh realization.
+    pub fn sample(net: &Network, rng: &mut Rng) -> Realization {
+        let m = net.m;
+        let t = (0..m)
+            .map(|i| {
+                (0..m)
+                    .map(|j| i == j || !rng.bernoulli(net.p_c2c[(i, j)]))
+                    .collect()
+            })
+            .collect();
+        let tau = (0..m).map(|i| !rng.bernoulli(net.p_c2s[i])).collect();
+        Realization { t, tau }
+    }
+
+    /// All links up (ideal-FL baseline / perfect round).
+    pub fn perfect(m: usize) -> Realization {
+        Realization { t: vec![vec![true; m]; m], tau: vec![true; m] }
+    }
+
+    pub fn m(&self) -> usize {
+        self.tau.len()
+    }
+
+    /// True iff client `m` heard every incoming link in `incoming`.
+    pub fn heard_all(&self, m: usize, incoming: &[usize]) -> bool {
+        incoming.iter().all(|&k| self.t[m][k])
+    }
+
+    /// Number of up uplinks.
+    pub fn uplinks_up(&self) -> usize {
+        self.tau.iter().filter(|&&b| b).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_network_never_fails() {
+        let net = Network::perfect(8);
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let r = Realization::sample(&net, &mut rng);
+            assert!(r.tau.iter().all(|&b| b));
+            assert!(r.t.iter().all(|row| row.iter().all(|&b| b)));
+        }
+    }
+
+    #[test]
+    fn always_down_network() {
+        let net = Network::homogeneous(6, 1.0, 1.0);
+        let mut rng = Rng::new(2);
+        let r = Realization::sample(&net, &mut rng);
+        assert!(r.tau.iter().all(|&b| !b));
+        for i in 0..6 {
+            for j in 0..6 {
+                assert_eq!(r.t[i][j], i == j, "diagonal stays up");
+            }
+        }
+    }
+
+    #[test]
+    fn outage_rates_match_probabilities() {
+        let net = Network::homogeneous(10, 0.4, 0.25);
+        let mut rng = Rng::new(3);
+        let n = 20_000;
+        let mut up_tau = 0usize;
+        let mut up_t = 0usize;
+        for _ in 0..n {
+            let r = Realization::sample(&net, &mut rng);
+            up_tau += r.tau[3] as usize;
+            up_t += r.t[2][7] as usize;
+        }
+        let f_tau = up_tau as f64 / n as f64;
+        let f_t = up_t as f64 / n as f64;
+        assert!((f_tau - 0.6).abs() < 0.02, "tau up-rate {f_tau}");
+        assert!((f_t - 0.75).abs() < 0.02, "t up-rate {f_t}");
+    }
+
+    #[test]
+    fn heard_all_semantics() {
+        let mut r = Realization::perfect(5);
+        r.t[2][4] = false;
+        assert!(r.heard_all(2, &[1, 3]));
+        assert!(!r.heard_all(2, &[3, 4]));
+        assert_eq!(r.uplinks_up(), 5);
+    }
+}

@@ -1,0 +1,8 @@
+//! Unreliable-communication model (paper §II-B): Bernoulli-erasure links
+//! between clients and from clients to the parameter server.
+
+pub mod channel;
+pub mod topology;
+
+pub use channel::Realization;
+pub use topology::Network;

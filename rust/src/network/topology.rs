@@ -1,0 +1,175 @@
+//! Network topologies: per-link Bernoulli outage probabilities (paper §II-B).
+//!
+//! Links are independent binary erasures: client-k → client-m fails with
+//! probability `p_c2c[(m,k)]`; client-m → PS fails with probability
+//! `p_c2s[m]`. Downlink broadcast is error-free (paper assumption).
+//!
+//! The named constructors reproduce the paper's experimental networks:
+//! Fig. 9's Networks 1–3 (homogeneous / heterogeneous client→PS), Fig. 6's
+//! settings 1–4, and Fig. 11/12's good/moderate/poor client-to-client tiers.
+
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub m: usize,
+    /// `p_c2s[m]`: outage probability of the uplink from client m to the PS.
+    pub p_c2s: Vec<f64>,
+    /// `p_c2c[(m,k)]`: outage probability of the link from client k to
+    /// client m (diagonal is 0 — no transmission to self).
+    pub p_c2c: Matrix,
+}
+
+impl Network {
+    /// Homogeneous network: every uplink fails w.p. `p_ps`, every
+    /// client-to-client link w.p. `p_cc`.
+    pub fn homogeneous(m: usize, p_ps: f64, p_cc: f64) -> Network {
+        assert!((0.0..=1.0).contains(&p_ps) && (0.0..=1.0).contains(&p_cc));
+        let mut p_c2c = Matrix::from_fn(m, m, |_, _| p_cc);
+        for i in 0..m {
+            p_c2c[(i, i)] = 0.0;
+        }
+        Network { m, p_c2s: vec![p_ps; m], p_c2c }
+    }
+
+    /// Heterogeneous uplinks drawn from U(lo, hi); homogeneous c2c links.
+    pub fn heterogeneous_uplink(m: usize, lo: f64, hi: f64, p_cc: f64, rng: &mut Rng) -> Network {
+        let mut net = Network::homogeneous(m, 0.0, p_cc);
+        for p in &mut net.p_c2s {
+            *p = rng.uniform(lo, hi);
+        }
+        net
+    }
+
+    /// Fully heterogeneous: uplinks U(lo_s,hi_s), c2c links U(lo_c,hi_c).
+    pub fn heterogeneous(
+        m: usize,
+        (lo_s, hi_s): (f64, f64),
+        (lo_c, hi_c): (f64, f64),
+        rng: &mut Rng,
+    ) -> Network {
+        let mut net = Network::homogeneous(m, 0.0, 0.0);
+        for p in &mut net.p_c2s {
+            *p = rng.uniform(lo_s, hi_s);
+        }
+        for i in 0..m {
+            for j in 0..m {
+                if i != j {
+                    net.p_c2c[(i, j)] = rng.uniform(lo_c, hi_c);
+                }
+            }
+        }
+        net
+    }
+
+    // -- paper networks --------------------------------------------------------
+
+    /// Fig. 9 Networks 1–3 (Figs. 7/8). Network 1 is homogeneous and mild;
+    /// Networks 2 and 3 have increasingly asymmetric client→PS statistics
+    /// (the regime where plain intermittent FL converges to a biased point);
+    /// client-to-client links stay good (p=0.1), the regime where CoGC's
+    /// binary decoder is effective (paper §VII-A).
+    pub fn paper_network(idx: usize, m: usize, seed: u64) -> Network {
+        let mut rng = Rng::new(seed ^ 0x9e37_79b9);
+        match idx {
+            1 => Network::homogeneous(m, 0.1, 0.1),
+            2 => Network::heterogeneous_uplink(m, 0.0, 0.5, 0.1, &mut rng),
+            3 => Network::heterogeneous_uplink(m, 0.1, 0.9, 0.1, &mut rng),
+            _ => panic!("paper networks are 1..=3, got {idx}"),
+        }
+    }
+
+    /// Fig. 6 settings 1–4 (GC+ recovery statistics).
+    pub fn fig6_setting(idx: usize, m: usize) -> Network {
+        match idx {
+            1 => Network::homogeneous(m, 0.4, 0.25),
+            2 => Network::homogeneous(m, 0.4, 0.5),
+            3 => Network::homogeneous(m, 0.75, 0.5),
+            4 => Network::homogeneous(m, 0.75, 0.8),
+            _ => panic!("fig6 settings are 1..=4, got {idx}"),
+        }
+    }
+
+    /// Fig. 11/12 connectivity tiers: poor client→PS (p=0.75) throughout;
+    /// client-to-client good / moderate / poor.
+    pub fn conn_tier(tier: &str, m: usize) -> Network {
+        let p_cc = match tier {
+            "good" => 0.1,
+            "moderate" => 0.5,
+            "poor" => 0.8,
+            _ => panic!("conn tier must be good|moderate|poor, got {tier:?}"),
+        };
+        Network::homogeneous(m, 0.75, p_cc)
+    }
+
+    /// Perfect connectivity (the ideal-FL baseline).
+    pub fn perfect(m: usize) -> Network {
+        Network::homogeneous(m, 0.0, 0.0)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.p_c2s.len() == self.m, "p_c2s length != M");
+        anyhow::ensure!(
+            self.p_c2c.rows == self.m && self.p_c2c.cols == self.m,
+            "p_c2c shape != MxM"
+        );
+        for i in 0..self.m {
+            anyhow::ensure!(self.p_c2c[(i, i)] == 0.0, "p_c2c diagonal must be 0");
+            anyhow::ensure!((0.0..=1.0).contains(&self.p_c2s[i]), "p_c2s out of range");
+            for j in 0..self.m {
+                anyhow::ensure!((0.0..=1.0).contains(&self.p_c2c[(i, j)]), "p_c2c out of range");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn homogeneous_is_valid() {
+        let net = Network::homogeneous(10, 0.4, 0.25);
+        net.validate().unwrap();
+        assert_eq!(net.p_c2s, vec![0.4; 10]);
+        assert_eq!(net.p_c2c[(0, 1)], 0.25);
+        assert_eq!(net.p_c2c[(3, 3)], 0.0);
+    }
+
+    #[test]
+    fn paper_networks_reproducible() {
+        let a = Network::paper_network(2, 10, 42);
+        let b = Network::paper_network(2, 10, 42);
+        assert_eq!(a.p_c2s, b.p_c2s);
+        a.validate().unwrap();
+        // heterogeneous: uplinks actually differ
+        let distinct = a
+            .p_c2s
+            .iter()
+            .map(|p| format!("{p:.12}"))
+            .collect::<std::collections::BTreeSet<_>>()
+            .len();
+        assert!(distinct > 5);
+    }
+
+    #[test]
+    fn fig6_settings_match_paper() {
+        let s3 = Network::fig6_setting(3, 10);
+        assert_eq!(s3.p_c2s[0], 0.75);
+        assert_eq!(s3.p_c2c[(0, 1)], 0.5);
+    }
+
+    #[test]
+    fn conn_tiers() {
+        assert_eq!(Network::conn_tier("poor", 10).p_c2c[(1, 0)], 0.8);
+        assert_eq!(Network::conn_tier("good", 10).p_c2s[0], 0.75);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_tier_panics() {
+        Network::conn_tier("great", 10);
+    }
+}

@@ -1,0 +1,231 @@
+//! Closed-form outage analysis of CoGC (paper §IV-A, eqs. (11)–(16)).
+//!
+//! Per round, client `m` produces a *complete* partial sum iff every
+//! incoming link of its cyclic neighborhood is up — probability
+//! `1 − q_m` with `q_m = 1 − ∏_{k∈K₂(m)}(1−p_mk)` — and it reaches the PS
+//! iff its uplink is up (prob `1 − p_m`). Because all links are independent
+//! and neighborhoods use disjoint links, the per-client delivery indicators
+//! are independent Bernoullis, so the exact heterogeneous-network law of
+//! the delivered count is a Poisson-binomial; we evaluate it with an O(M²)
+//! convolution DP instead of the paper's exponential subset sums, and also
+//! expose the paper's P₁/P₂/P₃ subcase decomposition (computed with a joint
+//! DP) so the identity `P_O = P₁+P₂+P₃` is testable.
+
+use crate::gc::GcCode;
+use crate::network::Network;
+
+/// Per-client probability that the partial sum is *incomplete*
+/// (`q_m = P₁₁` of eq. (11)): at least one incoming link erased.
+pub fn incomplete_probs(net: &Network, code: &GcCode) -> Vec<f64> {
+    (0..net.m)
+        .map(|m| {
+            let all_up: f64 = code
+                .incoming(m)
+                .iter()
+                .map(|&k| 1.0 - net.p_c2c[(m, k)])
+                .product();
+            1.0 - all_up
+        })
+        .collect()
+}
+
+/// Poisson-binomial PMF: `out[k] = P(exactly k successes)` for independent
+/// Bernoulli successes with probabilities `ps`.
+pub fn poisson_binomial_pmf(ps: &[f64]) -> Vec<f64> {
+    let n = ps.len();
+    let mut pmf = vec![0.0; n + 1];
+    pmf[0] = 1.0;
+    for (i, &p) in ps.iter().enumerate() {
+        for k in (0..=i + 1).rev() {
+            let stay = if k <= i { pmf[k] * (1.0 - p) } else { 0.0 };
+            let step = if k > 0 { pmf[k - 1] * p } else { 0.0 };
+            pmf[k] = stay + step;
+        }
+    }
+    pmf
+}
+
+/// The overall outage probability `P_O` (eq. (16)): probability that fewer
+/// than `M − s` complete partial sums are delivered to the PS.
+pub fn overall_outage(net: &Network, code: &GcCode) -> f64 {
+    let q = incomplete_probs(net, code);
+    let deliver: Vec<f64> = (0..net.m)
+        .map(|m| (1.0 - q[m]) * (1.0 - net.p_c2s[m]))
+        .collect();
+    let pmf = poisson_binomial_pmf(&deliver);
+    let need = net.m - code.s;
+    pmf[..need].iter().sum()
+}
+
+/// The paper's subcase decomposition (P₁, P₂, P₃) of `P_O`.
+///
+/// Joint DP over clients tracking (#incomplete partial sums, #complete
+/// partial sums whose uplink failed). Each client lands in exactly one of:
+/// incomplete (w.p. `q_m`), complete-but-undelivered (w.p. `(1−q_m)·p_m`),
+/// or delivered (the rest).
+///
+/// - `P₁ = P(incomplete > s)` — outage regardless of uplinks (Subcase 1);
+/// - `P₂ = P(incomplete = 0, uplink failures > s)` (Subcase 2);
+/// - `P₃ = P(1 ≤ incomplete = v ≤ s, uplink failures > s − v)` (Subcase 3).
+pub fn subcase_probs(net: &Network, code: &GcCode) -> (f64, f64, f64) {
+    let m = net.m;
+    let s = code.s;
+    let q = incomplete_probs(net, code);
+
+    // dp[v][f] = P(v incomplete, f complete-with-failed-uplink) so far
+    let mut dp = vec![vec![0.0; m + 1]; m + 1];
+    dp[0][0] = 1.0;
+    for client in 0..m {
+        let p_inc = q[client];
+        let p_fail = (1.0 - q[client]) * net.p_c2s[client];
+        let p_del = (1.0 - q[client]) * (1.0 - net.p_c2s[client]);
+        let mut next = vec![vec![0.0; m + 1]; m + 1];
+        for v in 0..=client {
+            for f in 0..=(client - v) {
+                let cur = dp[v][f];
+                if cur == 0.0 {
+                    continue;
+                }
+                next[v + 1][f] += cur * p_inc;
+                next[v][f + 1] += cur * p_fail;
+                next[v][f] += cur * p_del;
+            }
+        }
+        dp = next;
+    }
+
+    let (mut p1, mut p2, mut p3) = (0.0, 0.0, 0.0);
+    for v in 0..=m {
+        for f in 0..=(m - v) {
+            let pr = dp[v][f];
+            if pr == 0.0 {
+                continue;
+            }
+            if v > s {
+                p1 += pr; // Subcase 1: too many incomplete, outage for sure
+            } else if v == 0 && f > s {
+                p2 += pr; // Subcase 2
+            } else if v >= 1 && v + f > s {
+                p3 += pr; // Subcase 3
+            }
+        }
+    }
+    (p1, p2, p3)
+}
+
+/// Expected transmissions in one CoGC round (paper §V-1): `s·M` in the
+/// gradient-sharing phase plus one uplink transmission per *complete*
+/// partial sum (only those are sent under the standard decoder).
+pub fn expected_transmissions(net: &Network, code: &GcCode) -> f64 {
+    let q = incomplete_probs(net, code);
+    let expected_complete: f64 = q.iter().map(|qm| 1.0 - qm).sum();
+    (code.s * net.m) as f64 + expected_complete
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_close, Prop};
+    use crate::util::rng::Rng;
+
+    fn code(m: usize, s: usize, seed: u64) -> GcCode {
+        GcCode::generate(m, s, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn pmf_sums_to_one_and_matches_binomial() {
+        let pmf = poisson_binomial_pmf(&[0.3; 10]);
+        assert_close(pmf.iter().sum::<f64>(), 1.0, 1e-12);
+        // binomial check: P(X = 3) for Bin(10, 0.3)
+        let want = 120.0 * 0.3f64.powi(3) * 0.7f64.powi(7);
+        assert_close(pmf[3], want, 1e-12);
+    }
+
+    #[test]
+    fn pmf_heterogeneous_small_case() {
+        // two clients: p = [0.2, 0.5]
+        let pmf = poisson_binomial_pmf(&[0.2, 0.5]);
+        assert_close(pmf[0], 0.8 * 0.5, 1e-15);
+        assert_close(pmf[1], 0.2 * 0.5 + 0.8 * 0.5, 1e-15);
+        assert_close(pmf[2], 0.2 * 0.5, 1e-15);
+    }
+
+    #[test]
+    fn subcases_sum_to_overall() {
+        Prop::new(30).forall("P1+P2+P3 = PO", |rng, _| {
+            let m = rng.range(4, 12);
+            let s = rng.range(1, m);
+            let c = GcCode::generate(m, s, rng);
+            let net = crate::network::Network::heterogeneous(
+                m,
+                (0.0, 0.9),
+                (0.0, 0.9),
+                rng,
+            );
+            let po = overall_outage(&net, &c);
+            let (p1, p2, p3) = subcase_probs(&net, &c);
+            assert_close(p1 + p2 + p3, po, 1e-10);
+        });
+    }
+
+    #[test]
+    fn perfect_network_never_outages() {
+        let net = Network::perfect(10);
+        let c = code(10, 7, 1);
+        assert_close(overall_outage(&net, &c), 0.0, 1e-12);
+    }
+
+    #[test]
+    fn dead_network_always_outages() {
+        let net = Network::homogeneous(10, 1.0, 0.0);
+        let c = code(10, 7, 2);
+        assert_close(overall_outage(&net, &c), 1.0, 1e-12);
+    }
+
+    #[test]
+    fn remark5_case_study() {
+        // p_mk = 0.4, M = 10, s = 7: P(all 10 clients have incomplete sums)
+        // = (1 - 0.6^7)^10 = 0.7528 (paper Remark 5).
+        let net = Network::homogeneous(10, 0.0, 0.4);
+        let c = code(10, 7, 3);
+        let q = incomplete_probs(&net, &c);
+        let all_incomplete: f64 = q.iter().product();
+        assert_close(all_incomplete, 0.7528, 2e-4);
+        // and the overall outage is consequently enormous
+        let net2 = Network::homogeneous(10, 0.4, 0.4);
+        assert!(overall_outage(&net2, &c) > 0.95);
+    }
+
+    #[test]
+    fn outage_decreases_with_better_links() {
+        let c = code(10, 5, 4);
+        let po_bad = overall_outage(&Network::homogeneous(10, 0.4, 0.4), &c);
+        let po_mid = overall_outage(&Network::homogeneous(10, 0.2, 0.2), &c);
+        let po_good = overall_outage(&Network::homogeneous(10, 0.05, 0.05), &c);
+        assert!(po_bad > po_mid && po_mid > po_good);
+    }
+
+    #[test]
+    fn p2_monotone_decreasing_in_s() {
+        // the paper notes P2 decreases with s (more straggler margin)
+        let mut prev = f64::INFINITY;
+        for s in 1..10 {
+            let c = code(10, s, 100 + s as u64);
+            let net = Network::homogeneous(10, 0.3, 0.0); // isolate uplink effect
+            let (_, p2, _) = subcase_probs(&net, &c);
+            assert!(p2 <= prev + 1e-12, "P2 increased at s={s}");
+            prev = p2;
+        }
+    }
+
+    #[test]
+    fn expected_transmissions_bounds() {
+        let c = code(10, 7, 5);
+        let net = Network::homogeneous(10, 0.4, 0.25);
+        let tx = expected_transmissions(&net, &c);
+        assert!(tx > 70.0 && tx < 80.0, "tx = {tx}"); // sM=70 plus E[complete] in [0,10]
+        // perfect network: exactly (s+1) M
+        let tx_perfect = expected_transmissions(&Network::perfect(10), &c);
+        assert_close(tx_perfect, 80.0, 1e-12);
+    }
+}

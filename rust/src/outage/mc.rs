@@ -1,0 +1,251 @@
+//! Monte-Carlo estimation of outage / recovery statistics: cross-checks the
+//! closed forms in `outage::exact` and produces the GC⁺ recovery statistics
+//! of Fig. 6 (which have no closed form — only the bound of eq. (29)).
+
+use crate::gc::{self, GcCode};
+use crate::network::{Network, Realization};
+use crate::util::rng::Rng;
+
+/// Monte-Carlo estimate of the overall outage probability `P_O` under the
+/// standard GC decoder: fraction of rounds with fewer than `M − s` complete
+/// partial sums delivered.
+pub fn estimate_outage(net: &Network, code: &GcCode, trials: usize, rng: &mut Rng) -> f64 {
+    let need = net.m - code.s;
+    let mut outages = 0usize;
+    for _ in 0..trials {
+        let real = Realization::sample(net, rng);
+        let att = gc::Attempt::observe(code, &real);
+        if att.complete.len() < need {
+            outages += 1;
+        }
+    }
+    outages as f64 / trials as f64
+}
+
+/// GC⁺ repetition policy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RecoveryMode {
+    /// Exactly `t_r` attempts are stacked (the paper's analysis setting:
+    /// "a fixed number of repeated communications, t_r, is assumed").
+    FixedTr(usize),
+    /// Algorithm 1's protocol: blocks of `t_r` attempts accumulate into
+    /// `B̂(r)` until `K₄(r) ≠ ∅` (capped at `max_blocks` for safety).
+    /// In this mode partial decodes are rare: with generic perturbed rows,
+    /// no unit vector enters the row space until the rank reaches M, at
+    /// which point *all* models decode — this is why full recovery
+    /// dominates (paper Lemma 4 / Fig. 6).
+    UntilDecode { tr: usize, max_blocks: usize },
+}
+
+/// Outcome statistics of GC⁺ over `trials` rounds.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryStats {
+    pub trials: usize,
+    /// Standard GC succeeded in some attempt (≥ M−s complete sums).
+    pub standard: usize,
+    /// Complementary decoder recovered all M local models.
+    pub full: usize,
+    /// Complementary decoder recovered a proper non-empty subset.
+    pub partial: usize,
+    /// Nothing decodable.
+    pub none: usize,
+    /// Histogram of |K₄| over complementary decodes (index = |K₄|).
+    pub k4_hist: Vec<usize>,
+    /// Total communication attempts consumed (for mean attempts/round).
+    pub attempts: usize,
+}
+
+impl RecoveryStats {
+    /// P(update uses *all* local models) = standard + complementary-full.
+    pub fn p_full(&self) -> f64 {
+        (self.standard + self.full) as f64 / self.trials as f64
+    }
+
+    pub fn p_partial(&self) -> f64 {
+        self.partial as f64 / self.trials as f64
+    }
+
+    pub fn p_none(&self) -> f64 {
+        self.none as f64 / self.trials as f64
+    }
+
+    pub fn mean_attempts(&self) -> f64 {
+        self.attempts as f64 / self.trials as f64
+    }
+}
+
+/// Run the GC⁺ decoding pipeline (coefficients only, no payloads) and
+/// classify each round's outcome.
+pub fn gcplus_recovery(
+    net: &Network,
+    m: usize,
+    s: usize,
+    mode: RecoveryMode,
+    trials: usize,
+    rng: &mut Rng,
+) -> RecoveryStats {
+    let mut stats = RecoveryStats { trials, k4_hist: vec![0; m + 1], ..Default::default() };
+    let need = m - s;
+    let (tr, max_blocks) = match mode {
+        RecoveryMode::FixedTr(tr) => (tr, 1),
+        RecoveryMode::UntilDecode { tr, max_blocks } => (tr, max_blocks),
+    };
+    for _ in 0..trials {
+        let mut attempts: Vec<gc::Attempt> = Vec::new();
+        let mut outcome: Option<usize> = None; // |K4| of the decode
+        'blocks: for _ in 0..max_blocks {
+            for _ in 0..tr {
+                let code = GcCode::generate(m, s, rng);
+                let att = gc::Attempt::observe(&code, &Realization::sample(net, rng));
+                stats.attempts += 1;
+                // standard GC shortcut on any single attempt
+                if att.complete.len() >= need {
+                    stats.standard += 1;
+                    stats.k4_hist[m] += 1;
+                    outcome = Some(usize::MAX); // marker: standard
+                    break 'blocks;
+                }
+                attempts.push(att);
+            }
+            let stacked = gc::stack_attempts(&attempts);
+            let dec = gc::decode(&stacked);
+            if !dec.k4.is_empty() {
+                outcome = Some(dec.k4.len());
+                break 'blocks;
+            }
+            if matches!(mode, RecoveryMode::FixedTr(_)) {
+                outcome = Some(0);
+                break 'blocks;
+            }
+        }
+        match outcome {
+            Some(usize::MAX) => {} // standard, already recorded
+            Some(0) | None => {
+                stats.none += 1;
+                stats.k4_hist[0] += 1;
+            }
+            Some(k) if k == m => {
+                stats.full += 1;
+                stats.k4_hist[m] += 1;
+            }
+            Some(k) => {
+                stats.partial += 1;
+                stats.k4_hist[k] += 1;
+            }
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::outage::exact::overall_outage;
+    use crate::testing::Prop;
+
+    #[test]
+    fn mc_matches_closed_form() {
+        Prop::new(8).forall("mc vs exact", |rng, _| {
+            let m = rng.range(5, 11);
+            let s = rng.range(1, m);
+            let code = GcCode::generate(m, s, rng);
+            let net = Network::homogeneous(m, rng.uniform(0.05, 0.7), rng.uniform(0.05, 0.7));
+            let exact = overall_outage(&net, &code);
+            let trials = 20_000;
+            let mc = estimate_outage(&net, &code, trials, rng);
+            // 4-sigma binomial tolerance
+            let sigma = (exact * (1.0 - exact) / trials as f64).sqrt();
+            assert!(
+                (mc - exact).abs() < 4.0 * sigma + 5e-3,
+                "exact {exact} vs mc {mc} (m={m}, s={s})"
+            );
+        });
+    }
+
+    #[test]
+    fn recovery_stats_partition() {
+        let net = Network::fig6_setting(2, 10);
+        let mut rng = Rng::new(42);
+        for mode in [
+            RecoveryMode::FixedTr(2),
+            RecoveryMode::UntilDecode { tr: 2, max_blocks: 20 },
+        ] {
+            let st = gcplus_recovery(&net, 10, 7, mode, 300, &mut rng);
+            assert_eq!(st.standard + st.full + st.partial + st.none, st.trials);
+            assert_eq!(st.k4_hist.iter().sum::<usize>(), st.trials);
+            let total = st.p_full() + st.p_partial() + st.p_none();
+            assert!((total - 1.0).abs() < 1e-12);
+            assert!(st.mean_attempts() >= 1.0);
+        }
+    }
+
+    #[test]
+    fn paper_claim_full_recovery_dominates() {
+        // Lemma 4 / Fig. 6: under Algorithm 1's repeat-until-decode protocol
+        // (blocks of t_r = 2), full recovery dominates in every paper
+        // setting — generically no unit vector enters the row space before
+        // the rank saturates at M, so the first decodable event is usually
+        // "everything decodes".
+        let mut rng = Rng::new(7);
+        let mode = RecoveryMode::UntilDecode { tr: 2, max_blocks: 50 };
+        for setting in 1..=3 {
+            let net = Network::fig6_setting(setting, 10);
+            let st = gcplus_recovery(&net, 10, 7, mode, 300, &mut rng);
+            assert!(
+                st.p_full() > st.p_partial() && st.p_full() > st.p_none(),
+                "setting {setting}: full {:.3} partial {:.3} none {:.3}",
+                st.p_full(),
+                st.p_partial(),
+                st.p_none()
+            );
+        }
+        // Setting 4 (p_mk = 0.8) is the extreme-erasure regime: ~0.8^7 = 21%
+        // of delivered rows are already unit vectors, so a *partial* decode
+        // almost always fires before the stack reaches full rank. GC+ still
+        // always recovers something (the paper's operational claim).
+        let net = Network::fig6_setting(4, 10);
+        let st = gcplus_recovery(&net, 10, 7, mode, 300, &mut rng);
+        assert!(st.p_none() < 0.05, "setting 4 none = {:.3}", st.p_none());
+        assert!(st.p_full() + st.p_partial() > 0.95);
+    }
+
+    #[test]
+    fn fixed_tr_with_poor_uplinks_rarely_full() {
+        // Sanity check of the analysis mode: with p_m = 0.75 and t_r = 2 the
+        // PS sees ~5 of 20 rows, so full recovery needs a >= M-row delivery
+        // burst (P ~ 1.4%); its rate must be small. This is exactly why
+        // Algorithm 1 loops until decode.
+        let net = Network::fig6_setting(3, 10);
+        let mut rng = Rng::new(11);
+        let st = gcplus_recovery(&net, 10, 7, RecoveryMode::FixedTr(2), 800, &mut rng);
+        assert!(st.p_full() < 0.1, "p_full = {}", st.p_full());
+    }
+
+    #[test]
+    fn gcplus_beats_standard_gc_under_poor_c2c() {
+        // the headline GC+ claim: when client-to-client links are poor,
+        // standard GC almost never updates but GC+ (Algorithm 1) always
+        // decodes within a bounded number of blocks.
+        let net = Network::conn_tier("poor", 10);
+        let mut rng = Rng::new(3);
+        let code = GcCode::generate(10, 7, &mut rng);
+        let po = overall_outage(&net, &code);
+        assert!(po > 0.99, "standard GC should be nearly dead, P_O = {po}");
+        let st = gcplus_recovery(
+            &net,
+            10,
+            7,
+            RecoveryMode::UntilDecode { tr: 2, max_blocks: 50 },
+            200,
+            &mut rng,
+        );
+        assert!(
+            st.p_none() < 0.05,
+            "GC+ should decode something, failed {:.3}",
+            st.p_none()
+        );
+        // and the fixed-t_r mode still decodes a nontrivial fraction
+        let st2 = gcplus_recovery(&net, 10, 7, RecoveryMode::FixedTr(2), 400, &mut rng);
+        assert!(st2.p_none() < 0.7, "fixed-tr decode rate too low: {:.3}", st2.p_none());
+    }
+}

@@ -1,0 +1,12 @@
+//! Reliability theory: closed-form outage analysis, Monte-Carlo
+//! cross-checks, cost-efficient code design, and the convergence-bound
+//! numerics of Theorems 1–2.
+
+pub mod design;
+pub mod exact;
+pub mod mc;
+pub mod theory;
+
+pub use design::{cost_efficient_s, sweep, DesignPoint};
+pub use exact::{incomplete_probs, overall_outage, subcase_probs};
+pub use mc::{estimate_outage, gcplus_recovery, RecoveryStats};

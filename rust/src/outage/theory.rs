@@ -1,0 +1,329 @@
+//! Convergence theory numerics (paper §IV-B Theorem 1, Remark 4, §VI-C
+//! Lemma 5 / eq. (29), Theorem 2, Appendix A).
+//!
+//! Implements the negative-order polylogarithms `Li₋ᵥ(z)` in closed form,
+//! the geometric repeated-round statistics of Remark 4, the Theorem-1
+//! probabilistic convergence bound `ε(P_O)` (via the Delta-method Gaussian
+//! approximation and the three-sigma rule), the GC⁺ full-recovery lower
+//! bound `P̌_M` of eq. (29), the `K*` bound of Lemma 5 and the Theorem-2
+//! optimality gap.
+
+use crate::gc::codes::binomial;
+
+/// Negative-order polylogarithm `Li₋ᵥ(z) = Σ_{k≥1} kᵛ zᵏ` for v = 0..=4 and
+/// `|z| < 1`, in closed rational form.
+pub fn polylog_neg(v: u32, z: f64) -> f64 {
+    assert!(z.abs() < 1.0, "polylog_neg requires |z| < 1, got {z}");
+    let om = 1.0 - z;
+    match v {
+        0 => z / om,
+        1 => z / (om * om),
+        2 => z * (1.0 + z) / om.powi(3),
+        3 => z * (1.0 + 4.0 * z + z * z) / om.powi(4),
+        4 => z * (1.0 + z) * (1.0 + 10.0 * z + z * z) / om.powi(5),
+        _ => {
+            // series fallback (converges for |z| < 1)
+            let mut sum = 0.0;
+            let mut zk = 1.0;
+            for k in 1..10_000u64 {
+                zk *= z;
+                let term = (k as f64).powi(v as i32) * zk;
+                sum += term;
+                if term.abs() < 1e-16 * sum.abs().max(1.0) {
+                    break;
+                }
+            }
+            sum
+        }
+    }
+}
+
+/// Remark 4: rounds between consecutive successful recoveries are
+/// `Geo(1 − P_O)`; the expectation is `1/(1 − P_O)`.
+pub fn expected_rounds_between_success(p_o: f64) -> f64 {
+    assert!((0.0..1.0).contains(&p_o));
+    1.0 / (1.0 - p_o)
+}
+
+/// Inputs of the Theorem-1 bound.
+#[derive(Clone, Debug)]
+pub struct Theorem1Params {
+    pub m: usize,
+    /// Total training rounds T (large but finite).
+    pub t: usize,
+    /// Local iterations per round I.
+    pub i: usize,
+    /// Overall outage probability per round.
+    pub p_o: f64,
+    /// Client→PS outage probabilities `p_m` (length M).
+    pub p_c2s: Vec<f64>,
+    /// Data-variance bound σ² (Assumption 2).
+    pub sigma2: f64,
+    /// Heterogeneity bounds D_m² (Assumption 3), length M.
+    pub d2: Vec<f64>,
+    /// Initial optimality gap F(g⁰) − F*.
+    pub f_gap: f64,
+}
+
+/// Moments of J₁ and J₂ (eqs. (37)–(40)) and the resulting ε(P_O).
+#[derive(Clone, Debug)]
+pub struct Theorem1Bound {
+    pub mu_j1: f64,
+    pub sigma_j1: f64,
+    pub mu_j2: f64,
+    pub sigma_j2: f64,
+    /// The 99.86%-probability convergence bound ε(P_O) of eq. (18).
+    pub epsilon: f64,
+    /// Whether T is in the bound's validity regime: the theorem requires T
+    /// "sufficiently large", concretely `μ_J1 > 0` (the effective progress
+    /// coefficient `H₁ = R/2 − H₃` must stay positive on average).
+    pub valid: bool,
+}
+
+/// Smallest T (power-of-2 search) for which the Theorem-1 bound is valid
+/// at the given parameters — useful for picking T in sweeps.
+pub fn min_valid_t(p: &Theorem1Params) -> usize {
+    let mut t = 16usize;
+    while t < 1usize << 62 {
+        let mut q = p.clone();
+        q.t = t;
+        if theorem1_bound(&q).valid {
+            return t;
+        }
+        t *= 2;
+    }
+    t
+}
+
+/// Evaluate the Theorem-1 bound.
+///
+/// Follows Appendix A: with η = (1/L)√(M/T) the normalized J-statistics are
+/// Gaussian by CLT; the ratio is Delta-method Gaussian; Cauchy–Schwarz
+/// bounds the covariance; the three-sigma rule gives the 99.86% guarantee.
+pub fn theorem1_bound(p: &Theorem1Params) -> Theorem1Bound {
+    assert!((0.0..1.0).contains(&p.p_o), "P_O must be in [0,1) for convergence");
+    let (t, i, m) = (p.t as f64, p.i as f64, p.m as f64);
+    let po = p.p_o.max(1e-12); // Li expressions are continuous at 0; avoid 0/0
+    let g = (1.0 - po) / po;
+    let sqrt_mt = (m / t).sqrt();
+    let li1 = polylog_neg(1, po);
+    let li2 = polylog_neg(2, po);
+    let li3 = polylog_neg(3, po);
+    let li4 = polylog_neg(4, po);
+
+    // (37a), (37b), (38)
+    let mu_j1 = g * (0.5 * li1 - 2.0 * i * sqrt_mt * li2);
+    let e_j1_sq = g * (0.25 * li2 - 2.0 * i * sqrt_mt * li3 + 4.0 * i * i * (m / t) * li4);
+    let sigma_j1 = (e_j1_sq - mu_j1 * mu_j1).max(0.0).sqrt();
+
+    let sum_p2: f64 = p.p_c2s.iter().map(|x| x * x).sum();
+    let sum_pd2: f64 = p.p_c2s.iter().zip(&p.d2).map(|(pm, d)| pm * d).sum();
+
+    // (39a), (39b), (40a), (40b)
+    let mu_j3 = g * (0.5 * p.sigma2 * sqrt_mt * sum_p2 * li1 + 2.0 * i * sqrt_mt * sum_pd2 * li2);
+    let e_j3_sq = g
+        * (0.25 * (m / t) * p.sigma2 * p.sigma2 * sum_p2 * sum_p2 * li2
+            + 4.0 * (m / t) * i * sum_pd2 * sum_pd2 * li4
+            + 2.0 * (m / t) * i * sum_p2 * sum_pd2 * li3);
+    let sigma_j3 = (e_j3_sq - mu_j3 * mu_j3).max(0.0).sqrt();
+
+    // L cancels out of mu_J2's first term once eta = (1/L) sqrt(M/T) is
+    // substituted into H2/J-normalization; the paper's (40a) keeps L/(TI)
+    // with sqrt(T/M) — we take L = 1 (it rescales f_gap).
+    let mu_j2 = (1.0 / (t * i)) * (t / m).sqrt() * p.f_gap + mu_j3;
+    let sigma_j2 = sigma_j3;
+
+    // (46): sigma_max^2, then (18)
+    let sigma_max2 = sigma_j2 * sigma_j2 / (mu_j1 * mu_j1 * t)
+        + mu_j2 * mu_j2 * sigma_j1 * sigma_j1 / (mu_j1.powi(4) * t)
+        + 2.0 * mu_j2 * sigma_j1 * sigma_j2 / (mu_j1.powi(3) * t);
+    let epsilon = mu_j2 / mu_j1 + 3.0 * sigma_max2;
+
+    Theorem1Bound { mu_j1, sigma_j1, mu_j2, sigma_j2, epsilon, valid: mu_j1 > 0.0 }
+}
+
+/// Eq. (29): `P̌_M`, the lower bound on GC⁺ full recovery — the probability
+/// that at least `M` of the `(M−s)·t_r` extracted rows survive uplink
+/// erasure (homogeneous link probability `p`).
+pub fn p_check_full(m: usize, s: usize, tr: usize, p: f64) -> f64 {
+    let n = (m - s) * tr;
+    if n < m {
+        return 0.0;
+    }
+    let mut sum = 0.0;
+    for v in m..=n {
+        sum += binomial(n, v) as f64 * p.powi((n - v) as i32) * (1.0 - p).powi(v as i32);
+    }
+    sum.clamp(0.0, 1.0)
+}
+
+/// Lemma 5: upper bound on `1/K̄` (inverse expected decoded-set size), and
+/// the derived `K*`.
+pub fn k_star(m: usize, s: usize, tr: usize, p: f64, p_o: f64) -> f64 {
+    let pm = p_check_full(m, s, tr, p);
+    let harmonic: f64 = (1..m).map(|k| 1.0 / k as f64).sum();
+    let p_empty_bound = p_o.powi(tr as i32).min(1.0 - pm);
+    let inv_k = pm * harmonic / (1.0 - p_empty_bound).max(1e-12) + 1.0 / m as f64;
+    1.0 / inv_k
+}
+
+/// Theorem 2 inputs (GC⁺ convergence).
+#[derive(Clone, Debug)]
+pub struct Theorem2Params {
+    pub t: usize,
+    pub i: usize,
+    pub k_star: f64,
+    pub l_smooth: f64,
+    pub f_gap: f64,
+    pub sigma2: f64,
+    pub batch: f64,
+    /// Mean heterogeneity bound (1/M) Σ D_m².
+    pub mean_d2: f64,
+    /// Mean squared local-gradient norm bound (1/M) Σ J²_{m,r} (we fold the
+    /// double sum of (32) into its per-round mean).
+    pub mean_j2: f64,
+}
+
+/// Eq. (32): the Theorem-2 optimality gap bound.
+pub fn theorem2_bound(p: &Theorem2Params) -> f64 {
+    let (t, i, ks) = (p.t as f64, p.i as f64, p.k_star);
+    let tik = t * i * ks;
+    let ti = t * i;
+    (496.0 * p.l_smooth / (11.0 * tik.sqrt())) * p.f_gap
+        + (31.0 / (88.0 * ti.powf(1.5) * ks.sqrt())) * t * p.mean_j2
+        + (39.0 / (88.0 * tik.sqrt()) + 1.0 / (88.0 * tik.powf(0.75))) * p.sigma2 / p.batch
+        + (4.0 / (11.0 * tik.sqrt())
+            + 1.0 / (22.0 * tik.powf(0.75))
+            + 31.0 / (22.0 * ti.powf(0.25) * ks.powf(1.25)))
+            * p.mean_d2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::assert_close;
+
+    #[test]
+    fn polylog_matches_series() {
+        for &z in &[0.1, 0.4, 0.75, 0.9] {
+            for v in 0..=4u32 {
+                let closed = polylog_neg(v, z);
+                let mut series = 0.0;
+                let mut zk = 1.0;
+                for k in 1..2000u64 {
+                    zk *= z;
+                    series += (k as f64).powi(v as i32) * zk;
+                }
+                assert_close(closed, series, 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn polylog_identity_geometric_mean() {
+        // E[R] for R ~ Geo(1-z) equals ((1-z)/z) * Li_{-1}(z) shifted:
+        // sum_{k>=1} k z^{k-1} (1-z) = (1-z)/z * Li_{-1}(z) = 1/(1-z).
+        for &z in &[0.2, 0.5, 0.8] {
+            let lhs = (1.0 - z) / z * polylog_neg(1, z);
+            assert_close(lhs, 1.0 / (1.0 - z), 1e-12);
+            assert_close(expected_rounds_between_success(z), 1.0 / (1.0 - z), 1e-12);
+        }
+    }
+
+    fn base_params(p_o: f64, t: usize) -> Theorem1Params {
+        Theorem1Params {
+            m: 10,
+            t,
+            i: 5,
+            p_o,
+            p_c2s: vec![0.3; 10],
+            sigma2: 1.0,
+            d2: vec![1.0; 10],
+            f_gap: 10.0,
+        }
+    }
+
+    #[test]
+    fn bound_is_finite_and_positive() {
+        let b = theorem1_bound(&base_params(0.3, 10_000_000));
+        assert!(b.valid, "T=1e7 should be in the validity regime: {b:?}");
+        assert!(b.epsilon.is_finite() && b.epsilon > 0.0, "{b:?}");
+    }
+
+    #[test]
+    fn small_t_is_flagged_invalid() {
+        // the "T sufficiently large" requirement is real: tiny T flips mu_J1
+        let b = theorem1_bound(&base_params(0.8, 100));
+        assert!(!b.valid);
+        let t_min = min_valid_t(&base_params(0.8, 0));
+        assert!(t_min > 100, "t_min = {t_min}");
+        assert!(theorem1_bound(&base_params(0.8, t_min)).valid);
+    }
+
+    #[test]
+    fn bound_shrinks_with_t() {
+        // O(1/sqrt(T)) rate (Remark 6)
+        let e1 = theorem1_bound(&base_params(0.3, 10_000_000)).epsilon;
+        let e2 = theorem1_bound(&base_params(0.3, 1_000_000_000)).epsilon;
+        assert!(e2 < e1, "e(1e7) = {e1} vs e(1e9) = {e2}");
+        // ~ sqrt(100) improvement expected on the dominant term
+        assert!(e2 < 0.3 * e1);
+    }
+
+    #[test]
+    fn bound_grows_with_outage() {
+        // compare at a T valid for both outage levels
+        let t = min_valid_t(&base_params(0.8, 0)) * 4;
+        let e_lo = theorem1_bound(&base_params(0.1, t)).epsilon;
+        let e_hi = theorem1_bound(&base_params(0.8, t)).epsilon;
+        assert!(e_hi > e_lo, "epsilon must grow with P_O: {e_lo} vs {e_hi}");
+    }
+
+    #[test]
+    fn p_check_matches_paper_regimes() {
+        // (M-s) t_r >= M is required for any mass at all
+        assert_eq!(p_check_full(10, 7, 2, 0.3), 0.0); // 6 rows < 10
+        assert_eq!(p_check_full(10, 7, 3, 0.5), 0.0); // 9 rows < 10 even with perfect links
+        // with t_r = 4: 12 rows >= 10
+        let p = p_check_full(10, 7, 4, 0.2);
+        assert!(p > 0.0 && p < 1.0);
+        // perfect links: probability 1
+        assert_close(p_check_full(10, 7, 4, 0.0), 1.0, 1e-12);
+        // monotone in p
+        assert!(p_check_full(10, 7, 4, 0.1) > p_check_full(10, 7, 4, 0.5));
+    }
+
+    #[test]
+    fn p_check_approaches_one_when_rows_abound() {
+        // Lemma 4: (M-s) t_r >> M makes full recovery dominant
+        let p = p_check_full(10, 5, 10, 0.3); // 50 rows vs 10 needed
+        assert!(p > 0.999, "p = {p}");
+    }
+
+    #[test]
+    fn k_star_in_valid_range() {
+        for &(tr, p, po) in &[(2usize, 0.4, 0.9), (4, 0.2, 0.5), (8, 0.5, 0.99)] {
+            let ks = k_star(10, 7, tr, p, po);
+            assert!(ks > 0.0 && ks <= 10.0, "K* = {ks} (tr={tr})");
+        }
+    }
+
+    #[test]
+    fn theorem2_bound_decreases_with_budget() {
+        let mk = |t: usize| Theorem2Params {
+            t,
+            i: 5,
+            k_star: 5.0,
+            l_smooth: 1.0,
+            f_gap: 10.0,
+            sigma2: 1.0,
+            batch: 32.0,
+            mean_d2: 1.0,
+            mean_j2: 1.0,
+        };
+        let e1 = theorem2_bound(&mk(100));
+        let e2 = theorem2_bound(&mk(10_000));
+        assert!(e2 < e1);
+        assert!(e2 > 0.0);
+    }
+}

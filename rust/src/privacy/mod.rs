@@ -1,0 +1,189 @@
+//! Secure-aggregation analysis (paper §IV-C, Lemma 1) plus the Gaussian
+//! mechanism add-on the paper suggests for GC⁺ (Remark 8).
+//!
+//! Under the standard GC decoder the PS only sees *partial sums*
+//! `Σ_k b_mk g_k`; Lemma 1 quantifies what it can still learn about an
+//! individual `g_m` via context-dependent local mutual-information privacy
+//! (CD-LMIP). For mutually independent Gaussian models with isotropic (or
+//! diagonal) covariances the mutual information has the closed log-det
+//! ratio form of eq. (20).
+
+use crate::gc::GcCode;
+
+/// Lemma 1 for isotropic covariances `Σ_k = σ_k² I_d`:
+/// `μ = (d/2) · log2( Σ_k b_k² σ_k² / Σ_{k≠m} b_k² σ_k² )` bits.
+///
+/// `coeffs` are the partial-sum coefficients `b_mk` (a row of B),
+/// `variances` the per-client model variances `σ_k²`, `target` the index
+/// whose leakage is measured. Returns bits (`f64::INFINITY` when the
+/// denominator vanishes — e.g. the coefficient row touches only the target).
+pub fn lmip_isotropic(coeffs: &[f64], variances: &[f64], target: usize, d: usize) -> f64 {
+    assert_eq!(coeffs.len(), variances.len());
+    assert!(target < coeffs.len());
+    if coeffs[target] == 0.0 {
+        return 0.0; // target does not appear in the sum: zero leakage
+    }
+    let num: f64 = coeffs
+        .iter()
+        .zip(variances)
+        .map(|(b, v)| b * b * v)
+        .sum();
+    let den: f64 = coeffs
+        .iter()
+        .zip(variances)
+        .enumerate()
+        .filter(|(k, _)| *k != target)
+        .map(|(_, (b, v))| b * b * v)
+        .sum();
+    if den <= 0.0 {
+        return f64::INFINITY;
+    }
+    (d as f64 / 2.0) * (num / den).log2()
+}
+
+/// Lemma 1 for diagonal covariances: per-dimension variances
+/// `diag[k][j] = Σ_k[j,j]`. `μ = (1/2) Σ_j log2(num_j / den_j)` bits.
+pub fn lmip_diagonal(coeffs: &[f64], diag: &[Vec<f64>], target: usize) -> f64 {
+    assert_eq!(coeffs.len(), diag.len());
+    let d = diag[0].len();
+    let mut bits = 0.0;
+    for j in 0..d {
+        let num: f64 = coeffs
+            .iter()
+            .zip(diag)
+            .map(|(b, v)| b * b * v[j])
+            .sum();
+        let den: f64 = coeffs
+            .iter()
+            .zip(diag)
+            .enumerate()
+            .filter(|(k, _)| *k != target)
+            .map(|(_, (b, v))| b * b * v[j])
+            .sum();
+        if den <= 0.0 {
+            return f64::INFINITY;
+        }
+        bits += 0.5 * (num / den).log2();
+    }
+    bits
+}
+
+/// Worst-case leakage of a code row: max over the clients in its support.
+pub fn row_worst_leakage(code: &GcCode, row: usize, variances: &[f64], d: usize) -> f64 {
+    let coeffs: Vec<f64> = (0..code.m).map(|k| code.b[(row, k)]).collect();
+    (0..code.m)
+        .filter(|&k| coeffs[k] != 0.0)
+        .map(|k| lmip_isotropic(&coeffs, variances, k, d))
+        .fold(0.0, f64::max)
+}
+
+/// GC⁺ with the Gaussian mechanism (Remark 8): adding N(0, σ_dp² I) noise
+/// to each shared model bounds the per-partial-sum leakage at
+/// `(d/2) log2(1 + b_m² σ_m² / (Σ_{k≠m} b_k² σ_k² + σ_dp² Σ_k b_k²))`.
+pub fn lmip_with_gaussian_mechanism(
+    coeffs: &[f64],
+    variances: &[f64],
+    target: usize,
+    d: usize,
+    sigma_dp2: f64,
+) -> f64 {
+    if coeffs[target] == 0.0 {
+        return 0.0;
+    }
+    let coef2: f64 = coeffs.iter().map(|b| b * b).sum();
+    let signal = coeffs[target] * coeffs[target] * variances[target];
+    let noise: f64 = coeffs
+        .iter()
+        .zip(variances)
+        .enumerate()
+        .filter(|(k, _)| *k != target)
+        .map(|(_, (b, v))| b * b * v)
+        .sum::<f64>()
+        + sigma_dp2 * coef2;
+    if noise <= 0.0 {
+        return f64::INFINITY;
+    }
+    (d as f64 / 2.0) * (1.0 + signal / noise).log2()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_close, Prop};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn two_party_sum_leakage() {
+        // s = g1 + g2, unit variances: mu = (d/2) log2(2) = d/2 bits.
+        let mu = lmip_isotropic(&[1.0, 1.0], &[1.0, 1.0], 0, 10);
+        assert_close(mu, 5.0, 1e-12);
+    }
+
+    #[test]
+    fn more_cover_means_less_leakage() {
+        // adding more independent terms to the sum reduces leakage of each
+        let v = vec![1.0; 6];
+        let mut prev = f64::INFINITY;
+        for k in 2..=6 {
+            let coeffs: Vec<f64> = (0..6).map(|i| if i < k { 1.0 } else { 0.0 }).collect();
+            let mu = lmip_isotropic(&coeffs, &v, 0, 100);
+            assert!(mu < prev, "k={k}: {mu} !< {prev}");
+            prev = mu;
+        }
+    }
+
+    #[test]
+    fn solo_row_leaks_everything() {
+        let mu = lmip_isotropic(&[2.0, 0.0], &[1.0, 1.0], 0, 4);
+        assert!(mu.is_infinite());
+        // and a client not in the sum leaks nothing
+        assert_eq!(lmip_isotropic(&[0.0, 1.0], &[1.0, 1.0], 0, 4), 0.0);
+    }
+
+    #[test]
+    fn diagonal_reduces_to_isotropic() {
+        Prop::new(20).forall("diag == iso for equal dims", |rng, _| {
+            let n = rng.range(2, 6);
+            let d = rng.range(1, 8);
+            let coeffs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let vars: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 3.0)).collect();
+            let diag: Vec<Vec<f64>> = vars.iter().map(|&v| vec![v; d]).collect();
+            let a = lmip_isotropic(&coeffs, &vars, 0, d);
+            let b = lmip_diagonal(&coeffs, &diag, 0);
+            if a.is_finite() {
+                assert_close(a, b, 1e-9);
+            } else {
+                assert!(b.is_infinite());
+            }
+        });
+    }
+
+    #[test]
+    fn gc_rows_bound_leakage_below_half_d() {
+        // a GC partial sum over s+1 = 8 unit-variance models leaks at most
+        // what the 2-party sum does, and decreases with s
+        let mut rng = Rng::new(5);
+        let code = crate::gc::GcCode::generate(10, 7, &mut rng);
+        let v = vec![1.0; 10];
+        for row in 0..10 {
+            let mu = row_worst_leakage(&code, row, &v, 100);
+            assert!(mu.is_finite() && mu > 0.0);
+        }
+    }
+
+    #[test]
+    fn gaussian_mechanism_monotone_in_noise() {
+        let coeffs = [1.0, 0.5, -0.8, 0.0];
+        let vars = [1.0, 2.0, 0.5, 1.0];
+        let base = lmip_with_gaussian_mechanism(&coeffs, &vars, 0, 50, 0.0);
+        let mut prev = base;
+        for &s in &[0.5, 2.0, 10.0] {
+            let mu = lmip_with_gaussian_mechanism(&coeffs, &vars, 0, 50, s);
+            assert!(mu < prev, "noise {s}: {mu} !< {prev}");
+            prev = mu;
+        }
+        // zero-noise version coincides with Lemma 1 (log(1+S/N) = log(num/den))
+        let lemma1 = lmip_isotropic(&coeffs, &vars, 0, 50);
+        assert_close(base, lemma1, 1e-9);
+    }
+}

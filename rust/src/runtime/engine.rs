@@ -1,0 +1,94 @@
+//! PJRT engine: load HLO-text artifacts, compile once, execute many.
+//!
+//! Follows the /opt/xla-example/load_hlo reference: HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. Every artifact was lowered with
+//! `return_tuple=True`, so results decompose from a single tuple literal.
+
+use std::path::Path;
+use std::sync::Arc;
+
+/// Shared PJRT CPU client. Compiled executables keep the client alive.
+pub struct Engine {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl Engine {
+    pub fn cpu() -> anyhow::Result<Engine> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { client: Arc::new(client) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load one HLO-text artifact and compile it.
+    pub fn load(&self, path: &Path) -> anyhow::Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable { exe, _client: self.client.clone(), name: path.display().to_string() })
+    }
+}
+
+/// A compiled artifact. `run` takes input literals positionally and returns
+/// the decomposed output tuple.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    _client: Arc<xla::PjRtClient>,
+    pub name: String,
+}
+
+impl Executable {
+    pub fn run(&self, inputs: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute with borrowed inputs (avoids deep-copying cached literals —
+    /// the per-round gradient stack is reused across attempts).
+    pub fn run_refs(&self, inputs: &[&xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<&xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+// -- literal helpers -----------------------------------------------------------
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> anyhow::Result<xla::Literal> {
+    debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+    let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Build an i32 literal of the given shape from a flat slice.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> anyhow::Result<xla::Literal> {
+    debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+    let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Scalar literals.
+pub fn lit_f32_scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+pub fn lit_u32_scalar(x: u32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Extract a literal into a Vec<f32>.
+pub fn to_vec_f32(lit: &xla::Literal) -> anyhow::Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract a scalar f32.
+pub fn to_f32(lit: &xla::Literal) -> anyhow::Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}

@@ -1,0 +1,217 @@
+//! `artifacts/manifest.json` parsing: what the AOT build produced.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "uniform_fanin" | "zeros" | "ones" | "normal:<std>"
+    pub init: String,
+    pub fan_in: usize,
+}
+
+impl ParamSpec {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum InputKind {
+    /// f32 images `[B, C, H, W]` with i32 labels `[B]`.
+    Image,
+    /// i32 token ids `[B, T]` with i32 targets `[B, T]`.
+    Tokens,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    /// Flat parameter count D.
+    pub d: usize,
+    pub batch: usize,
+    pub x_shape: Vec<usize>,
+    pub y_shape: Vec<usize>,
+    pub kind: InputKind,
+    pub num_classes: usize,
+    pub params: Vec<ParamSpec>,
+    /// artifact tag -> file name (train/eval/encode/decode/sgd)
+    pub artifacts: BTreeMap<String, String>,
+    /// artifact tag -> ENTRY parameter count (jax strips unused args, e.g.
+    /// the dropout seed of models without dropout).
+    pub arities: BTreeMap<String, usize>,
+}
+
+impl ModelSpec {
+    pub fn x_elems(&self) -> usize {
+        self.x_shape.iter().product()
+    }
+
+    pub fn y_elems(&self) -> usize {
+        self.y_shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    /// Number of clients M the coded artifacts were built for.
+    pub m: usize,
+    /// Max stacked attempts t_r.
+    pub tr: usize,
+    /// Stacked row capacity M * t_r of the decode artifact.
+    pub mt: usize,
+    pub models: BTreeMap<String, ModelSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {path:?}: {e}; run `make artifacts`"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("bad manifest: {e}"))?;
+        let m = j.req("m")?.as_usize().unwrap();
+        let tr = j.req("tr")?.as_usize().unwrap();
+        let mt = j.req("mt")?.as_usize().unwrap();
+        let mut models = BTreeMap::new();
+        for (name, mj) in j.req("models")?.as_obj().unwrap() {
+            let kind_str = mj.req("meta")?.req("kind")?.as_str().unwrap().to_string();
+            let kind = match kind_str.as_str() {
+                "classifier" => InputKind::Image,
+                "lm" => InputKind::Tokens,
+                other => anyhow::bail!("unknown model kind {other:?}"),
+            };
+            let num_classes = match kind {
+                InputKind::Image => mj.req("meta")?.req("num_classes")?.as_usize().unwrap(),
+                InputKind::Tokens => mj.req("meta")?.req("vocab")?.as_usize().unwrap(),
+            };
+            let params = mj
+                .req("params")?
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|p| ParamSpec {
+                    name: p.req("name").unwrap().as_str().unwrap().to_string(),
+                    shape: p
+                        .req("shape")
+                        .unwrap()
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|x| x.as_usize().unwrap())
+                        .collect(),
+                    init: p.req("init").unwrap().as_str().unwrap().to_string(),
+                    fan_in: p.req("fan_in").unwrap().as_usize().unwrap(),
+                })
+                .collect();
+            let artifacts = mj
+                .req("artifacts")?
+                .as_obj()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.as_str().unwrap().to_string()))
+                .collect();
+            let arities = mj
+                .req("arities")?
+                .as_obj()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.as_usize().unwrap()))
+                .collect();
+            let spec = ModelSpec {
+                name: name.clone(),
+                d: mj.req("d")?.as_usize().unwrap(),
+                batch: mj.req("batch")?.as_usize().unwrap(),
+                x_shape: mj
+                    .req("x_shape")?
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|x| x.as_usize().unwrap())
+                    .collect(),
+                y_shape: mj
+                    .req("y_shape")?
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|x| x.as_usize().unwrap())
+                    .collect(),
+                kind,
+                num_classes,
+                params,
+                artifacts,
+                arities,
+            };
+            anyhow::ensure!(
+                spec.params.iter().map(|p| p.size()).sum::<usize>() == spec.d,
+                "param spec sizes do not sum to D for {name}"
+            );
+            models.insert(name.clone(), spec);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), m, tr, mt, models })
+    }
+
+    pub fn model(&self, name: &str) -> anyhow::Result<&ModelSpec> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("model {name:?} not in manifest ({:?})", self.models.keys()))
+    }
+
+    pub fn artifact_path(&self, spec: &ModelSpec, tag: &str) -> anyhow::Result<PathBuf> {
+        let file = spec
+            .artifacts
+            .get(tag)
+            .ok_or_else(|| anyhow::anyhow!("artifact {tag:?} missing for {}", spec.name))?;
+        Ok(self.dir.join(file))
+    }
+}
+
+/// Locate the artifacts directory: `$COGC_ARTIFACTS` or `./artifacts`
+/// (walking up from cwd so tests can run from subdirectories).
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("COGC_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest() {
+        // requires `make artifacts` (the Makefile test target guarantees it)
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let man = Manifest::load(&dir).unwrap();
+        assert_eq!(man.m, 10);
+        assert_eq!(man.mt, man.m * man.tr);
+        let mnist = man.model("mnist_cnn").unwrap();
+        assert_eq!(mnist.d, 51480);
+        assert_eq!(mnist.kind, InputKind::Image);
+        assert_eq!(mnist.x_shape, vec![32, 1, 28, 28]);
+        for tag in ["train", "eval", "encode", "decode", "sgd"] {
+            let p = man.artifact_path(mnist, tag).unwrap();
+            assert!(p.exists(), "{p:?} missing");
+        }
+        let tf = man.model("transformer").unwrap();
+        assert_eq!(tf.kind, InputKind::Tokens);
+        assert!(man.model("nope").is_err());
+    }
+}

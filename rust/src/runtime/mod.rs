@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts (`make artifacts`) and
+//! executes them on the CPU PJRT client. Python never runs here.
+
+pub mod coded;
+pub mod engine;
+pub mod manifest;
+pub mod model;
+
+pub use coded::{CodedKernels, CombineImpl};
+pub use engine::Engine;
+pub use manifest::{default_artifacts_dir, InputKind, Manifest, ModelSpec};
+pub use model::{Batch, ModelRuntime};

@@ -1,0 +1,127 @@
+//! Model runtime: typed wrappers over the AOT train/eval/sgd artifacts.
+
+use super::engine::{
+    lit_f32, lit_f32_scalar, lit_i32, lit_u32_scalar, to_f32, to_vec_f32, Engine, Executable,
+};
+use super::manifest::{InputKind, Manifest, ModelSpec};
+use crate::util::rng::Rng;
+
+/// One training/eval batch in the layout the artifacts expect.
+#[derive(Clone, Debug)]
+pub enum Batch {
+    /// f32 images `[B*C*H*W]` + labels `[B]`.
+    Image { x: Vec<f32>, y: Vec<i32> },
+    /// i32 tokens `[B*T]` + targets `[B*T]`.
+    Tokens { x: Vec<i32>, y: Vec<i32> },
+}
+
+impl Batch {
+    pub fn kind(&self) -> InputKind {
+        match self {
+            Batch::Image { .. } => InputKind::Image,
+            Batch::Tokens { .. } => InputKind::Tokens,
+        }
+    }
+}
+
+/// Compiled executables + metadata for one model.
+pub struct ModelRuntime {
+    pub spec: ModelSpec,
+    train: Executable,
+    eval: Executable,
+    sgd: Executable,
+}
+
+impl ModelRuntime {
+    pub fn load(engine: &Engine, man: &Manifest, name: &str) -> anyhow::Result<ModelRuntime> {
+        let spec = man.model(name)?.clone();
+        let train = engine.load(&man.artifact_path(&spec, "train")?)?;
+        let eval = engine.load(&man.artifact_path(&spec, "eval")?)?;
+        let sgd = engine.load(&man.artifact_path(&spec, "sgd")?)?;
+        Ok(ModelRuntime { spec, train, eval, sgd })
+    }
+
+    /// Initialize a flat parameter vector from the manifest's per-tensor
+    /// init schemes (mirrors `python/compile/models/common.py::init_flat`).
+    pub fn init_params(&self, rng: &mut Rng) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.spec.d);
+        for p in &self.spec.params {
+            let n = p.size();
+            match p.init.as_str() {
+                "zeros" => out.extend(std::iter::repeat(0.0f32).take(n)),
+                "ones" => out.extend(std::iter::repeat(1.0f32).take(n)),
+                "uniform_fanin" => {
+                    let bound = 1.0 / (p.fan_in.max(1) as f64).sqrt();
+                    out.extend((0..n).map(|_| rng.uniform(-bound, bound) as f32));
+                }
+                init if init.starts_with("normal:") => {
+                    let std: f64 = init[7..].parse().expect("bad normal std in manifest");
+                    out.extend((0..n).map(|_| rng.normal_ms(0.0, std) as f32));
+                }
+                other => panic!("unknown init scheme {other:?} in manifest"),
+            }
+        }
+        debug_assert_eq!(out.len(), self.spec.d);
+        out
+    }
+
+    fn xy_literals(&self, batch: &Batch) -> anyhow::Result<(xla::Literal, xla::Literal)> {
+        anyhow::ensure!(batch.kind() == self.spec.kind, "batch kind mismatch");
+        Ok(match batch {
+            Batch::Image { x, y } => (
+                lit_f32(x, &self.spec.x_shape)?,
+                lit_i32(y, &self.spec.y_shape)?,
+            ),
+            Batch::Tokens { x, y } => (
+                lit_i32(x, &self.spec.x_shape)?,
+                lit_i32(y, &self.spec.y_shape)?,
+            ),
+        })
+    }
+
+    /// One local SGD step (paper eq. (2)); returns (new params, loss).
+    pub fn train_step(
+        &self,
+        params: &[f32],
+        batch: &Batch,
+        seed: u32,
+        lr: f32,
+    ) -> anyhow::Result<(Vec<f32>, f32)> {
+        let (x, y) = self.xy_literals(batch)?;
+        let p = lit_f32(params, &[self.spec.d])?;
+        // models without dropout lower to 4 entry params (seed stripped)
+        let arity = self.spec.arities.get("train").copied().unwrap_or(5);
+        let out = if arity == 5 {
+            self.train
+                .run(&[p, x, y, lit_u32_scalar(seed), lit_f32_scalar(lr)])?
+        } else {
+            self.train.run(&[p, x, y, lit_f32_scalar(lr)])?
+        };
+        anyhow::ensure!(out.len() == 2, "train artifact returned {} outputs", out.len());
+        Ok((to_vec_f32(&out[0])?, to_f32(&out[1])?))
+    }
+
+    /// Evaluate a batch; returns (mean loss, #correct).
+    pub fn eval_step(&self, params: &[f32], batch: &Batch) -> anyhow::Result<(f32, f32)> {
+        let (x, y) = self.xy_literals(batch)?;
+        let p = lit_f32(params, &[self.spec.d])?;
+        let out = self.eval.run(&[p, x, y])?;
+        anyhow::ensure!(out.len() == 2, "eval artifact returned {} outputs", out.len());
+        Ok((to_f32(&out[0])?, to_f32(&out[1])?))
+    }
+
+    /// PS-side fused update `p − lr·g` through the L1 Pallas kernel
+    /// (`lr = −1` turns it into the additive global update of eq. (10)).
+    pub fn sgd_apply(&self, params: &[f32], grad: &[f32], lr: f32) -> anyhow::Result<Vec<f32>> {
+        let p = lit_f32(params, &[self.spec.d])?;
+        let g = lit_f32(grad, &[self.spec.d])?;
+        let out = self.sgd.run(&[p, g, lit_f32_scalar(lr)])?;
+        Ok(to_vec_f32(&out[0])?)
+    }
+
+    /// Per-example predictions are not exposed; accuracy comes from
+    /// `eval_step`'s correct count over the fixed eval batch shape.
+    pub fn batch_size(&self) -> usize {
+        self.spec.batch
+    }
+}

@@ -1,0 +1,108 @@
+//! Mini property-testing framework (substrate — proptest is not available
+//! offline). Deterministic: every property runs `cases` seeds derived from a
+//! base seed; failures report the failing case seed so they can be replayed
+//! with `forall_seeded`.
+
+use crate::util::rng::Rng;
+
+pub struct Prop {
+    pub cases: usize,
+    pub base_seed: u64,
+}
+
+impl Default for Prop {
+    fn default() -> Self {
+        // COGC_PROP_CASES scales the sweep (CI vs thorough local runs).
+        let cases = std::env::var("COGC_PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        Prop { cases, base_seed: 0xC06C_0DE5 }
+    }
+}
+
+impl Prop {
+    pub fn new(cases: usize) -> Self {
+        Prop { cases, ..Default::default() }
+    }
+
+    /// Run `f(rng, case_index)` for every case; panic with the case seed on
+    /// the first failure (any panic inside `f`).
+    pub fn forall(&self, name: &str, mut f: impl FnMut(&mut Rng, usize)) {
+        for case in 0..self.cases {
+            let seed = self.base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+            let mut rng = Rng::new(seed);
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                f(&mut rng, case)
+            }));
+            if let Err(e) = result {
+                let msg = e
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".into());
+                panic!("property {name:?} failed at case {case} (seed {seed:#x}): {msg}");
+            }
+        }
+    }
+}
+
+/// Replay a single failing case.
+pub fn forall_seeded(seed: u64, f: impl FnOnce(&mut Rng)) {
+    let mut rng = Rng::new(seed);
+    f(&mut rng);
+}
+
+/// Assert two f64 values are close (relative + absolute tolerance).
+#[track_caller]
+pub fn assert_close(a: f64, b: f64, tol: f64) {
+    let scale = 1.0f64.max(a.abs()).max(b.abs());
+    assert!(
+        (a - b).abs() <= tol * scale,
+        "assert_close failed: {a} vs {b} (tol {tol})"
+    );
+}
+
+/// Assert slices are element-wise close.
+#[track_caller]
+pub fn assert_allclose(a: &[f64], b: &[f64], tol: f64) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0f64.max(x.abs()).max(y.abs());
+        assert!(
+            (x - y).abs() <= tol * scale,
+            "assert_allclose failed at index {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut count = 0;
+        Prop::new(10).forall("counter", |_, _| count += 1);
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    fn forall_reports_failure() {
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            Prop::new(10).forall("fails", |_, case| assert!(case < 5));
+        }));
+        let err = r.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "<?>".into());
+        assert!(msg.contains("case 5"), "msg: {msg}");
+    }
+
+    #[test]
+    fn close_helpers() {
+        assert_close(1.0, 1.0 + 1e-12, 1e-9);
+        assert_allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-12], 1e-9);
+    }
+}

@@ -1,0 +1,131 @@
+//! Tiny CLI argument parser (substrate — clap is not available offline).
+//!
+//! Supports `program <subcommand> --key value --flag positionals...` with
+//! typed accessors and defaulting. Unknown options are an error so typos
+//! fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the program name).
+    ///
+    /// `known_flags` lists boolean options (present/absent, no value); every
+    /// other `--key` consumes the next token as its value.
+    pub fn parse(
+        argv: &[String],
+        known_flags: &[&str],
+        expect_subcommand: bool,
+    ) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if expect_subcommand {
+            if let Some(first) = it.peek() {
+                if !first.starts_with('-') {
+                    out.subcommand = Some(it.next().unwrap().clone());
+                }
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if known_flags.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    let val = it
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("option --{name} needs a value"))?;
+                    out.options.insert(name.to_string(), val.clone());
+                }
+            } else {
+                out.positionals.push(tok.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn str_opt(&self, name: &str, default: &str) -> String {
+        self.options.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn usize_opt(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64_opt(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_opt(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got {v:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(&argv("fig7 --network 2 --seed 42 --verbose pos1"), &["verbose"], true)
+            .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("fig7"));
+        assert_eq!(a.usize_opt("network", 1).unwrap(), 2);
+        assert_eq!(a.u64_opt("seed", 0).unwrap(), 42);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positionals, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&argv("train"), &[], true).unwrap();
+        assert_eq!(a.usize_opt("rounds", 100).unwrap(), 100);
+        assert_eq!(a.f64_opt("lr", 0.005).unwrap(), 0.005);
+        assert_eq!(a.str_opt("model", "mnist_cnn"), "mnist_cnn");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&argv("x --opt"), &[], true).is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::parse(&argv("--seed abc"), &[], false).unwrap();
+        assert!(a.u64_opt("seed", 0).is_err());
+    }
+}

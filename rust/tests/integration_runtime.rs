@@ -1,0 +1,199 @@
+//! Integration: PJRT runtime vs the AOT artifacts (requires `make artifacts`).
+//!
+//! The key numerical contract checked here: the Pallas coded_matmul /
+//! sgd_apply artifacts must agree with the native rust implementations to
+//! f32 precision — that equivalence is what lets the ablation benches swap
+//! implementations freely.
+
+use cogc::linalg::Matrix;
+use cogc::runtime::{
+    coded::native_combine, default_artifacts_dir, Batch, CodedKernels, CombineImpl, Engine,
+    InputKind, Manifest, ModelRuntime,
+};
+use cogc::util::rng::Rng;
+
+fn setup() -> (Engine, Manifest) {
+    let dir = default_artifacts_dir();
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    (Engine::cpu().unwrap(), Manifest::load(&dir).unwrap())
+}
+
+fn fake_batch(model: &ModelRuntime, rng: &mut Rng) -> Batch {
+    let spec = &model.spec;
+    match spec.kind {
+        InputKind::Image => Batch::Image {
+            x: (0..spec.x_elems()).map(|_| rng.normal() as f32).collect(),
+            y: (0..spec.y_elems()).map(|_| rng.below(spec.num_classes) as i32).collect(),
+        },
+        InputKind::Tokens => Batch::Tokens {
+            x: (0..spec.x_elems()).map(|_| rng.below(spec.num_classes) as i32).collect(),
+            y: (0..spec.y_elems()).map(|_| rng.below(spec.num_classes) as i32).collect(),
+        },
+    }
+}
+
+#[test]
+fn all_models_load_and_step() {
+    let (engine, man) = setup();
+    let mut rng = Rng::new(1);
+    for name in ["mnist_cnn", "cifar_cnn", "transformer"] {
+        let model = ModelRuntime::load(&engine, &man, name).unwrap();
+        let params = model.init_params(&mut rng);
+        assert_eq!(params.len(), model.spec.d);
+        let batch = fake_batch(&model, &mut rng);
+        let (new_params, loss) = model.train_step(&params, &batch, 0, 0.01).unwrap();
+        assert_eq!(new_params.len(), params.len());
+        assert!(loss.is_finite() && loss > 0.0, "{name}: loss {loss}");
+        assert_ne!(new_params, params, "{name}: params did not move");
+        let (eloss, correct) = model.eval_step(&params, &batch).unwrap();
+        assert!(eloss.is_finite());
+        assert!(correct >= 0.0);
+    }
+}
+
+#[test]
+fn repeated_steps_reduce_loss() {
+    let (engine, man) = setup();
+    let mut rng = Rng::new(2);
+    let model = ModelRuntime::load(&engine, &man, "mnist_cnn").unwrap();
+    let mut params = model.init_params(&mut rng);
+    // strongly separable batch: distinct random pattern per class
+    let spec = &model.spec;
+    let b = spec.batch;
+    let elems = spec.x_elems() / b;
+    let means: Vec<Vec<f32>> = (0..10)
+        .map(|_| (0..elems).map(|_| rng.normal() as f32).collect())
+        .collect();
+    let y: Vec<i32> = (0..b).map(|i| (i % 10) as i32).collect();
+    let x: Vec<f32> = (0..b)
+        .flat_map(|i| {
+            means[y[i] as usize]
+                .iter()
+                .map(|&mu| 2.0 * mu + 0.3 * rng.normal() as f32)
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    let batch = Batch::Image { x, y };
+    let mut first = None;
+    let mut last = 0.0;
+    for i in 0..80 {
+        let (p, loss) = model.train_step(&params, &batch, i, 0.02).unwrap();
+        params = p;
+        if first.is_none() {
+            first = Some(loss);
+        }
+        last = loss;
+    }
+    assert!(
+        last < 0.65 * first.unwrap(),
+        "loss {} -> {last}",
+        first.unwrap()
+    );
+}
+
+#[test]
+fn pallas_coded_matmul_matches_native() {
+    let (engine, man) = setup();
+    let mut rng = Rng::new(3);
+    for name in ["mnist_cnn", "transformer"] {
+        let spec = man.model(name).unwrap();
+        let d = spec.d;
+        let pallas = CodedKernels::load(&engine, &man, spec, CombineImpl::Pallas).unwrap();
+        // random sparse-ish weights like a perturbed B
+        let w = Matrix::from_fn(man.m, man.m, |i, j| {
+            if i == j || rng.bernoulli(0.6) {
+                rng.normal()
+            } else {
+                0.0
+            }
+        });
+        let grads: Vec<f32> = (0..man.m * d).map(|_| rng.normal() as f32).collect();
+        let got = pallas.encode(&w, &grads).unwrap();
+        let want = native_combine(&w, &grads, d);
+        assert_eq!(got.len(), want.len());
+        let max_err = got
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        // both accumulate in f32 over K=10 terms; tiny tolerance
+        assert!(max_err < 2e-3, "{name} encode: max err {max_err}");
+
+        // decode shape [M, MT]
+        let wd = Matrix::from_fn(man.m, man.mt, |_, _| {
+            if rng.bernoulli(0.3) {
+                rng.normal()
+            } else {
+                0.0
+            }
+        });
+        let stacked: Vec<f32> = (0..man.mt * d).map(|_| rng.normal() as f32).collect();
+        let got = pallas.decode(&wd, &stacked).unwrap();
+        let want = native_combine(&wd, &stacked, d);
+        let max_err = got
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 2e-3, "{name} decode: max err {max_err}");
+    }
+}
+
+#[test]
+fn sgd_artifact_matches_native_axpy() {
+    let (engine, man) = setup();
+    let mut rng = Rng::new(4);
+    let model = ModelRuntime::load(&engine, &man, "mnist_cnn").unwrap();
+    let d = model.spec.d;
+    let p: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+    let g: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+    for lr in [0.0f32, 0.5, -1.0] {
+        let got = model.sgd_apply(&p, &g, lr).unwrap();
+        for i in (0..d).step_by(997) {
+            let want = p[i] - lr * g[i];
+            assert!((got[i] - want).abs() < 1e-6, "lr={lr} i={i}: {} vs {want}", got[i]);
+        }
+    }
+}
+
+#[test]
+fn init_params_follow_schemes() {
+    let (engine, man) = setup();
+    let model = ModelRuntime::load(&engine, &man, "transformer").unwrap();
+    let mut rng = Rng::new(5);
+    let params = model.init_params(&mut rng);
+    // layernorm gains are exactly 1, biases exactly 0
+    let mut off = 0;
+    for p in &model.spec.params {
+        let n = p.size();
+        let slice = &params[off..off + n];
+        match p.init.as_str() {
+            "ones" => assert!(slice.iter().all(|&x| x == 1.0), "{} not ones", p.name),
+            "zeros" => assert!(slice.iter().all(|&x| x == 0.0), "{} not zeros", p.name),
+            "uniform_fanin" => {
+                let bound = 1.0 / (p.fan_in as f32).sqrt();
+                assert!(slice.iter().all(|&x| x.abs() <= bound + 1e-6), "{} exceeds bound", p.name);
+            }
+            _ => {}
+        }
+        off += n;
+    }
+}
+
+#[test]
+fn dropout_seed_changes_mnist_loss() {
+    let (engine, man) = setup();
+    let mut rng = Rng::new(6);
+    let model = ModelRuntime::load(&engine, &man, "mnist_cnn").unwrap();
+    let params = model.init_params(&mut rng);
+    let batch = fake_batch(&model, &mut rng);
+    let (_, l0) = model.train_step(&params, &batch, 0, 0.0).unwrap();
+    let (_, l1) = model.train_step(&params, &batch, 99, 0.0).unwrap();
+    assert_ne!(l0, l1, "dropout seed had no effect");
+    // and the same seed is bit-deterministic
+    let (_, l0b) = model.train_step(&params, &batch, 0, 0.0).unwrap();
+    assert_eq!(l0, l0b);
+}

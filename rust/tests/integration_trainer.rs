@@ -1,0 +1,135 @@
+//! Integration: the full CoGC training loop over the PJRT runtime
+//! (requires `make artifacts`). Tiny round counts — the figure harnesses
+//! run the full-scale versions.
+
+use cogc::coordinator::{Aggregator, Design, TrainConfig, Trainer};
+use cogc::network::Network;
+use cogc::runtime::{default_artifacts_dir, CombineImpl, Engine, Manifest};
+
+fn setup() -> (Engine, Manifest) {
+    let dir = default_artifacts_dir();
+    assert!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+    (Engine::cpu().unwrap(), Manifest::load(&dir).unwrap())
+}
+
+fn tiny_cfg(agg: Aggregator, rounds: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::new("mnist_cnn", agg);
+    cfg.rounds = rounds;
+    cfg.per_client = 40;
+    cfg.eval_batches = 2;
+    cfg.seed = 11;
+    cfg
+}
+
+#[test]
+fn every_aggregator_runs() {
+    let (engine, man) = setup();
+    let net = Network::homogeneous(man.m, 0.3, 0.3);
+    for agg in [
+        Aggregator::Ideal,
+        Aggregator::Intermittent,
+        Aggregator::CoGc { design: Design::SkipRound, attempts: 1 },
+        Aggregator::CoGc { design: Design::RetryUntilSuccess, attempts: 50 },
+        Aggregator::GcPlus { tr: 2, until_decode: false, max_blocks: 1 },
+        Aggregator::GcPlus { tr: 2, until_decode: true, max_blocks: 10 },
+        Aggregator::TandonReplicated { attempts: 1 },
+    ] {
+        let mut trainer = Trainer::new(&engine, &man, tiny_cfg(agg, 2), net.clone()).unwrap();
+        let log = trainer.run().unwrap();
+        assert_eq!(log.rounds.len(), 2, "{agg:?}");
+        for rec in &log.rounds {
+            assert!(rec.train_loss.is_finite(), "{agg:?}: bad loss");
+            assert!(rec.k4 <= man.m);
+            assert_eq!(rec.updated, rec.k4 > 0, "{agg:?}: updated/k4 mismatch");
+            // standard GC is binary: all-or-nothing
+            if matches!(agg, Aggregator::CoGc { .. } | Aggregator::TandonReplicated { .. }) {
+                assert!(rec.k4 == 0 || rec.k4 == man.m, "{agg:?}: k4={} not binary", rec.k4);
+            }
+        }
+    }
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let (engine, man) = setup();
+    let net = Network::homogeneous(man.m, 0.2, 0.2);
+    let agg = Aggregator::CoGc { design: Design::SkipRound, attempts: 1 };
+    let run = |engine: &Engine| {
+        let mut t = Trainer::new(engine, &man, tiny_cfg(agg, 3), net.clone()).unwrap();
+        t.run().unwrap()
+    };
+    let a = run(&engine);
+    let b = run(&engine);
+    assert_eq!(a.to_csv(), b.to_csv(), "same seed must give identical logs");
+}
+
+#[test]
+fn pallas_and_native_combine_agree_end_to_end() {
+    let (engine, man) = setup();
+    let net = Network::homogeneous(man.m, 0.3, 0.4);
+    let agg = Aggregator::GcPlus { tr: 2, until_decode: false, max_blocks: 1 };
+    let mut logs = Vec::new();
+    for imp in [CombineImpl::Pallas, CombineImpl::Native] {
+        let mut cfg = tiny_cfg(agg, 3);
+        cfg.combine = imp;
+        let mut t = Trainer::new(&engine, &man, cfg, net.clone()).unwrap();
+        logs.push(t.run().unwrap());
+    }
+    // identical round structure and near-identical numbers (both f32 paths,
+    // different summation orders under XLA fusion)
+    for (a, b) in logs[0].rounds.iter().zip(&logs[1].rounds) {
+        assert_eq!(a.outcome, b.outcome);
+        assert_eq!(a.k4, b.k4);
+        assert_eq!(a.transmissions, b.transmissions);
+        assert!(
+            (a.train_loss - b.train_loss).abs() < 1e-3,
+            "loss diverged: {} vs {}",
+            a.train_loss,
+            b.train_loss
+        );
+    }
+}
+
+#[test]
+fn ideal_training_learns_synthetic_classes() {
+    let (engine, man) = setup();
+    let mut cfg = tiny_cfg(Aggregator::Ideal, 20);
+    cfg.per_client = 100;
+    cfg.signal = 3.0;
+    cfg.eval_batches = 4;
+    let mut t = Trainer::new(&engine, &man, cfg, Network::perfect(man.m)).unwrap();
+    let log = t.run().unwrap();
+    let early = log.rounds[0].test_acc;
+    let late = log.best_acc();
+    assert!(
+        late > early + 0.2 && late > 0.4,
+        "no learning signal: acc {early:.3} -> {late:.3}"
+    );
+}
+
+#[test]
+fn design1_retries_until_success() {
+    let (engine, man) = setup();
+    // harsh uplinks: single attempts usually fail, Design 1 must still update
+    let net = Network::homogeneous(man.m, 0.6, 0.1);
+    let agg = Aggregator::CoGc { design: Design::RetryUntilSuccess, attempts: 100 };
+    let mut t = Trainer::new(&engine, &man, tiny_cfg(agg, 3), net).unwrap();
+    let log = t.run().unwrap();
+    assert_eq!(log.updates(), 3, "Design 1 must recover every round");
+    // and it should have needed more than one attempt somewhere
+    assert!(log.rounds.iter().any(|r| r.attempts > 1));
+}
+
+#[test]
+fn run_until_acc_truncates() {
+    let (engine, man) = setup();
+    let mut cfg = tiny_cfg(Aggregator::Ideal, 30);
+    cfg.signal = 3.0;
+    cfg.per_client = 100;
+    let mut t = Trainer::new(&engine, &man, cfg, Network::perfect(man.m)).unwrap();
+    let log = t.run_until_acc(0.3).unwrap();
+    assert!(log.rounds.len() <= 30);
+    if let Some(r) = log.rounds_to_acc(0.3) {
+        assert_eq!(r, log.rounds.last().unwrap().round);
+    }
+}

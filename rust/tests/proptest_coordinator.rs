@@ -1,0 +1,161 @@
+//! Property tests on coordinator-level invariants (coding layer, no PJRT):
+//! routing (who hears whom), batching of attempts, decode-state consistency,
+//! transmission accounting, and the unbiasedness symmetry of Lemma 5.
+
+use cogc::gc::{self, GcCode};
+use cogc::network::{Network, Realization};
+use cogc::outage::mc::{gcplus_recovery, RecoveryMode};
+use cogc::sim::{simulate_round, Decoder, Outcome};
+use cogc::testing::Prop;
+use cogc::util::rng::Rng;
+
+#[test]
+fn prop_routing_respects_code_support() {
+    // a client's partial sum must only ever mix gradients from its cyclic
+    // incoming neighborhood — erasures can remove terms, never add them.
+    Prop::new(40).forall("routing", |rng, _| {
+        let m = rng.range(4, 12);
+        let s = rng.range(1, m);
+        let code = GcCode::generate(m, s, rng);
+        let net = Network::homogeneous(m, 0.3, rng.uniform(0.0, 0.9));
+        let real = Realization::sample(&net, rng);
+        let att = gc::Attempt::observe(&code, &real);
+        for row in 0..m {
+            let supp = GcCode::support(m, s, row);
+            for col in 0..m {
+                let v = att.perturbed[(row, col)];
+                if !supp.contains(&col) {
+                    assert_eq!(v, 0.0, "row {row} leaked col {col}");
+                }
+                if col != row && !real.t[row][col] {
+                    assert_eq!(v, 0.0, "erased link {col}->{row} left a coefficient");
+                }
+                if col == row {
+                    assert_eq!(v, code.b[(row, col)], "diagonal must survive");
+                }
+            }
+        }
+        // complete rows are exactly the rows whose incoming links all held
+        for &r in &att.complete {
+            assert!(att.delivered.contains(&r));
+            assert!(code.incoming(r).iter().all(|&k| real.t[r][k]));
+        }
+    });
+}
+
+#[test]
+fn prop_standard_outcome_is_binary() {
+    // the standard decoder yields the exact mean or nothing (Remark 2)
+    Prop::new(30).forall("binary outcome", |rng, _| {
+        let m = rng.range(4, 11);
+        let s = rng.range(1, m);
+        let p = rng.uniform(0.0, 0.8);
+        let net = Network::homogeneous(m, p, p);
+        let r = simulate_round(&net, m, s, 8, Decoder::Standard { attempts: 2 }, rng);
+        match r.outcome {
+            Outcome::Standard { .. } => {
+                let agg = r.aggregate.unwrap();
+                for (a, t) in agg.iter().zip(&r.true_mean) {
+                    assert!((a - t).abs() < 1e-6, "standard decode not exact");
+                }
+            }
+            Outcome::None => assert!(r.aggregate.is_none()),
+            other => panic!("standard decoder produced {other:?}"),
+        }
+    });
+}
+
+#[test]
+fn prop_transmission_accounting() {
+    // per attempt: s*M sharing; uplinks = complete count (standard) or M (GC+)
+    Prop::new(30).forall("tx accounting", |rng, _| {
+        let m = rng.range(4, 11);
+        let s = rng.range(1, m);
+        let net = Network::homogeneous(m, 0.5, 0.5);
+        let tr = rng.range(1, 4);
+        let r = simulate_round(&net, m, s, 4, Decoder::GcPlus { tr }, rng);
+        // GC+ sends every partial sum: attempts * (sM + M); it may stop at
+        // a standard shortcut, so tx is a multiple of sM + M up to tr
+        let per = s * m + m;
+        assert!(r.transmissions % per == 0 || r.transmissions <= tr * per);
+        assert!(r.transmissions <= tr * per);
+        assert!(r.transmissions >= per);
+    });
+}
+
+#[test]
+fn prop_gcplus_subset_means_match_ground_truth() {
+    // whatever subset GC+ decodes, the aggregate equals the true subset mean
+    Prop::new(25).forall("subset mean", |rng, _| {
+        let m = rng.range(5, 11);
+        let s = rng.range(2, m);
+        let net = Network::homogeneous(m, rng.uniform(0.2, 0.7), rng.uniform(0.2, 0.7));
+        let r = simulate_round(&net, m, s, 6, Decoder::GcPlus { tr: 2 }, rng);
+        if let Outcome::Full = r.outcome {
+            let agg = r.aggregate.unwrap();
+            for (a, t) in agg.iter().zip(&r.true_mean) {
+                assert!((a - t).abs() < 1e-6);
+            }
+        }
+        // decode error is checked inside simulate_round for partial subsets
+        assert!(r.decode_err < 1e-5, "decode err {}", r.decode_err);
+    });
+}
+
+#[test]
+fn lemma5_symmetry_uniform_inclusion() {
+    // Lemma 5's premise: in a homogeneous network every client is equally
+    // likely to be decodable — the k4 membership frequencies must be
+    // statistically indistinguishable across clients.
+    let m = 8;
+    let net = Network::homogeneous(m, 0.5, 0.5);
+    let mut rng = Rng::new(99);
+    let mut counts = vec![0usize; m];
+    let trials = 1500;
+    for _ in 0..trials {
+        let code = GcCode::generate(m, 5, &mut rng);
+        let real = Realization::sample(&net, &mut rng);
+        let att = gc::Attempt::observe(&code, &real);
+        let stacked = gc::stack_attempts(&[att]);
+        if stacked.rows == 0 {
+            continue;
+        }
+        for c in gc::decode(&stacked).k4 {
+            counts[c] += 1;
+        }
+    }
+    let total: usize = counts.iter().sum();
+    if total == 0 {
+        panic!("no decodes at all");
+    }
+    let mean = total as f64 / m as f64;
+    for (c, &cnt) in counts.iter().enumerate() {
+        // 5-sigma binomial-ish band around the symmetric mean
+        let sigma = (mean * (1.0 - 1.0 / m as f64)).sqrt();
+        assert!(
+            (cnt as f64 - mean).abs() < 5.0 * sigma + 0.05 * mean,
+            "client {c} inclusion {cnt} deviates from mean {mean:.1} (counts {counts:?})"
+        );
+    }
+}
+
+#[test]
+fn until_decode_always_terminates_with_something() {
+    let mut rng = Rng::new(5);
+    for setting in 1..=4 {
+        let net = Network::fig6_setting(setting, 10);
+        let st = gcplus_recovery(
+            &net,
+            10,
+            7,
+            RecoveryMode::UntilDecode { tr: 2, max_blocks: 80 },
+            150,
+            &mut rng,
+        );
+        assert!(
+            st.p_none() < 0.05,
+            "setting {setting}: Algorithm 1 failed to decode {:.3}",
+            st.p_none()
+        );
+    }
+}
