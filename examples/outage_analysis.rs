@@ -10,6 +10,7 @@ use cogc::gc::GcCode;
 use cogc::network::Network;
 use cogc::outage::theory::{expected_rounds_between_success, theorem1_bound, Theorem1Params};
 use cogc::outage::{self, design};
+use cogc::parallel::{derive_seed, MonteCarlo};
 use cogc::util::rng::Rng;
 
 fn main() {
@@ -18,11 +19,16 @@ fn main() {
 
     println!("== closed form vs Monte-Carlo (M={m}) ==");
     println!("{:>3} {:>6} {:>6} {:>10} {:>10} {:>26}", "s", "p_m", "p_mk", "P_O exact", "P_O mc", "P1 + P2 + P3");
-    for &(s, pm, pmk) in &[(7usize, 0.4, 0.25), (7, 0.75, 0.5), (3, 0.2, 0.2), (5, 0.1, 0.1)] {
+    for (case, &(s, pm, pmk)) in [(7usize, 0.4, 0.25), (7, 0.75, 0.5), (3, 0.2, 0.2), (5, 0.1, 0.1)]
+        .iter()
+        .enumerate()
+    {
         let net = Network::homogeneous(m, pm, pmk);
         let code = GcCode::generate(m, s, &mut rng);
         let exact = outage::overall_outage(&net, &code);
-        let mc = outage::estimate_outage(&net, &code, 40_000, &mut rng);
+        // parallel Monte-Carlo engine: all cores, bit-identical at any count
+        let engine = MonteCarlo::new(derive_seed(42, case as u64));
+        let mc = outage::estimate_outage(&net, &code, 40_000, &engine);
         let (p1, p2, p3) = outage::subcase_probs(&net, &code);
         println!(
             "{s:>3} {pm:>6.2} {pmk:>6.2} {exact:>10.5} {mc:>10.5} {:>8.5}+{:>8.5}+{:>8.5}",

@@ -15,6 +15,7 @@ use cogc::metrics::Table;
 use cogc::network::{Network, Realization};
 use cogc::outage::mc::{gcplus_recovery, RecoveryMode};
 use cogc::outage::{self};
+use cogc::parallel::{derive_seed, MonteCarlo};
 use cogc::runtime::{default_artifacts_dir, CombineImpl, Engine, Manifest};
 use cogc::util::rng::Rng;
 
@@ -69,7 +70,8 @@ fn main() {
     );
     let net = Network::fig6_setting(2, 10);
     for tr in 1..=4usize {
-        let st = gcplus_recovery(&net, 10, 7, RecoveryMode::FixedTr(tr), 500, &mut rng);
+        let mc = MonteCarlo::new(derive_seed(17, tr as u64));
+        let st = gcplus_recovery(&net, 10, 7, RecoveryMode::FixedTr(tr), 500, &mc);
         t.rowf(&[tr as f64, st.p_full(), st.p_partial(), st.p_none()]);
     }
     t.print();
@@ -90,9 +92,23 @@ fn main() {
     }
     t.print();
 
-    // ── A4 + A5: end-to-end round ablations (need artifacts) ───────────
-    let engine = Engine::cpu().expect("pjrt");
-    let man = Manifest::load(&default_artifacts_dir()).expect("run `make artifacts`");
+    // ── A4 + A5: end-to-end round ablations (need artifacts + PJRT) ────
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!(
+            "skipping A4/A5: no artifacts manifest at {} — run `make artifacts`",
+            dir.display()
+        );
+        return;
+    }
+    let engine = match Engine::cpu() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping A4/A5: PJRT engine unavailable: {e:#}");
+            return;
+        }
+    };
+    let man = Manifest::load(&dir).expect("manifest parses");
     let net = Network::homogeneous(man.m, 0.3, 0.3);
     let mut suite = Suite::new("ablations: end-to-end round");
     for (label, imp) in [("pallas", CombineImpl::Pallas), ("native", CombineImpl::Native)] {

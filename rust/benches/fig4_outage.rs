@@ -3,18 +3,20 @@
 //!     cargo bench --bench fig4_outage
 //!
 //! Prints the paper's data series (reduced MC trials; `cogc fig4` runs the
-//! full version) and times the closed-form evaluation hot path.
+//! full version) and times the closed-form evaluation hot path plus the
+//! Monte-Carlo sweep, serial vs parallel.
 
 use cogc::bench::Suite;
 use cogc::figures;
 use cogc::gc::GcCode;
 use cogc::network::Network;
 use cogc::outage;
+use cogc::parallel::{available_threads, MonteCarlo};
 use cogc::util::rng::Rng;
 
 fn main() {
-    // ── the figure itself (reduced trials) ──────────────────────────────
-    figures::fig4(2_000, 42).print();
+    // ── the figure itself (reduced trials, all cores) ───────────────────
+    figures::fig4(2_000, 42, 0).print();
 
     // ── timing ──────────────────────────────────────────────────────────
     let mut rng = Rng::new(1);
@@ -35,8 +37,18 @@ fn main() {
             cogc::bench::black_box(outage::overall_outage(&net, &c));
         }
     });
-    suite.bench_throughput("monte-carlo outage rounds", 1000.0, "rounds", || {
-        cogc::bench::black_box(outage::estimate_outage(&net, &code, 1000, &mut rng));
+    let serial = MonteCarlo::serial(7);
+    suite.bench_throughput("monte-carlo outage rounds (1 thread)", 1000.0, "rounds", || {
+        cogc::bench::black_box(outage::estimate_outage(&net, &code, 1000, &serial));
     });
+    let threaded = MonteCarlo::new(7);
+    suite.bench_throughput(
+        &format!("monte-carlo outage rounds ({} threads)", available_threads()),
+        1000.0,
+        "rounds",
+        || {
+            cogc::bench::black_box(outage::estimate_outage(&net, &code, 1000, &threaded));
+        },
+    );
     suite.finish();
 }

@@ -6,18 +6,19 @@ use cogc::bench::Suite;
 use cogc::figures;
 use cogc::network::Network;
 use cogc::outage::mc::{gcplus_recovery, RecoveryMode};
-use cogc::util::rng::Rng;
+use cogc::parallel::{available_threads, MonteCarlo};
 
 fn main() {
-    // the figure's series (reduced trials; `cogc fig6` for full)
-    figures::fig6(400, 42).print();
+    // the figure's series (reduced trials, all cores; `cogc fig6` for full)
+    figures::fig6(400, 42, 0).print();
 
     let mut suite = Suite::new("fig6: GC+ recovery simulation");
-    let mut rng = Rng::new(2);
+    let serial = MonteCarlo::serial(2);
+    let threaded = MonteCarlo::new(2);
     for setting in [2usize, 4] {
         let net = Network::fig6_setting(setting, 10);
         suite.bench_throughput(
-            &format!("gcplus_recovery fixed t_r=2, setting {setting}"),
+            &format!("gcplus_recovery fixed t_r=2, setting {setting} (1 thread)"),
             50.0,
             "rounds",
             || {
@@ -27,7 +28,25 @@ fn main() {
                     7,
                     RecoveryMode::FixedTr(2),
                     50,
-                    &mut rng,
+                    &serial,
+                ));
+            },
+        );
+        suite.bench_throughput(
+            &format!(
+                "gcplus_recovery fixed t_r=2, setting {setting} ({} threads)",
+                available_threads()
+            ),
+            50.0,
+            "rounds",
+            || {
+                cogc::bench::black_box(gcplus_recovery(
+                    &net,
+                    10,
+                    7,
+                    RecoveryMode::FixedTr(2),
+                    50,
+                    &threaded,
                 ));
             },
         );
@@ -40,7 +59,7 @@ fn main() {
             7,
             RecoveryMode::UntilDecode { tr: 2, max_blocks: 50 },
             20,
-            &mut rng,
+            &threaded,
         ));
     });
     suite.finish();

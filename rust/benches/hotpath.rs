@@ -1,16 +1,22 @@
 //! Hot-path microbenchmarks: the per-round compute surface of the
 //! coordinator — coded combines (Pallas artifact vs native rust), RREF
-//! decode, code generation, combinator solve, and single train steps.
+//! decode, code generation, combinator solve, Monte-Carlo trial sweeps
+//! (serial vs parallel engine), and single train steps.
 //!
 //!     cargo bench --bench hotpath
 //!
-//! The numbers here feed EXPERIMENTS.md §Perf.
+//! The numbers here feed EXPERIMENTS.md §Perf. The model-runtime section
+//! needs `make artifacts` + real PJRT bindings and is skipped (with a
+//! message) when either is missing; the coding-layer and Monte-Carlo
+//! sections always run.
 
 use cogc::bench::Suite;
 use cogc::gc::{self, GcCode};
 use cogc::linalg::{rref_with_transform, Matrix};
 use cogc::network::{Network, Realization};
 use cogc::outage::exact::poisson_binomial_pmf;
+use cogc::outage::mc::{estimate_outage, gcplus_recovery, RecoveryMode};
+use cogc::parallel::{available_threads, MonteCarlo};
 use cogc::runtime::{
     coded::native_combine, default_artifacts_dir, Batch, CodedKernels, CombineImpl, Engine,
     InputKind, Manifest, ModelRuntime,
@@ -18,39 +24,8 @@ use cogc::runtime::{
 use cogc::util::rng::Rng;
 
 fn main() {
-    let engine = Engine::cpu().expect("pjrt");
-    let man = Manifest::load(&default_artifacts_dir()).expect("artifacts — run `make artifacts`");
     let mut rng = Rng::new(7);
     let mut suite = Suite::new("hotpath");
-
-    // ── coded combine: Pallas vs native, per model size ─────────────────
-    for name in ["mnist_cnn", "cifar_cnn", "transformer"] {
-        let spec = man.model(name).unwrap().clone();
-        let d = spec.d;
-        let pallas = CodedKernels::load(&engine, &man, &spec, CombineImpl::Pallas).unwrap();
-        let w = Matrix::from_fn(man.m, man.m, |i, j| {
-            if i == j || rng.bernoulli(0.7) { rng.normal() } else { 0.0 }
-        });
-        let grads: Vec<f32> = (0..man.m * d).map(|_| rng.normal() as f32).collect();
-        let flops = (2 * man.m * man.m * d) as f64;
-        suite.bench_throughput(&format!("encode pallas   {name} (D={d})"), flops, "flop", || {
-            cogc::bench::black_box(pallas.encode(&w, &grads).unwrap());
-        });
-        suite.bench_throughput(&format!("encode native   {name} (D={d})"), flops, "flop", || {
-            cogc::bench::black_box(native_combine(&w, &grads, d));
-        });
-        let wd = Matrix::from_fn(man.m, man.mt, |_, _| {
-            if rng.bernoulli(0.3) { rng.normal() } else { 0.0 }
-        });
-        let stacked: Vec<f32> = (0..man.mt * d).map(|_| rng.normal() as f32).collect();
-        let dflops = (2 * man.m * man.mt * d) as f64;
-        suite.bench_throughput(&format!("decode pallas   {name} (D={d})"), dflops, "flop", || {
-            cogc::bench::black_box(pallas.decode(&wd, &stacked).unwrap());
-        });
-        suite.bench_throughput(&format!("decode native   {name} (D={d})"), dflops, "flop", || {
-            cogc::bench::black_box(native_combine(&wd, &stacked, d));
-        });
-    }
 
     // ── coding-layer primitives ─────────────────────────────────────────
     let net = Network::fig6_setting(2, 10);
@@ -80,31 +55,125 @@ fn main() {
         cogc::bench::black_box(poisson_binomial_pmf(&ps));
     });
 
-    // ── model runtime: single train/eval steps ──────────────────────────
-    for name in ["mnist_cnn", "cifar_cnn", "transformer"] {
-        let model = ModelRuntime::load(&engine, &man, name).unwrap();
-        let params = model.init_params(&mut rng);
-        let spec = &model.spec;
-        let batch = match spec.kind {
-            InputKind::Image => Batch::Image {
-                x: (0..spec.x_elems()).map(|_| rng.normal() as f32).collect(),
-                y: (0..spec.y_elems()).map(|_| rng.below(spec.num_classes) as i32).collect(),
+    // ── Monte-Carlo trial sweeps: serial vs parallel engine ─────────────
+    // The Fig. 4 / Fig. 6 workload shapes; same seeds at both thread
+    // counts, so both runs produce bit-identical tallies — only the
+    // wall-clock differs. This is the tentpole speedup evidence.
+    let cores = available_threads();
+    let mut thread_counts = vec![1usize];
+    if cores > 1 {
+        thread_counts.push(cores);
+    }
+    let outage_trials = 20_000;
+    for &threads in &thread_counts {
+        let mc = MonteCarlo::new(11).with_threads(threads);
+        suite.bench_throughput(
+            &format!("mc outage sweep fig4-shape, {outage_trials} trials ({threads} thr)"),
+            outage_trials as f64,
+            "rounds",
+            || {
+                cogc::bench::black_box(estimate_outage(&net, &code, outage_trials, &mc));
             },
-            InputKind::Tokens => Batch::Tokens {
-                x: (0..spec.x_elems()).map(|_| rng.below(spec.num_classes) as i32).collect(),
-                y: (0..spec.y_elems()).map(|_| rng.below(spec.num_classes) as i32).collect(),
+        );
+    }
+    let recovery_trials = 2_000;
+    for &threads in &thread_counts {
+        let mc = MonteCarlo::new(13).with_threads(threads);
+        suite.bench_throughput(
+            &format!("mc gc+ recovery fig6-shape, {recovery_trials} trials ({threads} thr)"),
+            recovery_trials as f64,
+            "rounds",
+            || {
+                cogc::bench::black_box(gcplus_recovery(
+                    &net,
+                    10,
+                    7,
+                    RecoveryMode::FixedTr(2),
+                    recovery_trials,
+                    &mc,
+                ));
             },
-        };
-        suite.bench(&format!("train_step {name}"), || {
-            cogc::bench::black_box(model.train_step(&params, &batch, 0, 0.01).unwrap());
-        });
-        suite.bench(&format!("eval_step  {name}"), || {
-            cogc::bench::black_box(model.eval_step(&params, &batch).unwrap());
-        });
-        let g: Vec<f32> = (0..spec.d).map(|_| rng.normal() as f32).collect();
-        suite.bench(&format!("sgd_apply  {name} (D={})", spec.d), || {
-            cogc::bench::black_box(model.sgd_apply(&params, &g, 0.01).unwrap());
-        });
+        );
+    }
+
+    // ── model runtime (needs artifacts + PJRT) ──────────────────────────
+    let dir = default_artifacts_dir();
+    let runtime = if dir.join("manifest.json").exists() {
+        match (Engine::cpu(), Manifest::load(&dir)) {
+            (Ok(engine), Ok(man)) => Some((engine, man)),
+            (Err(e), _) => {
+                eprintln!("skipping model-runtime benches: PJRT unavailable: {e:#}");
+                None
+            }
+            (_, Err(e)) => {
+                eprintln!("skipping model-runtime benches: bad manifest: {e:#}");
+                None
+            }
+        }
+    } else {
+        eprintln!(
+            "skipping model-runtime benches: no artifacts manifest at {} — run `make artifacts`",
+            dir.display()
+        );
+        None
+    };
+
+    if let Some((engine, man)) = runtime {
+        // ── coded combine: Pallas vs native, per model size ─────────────
+        for name in ["mnist_cnn", "cifar_cnn", "transformer"] {
+            let spec = man.model(name).unwrap().clone();
+            let d = spec.d;
+            let pallas = CodedKernels::load(&engine, &man, &spec, CombineImpl::Pallas).unwrap();
+            let w = Matrix::from_fn(man.m, man.m, |i, j| {
+                if i == j || rng.bernoulli(0.7) { rng.normal() } else { 0.0 }
+            });
+            let grads: Vec<f32> = (0..man.m * d).map(|_| rng.normal() as f32).collect();
+            let flops = (2 * man.m * man.m * d) as f64;
+            suite.bench_throughput(&format!("encode pallas   {name} (D={d})"), flops, "flop", || {
+                cogc::bench::black_box(pallas.encode(&w, &grads).unwrap());
+            });
+            suite.bench_throughput(&format!("encode native   {name} (D={d})"), flops, "flop", || {
+                cogc::bench::black_box(native_combine(&w, &grads, d));
+            });
+            let wd = Matrix::from_fn(man.m, man.mt, |_, _| {
+                if rng.bernoulli(0.3) { rng.normal() } else { 0.0 }
+            });
+            let stacked: Vec<f32> = (0..man.mt * d).map(|_| rng.normal() as f32).collect();
+            let dflops = (2 * man.m * man.mt * d) as f64;
+            suite.bench_throughput(&format!("decode pallas   {name} (D={d})"), dflops, "flop", || {
+                cogc::bench::black_box(pallas.decode(&wd, &stacked).unwrap());
+            });
+            suite.bench_throughput(&format!("decode native   {name} (D={d})"), dflops, "flop", || {
+                cogc::bench::black_box(native_combine(&wd, &stacked, d));
+            });
+        }
+
+        // ── model runtime: single train/eval steps ──────────────────────
+        for name in ["mnist_cnn", "cifar_cnn", "transformer"] {
+            let model = ModelRuntime::load(&engine, &man, name).unwrap();
+            let params = model.init_params(&mut rng);
+            let spec = &model.spec;
+            let batch = match spec.kind {
+                InputKind::Image => Batch::Image {
+                    x: (0..spec.x_elems()).map(|_| rng.normal() as f32).collect(),
+                    y: (0..spec.y_elems()).map(|_| rng.below(spec.num_classes) as i32).collect(),
+                },
+                InputKind::Tokens => Batch::Tokens {
+                    x: (0..spec.x_elems()).map(|_| rng.below(spec.num_classes) as i32).collect(),
+                    y: (0..spec.y_elems()).map(|_| rng.below(spec.num_classes) as i32).collect(),
+                },
+            };
+            suite.bench(&format!("train_step {name}"), || {
+                cogc::bench::black_box(model.train_step(&params, &batch, 0, 0.01).unwrap());
+            });
+            suite.bench(&format!("eval_step  {name}"), || {
+                cogc::bench::black_box(model.eval_step(&params, &batch).unwrap());
+            });
+            let g: Vec<f32> = (0..spec.d).map(|_| rng.normal() as f32).collect();
+            suite.bench(&format!("sgd_apply  {name} (D={})", spec.d), || {
+                cogc::bench::black_box(model.sgd_apply(&params, &g, 0.01).unwrap());
+            });
+        }
     }
 
     suite.finish();

@@ -9,13 +9,18 @@ use crate::network::Network;
 use crate::outage::mc::RecoveryMode;
 use crate::outage::theory::{self, Theorem1Params};
 use crate::outage::{self, design};
+use crate::parallel::{derive_seed, MonteCarlo};
 use crate::privacy;
 use crate::runtime::{default_artifacts_dir, CombineImpl, Engine, Manifest};
 use crate::util::rng::Rng;
 
 /// Fig. 4: overall outage probability `P_O` vs `s` for several network
 /// cases (closed form + Monte-Carlo cross-check).
-pub fn fig4(mc_trials: usize, seed: u64) -> Table {
+///
+/// The MC columns run through the parallel engine with one derived seed per
+/// (s, case) cell, so the table is bit-identical for every `threads` value
+/// (0 = one worker per core).
+pub fn fig4(mc_trials: usize, seed: u64, threads: usize) -> Table {
     // (p_m, p_mk) study cases spanning the paper's regimes
     let cases: &[(f64, f64)] = &[(0.1, 0.1), (0.4, 0.25), (0.4, 0.5), (0.75, 0.5), (0.75, 0.8)];
     let mut header: Vec<String> = vec!["s".into()];
@@ -31,11 +36,13 @@ pub fn fig4(mc_trials: usize, seed: u64) -> Table {
     let mut rng = Rng::new(seed);
     for s in 1..m {
         let mut row = vec![s as f64];
-        for &(pm, pmk) in cases {
+        for (case, &(pm, pmk)) in cases.iter().enumerate() {
             let net = Network::homogeneous(m, pm, pmk);
             let code = GcCode::generate(m, s, &mut rng);
             row.push(outage::overall_outage(&net, &code));
-            row.push(outage::estimate_outage(&net, &code, mc_trials, &mut rng));
+            let mc = MonteCarlo::new(derive_seed(seed, (s * 16 + case) as u64))
+                .with_threads(threads);
+            row.push(outage::estimate_outage(&net, &code, mc_trials, &mc));
         }
         t.rowf(&row);
     }
@@ -62,7 +69,10 @@ pub fn remark5() -> Table {
 
 /// Fig. 6: GC⁺ recovery statistics across the four paper settings
 /// (t_r = 2, M = 10, s = 7), in both repetition modes.
-pub fn fig6(trials: usize, seed: u64) -> Table {
+///
+/// Each (setting, mode) sweep runs through the parallel engine with its own
+/// derived seed; the table is bit-identical for every `threads` value.
+pub fn fig6(trials: usize, seed: u64, threads: usize) -> Table {
     let mut t = Table::new(
         "fig6: GC+ recovery statistics, M=10 s=7 t_r=2\n\
          fixed: exactly t_r attempts (analysis mode)\n\
@@ -71,14 +81,18 @@ pub fn fig6(trials: usize, seed: u64) -> Table {
             "setting", "p_m", "p_mk", "mode", "p_full", "p_partial", "p_none", "mean_attempts",
         ],
     );
-    let mut rng = Rng::new(seed);
     for setting in 1..=4usize {
         let net = Network::fig6_setting(setting, 10);
-        for (mode, name) in [
+        for (mode_idx, (mode, name)) in [
             (RecoveryMode::FixedTr(2), "fixed"),
             (RecoveryMode::UntilDecode { tr: 2, max_blocks: 50 }, "until"),
-        ] {
-            let st = outage::gcplus_recovery(&net, 10, 7, mode, trials, &mut rng);
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let mc = MonteCarlo::new(derive_seed(seed, (setting * 8 + mode_idx) as u64))
+                .with_threads(threads);
+            let st = outage::gcplus_recovery(&net, 10, 7, mode, trials, &mc);
             t.row(&[
                 setting.to_string(),
                 format!("{}", net.p_c2s[0]),
@@ -306,18 +320,25 @@ pub fn privacy_table(d: usize) -> Table {
     t
 }
 
-/// Cost-efficient design sweep (§V): P_O(s), expected transmissions, s*.
-pub fn design_table(p: f64, target_po: f64, seed: u64) -> Table {
+/// Cost-efficient design sweep (§V): P_O(s), expected transmissions, s*,
+/// plus a Monte-Carlo cross-check column (`p_o_mc`) computed through the
+/// parallel engine (`mc_trials` rounds per sweep point).
+pub fn design_table(p: f64, target_po: f64, seed: u64, mc_trials: usize, threads: usize) -> Table {
     let net = Network::homogeneous(10, p, p);
     let mut t = Table::new(
-        &format!("design: cost-efficient GC on homogeneous p={p} (target P_O* = {target_po})"),
-        &["s", "p_o", "tx_per_round", "expected_rounds", "tx_per_success", "is_s_star"],
+        &format!(
+            "design: cost-efficient GC on homogeneous p={p} (target P_O* = {target_po}, \
+             mc cross-check over {mc_trials} rounds/point)"
+        ),
+        &["s", "p_o", "p_o_mc", "tx_per_round", "expected_rounds", "tx_per_success", "is_s_star"],
     );
     let pick = design::cost_efficient_s(&net, target_po, seed);
-    for d in design::sweep(&net, seed) {
+    let mc = design::sweep_mc(&net, seed, mc_trials, threads);
+    for (d, po_mc) in design::sweep(&net, seed).into_iter().zip(mc) {
         t.rowf(&[
             d.s as f64,
             d.p_o,
+            po_mc,
             d.tx_per_round,
             d.expected_rounds,
             d.tx_per_success,

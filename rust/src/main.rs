@@ -14,10 +14,16 @@
 //! cogc remark5                               Remark-5 case study
 //! cogc theory                                Theorem-1 / Lemma-5 numerics
 //! cogc privacy [--dim 100]                   Lemma-1 LMIP table
-//! cogc design [--p 0.1] [--target-po 0.5]    eq. (21) design sweep
+//! cogc design [--p 0.1] [--target-po 0.5]    eq. (21) design sweep + MC check
 //! cogc train --model M --agg A [...]         single training run (CSV log)
 //! cogc info                                  runtime / artifact info
 //! ```
+//!
+//! The Monte-Carlo-backed subcommands (`fig4`, `fig6`, `design`) accept
+//! `--threads N` (default 0 = one worker per core). Trial sweeps run
+//! through the deterministic parallel engine (`cogc::parallel`), so the
+//! emitted statistics are bit-identical for every `--threads` value and
+//! match a serial run.
 
 use cogc::coordinator::{Aggregator, Design};
 use cogc::figures;
@@ -68,10 +74,11 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         cogc::util::logging::set_level(cogc::util::logging::Level::Debug);
     }
     let seed = args.u64_opt("seed", 42)?;
+    let threads = args.usize_opt("threads", 0)?;
     let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
     match sub.as_str() {
-        "fig4" => figures::fig4(args.usize_opt("trials", 20_000)?, seed).print(),
-        "fig6" => figures::fig6(args.usize_opt("trials", 2_000)?, seed).print(),
+        "fig4" => figures::fig4(args.usize_opt("trials", 20_000)?, seed, threads).print(),
+        "fig6" => figures::fig6(args.usize_opt("trials", 2_000)?, seed, threads).print(),
         "fig7" | "fig8" => {
             let model = if sub == "fig7" { "mnist_cnn" } else { "cifar_cnn" };
             let network = args.usize_opt("network", 1)?;
@@ -97,6 +104,8 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
             args.f64_opt("p", 0.1)?,
             args.f64_opt("target-po", 0.5)?,
             seed,
+            args.usize_opt("trials", 20_000)?,
+            threads,
         )
         .print(),
         "train" => {
@@ -153,6 +162,10 @@ training:
         [--native]   (native rust combine instead of the Pallas artifacts)
 
 misc:
-  info       show platform + artifact inventory
-  --verbose  debug logging
+  info         show platform + artifact inventory
+  --threads N  Monte-Carlo worker threads for fig4/fig6/design (0 = one per
+               core, the default); results are bit-identical for every N —
+               trial sweeps use counter-seeded RNG streams and order-fixed
+               chunk merges
+  --verbose    debug logging
 "#;

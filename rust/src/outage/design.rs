@@ -11,7 +11,16 @@
 use crate::gc::GcCode;
 use crate::network::Network;
 use crate::outage::exact::{expected_transmissions, overall_outage};
+use crate::outage::mc::estimate_outage;
+use crate::parallel::{derive_seed, MonteCarlo};
 use crate::util::rng::Rng;
+
+/// The code evaluated at sweep point `s` (coefficients are irrelevant to
+/// the outage probabilities — only the cyclic support matters — but the
+/// closed-form sweep and the MC cross-check must agree on the draw).
+fn design_code(m: usize, s: usize, seed: u64) -> GcCode {
+    GcCode::generate(m, s, &mut Rng::new(seed ^ ((s as u64) << 32)))
+}
 
 #[derive(Clone, Debug)]
 pub struct DesignPoint {
@@ -29,9 +38,7 @@ pub struct DesignPoint {
 pub fn sweep(net: &Network, seed: u64) -> Vec<DesignPoint> {
     (1..net.m)
         .map(|s| {
-            // code structure (cyclic supports) is what matters; coefficients
-            // are irrelevant to outage probabilities.
-            let code = GcCode::generate(net.m, s, &mut Rng::new(seed ^ (s as u64) << 32));
+            let code = design_code(net.m, s, seed);
             let p_o = overall_outage(net, &code);
             let tx = expected_transmissions(net, &code);
             let er = if p_o < 1.0 { 1.0 / (1.0 - p_o) } else { f64::INFINITY };
@@ -42,6 +49,20 @@ pub fn sweep(net: &Network, seed: u64) -> Vec<DesignPoint> {
                 expected_rounds: er,
                 tx_per_success: tx * er,
             }
+        })
+        .collect()
+}
+
+/// Monte-Carlo cross-check of the closed-form sweep, one estimate per
+/// `s ∈ [1, M−1]`, run through the parallel engine. The returned vector
+/// aligns with [`sweep`]'s points (same codes, same order) and is
+/// bit-identical for any `threads` setting.
+pub fn sweep_mc(net: &Network, seed: u64, trials: usize, threads: usize) -> Vec<f64> {
+    (1..net.m)
+        .map(|s| {
+            let code = design_code(net.m, s, seed);
+            let mc = MonteCarlo::new(derive_seed(seed, s as u64)).with_threads(threads);
+            estimate_outage(net, &code, trials, &mc)
         })
         .collect()
 }
@@ -81,6 +102,27 @@ mod tests {
         let pts = sweep(&net, 1);
         let at7 = pts.iter().find(|p| p.s == 7).unwrap();
         assert!(d.tx_per_round < 0.8 * at7.tx_per_round);
+    }
+
+    #[test]
+    fn mc_crosscheck_tracks_closed_form() {
+        let net = Network::homogeneous(8, 0.2, 0.2);
+        let pts = sweep(&net, 3);
+        let est = sweep_mc(&net, 3, 8_000, 0);
+        assert_eq!(est.len(), pts.len());
+        for (p, e) in pts.iter().zip(&est) {
+            let sigma = (p.p_o * (1.0 - p.p_o) / 8_000.0).sqrt();
+            assert!(
+                (p.p_o - e).abs() < 5.0 * sigma + 5e-3,
+                "s={}: closed {} vs mc {e}",
+                p.s,
+                p.p_o
+            );
+        }
+        // thread-count invariance of the cross-check itself
+        let serial = sweep_mc(&net, 3, 2_000, 1);
+        let threaded = sweep_mc(&net, 3, 2_000, 4);
+        assert_eq!(serial, threaded);
     }
 
     #[test]

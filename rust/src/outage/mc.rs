@@ -1,24 +1,34 @@
 //! Monte-Carlo estimation of outage / recovery statistics: cross-checks the
 //! closed forms in `outage::exact` and produces the GC⁺ recovery statistics
 //! of Fig. 6 (which have no closed form — only the bound of eq. (29)).
+//!
+//! All trial sweeps run through the deterministic [`crate::parallel`]
+//! engine: pass a [`MonteCarlo`] instead of an `Rng` and the sweep fans out
+//! over the worker pool with bit-identical tallies at any thread count
+//! (serial reference = the same engine at `threads = 1`; see
+//! `tests/parallel_determinism.rs` for the hand-rolled cross-check).
 
 use crate::gc::{self, GcCode};
 use crate::network::{Network, Realization};
+use crate::parallel::{Accumulate, MonteCarlo};
 use crate::util::rng::Rng;
 
+/// One outage trial: does this round deliver fewer than `M − s` complete
+/// partial sums?
+fn outage_trial(net: &Network, code: &GcCode, rng: &mut Rng) -> bool {
+    let real = Realization::sample(net, rng);
+    let att = gc::Attempt::observe(code, &real);
+    att.complete.len() < net.m - code.s
+}
+
 /// Monte-Carlo estimate of the overall outage probability `P_O` under the
-/// standard GC decoder: fraction of rounds with fewer than `M − s` complete
-/// partial sums delivered.
-pub fn estimate_outage(net: &Network, code: &GcCode, trials: usize, rng: &mut Rng) -> f64 {
-    let need = net.m - code.s;
-    let mut outages = 0usize;
-    for _ in 0..trials {
-        let real = Realization::sample(net, rng);
-        let att = gc::Attempt::observe(code, &real);
-        if att.complete.len() < need {
-            outages += 1;
+/// standard GC decoder, parallelized over the engine's worker pool.
+pub fn estimate_outage(net: &Network, code: &GcCode, trials: usize, mc: &MonteCarlo) -> f64 {
+    let outages: usize = mc.run(trials, |_t, rng, acc: &mut usize| {
+        if outage_trial(net, code, rng) {
+            *acc += 1;
         }
-    }
+    });
     outages as f64 / trials as f64
 }
 
@@ -38,7 +48,11 @@ pub enum RecoveryMode {
 }
 
 /// Outcome statistics of GC⁺ over `trials` rounds.
-#[derive(Clone, Debug, Default)]
+///
+/// Every field is an associative tally (counts, sums, histogram buckets),
+/// so per-worker instances combine exactly via [`Accumulate::merge`] — the
+/// property the parallel engine relies on for thread-count invariance.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct RecoveryStats {
     pub trials: usize,
     /// Standard GC succeeded in some attempt (≥ M−s complete sums).
@@ -74,65 +88,96 @@ impl RecoveryStats {
     }
 }
 
-/// Run the GC⁺ decoding pipeline (coefficients only, no payloads) and
-/// classify each round's outcome.
+impl Accumulate for RecoveryStats {
+    fn merge(&mut self, other: Self) {
+        self.trials += other.trials;
+        self.standard += other.standard;
+        self.full += other.full;
+        self.partial += other.partial;
+        self.none += other.none;
+        self.attempts += other.attempts;
+        self.k4_hist.merge(other.k4_hist);
+    }
+}
+
+/// One GC⁺ round: run the decoding pipeline (coefficients only, no
+/// payloads), classify the outcome, and fold it into `stats`.
+fn recovery_trial(
+    net: &Network,
+    m: usize,
+    s: usize,
+    mode: RecoveryMode,
+    rng: &mut Rng,
+    stats: &mut RecoveryStats,
+) {
+    if stats.k4_hist.len() < m + 1 {
+        stats.k4_hist.resize(m + 1, 0);
+    }
+    let need = m - s;
+    let (tr, max_blocks) = match mode {
+        RecoveryMode::FixedTr(tr) => (tr, 1),
+        RecoveryMode::UntilDecode { tr, max_blocks } => (tr, max_blocks),
+    };
+    stats.trials += 1;
+    let mut attempts: Vec<gc::Attempt> = Vec::new();
+    let mut outcome: Option<usize> = None; // |K4| of the decode
+    'blocks: for _ in 0..max_blocks {
+        for _ in 0..tr {
+            let code = GcCode::generate(m, s, rng);
+            let att = gc::Attempt::observe(&code, &Realization::sample(net, rng));
+            stats.attempts += 1;
+            // standard GC shortcut on any single attempt
+            if att.complete.len() >= need {
+                stats.standard += 1;
+                stats.k4_hist[m] += 1;
+                outcome = Some(usize::MAX); // marker: standard
+                break 'blocks;
+            }
+            attempts.push(att);
+        }
+        let stacked = gc::stack_attempts(&attempts);
+        let dec = gc::decode(&stacked);
+        if !dec.k4.is_empty() {
+            outcome = Some(dec.k4.len());
+            break 'blocks;
+        }
+        if matches!(mode, RecoveryMode::FixedTr(_)) {
+            outcome = Some(0);
+            break 'blocks;
+        }
+    }
+    match outcome {
+        Some(usize::MAX) => {} // standard, already recorded
+        Some(0) | None => {
+            stats.none += 1;
+            stats.k4_hist[0] += 1;
+        }
+        Some(k) if k == m => {
+            stats.full += 1;
+            stats.k4_hist[m] += 1;
+        }
+        Some(k) => {
+            stats.partial += 1;
+            stats.k4_hist[k] += 1;
+        }
+    }
+}
+
+/// Run the GC⁺ decoding pipeline over `trials` rounds through the parallel
+/// engine and classify each round's outcome.
 pub fn gcplus_recovery(
     net: &Network,
     m: usize,
     s: usize,
     mode: RecoveryMode,
     trials: usize,
-    rng: &mut Rng,
+    mc: &MonteCarlo,
 ) -> RecoveryStats {
-    let mut stats = RecoveryStats { trials, k4_hist: vec![0; m + 1], ..Default::default() };
-    let need = m - s;
-    let (tr, max_blocks) = match mode {
-        RecoveryMode::FixedTr(tr) => (tr, 1),
-        RecoveryMode::UntilDecode { tr, max_blocks } => (tr, max_blocks),
-    };
-    for _ in 0..trials {
-        let mut attempts: Vec<gc::Attempt> = Vec::new();
-        let mut outcome: Option<usize> = None; // |K4| of the decode
-        'blocks: for _ in 0..max_blocks {
-            for _ in 0..tr {
-                let code = GcCode::generate(m, s, rng);
-                let att = gc::Attempt::observe(&code, &Realization::sample(net, rng));
-                stats.attempts += 1;
-                // standard GC shortcut on any single attempt
-                if att.complete.len() >= need {
-                    stats.standard += 1;
-                    stats.k4_hist[m] += 1;
-                    outcome = Some(usize::MAX); // marker: standard
-                    break 'blocks;
-                }
-                attempts.push(att);
-            }
-            let stacked = gc::stack_attempts(&attempts);
-            let dec = gc::decode(&stacked);
-            if !dec.k4.is_empty() {
-                outcome = Some(dec.k4.len());
-                break 'blocks;
-            }
-            if matches!(mode, RecoveryMode::FixedTr(_)) {
-                outcome = Some(0);
-                break 'blocks;
-            }
-        }
-        match outcome {
-            Some(usize::MAX) => {} // standard, already recorded
-            Some(0) | None => {
-                stats.none += 1;
-                stats.k4_hist[0] += 1;
-            }
-            Some(k) if k == m => {
-                stats.full += 1;
-                stats.k4_hist[m] += 1;
-            }
-            Some(k) => {
-                stats.partial += 1;
-                stats.k4_hist[k] += 1;
-            }
-        }
+    let mut stats: RecoveryStats = mc.run(trials, |_t, rng, acc: &mut RecoveryStats| {
+        recovery_trial(net, m, s, mode, rng, acc);
+    });
+    if stats.k4_hist.len() < m + 1 {
+        stats.k4_hist.resize(m + 1, 0); // trials == 0 edge case
     }
     stats
 }
@@ -152,25 +197,52 @@ mod tests {
             let net = Network::homogeneous(m, rng.uniform(0.05, 0.7), rng.uniform(0.05, 0.7));
             let exact = overall_outage(&net, &code);
             let trials = 20_000;
-            let mc = estimate_outage(&net, &code, trials, rng);
+            let mc = MonteCarlo::new(rng.next_u64());
+            let est = estimate_outage(&net, &code, trials, &mc);
             // 4-sigma binomial tolerance
             let sigma = (exact * (1.0 - exact) / trials as f64).sqrt();
             assert!(
-                (mc - exact).abs() < 4.0 * sigma + 5e-3,
-                "exact {exact} vs mc {mc} (m={m}, s={s})"
+                (est - exact).abs() < 4.0 * sigma + 5e-3,
+                "exact {exact} vs mc {est} (m={m}, s={s})"
             );
         });
     }
 
     #[test]
+    fn parallel_equals_serial_reference() {
+        let net = Network::fig6_setting(2, 10);
+        let code = GcCode::generate(10, 7, &mut Rng::new(3));
+        let trials = 4_000;
+        let seed = 0xFEED;
+        // hand-rolled reference with the engine's per-trial seeding scheme
+        let mut outages = 0usize;
+        for t in 0..trials {
+            let mut rng = Rng::new(seed ^ t as u64);
+            if outage_trial(&net, &code, &mut rng) {
+                outages += 1;
+            }
+        }
+        let want = outages as f64 / trials as f64;
+        for threads in [1usize, 2, 8] {
+            let mc = MonteCarlo::new(seed).with_threads(threads);
+            let got = estimate_outage(&net, &code, trials, &mc);
+            assert_eq!(got.to_bits(), want.to_bits(), "threads={threads}");
+        }
+    }
+
+    #[test]
     fn recovery_stats_partition() {
         let net = Network::fig6_setting(2, 10);
-        let mut rng = Rng::new(42);
-        for mode in [
+        for (i, mode) in [
             RecoveryMode::FixedTr(2),
             RecoveryMode::UntilDecode { tr: 2, max_blocks: 20 },
-        ] {
-            let st = gcplus_recovery(&net, 10, 7, mode, 300, &mut rng);
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let mc = MonteCarlo::new(42 + i as u64);
+            let st = gcplus_recovery(&net, 10, 7, mode, 300, &mc);
+            assert_eq!(st.trials, 300);
             assert_eq!(st.standard + st.full + st.partial + st.none, st.trials);
             assert_eq!(st.k4_hist.iter().sum::<usize>(), st.trials);
             let total = st.p_full() + st.p_partial() + st.p_none();
@@ -186,11 +258,11 @@ mod tests {
         // setting — generically no unit vector enters the row space before
         // the rank saturates at M, so the first decodable event is usually
         // "everything decodes".
-        let mut rng = Rng::new(7);
         let mode = RecoveryMode::UntilDecode { tr: 2, max_blocks: 50 };
         for setting in 1..=3 {
             let net = Network::fig6_setting(setting, 10);
-            let st = gcplus_recovery(&net, 10, 7, mode, 300, &mut rng);
+            let mc = MonteCarlo::new(7 + setting as u64);
+            let st = gcplus_recovery(&net, 10, 7, mode, 300, &mc);
             assert!(
                 st.p_full() > st.p_partial() && st.p_full() > st.p_none(),
                 "setting {setting}: full {:.3} partial {:.3} none {:.3}",
@@ -204,7 +276,7 @@ mod tests {
         // almost always fires before the stack reaches full rank. GC+ still
         // always recovers something (the paper's operational claim).
         let net = Network::fig6_setting(4, 10);
-        let st = gcplus_recovery(&net, 10, 7, mode, 300, &mut rng);
+        let st = gcplus_recovery(&net, 10, 7, mode, 300, &MonteCarlo::new(11));
         assert!(st.p_none() < 0.05, "setting 4 none = {:.3}", st.p_none());
         assert!(st.p_full() + st.p_partial() > 0.95);
     }
@@ -216,8 +288,7 @@ mod tests {
         // burst (P ~ 1.4%); its rate must be small. This is exactly why
         // Algorithm 1 loops until decode.
         let net = Network::fig6_setting(3, 10);
-        let mut rng = Rng::new(11);
-        let st = gcplus_recovery(&net, 10, 7, RecoveryMode::FixedTr(2), 800, &mut rng);
+        let st = gcplus_recovery(&net, 10, 7, RecoveryMode::FixedTr(2), 800, &MonteCarlo::new(11));
         assert!(st.p_full() < 0.1, "p_full = {}", st.p_full());
     }
 
@@ -237,7 +308,7 @@ mod tests {
             7,
             RecoveryMode::UntilDecode { tr: 2, max_blocks: 50 },
             200,
-            &mut rng,
+            &MonteCarlo::new(3),
         );
         assert!(
             st.p_none() < 0.05,
@@ -245,7 +316,7 @@ mod tests {
             st.p_none()
         );
         // and the fixed-t_r mode still decodes a nontrivial fraction
-        let st2 = gcplus_recovery(&net, 10, 7, RecoveryMode::FixedTr(2), 400, &mut rng);
+        let st2 = gcplus_recovery(&net, 10, 7, RecoveryMode::FixedTr(2), 400, &MonteCarlo::new(4));
         assert!(st2.p_none() < 0.7, "fixed-tr decode rate too low: {:.3}", st2.p_none());
     }
 }

@@ -7,6 +7,6 @@ pub mod exact;
 pub mod mc;
 pub mod theory;
 
-pub use design::{cost_efficient_s, sweep, DesignPoint};
+pub use design::{cost_efficient_s, sweep, sweep_mc, DesignPoint};
 pub use exact::{incomplete_probs, overall_outage, subcase_probs};
-pub use mc::{estimate_outage, gcplus_recovery, RecoveryStats};
+pub use mc::{estimate_outage, gcplus_recovery, RecoveryMode, RecoveryStats};

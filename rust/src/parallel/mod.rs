@@ -1,0 +1,326 @@
+//! Deterministic parallel Monte-Carlo engine.
+//!
+//! Every headline statistic of the paper — the Fig. 4 outage probabilities,
+//! the Fig. 6 GC⁺ recovery distribution, the eq. (21) design cross-checks —
+//! is an average over tens of thousands of independent trials. This module
+//! fans those trial loops out over a `std::thread` worker pool while keeping
+//! the results **bit-identical for every thread count**, so a figure
+//! regenerated on a laptop matches one regenerated on a 64-core box.
+//!
+//! # Determinism scheme
+//!
+//! Two ingredients make the engine thread-count-invariant:
+//!
+//! 1. **Counter-derived RNG streams.** Trial `t` draws exclusively from
+//!    `Rng::new(base_seed ^ t)` ([`MonteCarlo::trial_rng`]). `Rng` seeds
+//!    through SplitMix64, which whitens the correlated inputs
+//!    `seed ^ 0, seed ^ 1, …` into independent xoshiro256** states, so no
+//!    trial ever observes another trial's draws — regardless of which worker
+//!    runs it or in what order.
+//! 2. **Fixed-size chunks merged in index order.** Trials are grouped into
+//!    chunks of [`MonteCarlo::chunk`] trials (a constant independent of the
+//!    thread count). Workers pull chunk indices from an atomic counter and
+//!    accumulate each chunk into a fresh accumulator; the per-chunk results
+//!    are then merged **in ascending chunk order**. A `threads = 1` run
+//!    executes the exact same chunk/merge schedule sequentially, so it is
+//!    the serial reference by construction.
+//!
+//! Accumulators implement [`Accumulate`]; for thread-count invariance a
+//! `merge` must be associative over the values it folds (integer tallies and
+//! sums, `f64::max`-style maxima — **not** order-sensitive `f64` sums).
+//!
+//! # Usage
+//!
+//! ```no_run
+//! use cogc::parallel::MonteCarlo;
+//! let mc = MonteCarlo::new(42).with_threads(0); // 0 = one per core
+//! let heads: usize = mc.run(100_000, |_trial, rng, acc: &mut usize| {
+//!     if rng.bernoulli(0.5) {
+//!         *acc += 1;
+//!     }
+//! });
+//! ```
+//!
+//! The `cogc` CLI exposes the worker count as `--threads N` on the
+//! Monte-Carlo-backed subcommands (`fig4`, `fig6`, `design`); `N = 0`
+//! (the default) resolves to `std::thread::available_parallelism`.
+
+use crate::util::rng::{splitmix64, Rng};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Default trials per chunk. Large enough that chunk dispatch overhead is
+/// negligible against trial work (a trial is ≥ one code generation + one
+/// network realization), small enough to load-balance tail chunks well.
+pub const DEFAULT_CHUNK: usize = 256;
+
+/// Mergeable per-worker tally.
+///
+/// `merge` folds another accumulator of the same kind into `self`. The
+/// engine always merges per-chunk accumulators in ascending chunk index
+/// order, so determinism across thread counts only requires `merge` to be
+/// deterministic; order-*independence* additionally requires commutativity
+/// and associativity, which all the built-in tallies (counts, integer sums,
+/// maxima) satisfy — see the property tests in `tests/parallel_determinism`.
+pub trait Accumulate: Default + Send {
+    fn merge(&mut self, other: Self);
+}
+
+/// Plain counters (outage tallies and the like).
+impl Accumulate for usize {
+    fn merge(&mut self, other: Self) {
+        *self += other;
+    }
+}
+
+/// Pairs merge element-wise (e.g. (count, transmissions)).
+impl<A: Accumulate, B: Accumulate> Accumulate for (A, B) {
+    fn merge(&mut self, other: Self) {
+        self.0.merge(other.0);
+        self.1.merge(other.1);
+    }
+}
+
+/// Per-bucket tallies (histograms); shorter vectors are zero-extended.
+impl Accumulate for Vec<usize> {
+    fn merge(&mut self, other: Self) {
+        if self.len() < other.len() {
+            self.resize(other.len(), 0);
+        }
+        for (i, v) in other.into_iter().enumerate() {
+            self[i] += v;
+        }
+    }
+}
+
+/// Worker count of this machine (≥ 1).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Resolve a user-facing thread request: `0` means "one per core".
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        available_threads()
+    } else {
+        requested
+    }
+}
+
+/// Derive an independent base seed for a named sub-experiment (figure cell,
+/// sweep point, …) so that sweeps can issue one `MonteCarlo` per cell
+/// without the cells' trial streams colliding.
+pub fn derive_seed(base: u64, stream: u64) -> u64 {
+    let mut s = base ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    splitmix64(&mut s)
+}
+
+/// A deterministic Monte-Carlo runner: base seed + worker pool + chunking.
+#[derive(Clone, Debug)]
+pub struct MonteCarlo {
+    /// Base seed; trial `t` uses `Rng::new(seed ^ t)`.
+    pub seed: u64,
+    /// Worker threads (resolved, ≥ 1). Does not affect results.
+    pub threads: usize,
+    /// Trials per chunk (fixed, independent of `threads`). Affects only the
+    /// internal merge schedule, and the merge is order-fixed, so results are
+    /// chunk-size-invariant for the commutative/associative accumulators
+    /// used throughout this crate.
+    pub chunk: usize,
+}
+
+impl MonteCarlo {
+    /// Engine with one worker per available core.
+    pub fn new(seed: u64) -> MonteCarlo {
+        MonteCarlo { seed, threads: available_threads(), chunk: DEFAULT_CHUNK }
+    }
+
+    /// Single-threaded engine (the serial reference schedule).
+    pub fn serial(seed: u64) -> MonteCarlo {
+        MonteCarlo::new(seed).with_threads(1)
+    }
+
+    /// Set the worker count; `0` resolves to one per core.
+    pub fn with_threads(mut self, threads: usize) -> MonteCarlo {
+        self.threads = resolve_threads(threads);
+        self
+    }
+
+    /// Override the chunk size (mainly for tests).
+    pub fn with_chunk(mut self, chunk: usize) -> MonteCarlo {
+        self.chunk = chunk.max(1);
+        self
+    }
+
+    /// The counter-derived RNG stream of trial `t`.
+    pub fn trial_rng(&self, trial: u64) -> Rng {
+        Rng::new(self.seed ^ trial)
+    }
+
+    /// Run `trials` independent trials and merge their tallies.
+    ///
+    /// `trial(t, rng, acc)` must derive all randomness from `rng` (the
+    /// stream of trial `t`) and fold its outcome into `acc`. The returned
+    /// accumulator is bit-identical for every `threads` setting.
+    pub fn run<A, F>(&self, trials: usize, trial: F) -> A
+    where
+        A: Accumulate,
+        F: Fn(u64, &mut Rng, &mut A) + Sync,
+    {
+        let chunk = self.chunk.max(1);
+        let n_chunks = if trials == 0 { 0 } else { (trials - 1) / chunk + 1 };
+
+        let run_chunk = |c: usize| -> A {
+            let mut acc = A::default();
+            let lo = c * chunk;
+            let hi = ((c + 1) * chunk).min(trials);
+            for t in lo..hi {
+                let mut rng = self.trial_rng(t as u64);
+                trial(t as u64, &mut rng, &mut acc);
+            }
+            acc
+        };
+
+        let workers = self.threads.min(n_chunks).max(1);
+        if workers == 1 {
+            // Same chunk/merge schedule, executed in order on this thread.
+            let mut total = A::default();
+            for c in 0..n_chunks {
+                total.merge(run_chunk(c));
+            }
+            return total;
+        }
+
+        // Work-stealing over chunk indices; each worker returns its chunks
+        // tagged with their index so the final merge is order-fixed.
+        let next = AtomicUsize::new(0);
+        let mut slots: Vec<Option<A>> = Vec::with_capacity(n_chunks);
+        slots.resize_with(n_chunks, || None);
+        std::thread::scope(|scope| {
+            let next = &next;
+            let run_chunk = &run_chunk;
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    scope.spawn(move || {
+                        let mut done: Vec<(usize, A)> = Vec::new();
+                        loop {
+                            let c = next.fetch_add(1, Ordering::Relaxed);
+                            if c >= n_chunks {
+                                break;
+                            }
+                            done.push((c, run_chunk(c)));
+                        }
+                        done
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (c, acc) in h.join().expect("monte-carlo worker panicked") {
+                    slots[c] = Some(acc);
+                }
+            }
+        });
+        let mut total = A::default();
+        for slot in slots {
+            if let Some(acc) = slot {
+                total.merge(acc);
+            }
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn count_heads(mc: &MonteCarlo, trials: usize) -> usize {
+        mc.run(trials, |_t, rng, acc: &mut usize| {
+            if rng.bernoulli(0.37) {
+                *acc += 1;
+            }
+        })
+    }
+
+    #[test]
+    fn thread_count_does_not_change_result() {
+        let trials = 10_000;
+        let want = count_heads(&MonteCarlo::serial(99), trials);
+        for threads in [2usize, 3, 4, 8, 16] {
+            let got = count_heads(&MonteCarlo::new(99).with_threads(threads), trials);
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn chunk_size_does_not_change_count_tallies() {
+        let trials = 5_000;
+        let want = count_heads(&MonteCarlo::serial(7), trials);
+        for chunk in [1usize, 17, 256, 10_000] {
+            let got = count_heads(&MonteCarlo::new(7).with_threads(4).with_chunk(chunk), trials);
+            assert_eq!(got, want, "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn matches_hand_rolled_per_trial_loop() {
+        let trials = 3_000;
+        let seed = 0xABCDu64;
+        let mut want = 0usize;
+        for t in 0..trials {
+            let mut rng = Rng::new(seed ^ t as u64);
+            if rng.bernoulli(0.37) {
+                want += 1;
+            }
+        }
+        assert_eq!(count_heads(&MonteCarlo::new(seed).with_threads(8), trials), want);
+    }
+
+    #[test]
+    fn trial_index_is_passed_through() {
+        let sum: usize = MonteCarlo::new(1).with_threads(4).run(1000, |t, _rng, acc: &mut usize| {
+            *acc += t as usize;
+        });
+        assert_eq!(sum, 1000 * 999 / 2);
+    }
+
+    #[test]
+    fn zero_trials_yields_default() {
+        let mc = MonteCarlo::new(5);
+        let acc: usize = mc.run(0, |_, _, a: &mut usize| *a += 1);
+        assert_eq!(acc, 0);
+    }
+
+    #[test]
+    fn vec_accumulator_zero_extends() {
+        let mut a = vec![1usize, 2];
+        Accumulate::merge(&mut a, vec![10, 10, 10]);
+        assert_eq!(a, vec![11, 12, 10]);
+        let mut b = vec![1usize, 2, 3];
+        Accumulate::merge(&mut b, vec![5]);
+        assert_eq!(b, vec![6, 2, 3]);
+    }
+
+    #[test]
+    fn pair_accumulator_merges_elementwise() {
+        let mut p = (1usize, vec![2usize]);
+        Accumulate::merge(&mut p, (10, vec![0, 7]));
+        assert_eq!(p, (11, vec![2, 7]));
+    }
+
+    #[test]
+    fn derive_seed_separates_streams() {
+        let a = derive_seed(42, 0);
+        let b = derive_seed(42, 1);
+        let c = derive_seed(43, 0);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, derive_seed(42, 0));
+    }
+
+    #[test]
+    fn resolve_threads_semantics() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+        assert!(available_threads() >= 1);
+    }
+}

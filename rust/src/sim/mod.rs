@@ -10,6 +10,7 @@
 use crate::gc::{self, GcCode};
 use crate::linalg::Matrix;
 use crate::network::{Network, Realization};
+use crate::parallel::{Accumulate, MonteCarlo};
 use crate::util::rng::Rng;
 
 /// Outcome of one simulated round.
@@ -169,6 +170,77 @@ fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
     a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
 }
 
+/// Aggregate tallies of a [`sweep`] over many simulated rounds.
+///
+/// Every field combines associatively (counts, integer sums, a maximum), so
+/// per-worker instances merge exactly — the requirement of the parallel
+/// engine's determinism guarantee. Note the decode error is tracked as a
+/// *maximum* (order-independent), never an order-sensitive float sum.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SweepStats {
+    pub trials: usize,
+    /// Rounds decoded by the standard (binary) GC combinator.
+    pub standard: usize,
+    /// Rounds where GC⁺ recovered all M payloads.
+    pub full: usize,
+    /// Rounds where GC⁺ recovered a proper subset.
+    pub partial: usize,
+    /// Rounds with nothing decodable.
+    pub none: usize,
+    /// Total transmissions consumed across all rounds.
+    pub transmissions: usize,
+    /// Worst numerical decode error observed over all decoding rounds.
+    pub max_decode_err: f64,
+}
+
+impl SweepStats {
+    /// Fraction of rounds that produced *some* global update.
+    pub fn p_update(&self) -> f64 {
+        (self.standard + self.full + self.partial) as f64 / self.trials as f64
+    }
+
+    pub fn mean_transmissions(&self) -> f64 {
+        self.transmissions as f64 / self.trials as f64
+    }
+}
+
+impl Accumulate for SweepStats {
+    fn merge(&mut self, other: Self) {
+        self.trials += other.trials;
+        self.standard += other.standard;
+        self.full += other.full;
+        self.partial += other.partial;
+        self.none += other.none;
+        self.transmissions += other.transmissions;
+        self.max_decode_err = self.max_decode_err.max(other.max_decode_err);
+    }
+}
+
+/// Run `trials` independent [`simulate_round`]s through the parallel engine
+/// and tally the outcomes. Bit-identical for any thread count.
+pub fn sweep(
+    net: &Network,
+    m: usize,
+    s: usize,
+    d: usize,
+    decoder: Decoder,
+    trials: usize,
+    mc: &MonteCarlo,
+) -> SweepStats {
+    mc.run(trials, |_t, rng, acc: &mut SweepStats| {
+        let r = simulate_round(net, m, s, d, decoder, rng);
+        acc.trials += 1;
+        match r.outcome {
+            Outcome::Standard { .. } => acc.standard += 1,
+            Outcome::Full => acc.full += 1,
+            Outcome::Partial { .. } => acc.partial += 1,
+            Outcome::None => acc.none += 1,
+        }
+        acc.transmissions += r.transmissions;
+        acc.max_decode_err = acc.max_decode_err.max(r.decode_err);
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -226,6 +298,37 @@ mod tests {
                 r.outcome
             );
         });
+    }
+
+    #[test]
+    fn sweep_tallies_partition_and_decode_exactly() {
+        let net = Network::homogeneous(8, 0.3, 0.3);
+        let st = sweep(&net, 8, 3, 5, Decoder::GcPlus { tr: 2 }, 300, &MonteCarlo::new(9));
+        assert_eq!(st.trials, 300);
+        assert_eq!(st.standard + st.full + st.partial + st.none, st.trials);
+        assert!(st.p_update() > 0.0 && st.p_update() <= 1.0);
+        assert!(st.mean_transmissions() > 0.0);
+        assert!(st.max_decode_err < 1e-5, "decode err {}", st.max_decode_err);
+    }
+
+    #[test]
+    fn sweep_is_thread_count_invariant() {
+        let net = Network::homogeneous(8, 0.4, 0.4);
+        let run = |threads: usize| {
+            sweep(
+                &net,
+                8,
+                3,
+                5,
+                Decoder::GcPlus { tr: 2 },
+                400,
+                &MonteCarlo::new(17).with_threads(threads),
+            )
+        };
+        let want = run(1);
+        for threads in [2usize, 8] {
+            assert_eq!(run(threads), want, "threads={threads}");
+        }
     }
 
     #[test]

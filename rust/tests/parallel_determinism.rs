@@ -1,0 +1,186 @@
+//! Determinism regression tests for the parallel Monte-Carlo engine: the
+//! ISSUE-level guarantee is that `threads ∈ {1, 2, 8}` produce tallies
+//! **bit-identical** to the serial reference for a fixed seed, and that the
+//! per-worker accumulator merge is order-independent (so the guarantee
+//! survives any work-stealing schedule).
+
+use cogc::gc::{self, GcCode};
+use cogc::network::{Network, Realization};
+use cogc::outage::mc::{estimate_outage, gcplus_recovery, RecoveryMode, RecoveryStats};
+use cogc::parallel::{Accumulate, MonteCarlo};
+use cogc::sim::{self, Decoder, SweepStats};
+use cogc::util::rng::Rng;
+
+const SEED: u64 = 0xD15C_0DE5;
+const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+
+/// Fig. 4 shape (M=10, s=7, ≥2000 trials): outage tallies must match a
+/// hand-rolled loop that re-implements the engine's per-trial seeding
+/// scheme (`Rng::new(seed ^ trial)`) with no parallel machinery at all.
+#[test]
+fn outage_estimate_is_bit_identical_across_thread_counts() {
+    let net = Network::fig6_setting(2, 10);
+    let code = GcCode::generate(10, 7, &mut Rng::new(1));
+    let trials = 2_500usize;
+
+    let mut outages = 0usize;
+    for t in 0..trials {
+        let mut rng = Rng::new(SEED ^ t as u64);
+        let att = gc::Attempt::observe(&code, &Realization::sample(&net, &mut rng));
+        if att.complete.len() < 10 - 7 {
+            outages += 1;
+        }
+    }
+    let reference = outages as f64 / trials as f64;
+    assert!(reference > 0.0 && reference < 1.0, "degenerate reference {reference}");
+
+    for threads in THREAD_COUNTS {
+        let mc = MonteCarlo::new(SEED).with_threads(threads);
+        let got = estimate_outage(&net, &code, trials, &mc);
+        assert_eq!(
+            got.to_bits(),
+            reference.to_bits(),
+            "threads={threads}: {got} vs serial reference {reference}"
+        );
+    }
+}
+
+/// Fig. 6 shape (M=10, s=7, 2000 trials, both repetition modes): the full
+/// RecoveryStats — including the |K₄| histogram — must be identical at
+/// every thread count *and* every chunk size.
+#[test]
+fn recovery_tallies_are_identical_across_thread_counts_and_chunks() {
+    for (stream, mode) in [
+        RecoveryMode::FixedTr(2),
+        RecoveryMode::UntilDecode { tr: 2, max_blocks: 40 },
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let net = Network::fig6_setting(2, 10);
+        let seed = SEED + stream as u64;
+        let trials = 2_000;
+        let reference =
+            gcplus_recovery(&net, 10, 7, mode, trials, &MonteCarlo::serial(seed));
+        assert_eq!(reference.trials, trials);
+        assert_eq!(
+            reference.standard + reference.full + reference.partial + reference.none,
+            trials
+        );
+        for threads in THREAD_COUNTS {
+            for chunk in [1usize, 64, 256] {
+                let mc = MonteCarlo::new(seed).with_threads(threads).with_chunk(chunk);
+                let got = gcplus_recovery(&net, 10, 7, mode, trials, &mc);
+                assert_eq!(got, reference, "mode {mode:?} threads={threads} chunk={chunk}");
+            }
+        }
+    }
+}
+
+/// The sim-layer sweep (payload decode included) is thread-count invariant,
+/// down to the f64 max-decode-error field.
+#[test]
+fn sim_sweep_is_bit_identical_across_thread_counts() {
+    let net = Network::homogeneous(10, 0.4, 0.4);
+    let run = |threads: usize| {
+        sim::sweep(
+            &net,
+            10,
+            7,
+            6,
+            Decoder::GcPlus { tr: 2 },
+            600,
+            &MonteCarlo::new(SEED).with_threads(threads),
+        )
+    };
+    let reference = run(1);
+    assert_eq!(reference.trials, 600);
+    for threads in THREAD_COUNTS {
+        assert_eq!(run(threads), reference, "threads={threads}");
+    }
+}
+
+/// Property test: merging per-worker RecoveryStats in any order yields the
+/// same total — counts, sums, and histogram buckets are commutative and
+/// associative, which is what licenses the engine's work-stealing schedule.
+#[test]
+fn recovery_stats_merge_is_order_independent() {
+    let net = Network::fig6_setting(1, 10);
+    let parts: Vec<RecoveryStats> = (0..12u64)
+        .map(|c| {
+            gcplus_recovery(
+                &net,
+                10,
+                7,
+                RecoveryMode::FixedTr(2),
+                40,
+                &MonteCarlo::serial(SEED ^ (c << 20)),
+            )
+        })
+        .collect();
+    let fold = |order: &[usize]| {
+        let mut total = RecoveryStats::default();
+        for &i in order {
+            total.merge(parts[i].clone());
+        }
+        total
+    };
+    let base: Vec<usize> = (0..parts.len()).collect();
+    let want = fold(&base);
+    assert_eq!(want.trials, 12 * 40);
+    let mut rng = Rng::new(3);
+    for _ in 0..25 {
+        let mut order = base.clone();
+        rng.shuffle(&mut order);
+        assert_eq!(fold(&order), want, "order {order:?}");
+    }
+}
+
+/// Same property for the sim-layer SweepStats: its float field is a
+/// maximum (order-independent), never an order-sensitive sum.
+#[test]
+fn sweep_stats_merge_is_order_independent() {
+    let net = Network::homogeneous(8, 0.3, 0.3);
+    let parts: Vec<SweepStats> = (0..10u64)
+        .map(|c| {
+            sim::sweep(
+                &net,
+                8,
+                3,
+                5,
+                Decoder::GcPlus { tr: 2 },
+                30,
+                &MonteCarlo::serial(SEED ^ (c << 24)),
+            )
+        })
+        .collect();
+    let fold = |order: &[usize]| {
+        let mut total = SweepStats::default();
+        for &i in order {
+            total.merge(parts[i].clone());
+        }
+        total
+    };
+    let base: Vec<usize> = (0..parts.len()).collect();
+    let want = fold(&base);
+    assert_eq!(want.trials, 10 * 30);
+    let mut rng = Rng::new(7);
+    for _ in 0..25 {
+        let mut order = base.clone();
+        rng.shuffle(&mut order);
+        assert_eq!(fold(&order), want, "order {order:?}");
+    }
+}
+
+/// The figure harnesses themselves (the CSV the paper plots) must emit the
+/// same bytes at 1 and N threads.
+#[test]
+fn fig4_and_fig6_tables_are_thread_count_invariant() {
+    let fig4_serial = cogc::figures::fig4(600, 42, 1).to_csv();
+    let fig4_par = cogc::figures::fig4(600, 42, 4).to_csv();
+    assert_eq!(fig4_serial, fig4_par);
+
+    let fig6_serial = cogc::figures::fig6(120, 42, 1).to_csv();
+    let fig6_par = cogc::figures::fig6(120, 42, 4).to_csv();
+    assert_eq!(fig6_serial, fig6_par);
+}

@@ -5,6 +5,7 @@
 use cogc::gc::{self, GcCode};
 use cogc::network::{Network, Realization};
 use cogc::outage::mc::{gcplus_recovery, RecoveryMode};
+use cogc::parallel::MonteCarlo;
 use cogc::sim::{simulate_round, Decoder, Outcome};
 use cogc::testing::Prop;
 use cogc::util::rng::Rng;
@@ -141,7 +142,6 @@ fn lemma5_symmetry_uniform_inclusion() {
 
 #[test]
 fn until_decode_always_terminates_with_something() {
-    let mut rng = Rng::new(5);
     for setting in 1..=4 {
         let net = Network::fig6_setting(setting, 10);
         let st = gcplus_recovery(
@@ -150,7 +150,7 @@ fn until_decode_always_terminates_with_something() {
             7,
             RecoveryMode::UntilDecode { tr: 2, max_blocks: 80 },
             150,
-            &mut rng,
+            &MonteCarlo::new(5 + setting as u64),
         );
         assert!(
             st.p_none() < 0.05,
