@@ -1,29 +1,32 @@
-//! Quickstart: train the paper's MNIST CNN with CoGC over an unreliable
-//! network and watch the PS recover exact global updates through the
-//! gradient code.
+//! Quickstart: train the MNIST model with CoGC over an unreliable network
+//! and watch the PS recover exact global updates through the gradient code.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
+//!
+//! Runs offline out of the box: the auto backend picks the AOT PJRT
+//! artifacts when `make artifacts` has been run and falls back to the
+//! native pure-rust models otherwise — same protocol, same figures.
 //!
 //! What happens each round (paper §III):
 //!  1. the PS broadcasts the global model;
-//!  2. every client runs I local SGD steps (AOT-compiled JAX CNN via PJRT);
+//!  2. every client runs I local SGD steps;
 //!  3. clients exchange coded gradients with their s cyclic neighbors over
-//!     Bernoulli-erasure links and form partial sums (Pallas coded_matmul);
+//!     Bernoulli-erasure links and form partial sums (eq. (8));
 //!  4. complete partial sums race up erasure-prone uplinks;
 //!  5. if ≥ M−s arrive, the PS solves the combinator and recovers the
 //!     *exact* mean update — otherwise the round is a binary failure.
 
 use cogc::coordinator::{Aggregator, Design, TrainConfig, Trainer};
 use cogc::network::Network;
-use cogc::runtime::{default_artifacts_dir, Engine, Manifest};
+use cogc::runtime::Backend;
 
 fn main() -> anyhow::Result<()> {
-    let engine = Engine::cpu()?;
-    let man = Manifest::load(&default_artifacts_dir())?;
-    println!("platform: {} | artifacts for M={} clients", engine.platform(), man.m);
+    let backend = Backend::auto();
+    let m = backend.manifest().m;
+    println!("backend: {} ({}) | M={} clients", backend.name(), backend.platform(), m);
 
     // a mildly unreliable homogeneous network: 10% outage on every link
-    let net = Network::homogeneous(man.m, 0.1, 0.1);
+    let net = Network::homogeneous(m, 0.1, 0.1);
 
     let mut cfg = TrainConfig::new(
         "mnist_cnn",
@@ -34,9 +37,9 @@ fn main() -> anyhow::Result<()> {
 
     println!(
         "training {} for {} rounds: M={}, s={}, I={}, lr={}",
-        cfg.model, cfg.rounds, man.m, cfg.s, cfg.local_iters, cfg.lr
+        cfg.model, cfg.rounds, m, cfg.s, cfg.local_iters, cfg.lr
     );
-    let mut trainer = Trainer::new(&engine, &man, cfg, net)?;
+    let mut trainer = Trainer::new(&backend, cfg, net)?;
     let log = trainer.run()?;
 
     println!("\nround  outcome    acc     train_loss  tx");

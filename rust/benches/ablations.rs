@@ -1,11 +1,12 @@
 //! Ablation benches for the design choices called out in DESIGN.md:
 //!
 //!  A1  exact vs approximate (paper Algorithm 2) GC⁺ detection — recovery
-//!      rates and cost;
+//!      rates and cost, fanned over the parallel Monte-Carlo engine;
 //!  A2  t_r sweep — how stacking depth buys reliability (Lemma 3 in action);
 //!  A3  s sweep on a fixed network — the non-monotone P_O(s) the §V design
 //!      problem optimizes over;
-//!  A4  Pallas vs native combine, end-to-end training round;
+//!  A4  Pallas vs native combine, end-to-end training round (pallas rows
+//!      need `make artifacts` + real PJRT; native always runs);
 //!  A5  Design 1 vs Design 2 — update guarantee vs attempt cost.
 
 use cogc::bench::Suite;
@@ -16,43 +17,49 @@ use cogc::network::{Network, Realization};
 use cogc::outage::mc::{gcplus_recovery, RecoveryMode};
 use cogc::outage::{self};
 use cogc::parallel::{derive_seed, MonteCarlo};
-use cogc::runtime::{default_artifacts_dir, CombineImpl, Engine, Manifest};
+use cogc::runtime::{Backend, CombineImpl};
 use cogc::util::rng::Rng;
 
 fn main() {
     let mut rng = Rng::new(17);
 
     // ── A1: exact vs approximate detection ──────────────────────────────
+    // Each setting sweeps through the deterministic parallel engine with a
+    // derived per-setting seed: bit-identical rates at any worker count.
     let mut t = Table::new(
-        "A1: GC+ exact vs Algorithm-2 approximate detection (M=10 s=7 t_r=2, 600 rounds/setting)",
+        "A1: GC+ exact vs Algorithm-2 approximate detection (M=10 s=7 t_r=2, 600 rounds/setting, \
+         parallel MC engine)",
         &["setting", "exact_decode_rate", "approx_decode_rate", "exact_mean_k4", "approx_mean_k4"],
     );
     for setting in 1..=4usize {
         let net = Network::fig6_setting(setting, 10);
-        let (mut ex_dec, mut ap_dec, mut ex_k4, mut ap_k4) = (0usize, 0usize, 0usize, 0usize);
         let rounds = 600;
-        for _ in 0..rounds {
+        // ((exact decodes, exact Σ|K4|), (approx decodes, approx Σ|K4|))
+        type A1Acc = ((usize, usize), (usize, usize));
+        let mc = MonteCarlo::new(derive_seed(17, 100 + setting as u64));
+        let acc: A1Acc = mc.run(rounds, |_t, rng, acc: &mut A1Acc| {
             let attempts: Vec<gc::Attempt> = (0..2)
                 .map(|_| {
-                    let code = GcCode::generate(10, 7, &mut rng);
-                    gc::Attempt::observe(&code, &Realization::sample(&net, &mut rng))
+                    let code = GcCode::generate(10, 7, rng);
+                    gc::Attempt::observe(&code, &Realization::sample(&net, rng))
                 })
                 .collect();
             let stacked = gc::stack_attempts(&attempts);
             if stacked.rows == 0 {
-                continue;
+                return;
             }
             let ex = gc::decode(&stacked);
             let ap = gc::decode_approx(&stacked);
             if !ex.k4.is_empty() {
-                ex_dec += 1;
-                ex_k4 += ex.k4.len();
+                (acc.0).0 += 1;
+                (acc.0).1 += ex.k4.len();
             }
             if !ap.k4.is_empty() {
-                ap_dec += 1;
-                ap_k4 += ap.k4.len();
+                (acc.1).0 += 1;
+                (acc.1).1 += ap.k4.len();
             }
-        }
+        });
+        let ((ex_dec, ex_k4), (ap_dec, ap_k4)) = acc;
         t.row(&[
             setting.to_string(),
             format!("{:.4}", ex_dec as f64 / rounds as f64),
@@ -92,26 +99,20 @@ fn main() {
     }
     t.print();
 
-    // ── A4 + A5: end-to-end round ablations (need artifacts + PJRT) ────
-    let dir = default_artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!(
-            "skipping A4/A5: no artifacts manifest at {} — run `make artifacts`",
-            dir.display()
-        );
-        return;
-    }
-    let engine = match Engine::cpu() {
-        Ok(e) => e,
-        Err(e) => {
-            eprintln!("skipping A4/A5: PJRT engine unavailable: {e:#}");
-            return;
-        }
-    };
-    let man = Manifest::load(&dir).expect("manifest parses");
-    let net = Network::homogeneous(man.m, 0.3, 0.3);
+    // ── A4 + A5: end-to-end round ablations ─────────────────────────────
+    // The auto backend keeps these running on a clean checkout (native
+    // models); with `make artifacts` + real PJRT the A4 comparison gains
+    // its pallas row.
+    let backend = Backend::auto();
+    let net = Network::homogeneous(backend.manifest().m, 0.3, 0.3);
     let mut suite = Suite::new("ablations: end-to-end round");
-    for (label, imp) in [("pallas", CombineImpl::Pallas), ("native", CombineImpl::Native)] {
+    let combines: &[(&str, CombineImpl)] = if backend.name() == "pjrt" {
+        &[("pallas", CombineImpl::Pallas), ("native", CombineImpl::Native)]
+    } else {
+        // the Pallas kernels are PJRT artifacts; only the native combine exists
+        &[("native", CombineImpl::Native)]
+    };
+    for &(label, imp) in combines {
         let mut cfg = TrainConfig::new(
             "mnist_cnn",
             Aggregator::GcPlus { tr: 2, until_decode: false, max_blocks: 1 },
@@ -121,24 +122,25 @@ fn main() {
         cfg.eval_batches = 1;
         cfg.combine = imp;
         let t0 = std::time::Instant::now();
-        let mut trainer = Trainer::new(&engine, &man, cfg, net.clone()).unwrap();
+        let mut trainer = Trainer::new(&backend, cfg, net.clone()).unwrap();
         let log = trainer.run().unwrap();
         println!(
-            "A4 combine={label}: 2 rounds in {:.2}s (outcomes: {:?})",
+            "A4 combine={label} [{} backend]: 2 rounds in {:.2}s (outcomes: {:?})",
+            backend.name(),
             t0.elapsed().as_secs_f64(),
             log.rounds.iter().map(|r| r.outcome.clone()).collect::<Vec<_>>()
         );
     }
-    for (label, design) in [("design1_retry", Design::RetryUntilSuccess), ("design2_skip", Design::SkipRound)] {
-        let mut cfg = TrainConfig::new(
-            "mnist_cnn",
-            Aggregator::CoGc { design, attempts: if design == Design::RetryUntilSuccess { 50 } else { 1 } },
-        );
+    let designs =
+        [("design1_retry", Design::RetryUntilSuccess), ("design2_skip", Design::SkipRound)];
+    for (label, design) in designs {
+        let attempts = if design == Design::RetryUntilSuccess { 50 } else { 1 };
+        let mut cfg = TrainConfig::new("mnist_cnn", Aggregator::CoGc { design, attempts });
         cfg.rounds = 4;
         cfg.per_client = 40;
         cfg.eval_batches = 1;
-        let net_harsh = Network::homogeneous(man.m, 0.5, 0.1);
-        let mut trainer = Trainer::new(&engine, &man, cfg, net_harsh).unwrap();
+        let net_harsh = Network::homogeneous(backend.manifest().m, 0.5, 0.1);
+        let mut trainer = Trainer::new(&backend, cfg, net_harsh).unwrap();
         let log = trainer.run().unwrap();
         println!(
             "A5 {label}: {} updates / 4 rounds, {} attempts, {} transmissions",

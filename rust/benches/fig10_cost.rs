@@ -1,8 +1,10 @@
 //! Bench + regeneration harness for Fig. 10 (communication cost of the
 //! cost-efficient GC design vs regular GC). Reduced target/rounds by
-//! default; full run: `cogc fig10 --rounds 100 --target 0.85`.
+//! default; full run: `cogc fig10 --rounds 100 --target 0.85`. Runs on
+//! whichever backend is available (native on a clean checkout).
 
 use cogc::figures;
+use cogc::runtime::Backend;
 
 fn main() {
     let rounds: usize = std::env::var("COGC_BENCH_ROUNDS")
@@ -13,11 +15,13 @@ fn main() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(0.35);
+    let backend = Backend::auto();
     let t0 = std::time::Instant::now();
-    let table = figures::fig10(rounds, target, 42).expect("fig10");
+    let table = figures::fig10(&backend, rounds, target, 42, 0).expect("fig10");
     table.print();
     println!(
-        "\n== bench fig10_cost: target acc {target}, cap {rounds} rounds, {:.1}s ==",
+        "\n== bench fig10_cost [{} backend]: target acc {target}, cap {rounds} rounds, {:.1}s ==",
+        backend.name(),
         t0.elapsed().as_secs_f64()
     );
 }

@@ -1,19 +1,23 @@
 //! Bench + regeneration harness for Fig. 11 (MNIST: ideal / GC / GC⁺ /
 //! intermittent under poor uplinks, per client-to-client tier). Reduced
 //! rounds by default; full run: `cogc fig11 --conn poor --rounds 100`.
+//! Runs on whichever backend is available (native on a clean checkout).
 
 use cogc::figures;
+use cogc::runtime::Backend;
 
 fn main() {
     let rounds: usize = std::env::var("COGC_BENCH_ROUNDS")
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(3);
+    let backend = Backend::auto();
     let t0 = std::time::Instant::now();
-    let table = figures::fig11_12("mnist_cnn", "poor", rounds, 42).expect("fig11");
+    let table = figures::fig11_12(&backend, "mnist_cnn", "poor", rounds, 42, 0).expect("fig11");
     table.print();
     let wall = t0.elapsed().as_secs_f64();
     println!(
-        "\n== bench fig11_gcplus: {rounds} rounds x 4 methods in {wall:.1}s ==",
+        "\n== bench fig11_gcplus [{} backend]: {rounds} rounds x 4 methods in {wall:.1}s ==",
+        backend.name(),
     );
 }

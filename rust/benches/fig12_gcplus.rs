@@ -1,18 +1,22 @@
 //! Bench + regeneration harness for Fig. 12 (CIFAR version of Fig. 11).
 //! Reduced rounds by default; full: `cogc fig12 --conn moderate --rounds 100`.
+//! Runs on whichever backend is available (native on a clean checkout).
 
 use cogc::figures;
+use cogc::runtime::Backend;
 
 fn main() {
     let rounds: usize = std::env::var("COGC_BENCH_ROUNDS")
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(2);
+    let backend = Backend::auto();
     let t0 = std::time::Instant::now();
-    let table = figures::fig11_12("cifar_cnn", "moderate", rounds, 42).expect("fig12");
+    let table = figures::fig11_12(&backend, "cifar_cnn", "moderate", rounds, 42, 0).expect("fig12");
     table.print();
     println!(
-        "\n== bench fig12_gcplus: {rounds} rounds x 4 methods in {:.1}s ==",
+        "\n== bench fig12_gcplus [{} backend]: {rounds} rounds x 4 methods in {:.1}s ==",
+        backend.name(),
         t0.elapsed().as_secs_f64()
     );
 }

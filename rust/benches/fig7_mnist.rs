@@ -1,21 +1,26 @@
 //! Bench + regeneration harness for Fig. 7 (MNIST: ideal / CoGC /
 //! intermittent on paper Network 1). Reduced rounds by default; set
 //! `COGC_BENCH_ROUNDS` (and see `cogc fig7 --network N --rounds 100`, the
-//! full paper-scale run recorded in EXPERIMENTS.md).
+//! full paper-scale run recorded in EXPERIMENTS.md). Runs on whichever
+//! backend is available — the native pure-rust models on a clean checkout.
 
 use cogc::figures;
+use cogc::runtime::Backend;
 
 fn main() {
     let rounds: usize = std::env::var("COGC_BENCH_ROUNDS")
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(3);
+    let backend = Backend::auto();
     let t0 = std::time::Instant::now();
-    let table = figures::fig7_8("mnist_cnn", 1, rounds, 42).expect("fig7");
+    let table = figures::fig7_8(&backend, "mnist_cnn", 1, rounds, 42, 0).expect("fig7");
     table.print();
     let wall = t0.elapsed().as_secs_f64();
     println!(
-        "\n== bench fig7_mnist: {rounds} rounds x 3 methods in {wall:.1}s ({:.2}s/round/method) ==",
+        "\n== bench fig7_mnist [{} backend]: {rounds} rounds x 3 methods in {wall:.1}s \
+         ({:.2}s/round/method) ==",
+        backend.name(),
         wall / (3 * rounds) as f64
     );
 }

@@ -1,20 +1,25 @@
 //! Bench + regeneration harness for Fig. 8 (CIFAR: ideal / CoGC /
 //! intermittent on paper Network 2). Reduced rounds by default
 //! (`COGC_BENCH_ROUNDS`); full run: `cogc fig8 --network N --rounds 100`.
+//! Runs on whichever backend is available (native on a clean checkout).
 
 use cogc::figures;
+use cogc::runtime::Backend;
 
 fn main() {
     let rounds: usize = std::env::var("COGC_BENCH_ROUNDS")
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(2);
+    let backend = Backend::auto();
     let t0 = std::time::Instant::now();
-    let table = figures::fig7_8("cifar_cnn", 2, rounds, 42).expect("fig8");
+    let table = figures::fig7_8(&backend, "cifar_cnn", 2, rounds, 42, 0).expect("fig8");
     table.print();
     let wall = t0.elapsed().as_secs_f64();
     println!(
-        "\n== bench fig8_cifar: {rounds} rounds x 3 methods in {wall:.1}s ({:.2}s/round/method) ==",
+        "\n== bench fig8_cifar [{} backend]: {rounds} rounds x 3 methods in {wall:.1}s \
+         ({:.2}s/round/method) ==",
+        backend.name(),
         wall / (3 * rounds) as f64
     );
 }

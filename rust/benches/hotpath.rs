@@ -5,10 +5,10 @@
 //!
 //!     cargo bench --bench hotpath
 //!
-//! The numbers here feed EXPERIMENTS.md §Perf. The model-runtime section
-//! needs `make artifacts` + real PJRT bindings and is skipped (with a
-//! message) when either is missing; the coding-layer and Monte-Carlo
-//! sections always run.
+//! The numbers here feed EXPERIMENTS.md §Perf. The coding-layer,
+//! Monte-Carlo, and native model-step sections always run; the PJRT
+//! model-runtime section needs `make artifacts` + real PJRT bindings and
+//! is skipped (with a message) when either is missing.
 
 use cogc::bench::Suite;
 use cogc::gc::{self, GcCode};
@@ -17,10 +17,8 @@ use cogc::network::{Network, Realization};
 use cogc::outage::exact::poisson_binomial_pmf;
 use cogc::outage::mc::{estimate_outage, gcplus_recovery, RecoveryMode};
 use cogc::parallel::{available_threads, MonteCarlo};
-use cogc::runtime::{
-    coded::native_combine, default_artifacts_dir, Batch, CodedKernels, CombineImpl, Engine,
-    InputKind, Manifest, ModelRuntime,
-};
+use cogc::runtime::{coded::native_combine, Backend, CodedKernels, CombineImpl, ModelRuntime};
+use cogc::testing::fake_batch;
 use cogc::util::rng::Rng;
 
 fn main() {
@@ -96,26 +94,34 @@ fn main() {
         );
     }
 
-    // ── model runtime (needs artifacts + PJRT) ──────────────────────────
-    let dir = default_artifacts_dir();
-    let runtime = if dir.join("manifest.json").exists() {
-        match (Engine::cpu(), Manifest::load(&dir)) {
-            (Ok(engine), Ok(man)) => Some((engine, man)),
-            (Err(e), _) => {
-                eprintln!("skipping model-runtime benches: PJRT unavailable: {e:#}");
-                None
-            }
-            (_, Err(e)) => {
-                eprintln!("skipping model-runtime benches: bad manifest: {e:#}");
-                None
-            }
+    // ── native model steps (always run — no artifacts needed) ───────────
+    {
+        let backend = Backend::native();
+        for name in ["mnist_cnn", "cifar_cnn", "transformer"] {
+            let model = backend.load_model(name).unwrap();
+            let params = model.init_params(&mut rng);
+            let batch = fake_batch(&model.spec, &mut rng);
+            let d = model.spec.d;
+            suite.bench(&format!("native train_step {name} (D={d})"), || {
+                cogc::bench::black_box(model.train_step(&params, &batch, 0, 0.01).unwrap());
+            });
+            suite.bench(&format!("native eval_step  {name} (D={d})"), || {
+                cogc::bench::black_box(model.eval_step(&params, &batch).unwrap());
+            });
+            let g: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            suite.bench(&format!("native sgd_apply  {name} (D={d})"), || {
+                cogc::bench::black_box(model.sgd_apply(&params, &g, 0.01).unwrap());
+            });
         }
-    } else {
-        eprintln!(
-            "skipping model-runtime benches: no artifacts manifest at {} — run `make artifacts`",
-            dir.display()
-        );
-        None
+    }
+
+    // ── model runtime (needs artifacts + PJRT) ──────────────────────────
+    let runtime = match Backend::pjrt_parts() {
+        Ok(pair) => Some(pair),
+        Err(e) => {
+            eprintln!("skipping PJRT model-runtime benches: {e:#}");
+            None
+        }
     };
 
     if let Some((engine, man)) = runtime {
@@ -153,16 +159,7 @@ fn main() {
             let model = ModelRuntime::load(&engine, &man, name).unwrap();
             let params = model.init_params(&mut rng);
             let spec = &model.spec;
-            let batch = match spec.kind {
-                InputKind::Image => Batch::Image {
-                    x: (0..spec.x_elems()).map(|_| rng.normal() as f32).collect(),
-                    y: (0..spec.y_elems()).map(|_| rng.below(spec.num_classes) as i32).collect(),
-                },
-                InputKind::Tokens => Batch::Tokens {
-                    x: (0..spec.x_elems()).map(|_| rng.below(spec.num_classes) as i32).collect(),
-                    y: (0..spec.y_elems()).map(|_| rng.below(spec.num_classes) as i32).collect(),
-                },
-            };
+            let batch = fake_batch(spec, &mut rng);
             suite.bench(&format!("train_step {name}"), || {
                 cogc::bench::black_box(model.train_step(&params, &batch, 0, 0.01).unwrap());
             });

@@ -7,6 +7,12 @@
 //!
 //! Figure benches additionally print the paper's data series (CSV) so that
 //! `cargo bench` regenerates every table/figure shape end-to-end.
+//!
+//! Usage: [`Suite::bench`] for latency rows, [`Suite::bench_throughput`]
+//! when a work count (flops, trials) gives the row a rate column, and
+//! [`black_box`] around every measured expression so the optimizer cannot
+//! delete it. Numbers land in EXPERIMENTS.md — regenerate them with
+//! `cargo bench --bench hotpath` before editing that file.
 
 use std::hint::black_box as bb;
 use std::time::{Duration, Instant};

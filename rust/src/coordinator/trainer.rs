@@ -1,6 +1,7 @@
 //! The CoGC training loop (paper §III Fig. 3, §VI Algorithm 1) plus the
 //! §VII baselines — the end-to-end coordinator tying the gradient-coding
-//! layer to the PJRT model runtime.
+//! layer to the model runtime (either backend: PJRT artifacts or the
+//! native pure-rust models).
 //!
 //! Per round: broadcast (eq. (7)) → I-step local SGD (eq. (2), the AOT
 //! train artifact) → gradient-sharing encode (eq. (8), the Pallas
@@ -15,7 +16,7 @@ use crate::gc::{self, GcCode};
 use crate::linalg::Matrix;
 use crate::metrics::{RoundRecord, RunLog};
 use crate::network::{Network, Realization};
-use crate::runtime::{CodedKernels, Engine, InputKind, Manifest, ModelRuntime};
+use crate::runtime::{Backend, CodedKernels, InputKind, ModelRuntime};
 use crate::util::rng::Rng;
 use std::sync::Arc;
 
@@ -48,15 +49,11 @@ pub struct Trainer {
 }
 
 impl Trainer {
-    pub fn new(
-        engine: &Engine,
-        man: &Manifest,
-        cfg: TrainConfig,
-        net: Network,
-    ) -> anyhow::Result<Trainer> {
-        anyhow::ensure!(net.m == man.m, "network M={} but artifacts built for M={}", net.m, man.m);
-        let model = ModelRuntime::load(engine, man, &cfg.model)?;
-        let coded = CodedKernels::load(engine, man, &model.spec, cfg.combine)?;
+    pub fn new(backend: &Backend, cfg: TrainConfig, net: Network) -> anyhow::Result<Trainer> {
+        let man = backend.manifest();
+        anyhow::ensure!(net.m == man.m, "network M={} but backend built for M={}", net.m, man.m);
+        let model = backend.load_model(&cfg.model)?;
+        let coded = backend.coded(&model.spec, cfg.combine)?;
         let mut rng = Rng::new(cfg.seed ^ 0xC0_6C);
         let m = man.m;
         let d = model.spec.d;

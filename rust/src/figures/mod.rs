@@ -1,6 +1,12 @@
 //! Figure/table harnesses: regenerate every experimental artifact of the
 //! paper's evaluation (§VII) as CSV series — the same rows/curves the paper
 //! plots. Shared by the `cogc` CLI and the `cargo bench` targets.
+//!
+//! The training figures (7/8/10/11/12) take a [`Backend`] — PJRT artifacts
+//! or the native pure-rust models — plus a `threads` worker count: their
+//! method/network grid fans out over [`parallel_map`], one deterministic
+//! training run per cell, merged in grid order so the CSV is byte-identical
+//! at every thread count.
 
 use crate::coordinator::{Aggregator, Design, TrainConfig, Trainer};
 use crate::gc::GcCode;
@@ -9,9 +15,9 @@ use crate::network::Network;
 use crate::outage::mc::RecoveryMode;
 use crate::outage::theory::{self, Theorem1Params};
 use crate::outage::{self, design};
-use crate::parallel::{derive_seed, MonteCarlo};
+use crate::parallel::{derive_seed, parallel_map, MonteCarlo};
 use crate::privacy;
-use crate::runtime::{default_artifacts_dir, CombineImpl, Engine, Manifest};
+use crate::runtime::Backend;
 use crate::util::rng::Rng;
 
 /// Fig. 4: overall outage probability `P_O` vs `s` for several network
@@ -109,14 +115,26 @@ pub fn fig6(trials: usize, seed: u64, threads: usize) -> Table {
 }
 
 /// Shared runner: train one configuration and return its log.
-pub fn run_training(
-    engine: &Engine,
-    man: &Manifest,
-    cfg: TrainConfig,
-    net: Network,
-) -> anyhow::Result<RunLog> {
-    let mut tr = Trainer::new(engine, man, cfg, net)?;
+pub fn run_training(backend: &Backend, cfg: TrainConfig, net: Network) -> anyhow::Result<RunLog> {
+    let mut tr = Trainer::new(backend, cfg, net)?;
     tr.run()
+}
+
+/// Run a grid of (config, network) training cells through the worker pool
+/// and return the logs tagged by config, in grid order.
+fn run_grid(
+    backend: &Backend,
+    jobs: &[(TrainConfig, Network)],
+    threads: usize,
+) -> anyhow::Result<Vec<(String, RunLog)>> {
+    let results = parallel_map(jobs, threads, |_i, (cfg, net)| {
+        run_training(backend, cfg.clone(), net.clone())
+    });
+    let mut logs = Vec::with_capacity(jobs.len());
+    for ((cfg, _), result) in jobs.iter().zip(results) {
+        logs.push((cfg.tag(), result?));
+    }
+    Ok(logs)
 }
 
 /// Accuracy-curve comparison table from several runs (columns per method).
@@ -145,54 +163,91 @@ fn curves_table(comment: &str, logs: &[(String, RunLog)]) -> Table {
 }
 
 /// Figs. 7 (MNIST) / 8 (CIFAR): ideal FL vs CoGC vs intermittent FL on
-/// Networks 1–3 (Fig. 9).
+/// Networks 1–3 (Fig. 9). The three methods train in parallel.
 pub fn fig7_8(
+    backend: &Backend,
     model: &str,
     network_idx: usize,
     rounds: usize,
     seed: u64,
+    threads: usize,
 ) -> anyhow::Result<Table> {
-    let engine = Engine::cpu()?;
-    let man = Manifest::load(&default_artifacts_dir())?;
-    let net = Network::paper_network(network_idx, man.m, seed);
-    let mut logs = Vec::new();
-    for agg in [
+    let m = backend.manifest().m;
+    let net = Network::paper_network(network_idx, m, seed);
+    let jobs: Vec<(TrainConfig, Network)> = [
         Aggregator::Ideal,
         Aggregator::CoGc { design: Design::SkipRound, attempts: 1 },
         Aggregator::Intermittent,
-    ] {
+    ]
+    .into_iter()
+    .map(|agg| {
         let mut cfg = TrainConfig::new(model, agg);
         cfg.rounds = rounds;
         cfg.seed = seed;
-        let net_used = if agg == Aggregator::Ideal { Network::perfect(man.m) } else { net.clone() };
-        let log = run_training(&engine, &man, cfg.clone(), net_used)?;
+        let net_used = if agg == Aggregator::Ideal { Network::perfect(m) } else { net.clone() };
+        (cfg, net_used)
+    })
+    .collect();
+    let logs = run_grid(backend, &jobs, threads)?;
+    for (tag, log) in &logs {
         crate::info!(
-            "{model} net{network_idx} {}: final acc {:.3}, {} updates / {} rounds",
-            cfg.tag(),
+            "{model} net{network_idx} {tag}: final acc {:.3}, {} updates / {} rounds",
             log.final_acc(),
             log.updates(),
             rounds
         );
-        logs.push((cfg.tag(), log));
     }
     Ok(curves_table(
-        &format!("fig{}: {model} on paper network {network_idx} (ideal / CoGC / intermittent)",
-                 if model == "mnist_cnn" { 7 } else { 8 }),
+        &format!(
+            "fig{}: {model} on paper network {network_idx} (ideal / CoGC / intermittent) \
+             [{} backend]",
+            if model == "mnist_cnn" { 7 } else { 8 },
+            backend.name()
+        ),
         &logs,
     ))
 }
 
+/// One Fig. 10 variant: train at straggler tolerance `s` until the target
+/// accuracy is hit (Design 1, so every round ends in a recovery).
+fn fig10_cell(
+    backend: &Backend,
+    s: usize,
+    rounds: usize,
+    target_acc: f64,
+    seed: u64,
+    net: &Network,
+) -> anyhow::Result<RunLog> {
+    let mut cfg = TrainConfig::new(
+        "mnist_cnn",
+        Aggregator::CoGc { design: Design::RetryUntilSuccess, attempts: 200 },
+    );
+    cfg.s = s;
+    cfg.rounds = rounds;
+    cfg.seed = seed;
+    let mut trainer = Trainer::new(backend, cfg, net.clone())?;
+    trainer.run_until_acc(target_acc)
+}
+
 /// Fig. 10: communication cost to reach a target accuracy — regular GC
-/// (s = 7) vs the cost-efficient design s* of eq. (21).
-pub fn fig10(rounds: usize, target_acc: f64, seed: u64) -> anyhow::Result<Table> {
-    let engine = Engine::cpu()?;
-    let man = Manifest::load(&default_artifacts_dir())?;
-    let net = Network::homogeneous(man.m, 0.1, 0.1); // the paper's Fig.10 network
+/// (s = 7) vs the cost-efficient design s* of eq. (21). The two variants
+/// train in parallel.
+pub fn fig10(
+    backend: &Backend,
+    rounds: usize,
+    target_acc: f64,
+    seed: u64,
+    threads: usize,
+) -> anyhow::Result<Table> {
+    let m = backend.manifest().m;
+    let net = Network::homogeneous(m, 0.1, 0.1); // the paper's Fig.10 network
     let pick = design::cost_efficient_s(&net, 0.5, seed).expect("feasible s*");
     let mut t = Table::new(
         &format!(
-            "fig10: transmissions to reach acc {target_acc} (p=0.1, P_O*=0.5 -> s*={})",
-            pick.s
+            "fig10: transmissions to reach acc {target_acc} (p=0.1, P_O*=0.5 -> s*={}) \
+             [{} backend]",
+            pick.s,
+            backend.name()
         ),
         &["variant", "s", "rounds_used", "total_transmissions", "final_acc", "reached"],
     );
@@ -200,16 +255,12 @@ pub fn fig10(rounds: usize, target_acc: f64, seed: u64) -> anyhow::Result<Table>
     // communication cost: every round ends in a successful recovery, so
     // both variants see the same optimization trajectory and differ only
     // in transmissions spent per success (paper §V / Fig. 10).
-    for (variant, s) in [("regular_s7", 7usize), ("cost_efficient", pick.s)] {
-        let mut cfg = TrainConfig::new(
-            "mnist_cnn",
-            Aggregator::CoGc { design: Design::RetryUntilSuccess, attempts: 200 },
-        );
-        cfg.s = s;
-        cfg.rounds = rounds;
-        cfg.seed = seed;
-        let mut trainer = Trainer::new(&engine, &man, cfg, net.clone())?;
-        let log = trainer.run_until_acc(target_acc)?;
+    let variants = [("regular_s7", 7usize), ("cost_efficient", pick.s)];
+    let results = parallel_map(&variants, threads, |_i, &(_, s)| {
+        fig10_cell(backend, s, rounds, target_acc, seed, &net)
+    });
+    for (&(variant, s), result) in variants.iter().zip(results) {
+        let log = result?;
         let reached = log.rounds_to_acc(target_acc).is_some();
         t.row(&[
             variant.to_string(),
@@ -229,13 +280,19 @@ pub fn fig10(rounds: usize, target_acc: f64, seed: u64) -> anyhow::Result<Table>
 }
 
 /// Figs. 11 (MNIST) / 12 (CIFAR): ideal / standard GC / GC⁺ / intermittent
-/// under poor client→PS links and good/moderate/poor client-to-client links.
-pub fn fig11_12(model: &str, conn: &str, rounds: usize, seed: u64) -> anyhow::Result<Table> {
-    let engine = Engine::cpu()?;
-    let man = Manifest::load(&default_artifacts_dir())?;
-    let net = Network::conn_tier(conn, man.m);
-    let mut logs = Vec::new();
-    for agg in [
+/// under poor client→PS links and good/moderate/poor client-to-client
+/// links. The four methods train in parallel.
+pub fn fig11_12(
+    backend: &Backend,
+    model: &str,
+    conn: &str,
+    rounds: usize,
+    seed: u64,
+    threads: usize,
+) -> anyhow::Result<Table> {
+    let m = backend.manifest().m;
+    let net = Network::conn_tier(conn, m);
+    let jobs: Vec<(TrainConfig, Network)> = [
         Aggregator::Ideal,
         Aggregator::CoGc { design: Design::SkipRound, attempts: 2 },
         // Algorithm 1's repeat-until-decode loop (§VI): with poor uplinks a
@@ -243,24 +300,30 @@ pub fn fig11_12(model: &str, conn: &str, rounds: usize, seed: u64) -> anyhow::Re
         // rounds; the paper's GC+ curves rely on the `while K4=∅` repeats.
         Aggregator::GcPlus { tr: 2, until_decode: true, max_blocks: 25 },
         Aggregator::Intermittent,
-    ] {
+    ]
+    .into_iter()
+    .map(|agg| {
         let mut cfg = TrainConfig::new(model, agg);
         cfg.rounds = rounds;
         cfg.seed = seed;
-        let net_used = if agg == Aggregator::Ideal { Network::perfect(man.m) } else { net.clone() };
-        let log = run_training(&engine, &man, cfg.clone(), net_used)?;
+        let net_used = if agg == Aggregator::Ideal { Network::perfect(m) } else { net.clone() };
+        (cfg, net_used)
+    })
+    .collect();
+    let logs = run_grid(backend, &jobs, threads)?;
+    for (tag, log) in &logs {
         crate::info!(
-            "{model} conn={conn} {}: final acc {:.3}, {} updates",
-            cfg.tag(),
+            "{model} conn={conn} {tag}: final acc {:.3}, {} updates",
             log.final_acc(),
             log.updates()
         );
-        logs.push((cfg.tag(), log));
     }
     Ok(curves_table(
         &format!(
-            "fig{}: {model}, poor client-to-PS (p=0.75), {conn} client-to-client",
-            if model == "mnist_cnn" { 11 } else { 12 }
+            "fig{}: {model}, poor client-to-PS (p=0.75), {conn} client-to-client \
+             [{} backend]",
+            if model == "mnist_cnn" { 11 } else { 12 },
+            backend.name()
         ),
         &logs,
     ))
@@ -350,18 +413,17 @@ pub fn design_table(p: f64, target_po: f64, seed: u64, mc_trials: usize, threads
 
 /// Train a single configuration from the CLI (`cogc train ...`).
 pub fn train_once(
+    backend: &Backend,
     model: &str,
     agg: Aggregator,
     net: Network,
     rounds: usize,
     seed: u64,
-    combine: CombineImpl,
+    combine: crate::runtime::CombineImpl,
 ) -> anyhow::Result<RunLog> {
-    let engine = Engine::cpu()?;
-    let man = Manifest::load(&default_artifacts_dir())?;
     let mut cfg = TrainConfig::new(model, agg);
     cfg.rounds = rounds;
     cfg.seed = seed;
     cfg.combine = combine;
-    run_training(&engine, &man, cfg, net)
+    run_training(backend, cfg, net)
 }

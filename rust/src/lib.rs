@@ -13,6 +13,11 @@
 //!   AOT-lowered to HLO text and executed through the PJRT CPU client
 //!   (`runtime`), never touching python at run time.
 //!
+//! Model execution is backend-selectable (`runtime::Backend`): the PJRT
+//! artifacts above, or a **native pure-rust backend** (`runtime::native`)
+//! with hand-rolled forward/backward that runs every training figure on a
+//! clean offline checkout — no artifacts, no bindings, bit-deterministic.
+//!
 //! Quickstart: see `examples/quickstart.rs`; figures: `cogc fig4` …
 //! `cogc fig12`; theory: `cogc theory`, `cogc privacy`, `cogc design`.
 

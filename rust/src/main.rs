@@ -16,19 +16,24 @@
 //! cogc privacy [--dim 100]                   Lemma-1 LMIP table
 //! cogc design [--p 0.1] [--target-po 0.5]    eq. (21) design sweep + MC check
 //! cogc train --model M --agg A [...]         single training run (CSV log)
-//! cogc info                                  runtime / artifact info
+//! cogc info                                  backend / model inventory
 //! ```
 //!
-//! The Monte-Carlo-backed subcommands (`fig4`, `fig6`, `design`) accept
-//! `--threads N` (default 0 = one worker per core). Trial sweeps run
-//! through the deterministic parallel engine (`cogc::parallel`), so the
-//! emitted statistics are bit-identical for every `--threads` value and
-//! match a serial run.
+//! Training subcommands take `--backend auto|native|pjrt` (default `auto`:
+//! PJRT when `artifacts/manifest.json` and the real bindings exist, the
+//! native pure-rust models otherwise — so every figure regenerates on a
+//! clean offline checkout).
+//!
+//! All parallel subcommands accept `--threads N` (default 0 = one worker
+//! per core). Monte-Carlo sweeps (`fig4`, `fig6`, `design`) fan trials over
+//! the deterministic parallel engine; the training figures (`fig7`-`fig12`)
+//! fan their method grid over the same pool. Either way the emitted CSV is
+//! bit-identical for every `--threads` value.
 
 use cogc::coordinator::{Aggregator, Design};
 use cogc::figures;
 use cogc::network::Network;
-use cogc::runtime::{default_artifacts_dir, CombineImpl, Engine, Manifest};
+use cogc::runtime::{Backend, CombineImpl};
 use cogc::util::cli::Args;
 
 fn main() {
@@ -46,7 +51,9 @@ fn parse_agg(a: &Args) -> anyhow::Result<Aggregator> {
         "ideal" => Aggregator::Ideal,
         "intermittent" => Aggregator::Intermittent,
         "cogc" => Aggregator::CoGc { design: Design::SkipRound, attempts },
-        "cogc-d1" => Aggregator::CoGc { design: Design::RetryUntilSuccess, attempts: attempts.max(50) },
+        "cogc-d1" => {
+            Aggregator::CoGc { design: Design::RetryUntilSuccess, attempts: attempts.max(50) }
+        }
         "gcplus" => Aggregator::GcPlus { tr, until_decode: false, max_blocks: 1 },
         "gcplus-until" => Aggregator::GcPlus { tr, until_decode: true, max_blocks: 25 },
         "tandon" => Aggregator::TandonReplicated { attempts },
@@ -75,6 +82,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
     }
     let seed = args.u64_opt("seed", 42)?;
     let threads = args.usize_opt("threads", 0)?;
+    let backend = || Backend::from_flag(&args.str_opt("backend", "auto"));
     let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
     match sub.as_str() {
         "fig4" => figures::fig4(args.usize_opt("trials", 20_000)?, seed, threads).print(),
@@ -83,19 +91,21 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
             let model = if sub == "fig7" { "mnist_cnn" } else { "cifar_cnn" };
             let network = args.usize_opt("network", 1)?;
             let rounds = args.usize_opt("rounds", 100)?;
-            figures::fig7_8(model, network, rounds, seed)?.print();
+            figures::fig7_8(&backend()?, model, network, rounds, seed, threads)?.print();
         }
         "fig10" => figures::fig10(
+            &backend()?,
             args.usize_opt("rounds", 100)?,
             args.f64_opt("target", 0.85)?,
             seed,
+            threads,
         )?
         .print(),
         "fig11" | "fig12" => {
             let model = if sub == "fig11" { "mnist_cnn" } else { "cifar_cnn" };
             let conn = args.str_opt("conn", "good");
             let rounds = args.usize_opt("rounds", 100)?;
-            figures::fig11_12(model, &conn, rounds, seed)?.print();
+            figures::fig11_12(&backend()?, model, &conn, rounds, seed, threads)?.print();
         }
         "remark5" => figures::remark5().print(),
         "theory" => figures::theory_table().print(),
@@ -109,12 +119,27 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         )
         .print(),
         "train" => {
+            let backend = backend()?;
             let model = args.str_opt("model", "mnist_cnn");
             let agg = parse_agg(&args)?;
-            let net = parse_network(&args, 10, seed)?;
+            let net = parse_network(&args, backend.manifest().m, seed)?;
             let rounds = args.usize_opt("rounds", 50)?;
-            let combine = if args.flag("native") { CombineImpl::Native } else { CombineImpl::Pallas };
-            let log = figures::train_once(&model, agg, net, rounds, seed, combine)?;
+            // coded-combine impl: --combine pallas|native (the boolean
+            // --native flag is kept as an alias; it selects the combine
+            // kernels, NOT the model backend — that is --backend native)
+            let default_combine = if args.flag("native") { "native" } else { "pallas" };
+            let combine = match args.str_opt("combine", default_combine).as_str() {
+                "pallas" => CombineImpl::Pallas,
+                "native" => CombineImpl::Native,
+                other => anyhow::bail!("unknown --combine {other:?} (pallas|native)"),
+            };
+            // an *explicit* pallas request cannot be honored natively — fail
+            // loudly instead of silently substituting the native combine
+            anyhow::ensure!(
+                !(backend.name() == "native" && args.get("combine") == Some("pallas")),
+                "--combine pallas requires the PJRT backend (the Pallas kernels are AOT artifacts)"
+            );
+            let log = figures::train_once(&backend, &model, agg, net, rounds, seed, combine)?;
             print!("{}", log.to_csv());
             eprintln!(
                 "final acc {:.4}, best {:.4}, {} updates, {} transmissions",
@@ -125,19 +150,20 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
             );
         }
         "info" => {
-            let engine = Engine::cpu()?;
-            println!("platform: {}", engine.platform());
-            let dir = default_artifacts_dir();
-            println!("artifacts: {}", dir.display());
-            let man = Manifest::load(&dir)?;
+            let backend = backend()?;
+            println!("backend: {} | platform: {}", backend.name(), backend.platform());
+            let man = backend.manifest();
+            if backend.name() == "pjrt" {
+                println!("artifacts: {}", man.dir.display());
+            }
             println!("M={} t_r={} MT={}", man.m, man.tr, man.mt);
             for (name, spec) in &man.models {
                 println!(
-                    "  {name}: D={} batch={} x={:?} artifacts={:?}",
+                    "  {name}: D={} batch={} x={:?} params={}",
                     spec.d,
                     spec.batch,
                     spec.x_shape,
-                    spec.artifacts.keys().collect::<Vec<_>>()
+                    spec.params.len()
                 );
             }
         }
@@ -159,13 +185,17 @@ training:
         --agg ideal|intermittent|cogc|cogc-d1|gcplus|gcplus-until|tandon
         --net perfect|homogeneous|paper1|paper2|paper3|good|moderate|poor
         [--rounds N] [--seed S] [--p-ps P] [--p-cc P] [--tr T] [--attempts A]
-        [--native]   (native rust combine instead of the Pallas artifacts)
+        [--combine pallas|native]   coded-combine kernels (NOT the model
+                     backend — see --backend); pallas needs PJRT artifacts
 
 misc:
-  info         show platform + artifact inventory
-  --threads N  Monte-Carlo worker threads for fig4/fig6/design (0 = one per
-               core, the default); results are bit-identical for every N —
-               trial sweeps use counter-seeded RNG streams and order-fixed
-               chunk merges
-  --verbose    debug logging
+  info            show backend + model inventory
+  --backend B     auto|native|pjrt for training subcommands (default auto:
+                  PJRT artifacts when available, else the offline native
+                  pure-rust models — no `make artifacts` needed)
+  --threads N     worker threads (0 = one per core, the default) for the
+                  Monte-Carlo sweeps (fig4/fig6/design) and the training
+                  figure grids (fig7/fig8/fig10/fig11/fig12); results are
+                  bit-identical for every N
+  --verbose       debug logging
 "#;

@@ -1,4 +1,19 @@
 //! Metrics: training curves, round events, CSV emission.
+//!
+//! Two building blocks shared by the trainer, the figure harnesses, and
+//! the bench binaries:
+//!
+//! - [`RunLog`] — the per-round record stream of one training run
+//!   ([`RoundRecord`]: decode outcome, |K₄|, attempts, transmissions,
+//!   losses, accuracy) plus the summary queries the figures need
+//!   (`final_acc`, `best_acc`, `rounds_to_acc`, `total_transmissions`).
+//! - [`Table`] — a generic CSV table with a `#`-prefixed comment header,
+//!   used for every figure series the CLI prints.
+//!
+//! Everything renders through `to_csv()` with fixed float formatting, so
+//! two identical runs produce byte-identical output — the property the
+//! determinism tests (`--threads` invariance, seed reproducibility)
+//! assert on.
 
 use std::fmt::Write as _;
 

@@ -41,9 +41,31 @@
 //! });
 //! ```
 //!
-//! The `cogc` CLI exposes the worker count as `--threads N` on the
-//! Monte-Carlo-backed subcommands (`fig4`, `fig6`, `design`); `N = 0`
-//! (the default) resolves to `std::thread::available_parallelism`.
+//! # `--threads` semantics (CLI contract)
+//!
+//! Every parallel subcommand of the `cogc` CLI takes `--threads N`:
+//!
+//! - `N = 0` (the default) resolves to one worker per core
+//!   (`std::thread::available_parallelism`);
+//! - any `N ≥ 1` pins the worker count.
+//!
+//! **`N` never changes results, only wall-clock.** Monte-Carlo sweeps
+//! (`fig4`, `fig6`, `design`) are thread-count-invariant by the
+//! chunk/merge scheme above. The training figures (`fig7`, `fig8`,
+//! `fig10`, `fig11`, `fig12`) fan their method/network grid out through
+//! [`parallel_map`]: each grid cell is an independent, fully deterministic
+//! training run (own seed-derived RNG streams, sequential rounds), and
+//! cells are collected in grid order — so the emitted CSV is byte-identical
+//! for every `--threads` value, including `1`.
+//!
+//! # Worker-pool map
+//!
+//! [`parallel_map`] is the second entry point next to [`MonteCarlo::run`]:
+//! an order-preserving map over a small work list (figure grid cells,
+//! per-model sweeps) on the same scoped-thread / atomic-counter pool
+//! pattern. Use `MonteCarlo` for tens of thousands of cheap trials folded
+//! into an accumulator; use `parallel_map` for a handful of expensive jobs
+//! whose outputs you need individually.
 
 use crate::util::rng::{splitmix64, Rng};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -104,6 +126,59 @@ pub fn resolve_threads(requested: usize) -> usize {
     } else {
         requested
     }
+}
+
+/// Order-preserving parallel map over a work list: `out[i] = f(i, &items[i])`.
+///
+/// Workers pull item indices from an atomic counter (work stealing, same
+/// pattern as [`MonteCarlo::run`]) and results land in their item's slot,
+/// so the output order is the input order for every `threads` value —
+/// `threads = 0` resolves to one worker per core, `threads = 1` degrades
+/// to a plain serial map. Determinism therefore only requires `f` itself
+/// to be deterministic per item; the training-figure grids rely on this
+/// for byte-identical CSV at any `--threads`.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    let workers = resolve_threads(threads).min(n).max(1);
+    if workers == 1 {
+        return items.iter().enumerate().map(|(i, item)| f(i, item)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    std::thread::scope(|scope| {
+        let next = &next;
+        let f = &f;
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                scope.spawn(move || {
+                    let mut done: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        done.push((i, f(i, &items[i])));
+                    }
+                    done
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("parallel_map worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.expect("every index dispatched exactly once"))
+        .collect()
 }
 
 /// Derive an independent base seed for a named sub-experiment (figure cell,
@@ -315,6 +390,37 @@ mod tests {
         assert_ne!(a, b);
         assert_ne!(a, c);
         assert_eq!(a, derive_seed(42, 0));
+    }
+
+    #[test]
+    fn parallel_map_preserves_order_at_any_thread_count() {
+        let items: Vec<usize> = (0..37).collect();
+        let want: Vec<usize> = items.iter().map(|&x| x * x + 1).collect();
+        for threads in [0usize, 1, 2, 8, 64] {
+            let got = parallel_map(&items, threads, |i, &x| {
+                assert_eq!(i, x);
+                x * x + 1
+            });
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_map_handles_empty_and_single() {
+        let empty: Vec<u32> = Vec::new();
+        assert_eq!(parallel_map(&empty, 4, |_, &x| x).len(), 0);
+        assert_eq!(parallel_map(&[5u32], 4, |_, &x| x + 1), vec![6]);
+    }
+
+    #[test]
+    fn parallel_map_propagates_fallible_results() {
+        let items = [1i32, -2, 3];
+        let got = parallel_map(&items, 2, |_, &x| {
+            if x < 0 { Err(format!("bad {x}")) } else { Ok(x * 10) }
+        });
+        assert_eq!(got[0], Ok(10));
+        assert_eq!(got[1], Err("bad -2".to_string()));
+        assert_eq!(got[2], Ok(30));
     }
 
     #[test]

@@ -7,6 +7,12 @@
 //! (CD-LMIP). For mutually independent Gaussian models with isotropic (or
 //! diagonal) covariances the mutual information has the closed log-det
 //! ratio form of eq. (20).
+//!
+//! Entry points: [`lmip_isotropic`] / [`lmip_diagonal`] for one
+//! coefficient row, [`row_worst_leakage`] for the worst case over a code's
+//! rows (the `cogc privacy` table), and [`lmip_with_gaussian_mechanism`]
+//! for the Remark-8 noise add-on. All return leakage in *bits*;
+//! `f64::INFINITY` marks a degenerate row that exposes its target exactly.
 
 use crate::gc::GcCode;
 

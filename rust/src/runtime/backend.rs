@@ -1,0 +1,174 @@
+//! Backend selection: which execution substrate runs the models.
+//!
+//! - [`Backend::Pjrt`] — the production path: AOT HLO artifacts from
+//!   `make artifacts`, compiled and executed on the PJRT CPU client.
+//! - [`Backend::Native`] — the offline path: compact pure-rust models
+//!   ([`super::native`]) with hand-rolled forward/backward. No artifacts,
+//!   no bindings, bit-deterministic; every training figure runs on a clean
+//!   checkout.
+//!
+//! [`Backend::auto`] picks PJRT when the artifacts and real bindings are
+//! both available and falls back to native otherwise, so binaries work
+//! unmodified in either environment. The CLI exposes the choice as
+//! `--backend auto|native|pjrt`.
+
+use super::coded::{CodedKernels, CombineImpl};
+use super::engine::Engine;
+use super::manifest::{default_artifacts_dir, Manifest, ModelSpec};
+use super::model::ModelRuntime;
+use super::native;
+
+/// An execution backend: owns the (real or synthesized) manifest plus
+/// whatever engine state model loading needs.
+pub enum Backend {
+    /// AOT artifacts executed through the PJRT CPU client.
+    Pjrt { engine: Engine, manifest: Manifest },
+    /// Native pure-rust models; the manifest is synthesized in-process.
+    Native { manifest: Manifest },
+}
+
+impl Backend {
+    /// The native backend — always available, nothing to load.
+    pub fn native() -> Backend {
+        Backend::Native { manifest: native::native_manifest() }
+    }
+
+    /// The PJRT backend; errors when `artifacts/manifest.json` is missing
+    /// or the bindings are the offline stub.
+    pub fn pjrt() -> anyhow::Result<Backend> {
+        let (engine, manifest) = Backend::pjrt_parts()?;
+        Ok(Backend::Pjrt { engine, manifest })
+    }
+
+    /// The engine + manifest pair [`Backend::pjrt`] wraps — the canonical
+    /// "is PJRT usable?" probe for callers that drive the runtime layer
+    /// directly (artifact benches/tests).
+    pub fn pjrt_parts() -> anyhow::Result<(Engine, Manifest)> {
+        let manifest = Manifest::load(&default_artifacts_dir())?;
+        let engine = Engine::cpu()?;
+        Ok((engine, manifest))
+    }
+
+    /// PJRT when available, native otherwise — the default for every
+    /// binary so a clean offline checkout still trains. The fallback is
+    /// silent on a clean checkout (no artifacts — nothing to diagnose) but
+    /// logged when a built `artifacts/` exists and was still rejected, so a
+    /// broken manifest or missing bindings cannot masquerade as a real
+    /// artifact run.
+    pub fn auto() -> Backend {
+        match Backend::pjrt() {
+            Ok(b) => b,
+            Err(e) => {
+                if default_artifacts_dir().join("manifest.json").exists() {
+                    crate::warn!(
+                        "PJRT backend rejected despite built artifacts ({e:#}); \
+                         falling back to the native backend"
+                    );
+                }
+                Backend::native()
+            }
+        }
+    }
+
+    /// Resolve a CLI `--backend` value.
+    pub fn from_flag(flag: &str) -> anyhow::Result<Backend> {
+        match flag {
+            "auto" => Ok(Backend::auto()),
+            "native" => Ok(Backend::native()),
+            "pjrt" => Backend::pjrt(),
+            other => anyhow::bail!("unknown --backend {other:?} (auto|native|pjrt)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Pjrt { .. } => "pjrt",
+            Backend::Native { .. } => "native",
+        }
+    }
+
+    pub fn platform(&self) -> String {
+        match self {
+            Backend::Pjrt { engine, .. } => engine.platform(),
+            Backend::Native { .. } => "native (pure rust)".to_string(),
+        }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        match self {
+            Backend::Pjrt { manifest, .. } | Backend::Native { manifest } => manifest,
+        }
+    }
+
+    /// Build the runtime for one model of this backend's manifest.
+    pub fn load_model(&self, name: &str) -> anyhow::Result<ModelRuntime> {
+        match self {
+            Backend::Pjrt { engine, manifest } => ModelRuntime::load(engine, manifest, name),
+            Backend::Native { .. } => ModelRuntime::native(name),
+        }
+    }
+
+    /// Build the coded-combine kernels for one model. The Pallas kernels
+    /// are PJRT artifacts, so the native backend always combines in pure
+    /// rust regardless of the requested implementation.
+    pub fn coded(&self, spec: &ModelSpec, imp: CombineImpl) -> anyhow::Result<CodedKernels> {
+        match self {
+            Backend::Pjrt { engine, manifest } => CodedKernels::load(engine, manifest, spec, imp),
+            Backend::Native { manifest } => {
+                Ok(CodedKernels::native(manifest.m, manifest.mt, spec.d))
+            }
+        }
+    }
+}
+
+// The training-figure grids construct Trainers from one shared Backend on
+// several worker threads (`parallel::parallel_map`); keep that contract
+// checked at compile time. This is a deliberate tripwire for the ROADMAP
+// item that swaps the vendored no-op `xla` stub for real PJRT bindings:
+// real client handles are typically not auto-Send/Sync, so that swap MUST
+// stop compiling here — the fix is per-worker engines (or confining grid
+// parallelism to the native backend), never a force-`unsafe impl`.
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Backend>();
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_backend_serves_all_models() {
+        let b = Backend::native();
+        assert_eq!(b.name(), "native");
+        assert!(b.platform().contains("native"));
+        let man = b.manifest();
+        assert_eq!(man.m, native::NATIVE_M);
+        for name in ["mnist_cnn", "cifar_cnn", "transformer"] {
+            let model = b.load_model(name).unwrap();
+            assert_eq!(model.backend_name(), "native");
+            let kernels = b.coded(&model.spec, CombineImpl::Pallas).unwrap();
+            // the Pallas impl silently degrades to native here
+            assert_eq!(kernels.imp, CombineImpl::Native);
+            assert_eq!(kernels.d, model.spec.d);
+            assert_eq!(kernels.m, man.m);
+            assert_eq!(kernels.mt, man.mt);
+        }
+        assert!(b.load_model("nope").is_err());
+    }
+
+    #[test]
+    fn auto_backend_always_resolves() {
+        // on an offline checkout this is native; with artifacts + real
+        // bindings it is pjrt — either way it must produce a usable backend
+        let b = Backend::auto();
+        assert!(b.load_model("mnist_cnn").is_ok());
+    }
+
+    #[test]
+    fn from_flag_parses() {
+        assert_eq!(Backend::from_flag("native").unwrap().name(), "native");
+        assert!(Backend::from_flag("auto").is_ok());
+        assert!(Backend::from_flag("bogus").is_err());
+    }
+}

@@ -1,12 +1,26 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts (`make artifacts`) and
-//! executes them on the CPU PJRT client. Python never runs here.
+//! Model execution runtime, two backends behind one API:
+//!
+//! - **PJRT** ([`engine`], [`manifest`]): loads the AOT HLO-text artifacts
+//!   (`make artifacts`) and executes them on the CPU PJRT client. Python
+//!   never runs here.
+//! - **Native** ([`native`]): compact pure-rust models with hand-rolled
+//!   forward/backward — no artifacts, no bindings, runs on a clean offline
+//!   checkout.
+//!
+//! [`Backend`] selects between them (auto-detecting by default);
+//! [`ModelRuntime`] and [`CodedKernels`] are the backend-agnostic surfaces
+//! the coordinator trains through.
 
+pub mod backend;
 pub mod coded;
 pub mod engine;
 pub mod manifest;
 pub mod model;
+pub mod native;
 
+pub use backend::Backend;
 pub use coded::{CodedKernels, CombineImpl};
 pub use engine::Engine;
 pub use manifest::{default_artifacts_dir, InputKind, Manifest, ModelSpec};
 pub use model::{Batch, ModelRuntime};
+pub use native::{NativeArch, NativeModel};

@@ -1,12 +1,14 @@
-//! Model runtime: typed wrappers over the AOT train/eval/sgd artifacts.
+//! Model runtime: one typed train/eval/sgd surface over both backends —
+//! the AOT PJRT artifacts and the native pure-rust models.
 
 use super::engine::{
     lit_f32, lit_f32_scalar, lit_i32, lit_u32_scalar, to_f32, to_vec_f32, Engine, Executable,
 };
 use super::manifest::{InputKind, Manifest, ModelSpec};
+use super::native::{self, NativeModel};
 use crate::util::rng::Rng;
 
-/// One training/eval batch in the layout the artifacts expect.
+/// One training/eval batch in the layout the models expect.
 #[derive(Clone, Debug)]
 pub enum Batch {
     /// f32 images `[B*C*H*W]` + labels `[B]`.
@@ -24,25 +26,51 @@ impl Batch {
     }
 }
 
-/// Compiled executables + metadata for one model.
+/// Backend-specific execution state for one model.
+enum Imp {
+    /// Compiled PJRT executables (train/eval/sgd artifacts).
+    Pjrt { train: Executable, eval: Executable, sgd: Executable },
+    /// Hand-rolled pure-rust forward/backward.
+    Native(NativeModel),
+}
+
+/// Executable model + metadata, backend-agnostic. Built through
+/// [`ModelRuntime::load`] (PJRT artifacts) or [`ModelRuntime::native`]
+/// (pure rust, any offline checkout).
 pub struct ModelRuntime {
     pub spec: ModelSpec,
-    train: Executable,
-    eval: Executable,
-    sgd: Executable,
+    imp: Imp,
 }
 
 impl ModelRuntime {
+    /// Load the AOT artifacts of `name` and compile them on `engine`.
     pub fn load(engine: &Engine, man: &Manifest, name: &str) -> anyhow::Result<ModelRuntime> {
         let spec = man.model(name)?.clone();
         let train = engine.load(&man.artifact_path(&spec, "train")?)?;
         let eval = engine.load(&man.artifact_path(&spec, "eval")?)?;
         let sgd = engine.load(&man.artifact_path(&spec, "sgd")?)?;
-        Ok(ModelRuntime { spec, train, eval, sgd })
+        Ok(ModelRuntime { spec, imp: Imp::Pjrt { train, eval, sgd } })
     }
 
-    /// Initialize a flat parameter vector from the manifest's per-tensor
-    /// init schemes (mirrors `python/compile/models/common.py::init_flat`).
+    /// Build the native pure-rust model registered under `name`.
+    pub fn native(name: &str) -> anyhow::Result<ModelRuntime> {
+        let (spec, model) = native::native_model(name).ok_or_else(|| {
+            anyhow::anyhow!("model {name:?} has no native implementation")
+        })?;
+        Ok(ModelRuntime { spec, imp: Imp::Native(model) })
+    }
+
+    /// Which backend executes this model ("pjrt" / "native").
+    pub fn backend_name(&self) -> &'static str {
+        match self.imp {
+            Imp::Pjrt { .. } => "pjrt",
+            Imp::Native(_) => "native",
+        }
+    }
+
+    /// Initialize a flat parameter vector from the spec's per-tensor
+    /// init schemes (mirrors `python/compile/models/common.py::init_flat`;
+    /// the native specs use the same scheme vocabulary).
     pub fn init_params(&self, rng: &mut Rng) -> Vec<f32> {
         let mut out = Vec::with_capacity(self.spec.d);
         for p in &self.spec.params {
@@ -80,6 +108,8 @@ impl ModelRuntime {
     }
 
     /// One local SGD step (paper eq. (2)); returns (new params, loss).
+    /// `seed` drives dropout in the PJRT artifacts; the native models have
+    /// no dropout and ignore it (their step is a pure function of inputs).
     pub fn train_step(
         &self,
         params: &[f32],
@@ -87,41 +117,112 @@ impl ModelRuntime {
         seed: u32,
         lr: f32,
     ) -> anyhow::Result<(Vec<f32>, f32)> {
-        let (x, y) = self.xy_literals(batch)?;
-        let p = lit_f32(params, &[self.spec.d])?;
-        // models without dropout lower to 4 entry params (seed stripped)
-        let arity = self.spec.arities.get("train").copied().unwrap_or(5);
-        let out = if arity == 5 {
-            self.train
-                .run(&[p, x, y, lit_u32_scalar(seed), lit_f32_scalar(lr)])?
-        } else {
-            self.train.run(&[p, x, y, lit_f32_scalar(lr)])?
-        };
-        anyhow::ensure!(out.len() == 2, "train artifact returned {} outputs", out.len());
-        Ok((to_vec_f32(&out[0])?, to_f32(&out[1])?))
+        match &self.imp {
+            Imp::Pjrt { train, .. } => {
+                let (x, y) = self.xy_literals(batch)?;
+                let p = lit_f32(params, &[self.spec.d])?;
+                // models without dropout lower to 4 entry params (seed stripped)
+                let arity = self.spec.arities.get("train").copied().unwrap_or(5);
+                let out = if arity == 5 {
+                    train.run(&[p, x, y, lit_u32_scalar(seed), lit_f32_scalar(lr)])?
+                } else {
+                    train.run(&[p, x, y, lit_f32_scalar(lr)])?
+                };
+                anyhow::ensure!(out.len() == 2, "train artifact returned {} outputs", out.len());
+                Ok((to_vec_f32(&out[0])?, to_f32(&out[1])?))
+            }
+            Imp::Native(model) => model.train_step(params, batch, lr),
+        }
     }
 
     /// Evaluate a batch; returns (mean loss, #correct).
     pub fn eval_step(&self, params: &[f32], batch: &Batch) -> anyhow::Result<(f32, f32)> {
-        let (x, y) = self.xy_literals(batch)?;
-        let p = lit_f32(params, &[self.spec.d])?;
-        let out = self.eval.run(&[p, x, y])?;
-        anyhow::ensure!(out.len() == 2, "eval artifact returned {} outputs", out.len());
-        Ok((to_f32(&out[0])?, to_f32(&out[1])?))
+        match &self.imp {
+            Imp::Pjrt { eval, .. } => {
+                let (x, y) = self.xy_literals(batch)?;
+                let p = lit_f32(params, &[self.spec.d])?;
+                let out = eval.run(&[p, x, y])?;
+                anyhow::ensure!(out.len() == 2, "eval artifact returned {} outputs", out.len());
+                Ok((to_f32(&out[0])?, to_f32(&out[1])?))
+            }
+            Imp::Native(model) => model.eval_step(params, batch),
+        }
     }
 
-    /// PS-side fused update `p − lr·g` through the L1 Pallas kernel
-    /// (`lr = −1` turns it into the additive global update of eq. (10)).
+    /// PS-side fused update `p − lr·g` — the L1 Pallas kernel under PJRT,
+    /// a rust axpy natively (`lr = −1` turns it into the additive global
+    /// update of eq. (10)).
     pub fn sgd_apply(&self, params: &[f32], grad: &[f32], lr: f32) -> anyhow::Result<Vec<f32>> {
-        let p = lit_f32(params, &[self.spec.d])?;
-        let g = lit_f32(grad, &[self.spec.d])?;
-        let out = self.sgd.run(&[p, g, lit_f32_scalar(lr)])?;
-        Ok(to_vec_f32(&out[0])?)
+        match &self.imp {
+            Imp::Pjrt { sgd, .. } => {
+                let p = lit_f32(params, &[self.spec.d])?;
+                let g = lit_f32(grad, &[self.spec.d])?;
+                let out = sgd.run(&[p, g, lit_f32_scalar(lr)])?;
+                Ok(to_vec_f32(&out[0])?)
+            }
+            Imp::Native(_) => {
+                anyhow::ensure!(params.len() == grad.len(), "params/grad length mismatch");
+                Ok(native::sgd_apply(params, grad, lr))
+            }
+        }
     }
 
     /// Per-example predictions are not exposed; accuracy comes from
     /// `eval_step`'s correct count over the fixed eval batch shape.
     pub fn batch_size(&self) -> usize {
         self.spec.batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_models_load_and_step() {
+        let mut rng = Rng::new(1);
+        for name in ["mnist_cnn", "cifar_cnn", "transformer"] {
+            let model = ModelRuntime::native(name).unwrap();
+            assert_eq!(model.backend_name(), "native");
+            let params = model.init_params(&mut rng);
+            assert_eq!(params.len(), model.spec.d);
+            let spec = &model.spec;
+            let batch = crate::testing::fake_batch(spec, &mut rng);
+            let (new_params, loss) = model.train_step(&params, &batch, 0, 0.01).unwrap();
+            assert_eq!(new_params.len(), params.len());
+            assert!(loss.is_finite() && loss > 0.0, "{name}: loss {loss}");
+            assert_ne!(new_params, params, "{name}: params did not move");
+            let (eloss, correct) = model.eval_step(&params, &batch).unwrap();
+            assert!(eloss.is_finite());
+            assert!(correct >= 0.0);
+            let g: Vec<f32> = (0..spec.d).map(|_| rng.normal() as f32).collect();
+            let upd = model.sgd_apply(&params, &g, 0.5).unwrap();
+            for i in (0..spec.d).step_by(997) {
+                assert!((upd[i] - (params[i] - 0.5 * g[i])).abs() < 1e-6);
+            }
+        }
+        assert!(ModelRuntime::native("nope").is_err());
+    }
+
+    #[test]
+    fn init_params_follow_native_schemes() {
+        let model = ModelRuntime::native("mnist_cnn").unwrap();
+        let mut rng = Rng::new(5);
+        let params = model.init_params(&mut rng);
+        let mut off = 0;
+        for p in &model.spec.params {
+            let n = p.size();
+            let slice = &params[off..off + n];
+            if p.init == "uniform_fanin" {
+                let bound = 1.0 / (p.fan_in as f32).sqrt();
+                assert!(
+                    slice.iter().all(|&x| x.abs() <= bound + 1e-6),
+                    "{} exceeds fan-in bound",
+                    p.name
+                );
+            }
+            off += n;
+        }
+        assert_eq!(off, model.spec.d);
     }
 }

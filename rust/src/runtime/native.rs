@@ -1,0 +1,577 @@
+//! Native pure-rust model backend: hand-rolled f32 forward/backward for the
+//! training figures, no PJRT artifacts required.
+//!
+//! The paper's §VII experiments probe *aggregation under unreliable links*,
+//! not vision SOTA — what the training harnesses need is a differentiable
+//! model whose accuracy degrades when aggregation is biased or missing. The
+//! native backend provides exactly that with two tiny architectures:
+//!
+//! - **image path**: a one-hidden-layer ReLU MLP over flattened images with
+//!   NLL loss (stand-in for the Table-II CNNs);
+//! - **token path**: an embedding + linear next-token LM (stand-in for the
+//!   decoder-only transformer).
+//!
+//! Parameters live in one flat `f32[D]` vector in spec order — the same
+//! model-as-a-vector abstraction the AOT artifacts use — and the init
+//! schemes are the manifest vocabulary of
+//! `python/compile/models/common.py` (`uniform_fanin`, `normal:<std>`,
+//! `zeros`, `ones`), so [`super::ModelRuntime::init_params`] works
+//! unchanged. Model *names* are kept identical to the artifact manifest
+//! (`mnist_cnn` / `cifar_cnn` / `transformer`) so every figure harness,
+//! CLI invocation, and `TrainConfig` default runs on either backend.
+//!
+//! Everything here is plain sequential f32 arithmetic over owned buffers:
+//! bit-deterministic for a fixed parameter/batch stream, `Send + Sync`, and
+//! therefore safe to fan out across the training-figure worker pool
+//! (`parallel::parallel_map`).
+
+use super::manifest::{InputKind, Manifest, ModelSpec, ParamSpec};
+use super::model::Batch;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// Clients the native backend simulates (matches the AOT artifact build).
+pub const NATIVE_M: usize = 10;
+/// Max stacked GC⁺ attempts t_r (matches the AOT artifact build).
+pub const NATIVE_TR: usize = 2;
+
+/// Architecture of a native model. Dimensions mirror the param layout of
+/// the generated [`ModelSpec`] exactly.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum NativeArch {
+    /// `x[B, n_in] → relu(x·W1 + b1) → ·W2 + b2 → NLL` classifier.
+    Mlp { n_in: usize, hidden: usize, classes: usize },
+    /// `E[x] · W + b → NLL` next-token LM over flattened `B·T` positions.
+    EmbedLm { vocab: usize, dim: usize },
+}
+
+/// A native model: the architecture plus the fwd/bwd passes.
+#[derive(Clone, Copy, Debug)]
+pub struct NativeModel {
+    pub arch: NativeArch,
+}
+
+impl NativeModel {
+    /// Flat parameter count D.
+    pub fn d(&self) -> usize {
+        match self.arch {
+            NativeArch::Mlp { n_in, hidden, classes } => {
+                n_in * hidden + hidden + hidden * classes + classes
+            }
+            NativeArch::EmbedLm { vocab, dim } => vocab * dim + dim * vocab + vocab,
+        }
+    }
+
+    /// One SGD step `p ← p − lr·∇L(p)`; returns (new params, batch loss).
+    /// Native models have no dropout, so there is no step seed: the result
+    /// is a pure function of `(params, batch, lr)`.
+    pub fn train_step(
+        &self,
+        params: &[f32],
+        batch: &Batch,
+        lr: f32,
+    ) -> anyhow::Result<(Vec<f32>, f32)> {
+        let (loss, _, grad) = self.pass(params, batch, true)?;
+        let grad = grad.expect("pass(want_grad=true) returns a gradient");
+        Ok((sgd_apply(params, &grad, lr), loss))
+    }
+
+    /// Evaluate a batch; returns (mean loss, #correct predictions).
+    pub fn eval_step(&self, params: &[f32], batch: &Batch) -> anyhow::Result<(f32, f32)> {
+        let (loss, correct, _) = self.pass(params, batch, false)?;
+        Ok((loss, correct as f32))
+    }
+
+    /// Shared forward(+backward) pass: (mean NLL, #correct, gradient).
+    fn pass(
+        &self,
+        params: &[f32],
+        batch: &Batch,
+        want_grad: bool,
+    ) -> anyhow::Result<(f32, usize, Option<Vec<f32>>)> {
+        anyhow::ensure!(params.len() == self.d(), "params/arch size mismatch");
+        match (self.arch, batch) {
+            (NativeArch::Mlp { n_in, hidden, classes }, Batch::Image { x, y }) => {
+                let rows = y.len();
+                anyhow::ensure!(x.len() == rows * n_in, "image batch shape mismatch");
+                anyhow::ensure!(
+                    y.iter().all(|&l| (0..classes as i32).contains(&l)),
+                    "image label out of range [0, {classes})"
+                );
+                let (w1, rest) = params.split_at(n_in * hidden);
+                let (b1, rest) = rest.split_at(hidden);
+                let (w2, b2) = rest.split_at(hidden * classes);
+
+                let z1 = affine(x, rows, n_in, w1, b1, hidden);
+                let a1: Vec<f32> = z1.iter().map(|&v| v.max(0.0)).collect();
+                let z2 = affine(&a1, rows, hidden, w2, b2, classes);
+                let (loss, dz2, correct) = softmax_xent(&z2, y, classes);
+                if !want_grad {
+                    return Ok((loss, correct, None));
+                }
+
+                let mut grad = vec![0.0f32; params.len()];
+                let (gw1, grest) = grad.split_at_mut(n_in * hidden);
+                let (gb1, grest) = grest.split_at_mut(hidden);
+                let (gw2, gb2) = grest.split_at_mut(hidden * classes);
+                accum_matgrad(&a1, rows, hidden, &dz2, classes, gw2, gb2);
+                let mut dz1 = matmul_bt(&dz2, rows, classes, w2, hidden);
+                for (v, &z) in dz1.iter_mut().zip(&z1) {
+                    if z <= 0.0 {
+                        *v = 0.0;
+                    }
+                }
+                accum_matgrad(x, rows, n_in, &dz1, hidden, gw1, gb1);
+                Ok((loss, correct, Some(grad)))
+            }
+            (NativeArch::EmbedLm { vocab, dim }, Batch::Tokens { x, y }) => {
+                let rows = x.len();
+                anyhow::ensure!(y.len() == rows, "token batch shape mismatch");
+                anyhow::ensure!(
+                    y.iter().all(|&t| (0..vocab as i32).contains(&t)),
+                    "target token out of vocab [0, {vocab})"
+                );
+                let (emb, rest) = params.split_at(vocab * dim);
+                let (w, b) = rest.split_at(dim * vocab);
+
+                // gather: e[r, :] = E[x_r, :]
+                let mut e = vec![0.0f32; rows * dim];
+                for (r, &t) in x.iter().enumerate() {
+                    let t = t as usize;
+                    anyhow::ensure!(t < vocab, "token id {t} out of vocab {vocab}");
+                    e[r * dim..(r + 1) * dim].copy_from_slice(&emb[t * dim..(t + 1) * dim]);
+                }
+                let z = affine(&e, rows, dim, w, b, vocab);
+                let (loss, dz, correct) = softmax_xent(&z, y, vocab);
+                if !want_grad {
+                    return Ok((loss, correct, None));
+                }
+
+                let mut grad = vec![0.0f32; params.len()];
+                let (gemb, grest) = grad.split_at_mut(vocab * dim);
+                let (gw, gb) = grest.split_at_mut(dim * vocab);
+                accum_matgrad(&e, rows, dim, &dz, vocab, gw, gb);
+                // scatter-add: dE[x_r, :] += de[r, :]
+                let de = matmul_bt(&dz, rows, vocab, w, dim);
+                for (r, &t) in x.iter().enumerate() {
+                    let t = t as usize;
+                    let row = &de[r * dim..(r + 1) * dim];
+                    let out = &mut gemb[t * dim..(t + 1) * dim];
+                    for (o, v) in out.iter_mut().zip(row) {
+                        *o += v;
+                    }
+                }
+                Ok((loss, correct, Some(grad)))
+            }
+            _ => anyhow::bail!("batch kind does not match native architecture"),
+        }
+    }
+}
+
+/// Fused elementwise update `p − lr·g` — the native counterpart of the
+/// Pallas `sgd_apply` artifact (`lr = −1` is the additive global update of
+/// paper eq. (10)).
+pub fn sgd_apply(params: &[f32], grad: &[f32], lr: f32) -> Vec<f32> {
+    debug_assert_eq!(params.len(), grad.len());
+    params.iter().zip(grad).map(|(p, g)| p - lr * g).collect()
+}
+
+// -- dense f32 kernels ---------------------------------------------------------
+
+/// `out[r, :] = bias + x[r, :] · w` with `w` row-major `[n_in, n_out]`.
+fn affine(x: &[f32], rows: usize, n_in: usize, w: &[f32], bias: &[f32], n_out: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * n_out];
+    for r in 0..rows {
+        let orow = &mut out[r * n_out..(r + 1) * n_out];
+        orow.copy_from_slice(bias);
+        let xrow = &x[r * n_in..(r + 1) * n_in];
+        for (k, &a) in xrow.iter().enumerate() {
+            if a == 0.0 {
+                continue;
+            }
+            let wrow = &w[k * n_out..(k + 1) * n_out];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += a * wv;
+            }
+        }
+    }
+    out
+}
+
+/// Weight/bias gradients of an affine layer:
+/// `gw[k, j] += Σ_r x[r, k]·dy[r, j]`, `gb[j] += Σ_r dy[r, j]`.
+fn accum_matgrad(
+    x: &[f32],
+    rows: usize,
+    n_in: usize,
+    dy: &[f32],
+    n_out: usize,
+    gw: &mut [f32],
+    gb: &mut [f32],
+) {
+    for r in 0..rows {
+        let xrow = &x[r * n_in..(r + 1) * n_in];
+        let drow = &dy[r * n_out..(r + 1) * n_out];
+        for (o, &d) in gb.iter_mut().zip(drow) {
+            *o += d;
+        }
+        for (k, &a) in xrow.iter().enumerate() {
+            if a == 0.0 {
+                continue;
+            }
+            let grow = &mut gw[k * n_out..(k + 1) * n_out];
+            for (o, &d) in grow.iter_mut().zip(drow) {
+                *o += a * d;
+            }
+        }
+    }
+}
+
+/// Input gradient of an affine layer: `dx[r, k] = Σ_j dy[r, j]·w[k, j]`.
+fn matmul_bt(dy: &[f32], rows: usize, n_out: usize, w: &[f32], n_in: usize) -> Vec<f32> {
+    let mut dx = vec![0.0f32; rows * n_in];
+    for r in 0..rows {
+        let drow = &dy[r * n_out..(r + 1) * n_out];
+        let xrow = &mut dx[r * n_in..(r + 1) * n_in];
+        for (k, o) in xrow.iter_mut().enumerate() {
+            let wrow = &w[k * n_out..(k + 1) * n_out];
+            let mut acc = 0.0f32;
+            for (&d, &wv) in drow.iter().zip(wrow) {
+                acc += d * wv;
+            }
+            *o = acc;
+        }
+    }
+    dx
+}
+
+/// Row-wise log-softmax NLL over logits `[n, c]`: returns
+/// (mean loss, `∂L/∂logits` already scaled by `1/n`, #correct argmax).
+fn softmax_xent(logits: &[f32], labels: &[i32], c: usize) -> (f32, Vec<f32>, usize) {
+    let n = labels.len();
+    debug_assert_eq!(logits.len(), n * c);
+    let mut d = vec![0.0f32; n * c];
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    let inv = 1.0f32 / n as f32;
+    for r in 0..n {
+        let row = &logits[r * c..(r + 1) * c];
+        let y = labels[r] as usize;
+        debug_assert!(y < c, "label out of range");
+        let mut maxv = row[0];
+        let mut arg = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > maxv {
+                maxv = v;
+                arg = j;
+            }
+        }
+        if arg == y {
+            correct += 1;
+        }
+        let drow = &mut d[r * c..(r + 1) * c];
+        let mut sum = 0.0f32;
+        for (o, &v) in drow.iter_mut().zip(row) {
+            let ez = (v - maxv).exp();
+            *o = ez;
+            sum += ez;
+        }
+        loss += (maxv + sum.ln() - row[y]) as f64;
+        let scale = inv / sum;
+        for o in drow.iter_mut() {
+            *o *= scale;
+        }
+        drow[y] -= inv;
+    }
+    ((loss / n as f64) as f32, d, correct)
+}
+
+// -- model definitions ---------------------------------------------------------
+
+fn linear_specs(name: &str, nin: usize, nout: usize) -> Vec<ParamSpec> {
+    vec![
+        ParamSpec {
+            name: format!("{name}.w"),
+            shape: vec![nin, nout],
+            init: "uniform_fanin".to_string(),
+            fan_in: nin,
+        },
+        ParamSpec {
+            name: format!("{name}.b"),
+            shape: vec![nout],
+            init: "uniform_fanin".to_string(),
+            fan_in: nin,
+        },
+    ]
+}
+
+fn mlp_model(
+    name: &str,
+    x_shape: [usize; 4],
+    hidden: usize,
+    classes: usize,
+) -> (ModelSpec, NativeModel) {
+    let batch = x_shape[0];
+    let n_in: usize = x_shape[1..].iter().product();
+    let mut params = linear_specs("fc1", n_in, hidden);
+    params.extend(linear_specs("fc2", hidden, classes));
+    let d = params.iter().map(|p| p.size()).sum();
+    let spec = ModelSpec {
+        name: name.to_string(),
+        d,
+        batch,
+        x_shape: x_shape.to_vec(),
+        y_shape: vec![batch],
+        kind: InputKind::Image,
+        num_classes: classes,
+        params,
+        artifacts: BTreeMap::new(),
+        arities: BTreeMap::new(),
+    };
+    (spec, NativeModel { arch: NativeArch::Mlp { n_in, hidden, classes } })
+}
+
+fn lm_model(
+    name: &str,
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+    dim: usize,
+) -> (ModelSpec, NativeModel) {
+    // unit-normal embeddings give the bigram head a usable signal at the
+    // repo's learning rates (validated against a numpy mirror of this file)
+    let mut params = vec![ParamSpec {
+        name: "embed.w".to_string(),
+        shape: vec![vocab, dim],
+        init: "normal:1.0".to_string(),
+        fan_in: 0,
+    }];
+    params.extend(linear_specs("head", dim, vocab));
+    let d = params.iter().map(|p| p.size()).sum();
+    let spec = ModelSpec {
+        name: name.to_string(),
+        d,
+        batch,
+        x_shape: vec![batch, seq],
+        y_shape: vec![batch, seq],
+        kind: InputKind::Tokens,
+        num_classes: vocab,
+        params,
+        artifacts: BTreeMap::new(),
+        arities: BTreeMap::new(),
+    };
+    (spec, NativeModel { arch: NativeArch::EmbedLm { vocab, dim } })
+}
+
+/// Look up a native model by manifest name. The names shadow the AOT
+/// artifact manifest so both backends accept the same `--model` values;
+/// the native architectures are compact stand-ins, not the paper CNNs.
+pub fn native_model(name: &str) -> Option<(ModelSpec, NativeModel)> {
+    match name {
+        "mnist_cnn" => Some(mlp_model(name, [32, 1, 14, 14], 64, 10)),
+        "cifar_cnn" => Some(mlp_model(name, [32, 3, 10, 10], 96, 10)),
+        "transformer" => Some(lm_model(name, 8, 32, 64, 32)),
+        _ => None,
+    }
+}
+
+/// Synthesized manifest for the native backend (no `artifacts/` needed):
+/// same M / t_r / model names as the AOT build, native model shapes.
+pub fn native_manifest() -> Manifest {
+    let mut models = BTreeMap::new();
+    for name in ["mnist_cnn", "cifar_cnn", "transformer"] {
+        let (spec, _) = native_model(name).expect("built-in native model");
+        models.insert(name.to_string(), spec);
+    }
+    Manifest {
+        dir: PathBuf::from("(native)"),
+        m: NATIVE_M,
+        tr: NATIVE_TR,
+        mt: NATIVE_M * NATIVE_TR,
+        models,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_params(n: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..n).map(|_| (0.3 * rng.normal()) as f32).collect()
+    }
+
+    fn image_batch(rows: usize, n_in: usize, classes: usize, rng: &mut Rng) -> Batch {
+        Batch::Image {
+            x: (0..rows * n_in).map(|_| rng.normal() as f32).collect(),
+            y: (0..rows).map(|_| rng.below(classes) as i32).collect(),
+        }
+    }
+
+    fn token_batch(rows: usize, vocab: usize, rng: &mut Rng) -> Batch {
+        Batch::Tokens {
+            x: (0..rows).map(|_| rng.below(vocab) as i32).collect(),
+            y: (0..rows).map(|_| rng.below(vocab) as i32).collect(),
+        }
+    }
+
+    /// Central-difference gradient check: the backward pass must match
+    /// numerical derivatives of the forward loss on every sampled coord.
+    fn grad_check(model: &NativeModel, batch: &Batch, rng: &mut Rng) {
+        let mut params = rand_params(model.d(), rng);
+        let (_, _, grad) = model.pass(&params, batch, true).unwrap();
+        let grad = grad.unwrap();
+        // small step: keeps the ReLU kink window negligible while staying
+        // well above the f32 loss quantization noise floor
+        let eps = 1e-3f32;
+        let stride = (params.len() / 23).max(1);
+        for i in (0..params.len()).step_by(stride) {
+            let old = params[i];
+            params[i] = old + eps;
+            let (lp, _, _) = model.pass(&params, batch, false).unwrap();
+            params[i] = old - eps;
+            let (lm, _, _) = model.pass(&params, batch, false).unwrap();
+            params[i] = old;
+            let num = (lp - lm) / (2.0 * eps);
+            let err = (num - grad[i]).abs();
+            assert!(err < 5e-3, "coord {i}: numerical {num} vs analytic {}", grad[i]);
+        }
+    }
+
+    #[test]
+    fn mlp_gradient_matches_finite_differences() {
+        let mut rng = Rng::new(1);
+        let model = NativeModel { arch: NativeArch::Mlp { n_in: 7, hidden: 5, classes: 4 } };
+        let batch = image_batch(6, 7, 4, &mut rng);
+        grad_check(&model, &batch, &mut rng);
+    }
+
+    #[test]
+    fn lm_gradient_matches_finite_differences() {
+        let mut rng = Rng::new(2);
+        let model = NativeModel { arch: NativeArch::EmbedLm { vocab: 11, dim: 6 } };
+        let batch = token_batch(9, 11, &mut rng);
+        grad_check(&model, &batch, &mut rng);
+    }
+
+    #[test]
+    fn steps_are_deterministic() {
+        let mut rng = Rng::new(3);
+        let model = NativeModel { arch: NativeArch::Mlp { n_in: 8, hidden: 6, classes: 3 } };
+        let params = rand_params(model.d(), &mut rng);
+        let batch = image_batch(5, 8, 3, &mut rng);
+        let (p1, l1) = model.train_step(&params, &batch, 0.05).unwrap();
+        let (p2, l2) = model.train_step(&params, &batch, 0.05).unwrap();
+        assert_eq!(p1, p2);
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        assert_ne!(p1, params, "params did not move");
+    }
+
+    #[test]
+    fn repeated_steps_reduce_loss_on_separable_batch() {
+        let mut rng = Rng::new(4);
+        let (spec, model) = native_model("mnist_cnn").unwrap();
+        let n_in = spec.x_elems() / spec.batch;
+        // distinct random pattern per class, low noise
+        let means: Vec<Vec<f32>> = (0..10)
+            .map(|_| (0..n_in).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let y: Vec<i32> = (0..spec.batch).map(|i| (i % 10) as i32).collect();
+        let x: Vec<f32> = y
+            .iter()
+            .flat_map(|&c| {
+                means[c as usize]
+                    .iter()
+                    .map(|&mu| 2.0 * mu + 0.3 * rng.normal() as f32)
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        let batch = Batch::Image { x, y };
+        let mut params = rand_params(spec.d, &mut rng);
+        let mut first = None;
+        let mut last = 0.0f32;
+        for _ in 0..60 {
+            let (p, loss) = model.train_step(&params, &batch, 0.02).unwrap();
+            params = p;
+            first.get_or_insert(loss);
+            last = loss;
+        }
+        let first = first.unwrap();
+        assert!(last < 0.65 * first, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn lm_steps_reduce_loss() {
+        let mut rng = Rng::new(5);
+        let (spec, model) = native_model("transformer").unwrap();
+        // deterministic next-token structure: y = x + 1 mod vocab
+        let n = spec.batch * spec.x_shape[1];
+        let x: Vec<i32> = (0..n).map(|_| rng.below(spec.num_classes) as i32).collect();
+        let y: Vec<i32> = x.iter().map(|&t| (t + 1) % spec.num_classes as i32).collect();
+        let batch = Batch::Tokens { x, y };
+        let runtime = crate::runtime::ModelRuntime::native("transformer").unwrap();
+        let mut params = runtime.init_params(&mut rng);
+        let mut first = None;
+        let mut last = 0.0f32;
+        for _ in 0..80 {
+            let (p, loss) = model.train_step(&params, &batch, 0.5).unwrap();
+            params = p;
+            first.get_or_insert(loss);
+            last = loss;
+        }
+        let first = first.unwrap();
+        assert!(last < 0.5 * first, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn specs_are_consistent() {
+        for name in ["mnist_cnn", "cifar_cnn", "transformer"] {
+            let (spec, model) = native_model(name).unwrap();
+            assert_eq!(spec.d, model.d(), "{name}: spec/arch D mismatch");
+            assert_eq!(
+                spec.params.iter().map(|p| p.size()).sum::<usize>(),
+                spec.d,
+                "{name}: param sizes do not sum to D"
+            );
+        }
+        assert!(native_model("nope").is_none());
+        let man = native_manifest();
+        assert_eq!(man.m, NATIVE_M);
+        assert_eq!(man.mt, man.m * man.tr);
+        assert_eq!(man.models.len(), 3);
+    }
+
+    #[test]
+    fn sgd_apply_is_axpy() {
+        let p = vec![1.0f32, 2.0, -3.0];
+        let g = vec![0.5f32, -1.0, 2.0];
+        assert_eq!(sgd_apply(&p, &g, 0.0), p);
+        assert_eq!(sgd_apply(&p, &g, 1.0), vec![0.5, 3.0, -5.0]);
+        assert_eq!(sgd_apply(&p, &g, -1.0), vec![1.5, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn batch_kind_mismatch_is_an_error() {
+        let mut rng = Rng::new(6);
+        let model = NativeModel { arch: NativeArch::Mlp { n_in: 4, hidden: 3, classes: 2 } };
+        let params = rand_params(model.d(), &mut rng);
+        let bad = token_batch(4, 2, &mut rng);
+        assert!(model.eval_step(&params, &bad).is_err());
+    }
+
+    #[test]
+    fn out_of_range_labels_are_an_error_not_a_panic() {
+        let mut rng = Rng::new(7);
+        let mlp = NativeModel { arch: NativeArch::Mlp { n_in: 4, hidden: 3, classes: 2 } };
+        let params = rand_params(mlp.d(), &mut rng);
+        let bad = Batch::Image { x: vec![0.0; 8], y: vec![0, 2] }; // label 2 >= classes
+        assert!(mlp.eval_step(&params, &bad).is_err());
+
+        let lm = NativeModel { arch: NativeArch::EmbedLm { vocab: 4, dim: 3 } };
+        let params = rand_params(lm.d(), &mut rng);
+        let bad_x = Batch::Tokens { x: vec![4], y: vec![0] }; // token 4 >= vocab
+        assert!(lm.eval_step(&params, &bad_x).is_err());
+        let bad_y = Batch::Tokens { x: vec![0], y: vec![4] }; // target 4 >= vocab
+        assert!(lm.eval_step(&params, &bad_y).is_err());
+    }
+}

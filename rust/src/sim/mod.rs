@@ -2,10 +2,16 @@
 //!
 //! Runs the full CoGC communication round — gradient sharing, partial sums,
 //! uplink erasure, standard GC decode, GC⁺ decode — on synthetic gradient
-//! vectors, *without* the PJRT model runtime. This validates the decode
-//! maths end-to-end (recovered payloads vs ground truth) and produces the
+//! vectors, *without* the model runtime. This validates the decode maths
+//! end-to-end (recovered payloads vs ground truth) and produces the
 //! statistics of Figs. 4/6 quickly; the `coordinator` module runs the same
 //! round structure against real model payloads.
+//!
+//! Entry points: [`simulate_round`] for one fully-inspectable round
+//! ([`SimRound`] carries the aggregate, the ground truth, and the decode
+//! error) and [`sweep`] for [`MonteCarlo`]-parallel trial sweeps folding
+//! into [`SweepStats`]. All randomness flows through explicit `Rng`
+//! streams, so sweeps are bit-identical at every `--threads` value.
 
 use crate::gc::{self, GcCode};
 use crate::linalg::Matrix;

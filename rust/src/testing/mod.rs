@@ -1,9 +1,32 @@
 //! Mini property-testing framework (substrate — proptest is not available
 //! offline). Deterministic: every property runs `cases` seeds derived from a
 //! base seed; failures report the failing case seed so they can be replayed
-//! with `forall_seeded`.
+//! with [`forall_seeded`].
+//!
+//! Usage: `Prop::default().forall("name", |rng, case| { ... })` draws all
+//! case randomness from `rng`; [`assert_close`] / [`assert_allclose`]
+//! compare floats with relative-ish tolerance. `COGC_PROP_CASES` scales
+//! the sweep size (CI keeps it small, local runs can crank it up), so
+//! property tests stay fast without losing replayability.
 
+use crate::runtime::{Batch, InputKind, ModelSpec};
 use crate::util::rng::Rng;
+
+/// Fixed-shape random batch for a model spec — shared by the model-step
+/// benches and the runtime integration tests so the spec → batch mapping
+/// lives in exactly one place.
+pub fn fake_batch(spec: &ModelSpec, rng: &mut Rng) -> Batch {
+    match spec.kind {
+        InputKind::Image => Batch::Image {
+            x: (0..spec.x_elems()).map(|_| rng.normal() as f32).collect(),
+            y: (0..spec.y_elems()).map(|_| rng.below(spec.num_classes) as i32).collect(),
+        },
+        InputKind::Tokens => Batch::Tokens {
+            x: (0..spec.x_elems()).map(|_| rng.below(spec.num_classes) as i32).collect(),
+            y: (0..spec.y_elems()).map(|_| rng.below(spec.num_classes) as i32).collect(),
+        },
+    }
+}
 
 pub struct Prop {
     pub cases: usize,

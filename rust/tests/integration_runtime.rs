@@ -7,44 +7,29 @@
 
 use cogc::linalg::Matrix;
 use cogc::runtime::{
-    coded::native_combine, default_artifacts_dir, Batch, CodedKernels, CombineImpl, Engine,
-    InputKind, Manifest, ModelRuntime,
+    coded::native_combine, Backend, Batch, CodedKernels, CombineImpl, Engine, Manifest,
+    ModelRuntime,
 };
+use cogc::testing::fake_batch;
 use cogc::util::rng::Rng;
 
 /// The PJRT artifacts are a build product (`make artifacts`) that a clean
 /// checkout does not have, and the engine itself needs real XLA bindings.
 /// Skip (with a message) instead of failing when either is unavailable.
 fn setup() -> Option<(Engine, Manifest)> {
-    let dir = default_artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!(
-            "skipping: no artifacts manifest at {} — run `make artifacts` first",
-            dir.display()
-        );
-        return None;
-    }
-    let engine = match Engine::cpu() {
-        Ok(e) => e,
+    match Backend::pjrt_parts() {
+        Ok(pair) => Some(pair),
         Err(e) => {
-            eprintln!("skipping: PJRT engine unavailable: {e:#}");
-            return None;
+            // a present manifest + working engine means the artifacts are
+            // broken, not absent — fail loudly instead of skipping green
+            let manifest = cogc::runtime::default_artifacts_dir().join("manifest.json");
+            assert!(
+                !manifest.exists() || Engine::cpu().is_err(),
+                "artifacts present and PJRT available, but setup failed: {e:#}"
+            );
+            eprintln!("skipping: PJRT backend unavailable: {e:#}");
+            None
         }
-    };
-    Some((engine, Manifest::load(&dir).unwrap()))
-}
-
-fn fake_batch(model: &ModelRuntime, rng: &mut Rng) -> Batch {
-    let spec = &model.spec;
-    match spec.kind {
-        InputKind::Image => Batch::Image {
-            x: (0..spec.x_elems()).map(|_| rng.normal() as f32).collect(),
-            y: (0..spec.y_elems()).map(|_| rng.below(spec.num_classes) as i32).collect(),
-        },
-        InputKind::Tokens => Batch::Tokens {
-            x: (0..spec.x_elems()).map(|_| rng.below(spec.num_classes) as i32).collect(),
-            y: (0..spec.y_elems()).map(|_| rng.below(spec.num_classes) as i32).collect(),
-        },
     }
 }
 
@@ -56,7 +41,7 @@ fn all_models_load_and_step() {
         let model = ModelRuntime::load(&engine, &man, name).unwrap();
         let params = model.init_params(&mut rng);
         assert_eq!(params.len(), model.spec.d);
-        let batch = fake_batch(&model, &mut rng);
+        let batch = fake_batch(&model.spec, &mut rng);
         let (new_params, loss) = model.train_step(&params, &batch, 0, 0.01).unwrap();
         assert_eq!(new_params.len(), params.len());
         assert!(loss.is_finite() && loss > 0.0, "{name}: loss {loss}");
@@ -202,7 +187,7 @@ fn dropout_seed_changes_mnist_loss() {
     let mut rng = Rng::new(6);
     let model = ModelRuntime::load(&engine, &man, "mnist_cnn").unwrap();
     let params = model.init_params(&mut rng);
-    let batch = fake_batch(&model, &mut rng);
+    let batch = fake_batch(&model.spec, &mut rng);
     let (_, l0) = model.train_step(&params, &batch, 0, 0.0).unwrap();
     let (_, l1) = model.train_step(&params, &batch, 99, 0.0).unwrap();
     assert_ne!(l0, l1, "dropout seed had no effect");
