@@ -14,6 +14,7 @@ use cogc::network::{Network, Realization};
 use cogc::outage::mc::{gcplus_recovery, RecoveryMode};
 use cogc::outage::overall_outage;
 use cogc::parallel::{derive_seed, MonteCarlo};
+use cogc::scenario::Iid;
 use cogc::sim::{simulate_round, Decoder, Outcome};
 use cogc::util::rng::Rng;
 
@@ -45,7 +46,7 @@ fn main() {
     println!("\nGC+ on synthetic payloads (t_r = {tr}, exact decode errors):");
     let mut decoded_rounds = 0;
     for round in 0..10 {
-        let r = simulate_round(&net, m, s, 64, Decoder::GcPlus { tr }, &mut rng);
+        let r = simulate_round(&net, &mut Iid, m, s, 64, Decoder::GcPlus { tr }, &mut rng);
         match &r.outcome {
             Outcome::Standard { .. } => println!("  round {round}: standard GC decoded (lucky round)"),
             Outcome::Full => {
@@ -76,7 +77,15 @@ fn main() {
     {
         // derive_seed keeps the two modes' per-trial RNG streams disjoint
         // (adjacent raw seeds would overlap under `seed ^ trial` seeding)
-        let st = gcplus_recovery(&net, m, s, mode, 2000, &MonteCarlo::new(derive_seed(2025, stream as u64)));
+        let st = gcplus_recovery(
+            &net,
+            &Iid,
+            m,
+            s,
+            mode,
+            2000,
+            &MonteCarlo::new(derive_seed(2025, stream as u64)),
+        );
         println!(
             "  {name}: full {:.3}  partial {:.3}  none {:.3}  (mean attempts {:.1})",
             st.p_full(),

@@ -11,6 +11,7 @@ use cogc::network::Network;
 use cogc::outage::theory::{expected_rounds_between_success, theorem1_bound, Theorem1Params};
 use cogc::outage::{self, design};
 use cogc::parallel::{derive_seed, MonteCarlo};
+use cogc::scenario::Iid;
 use cogc::util::rng::Rng;
 
 fn main() {
@@ -28,7 +29,7 @@ fn main() {
         let exact = outage::overall_outage(&net, &code);
         // parallel Monte-Carlo engine: all cores, bit-identical at any count
         let engine = MonteCarlo::new(derive_seed(42, case as u64));
-        let mc = outage::estimate_outage(&net, &code, 40_000, &engine);
+        let mc = outage::estimate_outage(&net, &code, &Iid, 40_000, &engine);
         let (p1, p2, p3) = outage::subcase_probs(&net, &code);
         println!(
             "{s:>3} {pm:>6.2} {pmk:>6.2} {exact:>10.5} {mc:>10.5} {:>8.5}+{:>8.5}+{:>8.5}",

@@ -18,6 +18,7 @@ use cogc::outage::mc::{gcplus_recovery, RecoveryMode};
 use cogc::outage::{self};
 use cogc::parallel::{derive_seed, MonteCarlo};
 use cogc::runtime::{Backend, CombineImpl};
+use cogc::scenario::Iid;
 use cogc::util::rng::Rng;
 
 fn main() {
@@ -78,7 +79,7 @@ fn main() {
     let net = Network::fig6_setting(2, 10);
     for tr in 1..=4usize {
         let mc = MonteCarlo::new(derive_seed(17, tr as u64));
-        let st = gcplus_recovery(&net, 10, 7, RecoveryMode::FixedTr(tr), 500, &mc);
+        let st = gcplus_recovery(&net, &Iid, 10, 7, RecoveryMode::FixedTr(tr), 500, &mc);
         t.rowf(&[tr as f64, st.p_full(), st.p_partial(), st.p_none()]);
     }
     t.print();

@@ -12,6 +12,7 @@ use cogc::gc::GcCode;
 use cogc::network::Network;
 use cogc::outage;
 use cogc::parallel::{available_threads, MonteCarlo};
+use cogc::scenario::Iid;
 use cogc::util::rng::Rng;
 
 fn main() {
@@ -39,7 +40,7 @@ fn main() {
     });
     let serial = MonteCarlo::serial(7);
     suite.bench_throughput("monte-carlo outage rounds (1 thread)", 1000.0, "rounds", || {
-        cogc::bench::black_box(outage::estimate_outage(&net, &code, 1000, &serial));
+        cogc::bench::black_box(outage::estimate_outage(&net, &code, &Iid, 1000, &serial));
     });
     let threaded = MonteCarlo::new(7);
     suite.bench_throughput(
@@ -47,7 +48,7 @@ fn main() {
         1000.0,
         "rounds",
         || {
-            cogc::bench::black_box(outage::estimate_outage(&net, &code, 1000, &threaded));
+            cogc::bench::black_box(outage::estimate_outage(&net, &code, &Iid, 1000, &threaded));
         },
     );
     suite.finish();

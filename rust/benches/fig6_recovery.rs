@@ -7,6 +7,7 @@ use cogc::figures;
 use cogc::network::Network;
 use cogc::outage::mc::{gcplus_recovery, RecoveryMode};
 use cogc::parallel::{available_threads, MonteCarlo};
+use cogc::scenario::Iid;
 
 fn main() {
     // the figure's series (reduced trials, all cores; `cogc fig6` for full)
@@ -24,6 +25,7 @@ fn main() {
             || {
                 cogc::bench::black_box(gcplus_recovery(
                     &net,
+                    &Iid,
                     10,
                     7,
                     RecoveryMode::FixedTr(2),
@@ -42,6 +44,7 @@ fn main() {
             || {
                 cogc::bench::black_box(gcplus_recovery(
                     &net,
+                    &Iid,
                     10,
                     7,
                     RecoveryMode::FixedTr(2),
@@ -55,6 +58,7 @@ fn main() {
     suite.bench_throughput("gcplus_recovery until-decode, setting 3", 20.0, "rounds", || {
         cogc::bench::black_box(gcplus_recovery(
             &net,
+            &Iid,
             10,
             7,
             RecoveryMode::UntilDecode { tr: 2, max_blocks: 50 },

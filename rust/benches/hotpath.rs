@@ -1,14 +1,15 @@
 //! Hot-path microbenchmarks: the per-round compute surface of the
 //! coordinator — coded combines (Pallas artifact vs native rust), RREF
 //! decode, code generation, combinator solve, Monte-Carlo trial sweeps
-//! (serial vs parallel engine), and single train steps.
+//! (serial vs parallel engine), scenario-engine sweeps per channel model,
+//! and single train steps.
 //!
 //!     cargo bench --bench hotpath
 //!
 //! The numbers here feed EXPERIMENTS.md §Perf. The coding-layer,
-//! Monte-Carlo, and native model-step sections always run; the PJRT
-//! model-runtime section needs `make artifacts` + real PJRT bindings and
-//! is skipped (with a message) when either is missing.
+//! Monte-Carlo, scenario, and native model-step sections always run; the
+//! PJRT model-runtime section needs `make artifacts` + real PJRT bindings
+//! and is skipped (with a message) when either is missing.
 
 use cogc::bench::Suite;
 use cogc::gc::{self, GcCode};
@@ -18,6 +19,7 @@ use cogc::outage::exact::poisson_binomial_pmf;
 use cogc::outage::mc::{estimate_outage, gcplus_recovery, RecoveryMode};
 use cogc::parallel::{available_threads, MonteCarlo};
 use cogc::runtime::{coded::native_combine, Backend, CodedKernels, CombineImpl, ModelRuntime};
+use cogc::scenario::{self, run_scenario, Iid};
 use cogc::testing::fake_batch;
 use cogc::util::rng::Rng;
 
@@ -70,7 +72,7 @@ fn main() {
             outage_trials as f64,
             "rounds",
             || {
-                cogc::bench::black_box(estimate_outage(&net, &code, outage_trials, &mc));
+                cogc::bench::black_box(estimate_outage(&net, &code, &Iid, outage_trials, &mc));
             },
         );
     }
@@ -84,6 +86,7 @@ fn main() {
             || {
                 cogc::bench::black_box(gcplus_recovery(
                     &net,
+                    &Iid,
                     10,
                     7,
                     RecoveryMode::FixedTr(2),
@@ -92,6 +95,33 @@ fn main() {
                 ));
             },
         );
+    }
+
+    // ── scenario engine: stateful channel sweeps, serial vs parallel ────
+    // One row per channel model kind; each sweep runs `trials` episodes of
+    // the scenario's full round schedule, so the throughput unit is
+    // simulated rounds. Same seed at both thread counts → identical
+    // RoundSeries, only wall-clock differs.
+    {
+        let scenario_trials = 200usize;
+        for name in ["iid-moderate", "bursty-c2c", "correlated-fade", "straggler-harsh"] {
+            let sc = scenario::find(name).unwrap();
+            let rounds = (scenario_trials * sc.rounds) as f64;
+            for &threads in &thread_counts {
+                let mc = MonteCarlo::new(29).with_threads(threads);
+                suite.bench_throughput(
+                    &format!(
+                        "scenario {name} [{}], {scenario_trials} episodes ({threads} thr)",
+                        sc.channel.name()
+                    ),
+                    rounds,
+                    "rounds",
+                    || {
+                        cogc::bench::black_box(run_scenario(&sc, scenario_trials, &mc));
+                    },
+                );
+            }
+        }
     }
 
     // ── native model steps (always run — no artifacts needed) ───────────

@@ -3,6 +3,7 @@
 
 use crate::data::Partition;
 use crate::runtime::CombineImpl;
+use crate::scenario::ChannelSpec;
 
 /// PS-side aggregation protocol (the paper's §VII comparison set).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -56,6 +57,9 @@ pub struct TrainConfig {
     pub combine: CombineImpl,
     /// Synthetic dataset separability (class-mean signal strength).
     pub signal: f64,
+    /// Link dynamics: i.i.d. erasures (the paper's model) or a stateful
+    /// channel from `scenario` (bursts persist across rounds/attempts).
+    pub channel: ChannelSpec,
 }
 
 impl TrainConfig {
@@ -82,6 +86,7 @@ impl TrainConfig {
             eval_every: 1,
             combine: CombineImpl::Pallas,
             signal: 2.0,
+            channel: ChannelSpec::Iid,
         }
     }
 

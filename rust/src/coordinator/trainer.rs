@@ -15,8 +15,9 @@ use crate::data::{class_means, partition, ImageDataset, ImageShard, TokenDataset
 use crate::gc::{self, GcCode};
 use crate::linalg::Matrix;
 use crate::metrics::{RoundRecord, RunLog};
-use crate::network::{Network, Realization};
+use crate::network::Network;
 use crate::runtime::{Backend, CodedKernels, InputKind, ModelRuntime};
+use crate::scenario::ChannelModel;
 use crate::util::rng::Rng;
 use std::sync::Arc;
 
@@ -42,6 +43,9 @@ pub struct Trainer {
     global: Vec<f32>,
     /// Whether the previous round updated the global model (eq. (7)).
     updated_last: bool,
+    /// Link dynamics (state persists across rounds and repeat attempts);
+    /// built from `cfg.channel`, reset from the run seed in `new`.
+    channel: Box<dyn ChannelModel>,
     eval_shard: Shard,
     /// Denominator for accuracy per eval batch.
     eval_denom: f64,
@@ -130,6 +134,10 @@ impl Trainer {
         for c in &mut clients {
             c.params = global.clone();
         }
+        // the channel's private state stream derives from the run seed, so
+        // training runs stay bit-reproducible from `--seed` alone
+        let mut channel = cfg.channel.build();
+        channel.reset(&net, crate::parallel::derive_seed(cfg.seed, 0xC4A2));
         Ok(Trainer {
             cfg,
             net,
@@ -141,6 +149,7 @@ impl Trainer {
             clients,
             global,
             updated_last: true,
+            channel,
             eval_shard,
             eval_denom,
             rng,
@@ -269,7 +278,7 @@ impl Trainer {
         match self.cfg.aggregator {
             Aggregator::Ideal => Ok(self.agg_subset_mean(deltas, &(0..self.m).collect::<Vec<_>>(), "ideal", 0)),
             Aggregator::Intermittent => {
-                let real = Realization::sample(&self.net, &mut self.rng);
+                let real = self.channel.sample(&self.net, &mut self.rng);
                 let received: Vec<usize> =
                     (0..self.m).filter(|&i| real.tau[i]).collect();
                 let tx = self.m; // every client attempts its uplink
@@ -345,7 +354,7 @@ impl Trainer {
         let prepared = self.coded.prepare_grads(deltas)?;
         for attempt in 0..max_attempts {
             let code = GcCode::generate(self.m, self.cfg.s, &mut self.rng);
-            let mut real = Realization::sample(&self.net, &mut self.rng);
+            let mut real = self.channel.sample(&self.net, &mut self.rng);
             if replicated {
                 // dataset replication: partial sums never see c2c erasure
                 real.t = vec![vec![true; self.m]; self.m];
@@ -410,7 +419,7 @@ impl Trainer {
             for _ in 0..tr {
                 attempts_used += 1;
                 let code = GcCode::generate(self.m, self.cfg.s, &mut self.rng);
-                let real = Realization::sample(&self.net, &mut self.rng);
+                let real = self.channel.sample(&self.net, &mut self.rng);
                 let att = gc::Attempt::observe(&code, &real);
                 tx += self.cfg.s * self.m + self.m; // all partial sums are uplinked
                 let sums = self.coded.encode_prepared(&att.perturbed, &prepared, deltas)?;

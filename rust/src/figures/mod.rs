@@ -18,6 +18,7 @@ use crate::outage::{self, design};
 use crate::parallel::{derive_seed, parallel_map, MonteCarlo};
 use crate::privacy;
 use crate::runtime::Backend;
+use crate::scenario::{ChannelModel, Iid, Scenario};
 use crate::util::rng::Rng;
 
 /// Fig. 4: overall outage probability `P_O` vs `s` for several network
@@ -27,6 +28,15 @@ use crate::util::rng::Rng;
 /// (s, case) cell, so the table is bit-identical for every `threads` value
 /// (0 = one worker per core).
 pub fn fig4(mc_trials: usize, seed: u64, threads: usize) -> Table {
+    fig4_channel(&Iid, mc_trials, seed, threads)
+}
+
+/// [`fig4`] under an arbitrary channel model: the MC columns sample `ch`
+/// instead of i.i.d. erasures (the closed-form columns stay memoryless — a
+/// stateful channel makes the gap between the two *visible*). A
+/// degenerately-configured stateful model reproduces the [`Iid`] table
+/// byte-for-byte (asserted in `tests/scenario_models.rs`).
+pub fn fig4_channel(ch: &dyn ChannelModel, mc_trials: usize, seed: u64, threads: usize) -> Table {
     // (p_m, p_mk) study cases spanning the paper's regimes
     let cases: &[(f64, f64)] = &[(0.1, 0.1), (0.4, 0.25), (0.4, 0.5), (0.75, 0.5), (0.75, 0.8)];
     let mut header: Vec<String> = vec!["s".into()];
@@ -48,7 +58,7 @@ pub fn fig4(mc_trials: usize, seed: u64, threads: usize) -> Table {
             row.push(outage::overall_outage(&net, &code));
             let mc = MonteCarlo::new(derive_seed(seed, (s * 16 + case) as u64))
                 .with_threads(threads);
-            row.push(outage::estimate_outage(&net, &code, mc_trials, &mc));
+            row.push(outage::estimate_outage(&net, &code, ch, mc_trials, &mc));
         }
         t.rowf(&row);
     }
@@ -79,6 +89,11 @@ pub fn remark5() -> Table {
 /// Each (setting, mode) sweep runs through the parallel engine with its own
 /// derived seed; the table is bit-identical for every `threads` value.
 pub fn fig6(trials: usize, seed: u64, threads: usize) -> Table {
+    fig6_channel(&Iid, trials, seed, threads)
+}
+
+/// [`fig6`] under an arbitrary channel model (see [`fig4_channel`]).
+pub fn fig6_channel(ch: &dyn ChannelModel, trials: usize, seed: u64, threads: usize) -> Table {
     let mut t = Table::new(
         "fig6: GC+ recovery statistics, M=10 s=7 t_r=2\n\
          fixed: exactly t_r attempts (analysis mode)\n\
@@ -98,7 +113,7 @@ pub fn fig6(trials: usize, seed: u64, threads: usize) -> Table {
         {
             let mc = MonteCarlo::new(derive_seed(seed, (setting * 8 + mode_idx) as u64))
                 .with_threads(threads);
-            let st = outage::gcplus_recovery(&net, 10, 7, mode, trials, &mc);
+            let st = outage::gcplus_recovery(&net, ch, 10, 7, mode, trials, &mc);
             t.row(&[
                 setting.to_string(),
                 format!("{}", net.p_c2s[0]),
@@ -411,6 +426,84 @@ pub fn design_table(p: f64, target_po: f64, seed: u64, mc_trials: usize, threads
     t
 }
 
+/// Scenario sweep (`cogc scenario run <name>`): the per-round time series
+/// of a [`Scenario`] over `trials` independent episodes — outage rate and
+/// the GC⁺ standard/full/partial/none split, mean transmissions per round,
+/// the fraction of link-attempts in the degraded channel condition (burst
+/// statistics), and the deadline hit-rate. `wall_clock` is the nominal
+/// elapsed time assuming every communication attempt consumes one channel
+/// round-duration window (the deadline for straggler models, 1 otherwise),
+/// making wall-clock-to-decode a first-class series. Bit-identical for
+/// every `threads` value.
+pub fn scenario_sweep(sc: &Scenario, trials: usize, seed: u64, threads: usize) -> Table {
+    let mc = MonteCarlo::new(derive_seed(seed, 0x5CE9_A810)).with_threads(threads);
+    let series = crate::scenario::run_scenario(sc, trials, &mc);
+    let attempts_per_round = match sc.decoder {
+        crate::sim::Decoder::Standard { attempts } => attempts.max(1),
+        crate::sim::Decoder::GcPlus { tr } => tr.max(1),
+    };
+    let window = sc.channel.build().round_duration() * attempts_per_round as f64;
+    let mut t = Table::new(
+        &format!(
+            "scenario {}: {}\nchannel={} net={} decoder={:?} s={} trials={trials}",
+            sc.name,
+            sc.description,
+            sc.channel.name(),
+            sc.net.summary(),
+            sc.decoder,
+            sc.s
+        ),
+        &[
+            "round",
+            "wall_clock",
+            "p_update",
+            "p_standard",
+            "p_full",
+            "p_partial",
+            "p_none",
+            "mean_tx",
+            "degraded_frac",
+            "deadline_hit_rate",
+        ],
+    );
+    for (r, tally) in series.rounds.iter().enumerate() {
+        let n = tally.trials.max(1) as f64;
+        t.rowf(&[
+            r as f64,
+            (r + 1) as f64 * window,
+            tally.p_update(),
+            tally.standard as f64 / n,
+            tally.full as f64 / n,
+            tally.partial as f64 / n,
+            tally.none as f64 / n,
+            tally.transmissions as f64 / n,
+            tally.channel.degraded_frac(),
+            tally.channel.deadline_hit_rate(),
+        ]);
+    }
+    t
+}
+
+/// The `cogc scenario list` catalog table.
+pub fn scenario_catalog() -> Table {
+    let mut t = Table::new(
+        "scenario catalog (run with `cogc scenario run <name>`)",
+        &["name", "channel", "network", "decoder", "s", "rounds", "description"],
+    );
+    for sc in crate::scenario::builtin() {
+        t.row(&[
+            sc.name.clone(),
+            sc.channel.name().to_string(),
+            sc.net.summary(),
+            format!("{:?}", sc.decoder),
+            sc.s.to_string(),
+            sc.rounds.to_string(),
+            sc.description.clone(),
+        ]);
+    }
+    t
+}
+
 /// Train a single configuration from the CLI (`cogc train ...`).
 pub fn train_once(
     backend: &Backend,
@@ -420,10 +513,12 @@ pub fn train_once(
     rounds: usize,
     seed: u64,
     combine: crate::runtime::CombineImpl,
+    channel: crate::scenario::ChannelSpec,
 ) -> anyhow::Result<RunLog> {
     let mut cfg = TrainConfig::new(model, agg);
     cfg.rounds = rounds;
     cfg.seed = seed;
     cfg.combine = combine;
+    cfg.channel = channel;
     run_training(backend, cfg, net)
 }

@@ -18,8 +18,16 @@
 //! with hand-rolled forward/backward that runs every training figure on a
 //! clean offline checkout — no artifacts, no bindings, bit-deterministic.
 //!
+//! Beyond the paper's memoryless links, the [`scenario`] subsystem supplies
+//! stateful channel dynamics — Gilbert–Elliott bursts, correlated fading,
+//! deadline stragglers — behind a declarative JSON scenario registry
+//! (`cogc scenario list|run`), threaded through the sim layer, the outage
+//! estimators, and the trainer with the same bit-deterministic parallel
+//! sweep guarantees.
+//!
 //! Quickstart: see `examples/quickstart.rs`; figures: `cogc fig4` …
-//! `cogc fig12`; theory: `cogc theory`, `cogc privacy`, `cogc design`.
+//! `cogc fig12`; theory: `cogc theory`, `cogc privacy`, `cogc design`;
+//! channel scenarios: `cogc scenario run <name>`.
 
 // Index-heavy linear-algebra substrate and many-parameter figure harnesses
 // trip these clippy *style* lints without being wrong; correctness lints
@@ -38,6 +46,7 @@ pub mod outage;
 pub mod parallel;
 pub mod privacy;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod testing;
 pub mod util;

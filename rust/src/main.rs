@@ -15,6 +15,8 @@
 //! cogc theory                                Theorem-1 / Lemma-5 numerics
 //! cogc privacy [--dim 100]                   Lemma-1 LMIP table
 //! cogc design [--p 0.1] [--target-po 0.5]    eq. (21) design sweep + MC check
+//! cogc scenario list                         built-in channel-scenario catalog
+//! cogc scenario run <name> [--trials 2000]   per-round time-series CSV
 //! cogc train --model M --agg A [...]         single training run (CSV log)
 //! cogc info                                  backend / model inventory
 //! ```
@@ -34,6 +36,7 @@ use cogc::coordinator::{Aggregator, Design};
 use cogc::figures;
 use cogc::network::Network;
 use cogc::runtime::{Backend, CombineImpl};
+use cogc::scenario::{self, ChannelSpec, Scenario};
 use cogc::util::cli::Args;
 
 fn main() {
@@ -110,6 +113,46 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "remark5" => figures::remark5().print(),
         "theory" => figures::theory_table().print(),
         "privacy" => figures::privacy_table(args.usize_opt("dim", 100)?).print(),
+        "scenario" => {
+            let action = args.positionals.first().map(|s| s.as_str()).unwrap_or("list");
+            match action {
+                "list" => {
+                    anyhow::ensure!(
+                        args.get("file").is_none(),
+                        "--file only applies to `scenario run` (try `cogc scenario run --file …`)"
+                    );
+                    figures::scenario_catalog().print();
+                }
+                "run" => {
+                    anyhow::ensure!(
+                        args.positionals.len() <= 2,
+                        "scenario run takes one name, got extra arguments {:?}",
+                        &args.positionals[2..]
+                    );
+                    let mut sc: Scenario = match (args.get("file"), args.positionals.get(1)) {
+                        (Some(_), Some(name)) => anyhow::bail!(
+                            "pass either a scenario name or --file, not both (got {name:?} \
+                             and --file)"
+                        ),
+                        (Some(path), None) => Scenario::load(std::path::Path::new(path))?,
+                        (None, Some(name)) => scenario::find(name)?,
+                        (None, None) => anyhow::bail!(
+                            "usage: cogc scenario run <name> (or --file spec.json); \
+                             see `cogc scenario list`"
+                        ),
+                    };
+                    if let Some(r) = args.get("rounds") {
+                        sc.rounds = r.parse().map_err(|_| {
+                            anyhow::anyhow!("--rounds expects an integer, got {r:?}")
+                        })?;
+                        sc.validate()?;
+                    }
+                    let trials = args.usize_opt("trials", 2_000)?;
+                    figures::scenario_sweep(&sc, trials, seed, threads).print();
+                }
+                other => anyhow::bail!("unknown scenario action {other:?} (list|run)"),
+            }
+        }
         "design" => figures::design_table(
             args.f64_opt("p", 0.1)?,
             args.f64_opt("target-po", 0.5)?,
@@ -139,7 +182,14 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
                 !(backend.name() == "native" && args.get("combine") == Some("pallas")),
                 "--combine pallas requires the PJRT backend (the Pallas kernels are AOT artifacts)"
             );
-            let log = figures::train_once(&backend, &model, agg, net, rounds, seed, combine)?;
+            // link dynamics: iid (default) or the channel model of a named
+            // scenario from the registry (`cogc scenario list`)
+            let channel = match args.str_opt("channel", "iid").as_str() {
+                "iid" => ChannelSpec::Iid,
+                name => scenario::find(name)?.channel,
+            };
+            let log =
+                figures::train_once(&backend, &model, agg, net, rounds, seed, combine, channel)?;
             print!("{}", log.to_csv());
             eprintln!(
                 "final acc {:.4}, best {:.4}, {} updates, {} transmissions",
@@ -180,11 +230,20 @@ cogc — Cooperative Gradient Coding (CoGC + GC+) launcher
 figures (CSV on stdout):
   fig4 fig6 fig7 fig8 fig10 fig11 fig12 remark5 theory privacy design
 
+scenarios (stateful channels: bursty / correlated / straggler links):
+  scenario list                   built-in catalog (name, channel, regime)
+  scenario run <name>             per-round time-series CSV (outage rate,
+        [--trials N] [--rounds R] GC+ full/partial/none split, burst
+                                  fraction, deadline hit-rate, wall-clock)
+  scenario run --file spec.json   run a custom JSON scenario spec
+
 training:
   train --model mnist_cnn|cifar_cnn|transformer
         --agg ideal|intermittent|cogc|cogc-d1|gcplus|gcplus-until|tandon
         --net perfect|homogeneous|paper1|paper2|paper3|good|moderate|poor
         [--rounds N] [--seed S] [--p-ps P] [--p-cc P] [--tr T] [--attempts A]
+        [--channel iid|<scenario>]  link dynamics: iid or the channel model
+                     of a named scenario (e.g. --channel bursty-c2c)
         [--combine pallas|native]   coded-combine kernels (NOT the model
                      backend — see --backend); pallas needs PJRT artifacts
 

@@ -16,18 +16,34 @@ pub struct Realization {
 }
 
 impl Realization {
-    /// Draw a fresh realization.
-    pub fn sample(net: &Network, rng: &mut Rng) -> Realization {
-        let m = net.m;
+    /// Draw a realization with per-link outage probabilities supplied by
+    /// closures — the emission-draw contract every stateful channel model in
+    /// [`crate::scenario`] is built on: exactly one Bernoulli draw from `rng`
+    /// per off-diagonal c2c link in row-major `(m, k)` order, then one per
+    /// uplink in client order; the diagonal consumes **no** draw. Any two
+    /// models whose closures return the same probabilities therefore consume
+    /// byte-identical RNG streams (the degenerate-equivalence guarantee).
+    pub fn sample_with(
+        m: usize,
+        rng: &mut Rng,
+        mut p_c2c: impl FnMut(usize, usize) -> f64,
+        mut p_c2s: impl FnMut(usize) -> f64,
+    ) -> Realization {
         let t = (0..m)
             .map(|i| {
                 (0..m)
-                    .map(|j| i == j || !rng.bernoulli(net.p_c2c[(i, j)]))
+                    .map(|j| i == j || !rng.bernoulli(p_c2c(i, j)))
                     .collect()
             })
             .collect();
-        let tau = (0..m).map(|i| !rng.bernoulli(net.p_c2s[i])).collect();
+        let tau = (0..m).map(|i| !rng.bernoulli(p_c2s(i))).collect();
         Realization { t, tau }
+    }
+
+    /// Draw a fresh memoryless realization from the network's per-link
+    /// Bernoulli probabilities.
+    pub fn sample(net: &Network, rng: &mut Rng) -> Realization {
+        Realization::sample_with(net.m, rng, |i, j| net.p_c2c[(i, j)], |i| net.p_c2s[i])
     }
 
     /// All links up (ideal-FL baseline / perfect round).
@@ -94,6 +110,21 @@ mod tests {
         let f_t = up_t as f64 / n as f64;
         assert!((f_tau - 0.6).abs() < 0.02, "tau up-rate {f_tau}");
         assert!((f_t - 0.75).abs() < 0.02, "t up-rate {f_t}");
+    }
+
+    #[test]
+    fn sample_with_matches_sample_draw_for_draw() {
+        let net = Network::homogeneous(7, 0.3, 0.4);
+        let mut a = Rng::new(5);
+        let mut b = Rng::new(5);
+        for _ in 0..20 {
+            let r1 = Realization::sample(&net, &mut a);
+            let r2 =
+                Realization::sample_with(7, &mut b, |i, j| net.p_c2c[(i, j)], |i| net.p_c2s[i]);
+            assert_eq!(r1, r2);
+        }
+        // the two streams advanced identically
+        assert_eq!(a.next_u64(), b.next_u64());
     }
 
     #[test]

@@ -13,6 +13,7 @@ use crate::network::Network;
 use crate::outage::exact::{expected_transmissions, overall_outage};
 use crate::outage::mc::estimate_outage;
 use crate::parallel::{derive_seed, MonteCarlo};
+use crate::scenario::Iid;
 use crate::util::rng::Rng;
 
 /// The code evaluated at sweep point `s` (coefficients are irrelevant to
@@ -62,7 +63,9 @@ pub fn sweep_mc(net: &Network, seed: u64, trials: usize, threads: usize) -> Vec<
         .map(|s| {
             let code = design_code(net.m, s, seed);
             let mc = MonteCarlo::new(derive_seed(seed, s as u64)).with_threads(threads);
-            estimate_outage(net, &code, trials, &mc)
+            // the closed forms assume memoryless links, so the cross-check
+            // is always i.i.d. — stateful channels live in `scenario`
+            estimate_outage(net, &code, &Iid, trials, &mc)
         })
         .collect()
 }

@@ -7,25 +7,40 @@
 //! over the worker pool with bit-identical tallies at any thread count
 //! (serial reference = the same engine at `threads = 1`; see
 //! `tests/parallel_determinism.rs` for the hand-rolled cross-check).
+//!
+//! Erasures are drawn through a [`ChannelModel`] prototype — each trial
+//! clones it and resets per-trial state from the channel substream, so
+//! bursty/correlated/straggler dynamics ([`crate::scenario`]) slot into
+//! every estimator unchanged. Pass [`Iid`](crate::scenario::Iid) for the
+//! paper's memoryless statistics.
 
 use crate::gc::{self, GcCode};
-use crate::network::{Network, Realization};
+use crate::network::Network;
 use crate::parallel::{Accumulate, MonteCarlo};
+use crate::scenario::{ChannelModel, CHANNEL_STREAM};
 use crate::util::rng::Rng;
 
 /// One outage trial: does this round deliver fewer than `M − s` complete
 /// partial sums?
-fn outage_trial(net: &Network, code: &GcCode, rng: &mut Rng) -> bool {
-    let real = Realization::sample(net, rng);
+fn outage_trial(net: &Network, code: &GcCode, ch: &mut dyn ChannelModel, rng: &mut Rng) -> bool {
+    let real = ch.sample(net, rng);
     let att = gc::Attempt::observe(code, &real);
     att.complete.len() < net.m - code.s
 }
 
 /// Monte-Carlo estimate of the overall outage probability `P_O` under the
 /// standard GC decoder, parallelized over the engine's worker pool.
-pub fn estimate_outage(net: &Network, code: &GcCode, trials: usize, mc: &MonteCarlo) -> f64 {
-    let outages: usize = mc.run(trials, |_t, rng, acc: &mut usize| {
-        if outage_trial(net, code, rng) {
+pub fn estimate_outage(
+    net: &Network,
+    code: &GcCode,
+    ch: &dyn ChannelModel,
+    trials: usize,
+    mc: &MonteCarlo,
+) -> f64 {
+    let outages: usize = mc.run(trials, |t, rng, acc: &mut usize| {
+        let mut ch = ch.clone_box();
+        ch.reset(net, mc.substream_seed(CHANNEL_STREAM, t));
+        if outage_trial(net, code, &mut *ch, rng) {
             *acc += 1;
         }
     });
@@ -104,6 +119,7 @@ impl Accumulate for RecoveryStats {
 /// payloads), classify the outcome, and fold it into `stats`.
 fn recovery_trial(
     net: &Network,
+    ch: &mut dyn ChannelModel,
     m: usize,
     s: usize,
     mode: RecoveryMode,
@@ -124,7 +140,7 @@ fn recovery_trial(
     'blocks: for _ in 0..max_blocks {
         for _ in 0..tr {
             let code = GcCode::generate(m, s, rng);
-            let att = gc::Attempt::observe(&code, &Realization::sample(net, rng));
+            let att = gc::Attempt::observe(&code, &ch.sample(net, rng));
             stats.attempts += 1;
             // standard GC shortcut on any single attempt
             if att.complete.len() >= need {
@@ -164,17 +180,22 @@ fn recovery_trial(
 }
 
 /// Run the GC⁺ decoding pipeline over `trials` rounds through the parallel
-/// engine and classify each round's outcome.
+/// engine and classify each round's outcome. The channel prototype `ch` is
+/// cloned and reset per trial; its state evolves across the round's
+/// repeated attempts (a burst can kill a whole block of repeats).
 pub fn gcplus_recovery(
     net: &Network,
+    ch: &dyn ChannelModel,
     m: usize,
     s: usize,
     mode: RecoveryMode,
     trials: usize,
     mc: &MonteCarlo,
 ) -> RecoveryStats {
-    let mut stats: RecoveryStats = mc.run(trials, |_t, rng, acc: &mut RecoveryStats| {
-        recovery_trial(net, m, s, mode, rng, acc);
+    let mut stats: RecoveryStats = mc.run(trials, |t, rng, acc: &mut RecoveryStats| {
+        let mut ch = ch.clone_box();
+        ch.reset(net, mc.substream_seed(CHANNEL_STREAM, t));
+        recovery_trial(net, &mut *ch, m, s, mode, rng, acc);
     });
     if stats.k4_hist.len() < m + 1 {
         stats.k4_hist.resize(m + 1, 0); // trials == 0 edge case
@@ -186,6 +207,8 @@ pub fn gcplus_recovery(
 mod tests {
     use super::*;
     use crate::outage::exact::overall_outage;
+    use crate::parallel::trial_rng;
+    use crate::scenario::Iid;
     use crate::testing::Prop;
 
     #[test]
@@ -198,7 +221,7 @@ mod tests {
             let exact = overall_outage(&net, &code);
             let trials = 20_000;
             let mc = MonteCarlo::new(rng.next_u64());
-            let est = estimate_outage(&net, &code, trials, &mc);
+            let est = estimate_outage(&net, &code, &Iid, trials, &mc);
             // 4-sigma binomial tolerance
             let sigma = (exact * (1.0 - exact) / trials as f64).sqrt();
             assert!(
@@ -217,15 +240,15 @@ mod tests {
         // hand-rolled reference with the engine's per-trial seeding scheme
         let mut outages = 0usize;
         for t in 0..trials {
-            let mut rng = Rng::new(seed ^ t as u64);
-            if outage_trial(&net, &code, &mut rng) {
+            let mut rng = trial_rng(seed, t as u64);
+            if outage_trial(&net, &code, &mut Iid, &mut rng) {
                 outages += 1;
             }
         }
         let want = outages as f64 / trials as f64;
         for threads in [1usize, 2, 8] {
             let mc = MonteCarlo::new(seed).with_threads(threads);
-            let got = estimate_outage(&net, &code, trials, &mc);
+            let got = estimate_outage(&net, &code, &Iid, trials, &mc);
             assert_eq!(got.to_bits(), want.to_bits(), "threads={threads}");
         }
     }
@@ -241,7 +264,7 @@ mod tests {
         .enumerate()
         {
             let mc = MonteCarlo::new(42 + i as u64);
-            let st = gcplus_recovery(&net, 10, 7, mode, 300, &mc);
+            let st = gcplus_recovery(&net, &Iid, 10, 7, mode, 300, &mc);
             assert_eq!(st.trials, 300);
             assert_eq!(st.standard + st.full + st.partial + st.none, st.trials);
             assert_eq!(st.k4_hist.iter().sum::<usize>(), st.trials);
@@ -262,7 +285,7 @@ mod tests {
         for setting in 1..=3 {
             let net = Network::fig6_setting(setting, 10);
             let mc = MonteCarlo::new(7 + setting as u64);
-            let st = gcplus_recovery(&net, 10, 7, mode, 300, &mc);
+            let st = gcplus_recovery(&net, &Iid, 10, 7, mode, 300, &mc);
             assert!(
                 st.p_full() > st.p_partial() && st.p_full() > st.p_none(),
                 "setting {setting}: full {:.3} partial {:.3} none {:.3}",
@@ -276,7 +299,7 @@ mod tests {
         // almost always fires before the stack reaches full rank. GC+ still
         // always recovers something (the paper's operational claim).
         let net = Network::fig6_setting(4, 10);
-        let st = gcplus_recovery(&net, 10, 7, mode, 300, &MonteCarlo::new(11));
+        let st = gcplus_recovery(&net, &Iid, 10, 7, mode, 300, &MonteCarlo::new(11));
         assert!(st.p_none() < 0.05, "setting 4 none = {:.3}", st.p_none());
         assert!(st.p_full() + st.p_partial() > 0.95);
     }
@@ -288,7 +311,8 @@ mod tests {
         // burst (P ~ 1.4%); its rate must be small. This is exactly why
         // Algorithm 1 loops until decode.
         let net = Network::fig6_setting(3, 10);
-        let st = gcplus_recovery(&net, 10, 7, RecoveryMode::FixedTr(2), 800, &MonteCarlo::new(11));
+        let st =
+            gcplus_recovery(&net, &Iid, 10, 7, RecoveryMode::FixedTr(2), 800, &MonteCarlo::new(11));
         assert!(st.p_full() < 0.1, "p_full = {}", st.p_full());
     }
 
@@ -304,6 +328,7 @@ mod tests {
         assert!(po > 0.99, "standard GC should be nearly dead, P_O = {po}");
         let st = gcplus_recovery(
             &net,
+            &Iid,
             10,
             7,
             RecoveryMode::UntilDecode { tr: 2, max_blocks: 50 },
@@ -316,7 +341,8 @@ mod tests {
             st.p_none()
         );
         // and the fixed-t_r mode still decodes a nontrivial fraction
-        let st2 = gcplus_recovery(&net, 10, 7, RecoveryMode::FixedTr(2), 400, &MonteCarlo::new(4));
+        let st2 =
+            gcplus_recovery(&net, &Iid, 10, 7, RecoveryMode::FixedTr(2), 400, &MonteCarlo::new(4));
         assert!(st2.p_none() < 0.7, "fixed-tr decode rate too low: {:.3}", st2.p_none());
     }
 }

@@ -189,6 +189,25 @@ pub fn derive_seed(base: u64, stream: u64) -> u64 {
     splitmix64(&mut s)
 }
 
+/// The canonical per-trial *emission* stream of a Monte-Carlo sweep:
+/// `Rng::new(seed ^ trial)`. This is THE definition — every sweep in the
+/// crate and every hand-rolled serial reference in the determinism tests
+/// derives trial randomness through this one helper, so the seeding scheme
+/// can never drift between the engine and its cross-checks.
+pub fn trial_rng(seed: u64, trial: u64) -> Rng {
+    Rng::new(seed ^ trial)
+}
+
+/// Seed of a named auxiliary per-trial stream — e.g. the private
+/// state-evolution stream of a stateful channel model — derived so it is
+/// disjoint from the emission stream [`trial_rng`] of *every* trial and
+/// from other tags. Keeping auxiliary draws off the emission stream is what
+/// lets a degenerately-configured stateful model consume emission draws
+/// byte-identically to the memoryless one.
+pub fn trial_substream(seed: u64, tag: u64, trial: u64) -> u64 {
+    derive_seed(derive_seed(seed, tag), trial)
+}
+
 /// A deterministic Monte-Carlo runner: base seed + worker pool + chunking.
 #[derive(Clone, Debug)]
 pub struct MonteCarlo {
@@ -226,9 +245,16 @@ impl MonteCarlo {
         self
     }
 
-    /// The counter-derived RNG stream of trial `t`.
+    /// The counter-derived emission RNG stream of trial `t`
+    /// (see [`trial_rng`], the crate-wide definition).
     pub fn trial_rng(&self, trial: u64) -> Rng {
-        Rng::new(self.seed ^ trial)
+        trial_rng(self.seed, trial)
+    }
+
+    /// Seed of the auxiliary per-trial stream `tag` of this engine's sweep
+    /// (see [`trial_substream`]).
+    pub fn substream_seed(&self, tag: u64, trial: u64) -> u64 {
+        trial_substream(self.seed, tag, trial)
     }
 
     /// Run `trials` independent trials and merge their tallies.
@@ -342,12 +368,30 @@ mod tests {
         let seed = 0xABCDu64;
         let mut want = 0usize;
         for t in 0..trials {
-            let mut rng = Rng::new(seed ^ t as u64);
+            let mut rng = trial_rng(seed, t as u64);
             if rng.bernoulli(0.37) {
                 want += 1;
             }
         }
         assert_eq!(count_heads(&MonteCarlo::new(seed).with_threads(8), trials), want);
+    }
+
+    #[test]
+    fn trial_substream_is_disjoint_from_emission_streams() {
+        let seed = 42u64;
+        // the substream seed of any (tag, trial) must differ from the raw
+        // emission seed `seed ^ trial` of every nearby trial, and from the
+        // same trial under a different tag
+        for trial in 0..64u64 {
+            let sub = trial_substream(seed, 7, trial);
+            for t in 0..64u64 {
+                assert_ne!(sub, seed ^ t, "collides with emission stream of trial {t}");
+            }
+            assert_ne!(sub, trial_substream(seed, 8, trial));
+            assert_eq!(sub, trial_substream(seed, 7, trial), "must be deterministic");
+        }
+        let mc = MonteCarlo::new(seed);
+        assert_eq!(mc.substream_seed(7, 3), trial_substream(seed, 7, 3));
     }
 
     #[test]

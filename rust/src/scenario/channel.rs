@@ -1,0 +1,1123 @@
+//! Stateful channel models: link dynamics beyond memoryless i.i.d. erasure.
+//!
+//! The paper analyzes CoGC/GC⁺ under independent Bernoulli erasures, but its
+//! central warning — all-or-nothing decoding is brittle exactly when
+//! client-to-client channels degrade — is about *time-varying* loss. This
+//! module supplies the link dynamics to probe those regimes: a
+//! [`ChannelModel`] evolves per-trial state across communication attempts
+//! and emits the same [`Realization`] the rest of the stack already
+//! consumes.
+//!
+//! # Determinism / degenerate-equivalence contract
+//!
+//! Every model separates its randomness into two streams:
+//!
+//! - the **emission stream** — the `rng` passed to [`ChannelModel::sample`].
+//!   Each sample consumes exactly one Bernoulli draw per off-diagonal c2c
+//!   link (row-major) and one per uplink, in the order fixed by
+//!   [`Realization::sample_with`] — the same draws, in the same order, as
+//!   the memoryless [`Iid`] model;
+//! - the **state stream** — a private RNG seeded by
+//!   [`ChannelModel::reset`] (derive the seed with
+//!   [`crate::parallel::trial_substream`]), which drives burst transitions,
+//!   fade events, and latency draws and never touches the emission stream.
+//!
+//! A degenerately-configured stateful model (equal good/bad outage
+//! probabilities, zero fade coupling, infinite deadline) therefore consumes
+//! emission draws **byte-identically** to [`Iid`], so whole figure CSVs
+//! collapse to the i.i.d. baseline — asserted in
+//! `tests/scenario_models.rs`.
+//!
+//! All three non-trivial models *modulate* the [`Network`]'s per-link base
+//! probabilities rather than replacing them, so they compose with every
+//! paper topology (homogeneous, heterogeneous, conn tiers).
+
+use crate::network::{Network, Realization};
+use crate::parallel::Accumulate;
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+/// Tag of the per-trial channel-state substream (the `tag` argument to
+/// [`crate::parallel::trial_substream`]) used by every sweep in the crate.
+pub const CHANNEL_STREAM: u64 = 0xC11A_57A7;
+
+/// Multiply a base outage probability by a state-dependent scale, clamped
+/// to a probability. `scale = 1.0` returns `p` bit-exactly (the degenerate
+/// case relies on this).
+fn scaled(p: f64, scale: f64) -> f64 {
+    (p * scale).clamp(0.0, 1.0)
+}
+
+/// Channel diagnostics accumulated across samples (all integer tallies, so
+/// per-worker instances merge exactly under the parallel engine).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ChannelStats {
+    /// Communication attempts sampled.
+    pub samples: usize,
+    /// Link-attempts spent in the degraded condition (bad burst state,
+    /// faded round, straggling source client).
+    pub degraded: usize,
+    /// Denominator of `degraded` (link-attempts tracked).
+    pub degraded_denom: usize,
+    /// Latency draws that beat the deadline (deadline models only).
+    pub deadline_hits: usize,
+    /// Total latency draws (0 for models without deadlines).
+    pub deadline_total: usize,
+}
+
+impl ChannelStats {
+    /// Fraction of link-attempts in the degraded condition (0 when the
+    /// model tracks no degradation).
+    pub fn degraded_frac(&self) -> f64 {
+        if self.degraded_denom == 0 {
+            0.0
+        } else {
+            self.degraded as f64 / self.degraded_denom as f64
+        }
+    }
+
+    /// Fraction of latency draws beating the deadline (1 when the model has
+    /// no deadline — nothing ever misses).
+    pub fn deadline_hit_rate(&self) -> f64 {
+        if self.deadline_total == 0 {
+            1.0
+        } else {
+            self.deadline_hits as f64 / self.deadline_total as f64
+        }
+    }
+}
+
+impl Accumulate for ChannelStats {
+    fn merge(&mut self, other: Self) {
+        self.samples += other.samples;
+        self.degraded += other.degraded;
+        self.degraded_denom += other.degraded_denom;
+        self.deadline_hits += other.deadline_hits;
+        self.deadline_total += other.deadline_total;
+    }
+}
+
+/// A stateful link model: evolves per-trial state across communication
+/// attempts and emits [`Realization`]s. See the module docs for the
+/// two-stream determinism contract.
+pub trait ChannelModel: Send + Sync {
+    /// Short stable identifier (`iid`, `gilbert_elliott`, …).
+    fn name(&self) -> &'static str;
+
+    /// Re-initialize per-trial state for `net` (initial states are drawn
+    /// from the model's stationary distribution). `state_seed` seeds the
+    /// private state stream; derive it per trial with
+    /// [`crate::parallel::trial_substream`] so sweeps stay bit-identical at
+    /// any thread count.
+    fn reset(&mut self, net: &Network, state_seed: u64);
+
+    /// Draw the next attempt's realization, evolving internal state on the
+    /// private stream. Emission draws follow the
+    /// [`Realization::sample_with`] order/count contract exactly.
+    fn sample(&mut self, net: &Network, rng: &mut Rng) -> Realization;
+
+    /// Drain the diagnostics accumulated since the last call.
+    fn take_stats(&mut self) -> ChannelStats {
+        ChannelStats::default()
+    }
+
+    /// Nominal wall-clock duration of one communication attempt (the
+    /// deadline window for latency models, 1 otherwise).
+    fn round_duration(&self) -> f64 {
+        1.0
+    }
+
+    fn clone_box(&self) -> Box<dyn ChannelModel>;
+}
+
+impl Clone for Box<dyn ChannelModel> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+// ── Iid ─────────────────────────────────────────────────────────────────
+
+/// Memoryless i.i.d. Bernoulli erasures — the paper's §II-B model and the
+/// degenerate baseline every other model collapses to.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Iid;
+
+impl ChannelModel for Iid {
+    fn name(&self) -> &'static str {
+        "iid"
+    }
+
+    fn reset(&mut self, _net: &Network, _state_seed: u64) {}
+
+    fn sample(&mut self, net: &Network, rng: &mut Rng) -> Realization {
+        Realization::sample(net, rng)
+    }
+
+    fn clone_box(&self) -> Box<dyn ChannelModel> {
+        Box::new(Iid)
+    }
+}
+
+// ── Gilbert–Elliott ─────────────────────────────────────────────────────
+
+/// Per-link two-state (good/bad) Markov bursts: every c2c link and uplink
+/// carries its own chain with transition probabilities `p_gb` (good→bad)
+/// and `p_bg` (bad→good); in state *x* the link's base outage probability
+/// is multiplied by the corresponding scale (clamped to \[0, 1\]).
+///
+/// Closed forms used by the validation tests: the stationary bad
+/// probability is `p_gb / (p_gb + p_bg)` ([`GilbertElliott::stationary_bad`]),
+/// the stationary outage probability mixes the two states
+/// ([`GilbertElliott::stationary_outage_c2c`]), and bad-state dwell times
+/// are Geometric(`p_bg`) with mean `1/p_bg`.
+#[derive(Clone, Debug)]
+pub struct GilbertElliott {
+    /// P(good → bad) per attempt.
+    pub p_gb: f64,
+    /// P(bad → good) per attempt.
+    pub p_bg: f64,
+    /// Outage-probability scale of a c2c link in the (good, bad) state.
+    pub c2c_scale: (f64, f64),
+    /// Outage-probability scale of an uplink in the (good, bad) state.
+    pub c2s_scale: (f64, f64),
+    m: usize,
+    /// `bad_t[m][k]`: the k→m link is in the bad state (diagonal unused).
+    bad_t: Vec<Vec<bool>>,
+    bad_tau: Vec<bool>,
+    state_rng: Rng,
+    stats: ChannelStats,
+}
+
+impl GilbertElliott {
+    pub fn new(p_gb: f64, p_bg: f64, c2c_scale: (f64, f64), c2s_scale: (f64, f64)) -> Self {
+        assert!(
+            (0.0..=1.0).contains(&p_gb) && (0.0..=1.0).contains(&p_bg),
+            "transition probabilities must be in [0, 1]"
+        );
+        GilbertElliott {
+            p_gb,
+            p_bg,
+            c2c_scale,
+            c2s_scale,
+            m: 0,
+            bad_t: Vec::new(),
+            bad_tau: Vec::new(),
+            state_rng: Rng::new(0),
+            stats: ChannelStats::default(),
+        }
+    }
+
+    /// Stationary probability of the bad state, `p_gb / (p_gb + p_bg)`.
+    pub fn stationary_bad(&self) -> f64 {
+        if self.p_gb + self.p_bg == 0.0 {
+            0.0
+        } else {
+            self.p_gb / (self.p_gb + self.p_bg)
+        }
+    }
+
+    /// Closed-form stationary outage probability of a c2c link whose base
+    /// (i.i.d.) outage probability is `p`.
+    pub fn stationary_outage_c2c(&self, p: f64) -> f64 {
+        let pb = self.stationary_bad();
+        (1.0 - pb) * scaled(p, self.c2c_scale.0) + pb * scaled(p, self.c2c_scale.1)
+    }
+
+    /// Closed-form stationary outage probability of an uplink with base `p`.
+    pub fn stationary_outage_c2s(&self, p: f64) -> f64 {
+        let pb = self.stationary_bad();
+        (1.0 - pb) * scaled(p, self.c2s_scale.0) + pb * scaled(p, self.c2s_scale.1)
+    }
+
+    /// Whether the k→m c2c link is currently in the bad state (validation
+    /// hook for the burst-statistics tests).
+    pub fn c2c_bad(&self, m: usize, k: usize) -> bool {
+        self.bad_t[m][k]
+    }
+
+    fn step(bad: &mut bool, p_gb: f64, p_bg: f64, rng: &mut Rng) {
+        *bad = if *bad { !rng.bernoulli(p_bg) } else { rng.bernoulli(p_gb) };
+    }
+}
+
+impl ChannelModel for GilbertElliott {
+    fn name(&self) -> &'static str {
+        "gilbert_elliott"
+    }
+
+    fn reset(&mut self, net: &Network, state_seed: u64) {
+        let mut srng = Rng::new(state_seed);
+        let pb = self.stationary_bad();
+        if self.m != net.m {
+            // size once; repeated resets of one instance reuse the buffers
+            // (fresh clones of an unsized prototype allocate here instead
+            // of in clone_box — one allocation per trial either way)
+            self.bad_t = vec![vec![false; net.m]; net.m];
+            self.bad_tau = vec![false; net.m];
+            self.m = net.m;
+        }
+        // draw order (row-major c2c, then uplinks) is part of the state
+        // stream contract — the mirror tests replay it
+        for row in &mut self.bad_t {
+            for b in row.iter_mut() {
+                *b = srng.bernoulli(pb);
+            }
+        }
+        for b in &mut self.bad_tau {
+            *b = srng.bernoulli(pb);
+        }
+        self.state_rng = srng;
+        self.stats = ChannelStats::default();
+    }
+
+    fn sample(&mut self, net: &Network, rng: &mut Rng) -> Realization {
+        assert_eq!(self.m, net.m, "GilbertElliott: reset() with this network before sampling");
+        let m = self.m;
+        let mut bad = 0usize;
+        for i in 0..m {
+            for j in 0..m {
+                if i != j && self.bad_t[i][j] {
+                    bad += 1;
+                }
+            }
+        }
+        bad += self.bad_tau.iter().filter(|&&b| b).count();
+        self.stats.samples += 1;
+        self.stats.degraded += bad;
+        self.stats.degraded_denom += m * m; // (m² − m) c2c links + m uplinks
+
+        // emit from the current states (one draw per link, Iid order)
+        let (bad_t, bad_tau) = (&self.bad_t, &self.bad_tau);
+        let (cg, cb) = self.c2c_scale;
+        let (sg, sb) = self.c2s_scale;
+        let real = Realization::sample_with(
+            m,
+            rng,
+            |i, j| scaled(net.p_c2c[(i, j)], if bad_t[i][j] { cb } else { cg }),
+            |i| scaled(net.p_c2s[i], if bad_tau[i] { sb } else { sg }),
+        );
+
+        // evolve every chain on the private stream
+        for i in 0..m {
+            for j in 0..m {
+                if i != j {
+                    Self::step(&mut self.bad_t[i][j], self.p_gb, self.p_bg, &mut self.state_rng);
+                }
+            }
+        }
+        for i in 0..m {
+            Self::step(&mut self.bad_tau[i], self.p_gb, self.p_bg, &mut self.state_rng);
+        }
+        real
+    }
+
+    fn take_stats(&mut self) -> ChannelStats {
+        std::mem::take(&mut self.stats)
+    }
+
+    fn clone_box(&self) -> Box<dyn ChannelModel> {
+        Box::new(self.clone())
+    }
+}
+
+// ── Correlated fading ───────────────────────────────────────────────────
+
+/// A shared fade state inducing common-cause outages: while the channel is
+/// *faded*, every link's base outage probability is multiplied by
+/// `fade_scale` (clamped). The fade is a two-state Markov chain with
+/// stationary fade probability `rho` and second eigenvalue `persistence`:
+/// `persistence = 0` redraws the fade independently every attempt
+/// (memoryless common-cause), larger values make one fade span consecutive
+/// attempts — so a deep fade can kill a whole round of GC⁺ repeats. Mean
+/// fade dwell is `1 / ((1−persistence)(1−rho))` attempts.
+///
+/// Outages stay conditionally independent given the fade, so the
+/// same-attempt pairwise link correlation has the closed form of
+/// [`CorrelatedFading::pairwise_correlation`] for every `persistence`.
+#[derive(Clone, Debug)]
+pub struct CorrelatedFading {
+    /// Stationary probability an attempt is faded (the coupling strength).
+    pub rho: f64,
+    /// Outage-probability scale during a fade.
+    pub fade_scale: f64,
+    /// Fade-state persistence λ ∈ \[0, 1\] across attempts.
+    pub persistence: f64,
+    faded: bool,
+    state_rng: Rng,
+    stats: ChannelStats,
+}
+
+impl CorrelatedFading {
+    pub fn new(rho: f64, fade_scale: f64, persistence: f64) -> Self {
+        assert!((0.0..=1.0).contains(&rho), "rho must be in [0, 1]");
+        assert!((0.0..=1.0).contains(&persistence), "persistence must be in [0, 1]");
+        CorrelatedFading {
+            rho,
+            fade_scale,
+            persistence,
+            faded: false,
+            state_rng: Rng::new(0),
+            stats: ChannelStats::default(),
+        }
+    }
+
+    /// Mean fade dwell time in attempts, `1 / ((1−λ)(1−ρ))`.
+    pub fn mean_fade_dwell(&self) -> f64 {
+        1.0 / ((1.0 - self.persistence) * (1.0 - self.rho))
+    }
+
+    /// Marginal outage probability of a link with base probability `p`.
+    pub fn mean_outage(&self, p: f64) -> f64 {
+        (1.0 - self.rho) * p + self.rho * scaled(p, self.fade_scale)
+    }
+
+    /// Closed-form correlation between the outage indicators of two links
+    /// with base probabilities `p1`, `p2`:
+    /// `Cov = ρ(1−ρ)(q1−p1)(q2−p2)` with `q = min(1, p·fade_scale)`.
+    pub fn pairwise_correlation(&self, p1: f64, p2: f64) -> f64 {
+        let (q1, q2) = (scaled(p1, self.fade_scale), scaled(p2, self.fade_scale));
+        let cov = self.rho * (1.0 - self.rho) * (q1 - p1) * (q2 - p2);
+        let (m1, m2) = (self.mean_outage(p1), self.mean_outage(p2));
+        let var = m1 * (1.0 - m1) * m2 * (1.0 - m2);
+        if var <= 0.0 {
+            0.0
+        } else {
+            cov / var.sqrt()
+        }
+    }
+}
+
+impl ChannelModel for CorrelatedFading {
+    fn name(&self) -> &'static str {
+        "correlated_fading"
+    }
+
+    fn reset(&mut self, _net: &Network, state_seed: u64) {
+        self.state_rng = Rng::new(state_seed);
+        // initial fade state from the stationary distribution
+        self.faded = self.state_rng.bernoulli(self.rho);
+        self.stats = ChannelStats::default();
+    }
+
+    fn sample(&mut self, net: &Network, rng: &mut Rng) -> Realization {
+        let m = net.m;
+        let faded = self.faded;
+        self.stats.samples += 1;
+        self.stats.degraded += if faded { m * m } else { 0 };
+        self.stats.degraded_denom += m * m;
+        let scale = if faded { self.fade_scale } else { 1.0 };
+        let real = Realization::sample_with(
+            m,
+            rng,
+            |i, j| scaled(net.p_c2c[(i, j)], scale),
+            |i| scaled(net.p_c2s[i], scale),
+        );
+        // evolve the fade chain on the private stream; transition probs are
+        // chosen so the stationary fade probability stays ρ at every λ
+        let (rho, lam) = (self.rho, self.persistence);
+        self.faded = if self.faded {
+            self.state_rng.bernoulli(lam + (1.0 - lam) * rho)
+        } else {
+            self.state_rng.bernoulli((1.0 - lam) * rho)
+        };
+        real
+    }
+
+    fn take_stats(&mut self) -> ChannelStats {
+        std::mem::take(&mut self.stats)
+    }
+
+    fn clone_box(&self) -> Box<dyn ChannelModel> {
+        Box::new(self.clone())
+    }
+}
+
+// ── Deadline stragglers ─────────────────────────────────────────────────
+
+/// Shifted-exponential per-link latency with persistent straggler clients:
+/// a transmission from source `k` takes `(shift + Exp(rate)) · f_k` where
+/// `f_k = slow_factor` while `k` straggles (a per-client Markov state with
+/// transitions `p_slow` / `p_recover`) and 1 otherwise. A link is up iff it
+/// survives the base Bernoulli erasure **and** its latency beats
+/// `deadline`; `deadline = ∞` disables the gate, collapsing to [`Iid`].
+///
+/// Deadline hits/misses are tallied into [`ChannelStats`] and
+/// [`ChannelModel::round_duration`] reports the deadline window, making
+/// transmissions-per-round and wall-clock first-class sweep metrics.
+#[derive(Clone, Debug)]
+pub struct DeadlineStraggler {
+    /// Round deadline (`f64::INFINITY` = no deadline).
+    pub deadline: f64,
+    /// Deterministic latency floor.
+    pub shift: f64,
+    /// Rate of the exponential latency tail.
+    pub rate: f64,
+    /// P(normal → straggling) per attempt.
+    pub p_slow: f64,
+    /// P(straggling → normal) per attempt.
+    pub p_recover: f64,
+    /// Latency multiplier while straggling.
+    pub slow_factor: f64,
+    m: usize,
+    slow: Vec<bool>,
+    /// Scratch deadline-gate buffers, sized once in `reset` and overwritten
+    /// every sample — repeated samples within a trial/episode allocate
+    /// nothing (per-trial clone+reset still costs one buffer set).
+    ok_t: Vec<Vec<bool>>,
+    ok_tau: Vec<bool>,
+    state_rng: Rng,
+    stats: ChannelStats,
+}
+
+impl DeadlineStraggler {
+    pub fn new(
+        deadline: f64,
+        shift: f64,
+        rate: f64,
+        p_slow: f64,
+        p_recover: f64,
+        slow_factor: f64,
+    ) -> Self {
+        assert!(deadline > 0.0 && shift >= 0.0 && rate > 0.0 && slow_factor >= 1.0);
+        assert!((0.0..=1.0).contains(&p_slow) && (0.0..=1.0).contains(&p_recover));
+        DeadlineStraggler {
+            deadline,
+            shift,
+            rate,
+            p_slow,
+            p_recover,
+            slow_factor,
+            m: 0,
+            slow: Vec::new(),
+            ok_t: Vec::new(),
+            ok_tau: Vec::new(),
+            state_rng: Rng::new(0),
+            stats: ChannelStats::default(),
+        }
+    }
+
+    /// Stationary probability a client is straggling.
+    pub fn stationary_slow(&self) -> f64 {
+        if self.p_slow + self.p_recover == 0.0 {
+            0.0
+        } else {
+            self.p_slow / (self.p_slow + self.p_recover)
+        }
+    }
+
+    /// P(latency beats the deadline) for a source with slowdown `factor`.
+    pub fn hit_prob(&self, factor: f64) -> f64 {
+        if self.deadline.is_infinite() {
+            return 1.0;
+        }
+        let margin = self.deadline / factor - self.shift;
+        if margin <= 0.0 {
+            0.0
+        } else {
+            1.0 - (-self.rate * margin).exp()
+        }
+    }
+
+    /// Closed-form stationary up-probability of a link with base erasure
+    /// probability `p` (erasure survival × deadline hit, mixed over the
+    /// stationary straggler state).
+    pub fn stationary_up(&self, p: f64) -> f64 {
+        let ps = self.stationary_slow();
+        (1.0 - p) * ((1.0 - ps) * self.hit_prob(1.0) + ps * self.hit_prob(self.slow_factor))
+    }
+
+    fn latency(&mut self, src: usize) -> f64 {
+        let f = if self.slow[src] { self.slow_factor } else { 1.0 };
+        (self.shift + self.state_rng.exponential(self.rate)) * f
+    }
+}
+
+impl ChannelModel for DeadlineStraggler {
+    fn name(&self) -> &'static str {
+        "deadline_straggler"
+    }
+
+    fn reset(&mut self, net: &Network, state_seed: u64) {
+        let mut srng = Rng::new(state_seed);
+        let ps = self.stationary_slow();
+        if self.m != net.m {
+            self.slow = vec![false; net.m];
+            self.ok_t = vec![vec![true; net.m]; net.m];
+            self.ok_tau = vec![true; net.m];
+            self.m = net.m;
+        }
+        for b in &mut self.slow {
+            *b = srng.bernoulli(ps);
+        }
+        self.state_rng = srng;
+        self.stats = ChannelStats::default();
+    }
+
+    fn sample(&mut self, net: &Network, rng: &mut Rng) -> Realization {
+        assert_eq!(self.m, net.m, "DeadlineStraggler: reset() with this network before sampling");
+        let m = self.m;
+        self.stats.samples += 1;
+        self.stats.degraded += self.slow.iter().filter(|&&s| s).count();
+        self.stats.degraded_denom += m;
+
+        // latency gates on the private stream, fixed order: c2c links
+        // row-major (source = column), then uplinks (source = client)
+        for i in 0..m {
+            for j in 0..m {
+                if i != j {
+                    let hit = self.latency(j) <= self.deadline;
+                    self.stats.deadline_hits += hit as usize;
+                    self.stats.deadline_total += 1;
+                    self.ok_t[i][j] = hit;
+                }
+            }
+        }
+        for i in 0..m {
+            let hit = self.latency(i) <= self.deadline;
+            self.stats.deadline_hits += hit as usize;
+            self.stats.deadline_total += 1;
+            self.ok_tau[i] = hit;
+        }
+
+        // a missed deadline forces the outage (probability 1 still consumes
+        // the link's emission draw, preserving the Iid stream alignment)
+        let (ok_t, ok_tau) = (&self.ok_t, &self.ok_tau);
+        let real = Realization::sample_with(
+            m,
+            rng,
+            |i, j| if ok_t[i][j] { net.p_c2c[(i, j)] } else { 1.0 },
+            |i| if ok_tau[i] { net.p_c2s[i] } else { 1.0 },
+        );
+
+        // evolve straggler states on the private stream
+        for k in 0..m {
+            let cur = self.slow[k];
+            self.slow[k] = if cur {
+                !self.state_rng.bernoulli(self.p_recover)
+            } else {
+                self.state_rng.bernoulli(self.p_slow)
+            };
+        }
+        real
+    }
+
+    fn take_stats(&mut self) -> ChannelStats {
+        std::mem::take(&mut self.stats)
+    }
+
+    fn round_duration(&self) -> f64 {
+        if self.deadline.is_finite() {
+            self.deadline
+        } else {
+            1.0
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn ChannelModel> {
+        Box::new(self.clone())
+    }
+}
+
+// ── Declarative spec ────────────────────────────────────────────────────
+
+/// Declarative, JSON-round-trippable channel-model spec: the form scenarios
+/// are written in ([`crate::scenario::Scenario`]); [`ChannelSpec::build`]
+/// instantiates the stateful model.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ChannelSpec {
+    Iid,
+    GilbertElliott { p_gb: f64, p_bg: f64, c2c_scale: (f64, f64), c2s_scale: (f64, f64) },
+    CorrelatedFading { rho: f64, fade_scale: f64, persistence: f64 },
+    DeadlineStraggler {
+        deadline: f64,
+        shift: f64,
+        rate: f64,
+        p_slow: f64,
+        p_recover: f64,
+        slow_factor: f64,
+    },
+}
+
+impl ChannelSpec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ChannelSpec::Iid => "iid",
+            ChannelSpec::GilbertElliott { .. } => "gilbert_elliott",
+            ChannelSpec::CorrelatedFading { .. } => "correlated_fading",
+            ChannelSpec::DeadlineStraggler { .. } => "deadline_straggler",
+        }
+    }
+
+    /// Parameter-range check, mirroring the constructor asserts — lets
+    /// user-supplied JSON fail with an error instead of a panic.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let prob = |name: &str, p: f64| -> anyhow::Result<()> {
+            anyhow::ensure!((0.0..=1.0).contains(&p), "channel {name} must be in [0, 1], got {p}");
+            Ok(())
+        };
+        match *self {
+            ChannelSpec::Iid => {}
+            ChannelSpec::GilbertElliott { p_gb, p_bg, c2c_scale, c2s_scale } => {
+                prob("p_gb", p_gb)?;
+                prob("p_bg", p_bg)?;
+                for (name, s) in [
+                    ("c2c_good", c2c_scale.0),
+                    ("c2c_bad", c2c_scale.1),
+                    ("c2s_good", c2s_scale.0),
+                    ("c2s_bad", c2s_scale.1),
+                ] {
+                    anyhow::ensure!(s >= 0.0, "channel scale {name} must be ≥ 0, got {s}");
+                }
+            }
+            ChannelSpec::CorrelatedFading { rho, fade_scale, persistence } => {
+                prob("rho", rho)?;
+                prob("persistence", persistence)?;
+                anyhow::ensure!(fade_scale >= 0.0, "fade_scale must be ≥ 0, got {fade_scale}");
+            }
+            ChannelSpec::DeadlineStraggler {
+                deadline,
+                shift,
+                rate,
+                p_slow,
+                p_recover,
+                slow_factor,
+            } => {
+                anyhow::ensure!(deadline > 0.0, "deadline must be > 0 (null = none)");
+                anyhow::ensure!(shift >= 0.0, "shift must be ≥ 0, got {shift}");
+                anyhow::ensure!(rate > 0.0, "rate must be > 0, got {rate}");
+                anyhow::ensure!(slow_factor >= 1.0, "slow_factor must be ≥ 1, got {slow_factor}");
+                prob("p_slow", p_slow)?;
+                prob("p_recover", p_recover)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Instantiate the stateful model (call [`ChannelModel::reset`] before
+    /// sampling).
+    pub fn build(&self) -> Box<dyn ChannelModel> {
+        match *self {
+            ChannelSpec::Iid => Box::new(Iid),
+            ChannelSpec::GilbertElliott { p_gb, p_bg, c2c_scale, c2s_scale } => {
+                Box::new(GilbertElliott::new(p_gb, p_bg, c2c_scale, c2s_scale))
+            }
+            ChannelSpec::CorrelatedFading { rho, fade_scale, persistence } => {
+                Box::new(CorrelatedFading::new(rho, fade_scale, persistence))
+            }
+            ChannelSpec::DeadlineStraggler {
+                deadline,
+                shift,
+                rate,
+                p_slow,
+                p_recover,
+                slow_factor,
+            } => Box::new(DeadlineStraggler::new(
+                deadline, shift, rate, p_slow, p_recover, slow_factor,
+            )),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match *self {
+            ChannelSpec::Iid => json::obj(vec![("kind", json::s("iid"))]),
+            ChannelSpec::GilbertElliott { p_gb, p_bg, c2c_scale, c2s_scale } => json::obj(vec![
+                ("kind", json::s("gilbert_elliott")),
+                ("p_gb", json::num(p_gb)),
+                ("p_bg", json::num(p_bg)),
+                ("c2c_good", json::num(c2c_scale.0)),
+                ("c2c_bad", json::num(c2c_scale.1)),
+                ("c2s_good", json::num(c2s_scale.0)),
+                ("c2s_bad", json::num(c2s_scale.1)),
+            ]),
+            ChannelSpec::CorrelatedFading { rho, fade_scale, persistence } => json::obj(vec![
+                ("kind", json::s("correlated_fading")),
+                ("rho", json::num(rho)),
+                ("fade_scale", json::num(fade_scale)),
+                ("persistence", json::num(persistence)),
+            ]),
+            ChannelSpec::DeadlineStraggler {
+                deadline,
+                shift,
+                rate,
+                p_slow,
+                p_recover,
+                slow_factor,
+            } => json::obj(vec![
+                ("kind", json::s("deadline_straggler")),
+                // infinity is not representable in JSON: null = no deadline
+                ("deadline", if deadline.is_finite() { json::num(deadline) } else { Json::Null }),
+                ("shift", json::num(shift)),
+                ("rate", json::num(rate)),
+                ("p_slow", json::num(p_slow)),
+                ("p_recover", json::num(p_recover)),
+                ("slow_factor", json::num(slow_factor)),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<ChannelSpec> {
+        let kind = v
+            .req("kind")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("channel kind must be a string"))?;
+        let f = |key: &str| -> anyhow::Result<f64> {
+            v.req(key)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("channel field {key:?} must be a number"))
+        };
+        Ok(match kind {
+            "iid" => ChannelSpec::Iid,
+            "gilbert_elliott" => ChannelSpec::GilbertElliott {
+                p_gb: f("p_gb")?,
+                p_bg: f("p_bg")?,
+                c2c_scale: (f("c2c_good")?, f("c2c_bad")?),
+                c2s_scale: (f("c2s_good")?, f("c2s_bad")?),
+            },
+            "correlated_fading" => ChannelSpec::CorrelatedFading {
+                rho: f("rho")?,
+                fade_scale: f("fade_scale")?,
+                // optional for spec ergonomics: omitted = memoryless fades
+                persistence: match v.get("persistence") {
+                    None | Some(Json::Null) => 0.0,
+                    Some(p) => p
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("persistence must be a number"))?,
+                },
+            },
+            "deadline_straggler" => ChannelSpec::DeadlineStraggler {
+                deadline: match v.get("deadline") {
+                    None | Some(Json::Null) => f64::INFINITY,
+                    Some(d) => d
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("deadline must be a number or null"))?,
+                },
+                shift: f("shift")?,
+                rate: f("rate")?,
+                p_slow: f("p_slow")?,
+                p_recover: f("p_recover")?,
+                slow_factor: f("slow_factor")?,
+            },
+            other => anyhow::bail!("unknown channel kind {other:?}"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn homog(m: usize, p: f64) -> Network {
+        Network::homogeneous(m, p, p)
+    }
+
+    #[test]
+    fn iid_model_matches_raw_sampling() {
+        let net = Network::homogeneous(8, 0.3, 0.2);
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        let mut ch = Iid;
+        ch.reset(&net, 123);
+        for _ in 0..25 {
+            assert_eq!(ch.sample(&net, &mut a), Realization::sample(&net, &mut b));
+        }
+        assert_eq!(a.next_u64(), b.next_u64(), "streams must stay aligned");
+    }
+
+    #[test]
+    fn degenerate_gilbert_elliott_is_byte_identical_to_iid() {
+        // equal good/bad outage probabilities (scale 1 in both states):
+        // the emission stream must match Iid draw for draw, regardless of
+        // the burst chain churning on the private stream
+        let net = Network::homogeneous(9, 0.35, 0.15);
+        let mut ge = GilbertElliott::new(0.3, 0.2, (1.0, 1.0), (1.0, 1.0));
+        ge.reset(&net, 77);
+        let mut a = Rng::new(4);
+        let mut b = Rng::new(4);
+        for _ in 0..40 {
+            assert_eq!(ge.sample(&net, &mut a), Realization::sample(&net, &mut b));
+        }
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn infinite_deadline_straggler_is_byte_identical_to_iid() {
+        let net = Network::homogeneous(7, 0.4, 0.25);
+        let mut ds = DeadlineStraggler::new(f64::INFINITY, 0.5, 1.0, 0.2, 0.2, 3.0);
+        ds.reset(&net, 5);
+        let mut a = Rng::new(11);
+        let mut b = Rng::new(11);
+        for _ in 0..40 {
+            assert_eq!(ds.sample(&net, &mut a), Realization::sample(&net, &mut b));
+        }
+        assert_eq!(a.next_u64(), b.next_u64());
+        // every latency draw beats an infinite deadline
+        let st = ds.take_stats();
+        assert_eq!(st.deadline_hits, st.deadline_total);
+        assert_eq!(st.deadline_total, 40 * (7 * 7 - 7 + 7));
+    }
+
+    #[test]
+    fn zero_coupling_fading_is_byte_identical_to_iid() {
+        let net = Network::homogeneous(6, 0.5, 0.3);
+        let mut cf = CorrelatedFading::new(0.0, 10.0, 0.8);
+        cf.reset(&net, 3);
+        let mut a = Rng::new(2);
+        let mut b = Rng::new(2);
+        for _ in 0..30 {
+            assert_eq!(cf.sample(&net, &mut a), Realization::sample(&net, &mut b));
+        }
+    }
+
+    #[test]
+    fn gilbert_elliott_stationary_outage_matches_closed_form() {
+        // fresh stationary state per trial → outage indicators are i.i.d.
+        // across trials, so the plain binomial ±2σ band applies
+        let net = homog(4, 0.3);
+        let mut ge = GilbertElliott::new(0.1, 0.2, (0.5, 2.0), (0.5, 2.0));
+        let want = ge.stationary_outage_c2c(0.3);
+        let trials = 25_000;
+        let mut outages = 0usize;
+        for t in 0..trials {
+            ge.reset(&net, 1_000 + t as u64);
+            let mut rng = Rng::new(50_000 + t as u64);
+            let real = ge.sample(&net, &mut rng);
+            outages += !real.t[0][1] as usize;
+        }
+        let est = outages as f64 / trials as f64;
+        let sigma = (want * (1.0 - want) / trials as f64).sqrt();
+        assert!(
+            (est - want).abs() < 2.0 * sigma + 2e-3,
+            "stationary outage: closed form {want:.4} vs empirical {est:.4} (2σ = {:.4})",
+            2.0 * sigma
+        );
+    }
+
+    #[test]
+    fn gilbert_elliott_long_run_outage_matches_closed_form() {
+        // a single long trajectory (state carried across 30k rounds): the
+        // Markov correlation inflates the variance, so use a wider band
+        let net = homog(3, 0.2);
+        let mut ge = GilbertElliott::new(0.15, 0.25, (0.25, 4.0), (0.25, 4.0));
+        ge.reset(&net, 99);
+        let mut rng = Rng::new(7);
+        let rounds = 30_000;
+        let mut outages = 0usize;
+        for _ in 0..rounds {
+            let real = ge.sample(&net, &mut rng);
+            outages += !real.t[1][0] as usize;
+        }
+        let est = outages as f64 / rounds as f64;
+        let want = ge.stationary_outage_c2c(0.2);
+        let sigma = (want * (1.0 - want) / rounds as f64).sqrt();
+        assert!(
+            (est - want).abs() < 6.0 * sigma + 5e-3,
+            "long-run outage: closed form {want:.4} vs empirical {est:.4}"
+        );
+    }
+
+    #[test]
+    fn gilbert_elliott_burst_lengths_are_geometric() {
+        // dwell time in the bad state ~ Geometric(p_bg): mean 1/p_bg and
+        // survival P(L > k) = (1 − p_bg)^k
+        let p_bg = 0.3;
+        let net = homog(2, 0.2);
+        let mut ge = GilbertElliott::new(0.2, p_bg, (1.0, 1.0), (1.0, 1.0));
+        ge.reset(&net, 17);
+        let mut rng = Rng::new(23);
+        let mut runs: Vec<usize> = Vec::new();
+        let mut cur = 0usize;
+        for _ in 0..60_000 {
+            let bad = ge.c2c_bad(0, 1);
+            ge.sample(&net, &mut rng);
+            if bad {
+                cur += 1;
+            } else if cur > 0 {
+                runs.push(cur);
+                cur = 0;
+            }
+        }
+        assert!(runs.len() > 3_000, "too few bursts observed: {}", runs.len());
+        let mean = runs.iter().sum::<usize>() as f64 / runs.len() as f64;
+        let want_mean = 1.0 / p_bg;
+        assert!(
+            (mean - want_mean).abs() < 0.15,
+            "burst mean {mean:.3} vs geometric mean {want_mean:.3}"
+        );
+        for k in 1..=3usize {
+            let surv = runs.iter().filter(|&&l| l > k).count() as f64 / runs.len() as f64;
+            let want = (1.0 - p_bg).powi(k as i32);
+            assert!(
+                (surv - want).abs() < 0.03,
+                "P(burst > {k}) = {surv:.3}, geometric predicts {want:.3}"
+            );
+        }
+    }
+
+    #[test]
+    fn correlated_fading_matches_configured_coupling() {
+        // fade draws are i.i.d. per attempt, so attempts are i.i.d. and the
+        // empirical pairwise correlation estimates the closed form
+        let p = 0.2;
+        let net = homog(4, p);
+        // persistence 0 keeps attempts i.i.d., so the plain correlation
+        // estimator over one trajectory applies
+        let mut cf = CorrelatedFading::new(0.3, 4.0, 0.0);
+        cf.reset(&net, 31);
+        let want = cf.pairwise_correlation(p, p);
+        assert!(want > 0.25, "configured coupling should induce strong correlation: {want}");
+        let mut rng = Rng::new(13);
+        let rounds = 50_000;
+        let (mut x, mut y, mut xy) = (0usize, 0usize, 0usize);
+        for _ in 0..rounds {
+            let real = cf.sample(&net, &mut rng);
+            let (a, b) = (!real.t[0][1] as usize, !real.t[2][3] as usize);
+            x += a;
+            y += b;
+            xy += a * b;
+        }
+        let n = rounds as f64;
+        let (mx, my) = (x as f64 / n, y as f64 / n);
+        let cov = xy as f64 / n - mx * my;
+        let corr = cov / (mx * (1.0 - mx) * my * (1.0 - my)).sqrt();
+        assert!(corr > 0.0, "pairwise link correlation must be positive, got {corr}");
+        assert!(
+            (corr - want).abs() < 0.03,
+            "pairwise correlation {corr:.4} vs closed form {want:.4}"
+        );
+        // marginal sanity
+        let want_m = cf.mean_outage(p);
+        assert!((mx - want_m).abs() < 0.01, "marginal {mx:.4} vs {want_m:.4}");
+    }
+
+    #[test]
+    fn fade_dwell_times_are_geometric_with_the_configured_persistence() {
+        // fade dwell ~ Geometric((1−λ)(1−ρ)): mean 1/((1−λ)(1−ρ))
+        let (rho, lam) = (0.4, 0.5);
+        let net = homog(2, 0.2);
+        let mut cf = CorrelatedFading::new(rho, 3.0, lam);
+        cf.reset(&net, 19);
+        let want = cf.mean_fade_dwell();
+        assert!((want - 1.0 / (0.5 * 0.6)).abs() < 1e-12);
+        let mut rng = Rng::new(29);
+        let mut runs: Vec<usize> = Vec::new();
+        let mut cur = 0usize;
+        let mut faded_rounds = 0usize;
+        let rounds = 40_000;
+        for _ in 0..rounds {
+            let st_before = cf.faded;
+            cf.sample(&net, &mut rng);
+            faded_rounds += st_before as usize;
+            if st_before {
+                cur += 1;
+            } else if cur > 0 {
+                runs.push(cur);
+                cur = 0;
+            }
+        }
+        // stationary fade probability stays ρ at every persistence
+        let frac = faded_rounds as f64 / rounds as f64;
+        assert!((frac - rho).abs() < 0.02, "fade fraction {frac:.3} vs ρ = {rho}");
+        assert!(runs.len() > 2_000, "too few fades: {}", runs.len());
+        let mean = runs.iter().sum::<usize>() as f64 / runs.len() as f64;
+        assert!((mean - want).abs() < 0.2, "fade dwell {mean:.3} vs geometric {want:.3}");
+    }
+
+    #[test]
+    fn straggler_deadline_hit_rate_matches_closed_form() {
+        // all clients normal (p_slow = 0): hit rate = 1 − exp(−rate·(d − shift))
+        let net = homog(5, 0.0);
+        let mut ds = DeadlineStraggler::new(1.0, 0.2, 1.0, 0.0, 1.0, 2.0);
+        ds.reset(&net, 41);
+        let want = ds.hit_prob(1.0);
+        let mut rng = Rng::new(3);
+        let rounds = 2_000;
+        for _ in 0..rounds {
+            ds.sample(&net, &mut rng);
+        }
+        let st = ds.take_stats();
+        let est = st.deadline_hit_rate();
+        let n = st.deadline_total as f64;
+        let sigma = (want * (1.0 - want) / n).sqrt();
+        assert!(
+            (est - want).abs() < 4.0 * sigma + 2e-3,
+            "hit rate {est:.4} vs closed form {want:.4}"
+        );
+        // on a perfect-erasure network the up-rate equals the hit rate
+        assert!((ds.stationary_up(0.0) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn straggler_links_fail_when_too_slow_to_ever_hit() {
+        // slow_factor large enough that a straggling source can never beat
+        // the deadline: hit_prob(slow_factor) = 0
+        let ds = DeadlineStraggler::new(1.5, 0.5, 1.0, 0.15, 0.15, 4.0);
+        assert_eq!(ds.hit_prob(4.0), 0.0);
+        assert!(ds.hit_prob(1.0) > 0.6);
+        let up = ds.stationary_up(0.1);
+        // half the clients straggle in stationarity → up-rate ≈ 0.9·0.5·hit
+        assert!((up - 0.9 * 0.5 * ds.hit_prob(1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn channel_stats_merge_and_rates() {
+        let mut a = ChannelStats {
+            samples: 2,
+            degraded: 3,
+            degraded_denom: 10,
+            deadline_hits: 4,
+            deadline_total: 5,
+        };
+        a.merge(ChannelStats {
+            samples: 1,
+            degraded: 1,
+            degraded_denom: 10,
+            deadline_hits: 1,
+            deadline_total: 5,
+        });
+        assert_eq!(a.samples, 3);
+        assert!((a.degraded_frac() - 0.2).abs() < 1e-12);
+        assert!((a.deadline_hit_rate() - 0.5).abs() < 1e-12);
+        let empty = ChannelStats::default();
+        assert_eq!(empty.degraded_frac(), 0.0);
+        assert_eq!(empty.deadline_hit_rate(), 1.0);
+    }
+
+    #[test]
+    fn spec_json_roundtrip_all_kinds() {
+        let specs = [
+            ChannelSpec::Iid,
+            ChannelSpec::GilbertElliott {
+                p_gb: 0.05,
+                p_bg: 0.25,
+                c2c_scale: (0.5, 8.0),
+                c2s_scale: (1.0, 1.0),
+            },
+            ChannelSpec::CorrelatedFading { rho: 0.2, fade_scale: 5.0, persistence: 0.6 },
+            ChannelSpec::DeadlineStraggler {
+                deadline: 1.5,
+                shift: 0.5,
+                rate: 1.0,
+                p_slow: 0.15,
+                p_recover: 0.15,
+                slow_factor: 4.0,
+            },
+            ChannelSpec::DeadlineStraggler {
+                deadline: f64::INFINITY,
+                shift: 0.1,
+                rate: 2.0,
+                p_slow: 0.0,
+                p_recover: 1.0,
+                slow_factor: 1.0,
+            },
+        ];
+        for spec in &specs {
+            let text = spec.to_json().serialize();
+            let back = ChannelSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(&back, spec, "roundtrip failed for {text}");
+            // the spec builds a model that reports the same name
+            assert_eq!(spec.build().name(), spec.name());
+        }
+        assert!(ChannelSpec::from_json(&Json::parse(r#"{"kind":"warp"}"#).unwrap()).is_err());
+    }
+}

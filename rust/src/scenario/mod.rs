@@ -1,0 +1,35 @@
+//! Stateful channel-scenario engine: bursty / correlated / straggler link
+//! models behind a declarative scenario registry.
+//!
+//! The paper's experiments draw every link as a memoryless i.i.d. Bernoulli
+//! erasure, which can only reproduce static operating points. This
+//! subsystem opens the regimes the abstract actually warns about — bursty
+//! channels, common-cause fades, deadline-bound stragglers — while keeping
+//! the determinism contract of the parallel engine intact:
+//!
+//! - [`channel`] — the stateful [`ChannelModel`] trait and its four
+//!   implementations ([`Iid`], [`GilbertElliott`], [`CorrelatedFading`],
+//!   [`DeadlineStraggler`]), each with closed-form stationary statistics
+//!   for validation and a degenerate configuration that collapses
+//!   byte-identically to i.i.d.;
+//! - [`registry`] — the declarative, JSON-round-trippable [`Scenario`]
+//!   spec (network × channel × decoder × schedule) and the built-in
+//!   catalog (`cogc scenario list`);
+//! - [`sweep`] — [`run_scenario`]: many independent episodes of
+//!   `rounds` consecutive rounds each, fanned over the Monte-Carlo engine
+//!   into a per-round [`RoundSeries`] that is bit-identical at any
+//!   `--threads` value.
+//!
+//! Entry points: `cogc scenario list | run <name>` on the CLI, or
+//! [`crate::figures::scenario_sweep`] for the CSV time series.
+
+pub mod channel;
+pub mod registry;
+pub mod sweep;
+
+pub use channel::{
+    ChannelModel, ChannelSpec, ChannelStats, CorrelatedFading, DeadlineStraggler, GilbertElliott,
+    Iid, CHANNEL_STREAM,
+};
+pub use registry::{builtin, find, NetworkSpec, Scenario};
+pub use sweep::{run_scenario, RoundSeries, RoundTally};

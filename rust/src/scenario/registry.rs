@@ -1,0 +1,440 @@
+//! Declarative scenario specs and the built-in registry.
+//!
+//! A [`Scenario`] names one complete experiment: a network topology, a
+//! (possibly stateful) channel model, a decode policy, and a schedule
+//! (rounds per episode). Scenarios round-trip through JSON
+//! (`util::json`), so custom ones load from a file
+//! (`cogc scenario run --file my.json`); the [`builtin`] registry ships
+//! named scenarios spanning the good / bursty / correlated / straggler
+//! regimes the paper's abstract warns about.
+
+use super::channel::ChannelSpec;
+use crate::network::Network;
+use crate::sim::Decoder;
+use crate::util::json::{self, Json};
+
+/// Declarative network spec (the subset of constructors scenarios need;
+/// every paper topology is expressible as one of these).
+#[derive(Clone, Debug, PartialEq)]
+pub enum NetworkSpec {
+    /// Every uplink fails w.p. `p_ps`, every c2c link w.p. `p_cc`.
+    Homogeneous { m: usize, p_ps: f64, p_cc: f64 },
+    /// Perfect connectivity (the ideal-FL baseline).
+    Perfect { m: usize },
+}
+
+impl NetworkSpec {
+    pub fn m(&self) -> usize {
+        match *self {
+            NetworkSpec::Homogeneous { m, .. } | NetworkSpec::Perfect { m } => m,
+        }
+    }
+
+    pub fn build(&self) -> Network {
+        match *self {
+            NetworkSpec::Homogeneous { m, p_ps, p_cc } => Network::homogeneous(m, p_ps, p_cc),
+            NetworkSpec::Perfect { m } => Network::perfect(m),
+        }
+    }
+
+    /// Parameter-range check, mirroring the `Network` constructor asserts —
+    /// lets user-supplied JSON fail with an error instead of a panic.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if let NetworkSpec::Homogeneous { p_ps, p_cc, .. } = *self {
+            anyhow::ensure!((0.0..=1.0).contains(&p_ps), "p_ps must be in [0, 1], got {p_ps}");
+            anyhow::ensure!((0.0..=1.0).contains(&p_cc), "p_cc must be in [0, 1], got {p_cc}");
+        }
+        Ok(())
+    }
+
+    /// One-line human summary for tables/CSV comments.
+    pub fn summary(&self) -> String {
+        match *self {
+            NetworkSpec::Homogeneous { m, p_ps, p_cc } => {
+                format!("homogeneous(m={m}, p_ps={p_ps}, p_cc={p_cc})")
+            }
+            NetworkSpec::Perfect { m } => format!("perfect(m={m})"),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match *self {
+            NetworkSpec::Homogeneous { m, p_ps, p_cc } => json::obj(vec![
+                ("kind", json::s("homogeneous")),
+                ("m", json::num(m as f64)),
+                ("p_ps", json::num(p_ps)),
+                ("p_cc", json::num(p_cc)),
+            ]),
+            NetworkSpec::Perfect { m } => {
+                json::obj(vec![("kind", json::s("perfect")), ("m", json::num(m as f64))])
+            }
+        }
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<NetworkSpec> {
+        let kind = v
+            .req("kind")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("network kind must be a string"))?;
+        let m = v
+            .req("m")?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("network m must be an integer"))?;
+        Ok(match kind {
+            "homogeneous" => NetworkSpec::Homogeneous {
+                m,
+                p_ps: v
+                    .req("p_ps")?
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("p_ps must be a number"))?,
+                p_cc: v
+                    .req("p_cc")?
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("p_cc must be a number"))?,
+            },
+            "perfect" => NetworkSpec::Perfect { m },
+            other => anyhow::bail!("unknown network kind {other:?}"),
+        })
+    }
+}
+
+fn decoder_to_json(d: Decoder) -> Json {
+    match d {
+        Decoder::Standard { attempts } => json::obj(vec![
+            ("kind", json::s("standard")),
+            ("attempts", json::num(attempts as f64)),
+        ]),
+        Decoder::GcPlus { tr } => {
+            json::obj(vec![("kind", json::s("gcplus")), ("tr", json::num(tr as f64))])
+        }
+    }
+}
+
+fn decoder_from_json(v: &Json) -> anyhow::Result<Decoder> {
+    let kind = v
+        .req("kind")?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("decoder kind must be a string"))?;
+    let n = |key: &str| -> anyhow::Result<usize> {
+        v.req(key)?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("decoder field {key:?} must be an integer"))
+    };
+    Ok(match kind {
+        "standard" => Decoder::Standard { attempts: n("attempts")? },
+        "gcplus" => Decoder::GcPlus { tr: n("tr")? },
+        other => anyhow::bail!("unknown decoder kind {other:?} (standard|gcplus)"),
+    })
+}
+
+/// One named, fully-declarative experiment: network × channel × decoder ×
+/// schedule. Run it with [`crate::scenario::run_scenario`] or
+/// `cogc scenario run <name>`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    /// What paper regime this probes (one line, shown by `scenario list`).
+    pub description: String,
+    pub net: NetworkSpec,
+    pub channel: ChannelSpec,
+    pub decoder: Decoder,
+    /// Straggler tolerance of the cyclic code.
+    pub s: usize,
+    /// Synthetic payload dimension of the sim layer.
+    pub payload_dim: usize,
+    /// Rounds per episode (channel state persists across them).
+    pub rounds: usize,
+}
+
+impl Scenario {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            ("description", json::s(&self.description)),
+            ("network", self.net.to_json()),
+            ("channel", self.channel.to_json()),
+            ("decoder", decoder_to_json(self.decoder)),
+            ("s", json::num(self.s as f64)),
+            ("payload_dim", json::num(self.payload_dim as f64)),
+            ("rounds", json::num(self.rounds as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Scenario> {
+        let str_field = |key: &str| -> anyhow::Result<String> {
+            Ok(v.req(key)?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("scenario field {key:?} must be a string"))?
+                .to_string())
+        };
+        let n = |key: &str| -> anyhow::Result<usize> {
+            v.req(key)?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("scenario field {key:?} must be an integer"))
+        };
+        let sc = Scenario {
+            name: str_field("name")?,
+            description: str_field("description")?,
+            net: NetworkSpec::from_json(v.req("network")?)?,
+            channel: ChannelSpec::from_json(v.req("channel")?)?,
+            decoder: decoder_from_json(v.req("decoder")?)?,
+            s: n("s")?,
+            payload_dim: n("payload_dim")?,
+            rounds: n("rounds")?,
+        };
+        sc.validate()?;
+        Ok(sc)
+    }
+
+    pub fn from_json_str(text: &str) -> anyhow::Result<Scenario> {
+        let v = Json::parse(text).map_err(|e| anyhow::anyhow!("scenario json: {e}"))?;
+        Scenario::from_json(&v)
+    }
+
+    /// Load a scenario from a JSON file.
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Scenario> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Scenario::from_json_str(&text)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let m = self.net.m();
+        anyhow::ensure!(m >= 2, "scenario {:?}: need at least 2 clients", self.name);
+        anyhow::ensure!(
+            self.s >= 1 && self.s < m,
+            "scenario {:?}: s must be in [1, M−1], got s={} M={m}",
+            self.name,
+            self.s
+        );
+        anyhow::ensure!(self.rounds >= 1, "scenario {:?}: rounds must be ≥ 1", self.name);
+        anyhow::ensure!(self.payload_dim >= 1, "scenario {:?}: payload_dim ≥ 1", self.name);
+        match self.decoder {
+            Decoder::Standard { attempts } => {
+                anyhow::ensure!(attempts >= 1, "scenario {:?}: attempts must be ≥ 1", self.name)
+            }
+            Decoder::GcPlus { tr } => {
+                anyhow::ensure!(tr >= 1, "scenario {:?}: tr must be ≥ 1", self.name)
+            }
+        }
+        self.channel
+            .validate()
+            .map_err(|e| anyhow::anyhow!("scenario {:?}: {e}", self.name))?;
+        self.net.validate().map_err(|e| anyhow::anyhow!("scenario {:?}: {e}", self.name))?;
+        self.net.build().validate()
+    }
+}
+
+fn scenario(
+    name: &str,
+    description: &str,
+    net: NetworkSpec,
+    channel: ChannelSpec,
+    decoder: Decoder,
+) -> Scenario {
+    Scenario {
+        name: name.to_string(),
+        description: description.to_string(),
+        net,
+        channel,
+        decoder,
+        s: 7,
+        payload_dim: 8,
+        rounds: 60,
+    }
+}
+
+/// The built-in scenario catalog (names are stable CLI identifiers).
+pub fn builtin() -> Vec<Scenario> {
+    let m10 = |p_ps, p_cc| NetworkSpec::Homogeneous { m: 10, p_ps, p_cc };
+    let mut v = vec![
+        scenario(
+            "iid-good",
+            "memoryless benign links (paper Fig. 4 mild operating point)",
+            m10(0.1, 0.1),
+            ChannelSpec::Iid,
+            Decoder::Standard { attempts: 1 },
+        ),
+        scenario(
+            "iid-moderate",
+            "memoryless moderate erasures (paper Fig. 6 setting 2)",
+            m10(0.4, 0.5),
+            ChannelSpec::Iid,
+            Decoder::GcPlus { tr: 2 },
+        ),
+        scenario(
+            "bursty-uplink",
+            "Gilbert–Elliott uplink bursts over benign c2c links (straggly PS path)",
+            m10(0.1, 0.1),
+            ChannelSpec::GilbertElliott {
+                p_gb: 0.05,
+                p_bg: 0.25,
+                c2c_scale: (1.0, 1.0),
+                c2s_scale: (0.5, 8.0),
+            },
+            Decoder::GcPlus { tr: 2 },
+        ),
+        scenario(
+            "bursty-c2c",
+            "Gilbert–Elliott c2c bursts: the regime where all-or-nothing decoding is brittle",
+            m10(0.4, 0.1),
+            ChannelSpec::GilbertElliott {
+                p_gb: 0.05,
+                p_bg: 0.25,
+                c2c_scale: (0.5, 8.0),
+                c2s_scale: (1.0, 1.0),
+            },
+            Decoder::GcPlus { tr: 2 },
+        ),
+        scenario(
+            "bursty-deep",
+            "long deep bursts on every link (mean burst 10 attempts)",
+            m10(0.3, 0.1),
+            ChannelSpec::GilbertElliott {
+                p_gb: 0.02,
+                p_bg: 0.1,
+                c2c_scale: (0.5, 9.0),
+                c2s_scale: (0.5, 3.0),
+            },
+            Decoder::GcPlus { tr: 2 },
+        ),
+        scenario(
+            "correlated-fade",
+            "common-cause fades couple all links, persisting across attempts (ρ=0.2, λ=0.6)",
+            m10(0.3, 0.15),
+            ChannelSpec::CorrelatedFading { rho: 0.2, fade_scale: 5.0, persistence: 0.6 },
+            Decoder::GcPlus { tr: 2 },
+        ),
+        scenario(
+            "flash-crowd",
+            "rare catastrophic multi-attempt fades (ρ = 0.05, near-total loss) on benign links",
+            m10(0.2, 0.08),
+            ChannelSpec::CorrelatedFading { rho: 0.05, fade_scale: 10.0, persistence: 0.5 },
+            Decoder::GcPlus { tr: 2 },
+        ),
+        scenario(
+            "straggler-mild",
+            "shifted-exponential latency, generous deadline, occasional slow clients",
+            m10(0.1, 0.1),
+            ChannelSpec::DeadlineStraggler {
+                deadline: 3.0,
+                shift: 0.5,
+                rate: 1.0,
+                p_slow: 0.05,
+                p_recover: 0.3,
+                slow_factor: 3.0,
+            },
+            Decoder::GcPlus { tr: 2 },
+        ),
+        scenario(
+            "straggler-harsh",
+            "tight deadline: straggling sources can never beat it (persistent stragglers)",
+            m10(0.1, 0.1),
+            ChannelSpec::DeadlineStraggler {
+                deadline: 1.5,
+                shift: 0.5,
+                rate: 1.0,
+                p_slow: 0.15,
+                p_recover: 0.15,
+                slow_factor: 4.0,
+            },
+            Decoder::GcPlus { tr: 2 },
+        ),
+    ];
+    // small fast scenario exercising the full stateful path (CI smoke)
+    let mut smoke = scenario(
+        "smoke",
+        "tiny bursty scenario for CI smoke runs (M=6, 5 rounds)",
+        NetworkSpec::Homogeneous { m: 6, p_ps: 0.3, p_cc: 0.2 },
+        ChannelSpec::GilbertElliott {
+            p_gb: 0.2,
+            p_bg: 0.4,
+            c2c_scale: (0.5, 3.0),
+            c2s_scale: (0.5, 3.0),
+        },
+        Decoder::GcPlus { tr: 2 },
+    );
+    smoke.s = 3;
+    smoke.rounds = 5;
+    v.push(smoke);
+    v
+}
+
+/// Look up a built-in scenario by name.
+pub fn find(name: &str) -> anyhow::Result<Scenario> {
+    let all = builtin();
+    all.iter().find(|sc| sc.name == name).cloned().ok_or_else(|| {
+        let names: Vec<&str> = all.iter().map(|sc| sc.name.as_str()).collect();
+        anyhow::anyhow!("unknown scenario {name:?}; built-ins: {}", names.join(", "))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_at_least_eight_unique_valid_scenarios() {
+        let all = builtin();
+        assert!(all.len() >= 8, "only {} scenarios", all.len());
+        let mut names: Vec<&str> = all.iter().map(|s| s.name.as_str()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), all.len(), "duplicate scenario names");
+        for sc in &all {
+            sc.validate().unwrap();
+        }
+        // the catalog spans all four channel model kinds
+        for kind in ["iid", "gilbert_elliott", "correlated_fading", "deadline_straggler"] {
+            assert!(
+                all.iter().any(|s| s.channel.name() == kind),
+                "no builtin scenario uses channel kind {kind}"
+            );
+        }
+    }
+
+    #[test]
+    fn scenario_json_roundtrip() {
+        for sc in builtin() {
+            let text = sc.to_json().serialize();
+            let back = Scenario::from_json_str(&text).unwrap();
+            assert_eq!(back, sc, "roundtrip failed for {}", sc.name);
+        }
+    }
+
+    #[test]
+    fn find_known_and_unknown() {
+        assert_eq!(find("smoke").unwrap().name, "smoke");
+        let err = find("nope").unwrap_err().to_string();
+        assert!(err.contains("smoke"), "error should list built-ins: {err}");
+    }
+
+    #[test]
+    fn from_json_rejects_bad_specs() {
+        // s out of range
+        let mut sc = find("smoke").unwrap();
+        sc.s = 6; // == m
+        assert!(Scenario::from_json_str(&sc.to_json().serialize()).is_err());
+        // garbage decoder
+        assert!(Scenario::from_json_str(r#"{"name":"x"}"#).is_err());
+        // out-of-range channel parameters must error, not panic in build()
+        let mut sc = find("bursty-c2c").unwrap();
+        sc.channel = ChannelSpec::GilbertElliott {
+            p_gb: 1.5,
+            p_bg: 0.2,
+            c2c_scale: (1.0, 1.0),
+            c2s_scale: (1.0, 1.0),
+        };
+        let err = Scenario::from_json_str(&sc.to_json().serialize()).unwrap_err().to_string();
+        assert!(err.contains("p_gb"), "error should name the bad field: {err}");
+        // out-of-range network probabilities likewise
+        let mut sc = find("smoke").unwrap();
+        sc.net = NetworkSpec::Homogeneous { m: 6, p_ps: 1.2, p_cc: 0.1 };
+        assert!(Scenario::from_json_str(&sc.to_json().serialize()).is_err());
+        // degenerate decoder parameters (tr = 0 would silently run 0
+        // attempts per round)
+        let mut sc = find("smoke").unwrap();
+        sc.decoder = Decoder::GcPlus { tr: 0 };
+        assert!(Scenario::from_json_str(&sc.to_json().serialize()).is_err());
+    }
+}

@@ -1,0 +1,166 @@
+//! Scenario sweeps: per-round time series over many independent episodes.
+//!
+//! One *episode* = `rounds` consecutive CoGC rounds over a single
+//! channel-state trajectory (bursts and straggler states persist across
+//! rounds). [`run_scenario`] fans episodes over the deterministic
+//! [`MonteCarlo`] engine: trial `t` draws its payloads/codes/erasures from
+//! the canonical emission stream and its channel state from the
+//! [`CHANNEL_STREAM`] substream, so the full [`RoundSeries`] — every
+//! per-round tally — is bit-identical at any `--threads` value.
+
+use super::channel::{ChannelStats, CHANNEL_STREAM};
+use super::registry::Scenario;
+use crate::parallel::{Accumulate, MonteCarlo};
+use crate::sim::{self, Outcome};
+
+/// Tallies of one round index across all episodes (all integer fields, so
+/// per-worker instances merge exactly).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RoundTally {
+    /// Episodes that reached this round (= trials).
+    pub trials: usize,
+    /// Rounds decoded by the standard (binary) GC combinator.
+    pub standard: usize,
+    /// Rounds where GC⁺ recovered all M payloads.
+    pub full: usize,
+    /// Rounds where GC⁺ recovered a proper subset.
+    pub partial: usize,
+    /// Rounds with nothing decodable.
+    pub none: usize,
+    /// Transmissions consumed at this round across episodes.
+    pub transmissions: usize,
+    /// Channel diagnostics at this round across episodes.
+    pub channel: ChannelStats,
+}
+
+impl RoundTally {
+    /// Fraction of episodes that produced *some* global update this round.
+    pub fn p_update(&self) -> f64 {
+        (self.standard + self.full + self.partial) as f64 / self.trials.max(1) as f64
+    }
+}
+
+impl Accumulate for RoundTally {
+    fn merge(&mut self, other: Self) {
+        self.trials += other.trials;
+        self.standard += other.standard;
+        self.full += other.full;
+        self.partial += other.partial;
+        self.none += other.none;
+        self.transmissions += other.transmissions;
+        self.channel.merge(other.channel);
+    }
+}
+
+/// The per-round time series of a scenario sweep (index = round).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RoundSeries {
+    pub rounds: Vec<RoundTally>,
+}
+
+impl RoundSeries {
+    fn ensure_len(&mut self, n: usize) {
+        if self.rounds.len() < n {
+            self.rounds.resize(n, RoundTally::default());
+        }
+    }
+}
+
+impl Accumulate for RoundSeries {
+    fn merge(&mut self, other: Self) {
+        self.ensure_len(other.rounds.len());
+        for (i, tally) in other.rounds.into_iter().enumerate() {
+            self.rounds[i].merge(tally);
+        }
+    }
+}
+
+/// Run `trials` independent episodes of `sc` through the parallel engine
+/// and tally outcomes per round. Bit-identical for any thread count.
+pub fn run_scenario(sc: &Scenario, trials: usize, mc: &MonteCarlo) -> RoundSeries {
+    let net = sc.net.build();
+    let proto = sc.channel.build();
+    let m = net.m;
+    let mut series: RoundSeries = mc.run(trials, |t, rng, acc: &mut RoundSeries| {
+        let mut ch = proto.clone_box();
+        ch.reset(&net, mc.substream_seed(CHANNEL_STREAM, t));
+        acc.ensure_len(sc.rounds);
+        for r in 0..sc.rounds {
+            let round =
+                sim::simulate_round(&net, &mut *ch, m, sc.s, sc.payload_dim, sc.decoder, rng);
+            let tally = &mut acc.rounds[r];
+            tally.trials += 1;
+            match round.outcome {
+                Outcome::Standard { .. } => tally.standard += 1,
+                Outcome::Full => tally.full += 1,
+                Outcome::Partial { .. } => tally.partial += 1,
+                Outcome::None => tally.none += 1,
+            }
+            tally.transmissions += round.transmissions;
+            tally.channel.merge(ch.take_stats());
+        }
+    });
+    series.ensure_len(sc.rounds); // trials == 0 edge case
+    series
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::registry;
+
+    #[test]
+    fn every_builtin_scenario_runs_and_tallies_partition() {
+        for sc in registry::builtin() {
+            let series = run_scenario(&sc, 4, &MonteCarlo::new(3));
+            assert_eq!(series.rounds.len(), sc.rounds, "{}", sc.name);
+            for (r, tally) in series.rounds.iter().enumerate() {
+                assert_eq!(tally.trials, 4, "{} round {r}", sc.name);
+                assert_eq!(
+                    tally.standard + tally.full + tally.partial + tally.none,
+                    tally.trials,
+                    "{} round {r}: outcomes must partition",
+                    sc.name
+                );
+                assert!(tally.transmissions > 0, "{} round {r}", sc.name);
+            }
+        }
+    }
+
+    #[test]
+    fn stateful_scenarios_report_channel_diagnostics() {
+        let sc = registry::find("bursty-c2c").unwrap();
+        let series = run_scenario(&sc, 6, &MonteCarlo::new(11));
+        let degraded: usize = series.rounds.iter().map(|t| t.channel.degraded).sum();
+        let denom: usize = series.rounds.iter().map(|t| t.channel.degraded_denom).sum();
+        assert!(denom > 0);
+        assert!(degraded > 0, "a bursty scenario should spend time degraded");
+        let sc = registry::find("straggler-harsh").unwrap();
+        let series = run_scenario(&sc, 6, &MonteCarlo::new(11));
+        let hits: usize = series.rounds.iter().map(|t| t.channel.deadline_hits).sum();
+        let total: usize = series.rounds.iter().map(|t| t.channel.deadline_total).sum();
+        assert!(total > 0 && hits < total, "harsh deadlines must miss sometimes");
+    }
+
+    #[test]
+    fn zero_trials_yields_empty_tallies_of_full_length() {
+        let sc = registry::find("smoke").unwrap();
+        let series = run_scenario(&sc, 0, &MonteCarlo::new(1));
+        assert_eq!(series.rounds.len(), sc.rounds);
+        assert!(series.rounds.iter().all(|t| t.trials == 0));
+    }
+
+    #[test]
+    fn round_series_merge_zero_extends() {
+        let mut a = RoundSeries::default();
+        a.ensure_len(1);
+        a.rounds[0].trials = 2;
+        let mut b = RoundSeries::default();
+        b.ensure_len(3);
+        b.rounds[2].full = 1;
+        a.merge(b);
+        assert_eq!(a.rounds.len(), 3);
+        assert_eq!(a.rounds[0].trials, 2);
+        assert_eq!(a.rounds[2].full, 1);
+    }
+}

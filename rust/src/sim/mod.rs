@@ -12,11 +12,21 @@
 //! error) and [`sweep`] for [`MonteCarlo`]-parallel trial sweeps folding
 //! into [`SweepStats`]. All randomness flows through explicit `Rng`
 //! streams, so sweeps are bit-identical at every `--threads` value.
+//!
+//! Link erasures are drawn through a (possibly stateful)
+//! [`ChannelModel`](crate::scenario::ChannelModel): repeated attempts
+//! within a round see the channel state *evolve* (a burst can kill
+//! consecutive repeats — exactly the regime where repetition stops
+//! helping), and [`sweep`] resets a fresh per-trial state from the
+//! [`CHANNEL_STREAM`](crate::scenario::CHANNEL_STREAM) substream so tallies
+//! stay bit-identical at any thread count. Pass
+//! [`Iid`](crate::scenario::Iid) for the paper's memoryless behavior.
 
 use crate::gc::{self, GcCode};
 use crate::linalg::Matrix;
-use crate::network::{Network, Realization};
+use crate::network::Network;
 use crate::parallel::{Accumulate, MonteCarlo};
+use crate::scenario::{ChannelModel, CHANNEL_STREAM};
 use crate::util::rng::Rng;
 
 /// Outcome of one simulated round.
@@ -56,8 +66,13 @@ pub enum Decoder {
 }
 
 /// Simulate one CoGC round over synthetic payloads `G` (`M×D` normal).
+///
+/// `ch` supplies the link realizations and must have been `reset` for this
+/// trial (stateless models like `Iid` need no reset); its state evolves
+/// across the round's communication attempts.
 pub fn simulate_round(
     net: &Network,
+    ch: &mut dyn ChannelModel,
     m: usize,
     s: usize,
     d: usize,
@@ -80,7 +95,7 @@ pub fn simulate_round(
 
     for _ in 0..attempts_n {
         let code = GcCode::generate(m, s, rng);
-        let real = Realization::sample(net, rng);
+        let real = ch.sample(net, rng);
         let att = gc::Attempt::observe(&code, &real);
         // gradient-sharing phase: s transmissions per client
         transmissions += s * m;
@@ -224,8 +239,13 @@ impl Accumulate for SweepStats {
 
 /// Run `trials` independent [`simulate_round`]s through the parallel engine
 /// and tally the outcomes. Bit-identical for any thread count.
+///
+/// `ch` is a prototype: each trial clones it and resets the clone from the
+/// trial's channel-state substream, so stateful models are independent
+/// across trials and identical for every work-stealing schedule.
 pub fn sweep(
     net: &Network,
+    ch: &dyn ChannelModel,
     m: usize,
     s: usize,
     d: usize,
@@ -233,8 +253,10 @@ pub fn sweep(
     trials: usize,
     mc: &MonteCarlo,
 ) -> SweepStats {
-    mc.run(trials, |_t, rng, acc: &mut SweepStats| {
-        let r = simulate_round(net, m, s, d, decoder, rng);
+    mc.run(trials, |t, rng, acc: &mut SweepStats| {
+        let mut ch = ch.clone_box();
+        ch.reset(net, mc.substream_seed(CHANNEL_STREAM, t));
+        let r = simulate_round(net, &mut *ch, m, s, d, decoder, rng);
         acc.trials += 1;
         match r.outcome {
             Outcome::Standard { .. } => acc.standard += 1,
@@ -250,13 +272,15 @@ pub fn sweep(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::scenario::Iid;
     use crate::testing::Prop;
 
     #[test]
     fn perfect_network_standard_decodes_exactly() {
         let net = Network::perfect(10);
         let mut rng = Rng::new(1);
-        let r = simulate_round(&net, 10, 7, 23, Decoder::Standard { attempts: 1 }, &mut rng);
+        let r =
+            simulate_round(&net, &mut Iid, 10, 7, 23, Decoder::Standard { attempts: 1 }, &mut rng);
         assert!(matches!(r.outcome, Outcome::Standard { attempt: 0 }));
         assert!(r.decode_err < 1e-6, "err = {}", r.decode_err);
         let agg = r.aggregate.unwrap();
@@ -274,7 +298,8 @@ mod tests {
         let mut rng = Rng::new(2);
         let mut fulls = 0;
         for _ in 0..60 {
-            let r = simulate_round(&net, 10, 7, 11, Decoder::GcPlus { tr: 2 }, &mut rng);
+            let r =
+                simulate_round(&net, &mut Iid, 10, 7, 11, Decoder::GcPlus { tr: 2 }, &mut rng);
             if r.outcome == Outcome::Full {
                 fulls += 1;
                 assert!(r.decode_err < 1e-6);
@@ -296,7 +321,7 @@ mod tests {
             } else {
                 Decoder::GcPlus { tr: 2 }
             };
-            let r = simulate_round(&net, m, s, 9, dec, rng);
+            let r = simulate_round(&net, &mut Iid, m, s, 9, dec, rng);
             assert!(
                 r.decode_err < 1e-5,
                 "decode error {} (outcome {:?})",
@@ -309,7 +334,7 @@ mod tests {
     #[test]
     fn sweep_tallies_partition_and_decode_exactly() {
         let net = Network::homogeneous(8, 0.3, 0.3);
-        let st = sweep(&net, 8, 3, 5, Decoder::GcPlus { tr: 2 }, 300, &MonteCarlo::new(9));
+        let st = sweep(&net, &Iid, 8, 3, 5, Decoder::GcPlus { tr: 2 }, 300, &MonteCarlo::new(9));
         assert_eq!(st.trials, 300);
         assert_eq!(st.standard + st.full + st.partial + st.none, st.trials);
         assert!(st.p_update() > 0.0 && st.p_update() <= 1.0);
@@ -323,6 +348,7 @@ mod tests {
         let run = |threads: usize| {
             sweep(
                 &net,
+                &Iid,
                 8,
                 3,
                 5,
@@ -341,7 +367,8 @@ mod tests {
     fn standard_none_when_all_uplinks_dead() {
         let net = Network::homogeneous(6, 1.0, 0.0);
         let mut rng = Rng::new(3);
-        let r = simulate_round(&net, 6, 2, 5, Decoder::Standard { attempts: 3 }, &mut rng);
+        let r =
+            simulate_round(&net, &mut Iid, 6, 2, 5, Decoder::Standard { attempts: 3 }, &mut rng);
         assert_eq!(r.outcome, Outcome::None);
         assert!(r.aggregate.is_none());
     }

@@ -125,6 +125,13 @@ impl Rng {
         mean + std * self.normal()
     }
 
+    /// Exponential(rate) via inversion (mean `1/rate`).
+    #[inline]
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0, "exponential rate must be positive");
+        -(1.0 - self.f64()).ln() / rate
+    }
+
     /// Gamma(alpha, 1) via Marsaglia–Tsang squeeze (alpha boost for alpha<1).
     pub fn gamma(&mut self, alpha: f64) -> f64 {
         assert!(alpha > 0.0, "gamma shape must be positive");
@@ -222,6 +229,16 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
         assert!(mean.abs() < 0.01, "mean={mean}");
         assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(21);
+        for &rate in &[0.5, 1.0, 3.0] {
+            let n = 100_000;
+            let mean = (0..n).map(|_| r.exponential(rate)).sum::<f64>() / n as f64;
+            assert!((mean - 1.0 / rate).abs() < 0.05 / rate, "rate={rate} mean={mean}");
+        }
     }
 
     #[test]

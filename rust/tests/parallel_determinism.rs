@@ -7,7 +7,8 @@
 use cogc::gc::{self, GcCode};
 use cogc::network::{Network, Realization};
 use cogc::outage::mc::{estimate_outage, gcplus_recovery, RecoveryMode, RecoveryStats};
-use cogc::parallel::{Accumulate, MonteCarlo};
+use cogc::parallel::{trial_rng, Accumulate, MonteCarlo};
+use cogc::scenario::{self, run_scenario, Iid};
 use cogc::sim::{self, Decoder, SweepStats};
 use cogc::util::rng::Rng;
 
@@ -25,7 +26,7 @@ fn outage_estimate_is_bit_identical_across_thread_counts() {
 
     let mut outages = 0usize;
     for t in 0..trials {
-        let mut rng = Rng::new(SEED ^ t as u64);
+        let mut rng = trial_rng(SEED, t as u64);
         let att = gc::Attempt::observe(&code, &Realization::sample(&net, &mut rng));
         if att.complete.len() < 10 - 7 {
             outages += 1;
@@ -36,7 +37,7 @@ fn outage_estimate_is_bit_identical_across_thread_counts() {
 
     for threads in THREAD_COUNTS {
         let mc = MonteCarlo::new(SEED).with_threads(threads);
-        let got = estimate_outage(&net, &code, trials, &mc);
+        let got = estimate_outage(&net, &code, &Iid, trials, &mc);
         assert_eq!(
             got.to_bits(),
             reference.to_bits(),
@@ -61,7 +62,7 @@ fn recovery_tallies_are_identical_across_thread_counts_and_chunks() {
         let seed = SEED + stream as u64;
         let trials = 2_000;
         let reference =
-            gcplus_recovery(&net, 10, 7, mode, trials, &MonteCarlo::serial(seed));
+            gcplus_recovery(&net, &Iid, 10, 7, mode, trials, &MonteCarlo::serial(seed));
         assert_eq!(reference.trials, trials);
         assert_eq!(
             reference.standard + reference.full + reference.partial + reference.none,
@@ -70,7 +71,7 @@ fn recovery_tallies_are_identical_across_thread_counts_and_chunks() {
         for threads in THREAD_COUNTS {
             for chunk in [1usize, 64, 256] {
                 let mc = MonteCarlo::new(seed).with_threads(threads).with_chunk(chunk);
-                let got = gcplus_recovery(&net, 10, 7, mode, trials, &mc);
+                let got = gcplus_recovery(&net, &Iid, 10, 7, mode, trials, &mc);
                 assert_eq!(got, reference, "mode {mode:?} threads={threads} chunk={chunk}");
             }
         }
@@ -85,6 +86,7 @@ fn sim_sweep_is_bit_identical_across_thread_counts() {
     let run = |threads: usize| {
         sim::sweep(
             &net,
+            &Iid,
             10,
             7,
             6,
@@ -110,6 +112,7 @@ fn recovery_stats_merge_is_order_independent() {
         .map(|c| {
             gcplus_recovery(
                 &net,
+                &Iid,
                 10,
                 7,
                 RecoveryMode::FixedTr(2),
@@ -145,6 +148,7 @@ fn sweep_stats_merge_is_order_independent() {
         .map(|c| {
             sim::sweep(
                 &net,
+                &Iid,
                 8,
                 3,
                 5,
@@ -183,4 +187,27 @@ fn fig4_and_fig6_tables_are_thread_count_invariant() {
     let fig6_serial = cogc::figures::fig6(120, 42, 1).to_csv();
     let fig6_par = cogc::figures::fig6(120, 42, 4).to_csv();
     assert_eq!(fig6_serial, fig6_par);
+}
+
+/// Scenario sweeps — stateful channel models included — must produce
+/// bit-identical RoundSeries and byte-identical CSV at threads 1/2/8: the
+/// per-trial channel state is derived from the trial's substream, never
+/// from worker identity or schedule.
+#[test]
+fn scenario_sweeps_are_bit_identical_across_thread_counts() {
+    for name in ["iid-moderate", "bursty-c2c", "correlated-fade", "straggler-harsh"] {
+        let mut sc = scenario::find(name).unwrap();
+        sc.rounds = 10; // keep the test CI-sized
+        let reference = run_scenario(&sc, 120, &MonteCarlo::new(SEED).with_threads(1));
+        assert_eq!(reference.rounds.len(), sc.rounds);
+        for threads in THREAD_COUNTS {
+            let got = run_scenario(&sc, 120, &MonteCarlo::new(SEED).with_threads(threads));
+            assert_eq!(got, reference, "{name} threads={threads}");
+        }
+        let csv1 = cogc::figures::scenario_sweep(&sc, 60, 42, 1).to_csv();
+        for threads in [2usize, 8] {
+            let csvn = cogc::figures::scenario_sweep(&sc, 60, 42, threads).to_csv();
+            assert_eq!(csv1, csvn, "{name} CSV threads={threads}");
+        }
+    }
 }

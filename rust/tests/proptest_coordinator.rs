@@ -6,6 +6,7 @@ use cogc::gc::{self, GcCode};
 use cogc::network::{Network, Realization};
 use cogc::outage::mc::{gcplus_recovery, RecoveryMode};
 use cogc::parallel::MonteCarlo;
+use cogc::scenario::Iid;
 use cogc::sim::{simulate_round, Decoder, Outcome};
 use cogc::testing::Prop;
 use cogc::util::rng::Rng;
@@ -52,7 +53,7 @@ fn prop_standard_outcome_is_binary() {
         let s = rng.range(1, m);
         let p = rng.uniform(0.0, 0.8);
         let net = Network::homogeneous(m, p, p);
-        let r = simulate_round(&net, m, s, 8, Decoder::Standard { attempts: 2 }, rng);
+        let r = simulate_round(&net, &mut Iid, m, s, 8, Decoder::Standard { attempts: 2 }, rng);
         match r.outcome {
             Outcome::Standard { .. } => {
                 let agg = r.aggregate.unwrap();
@@ -74,7 +75,7 @@ fn prop_transmission_accounting() {
         let s = rng.range(1, m);
         let net = Network::homogeneous(m, 0.5, 0.5);
         let tr = rng.range(1, 4);
-        let r = simulate_round(&net, m, s, 4, Decoder::GcPlus { tr }, rng);
+        let r = simulate_round(&net, &mut Iid, m, s, 4, Decoder::GcPlus { tr }, rng);
         // GC+ sends every partial sum: attempts * (sM + M); it may stop at
         // a standard shortcut, so tx is a multiple of sM + M up to tr
         let per = s * m + m;
@@ -91,7 +92,7 @@ fn prop_gcplus_subset_means_match_ground_truth() {
         let m = rng.range(5, 11);
         let s = rng.range(2, m);
         let net = Network::homogeneous(m, rng.uniform(0.2, 0.7), rng.uniform(0.2, 0.7));
-        let r = simulate_round(&net, m, s, 6, Decoder::GcPlus { tr: 2 }, rng);
+        let r = simulate_round(&net, &mut Iid, m, s, 6, Decoder::GcPlus { tr: 2 }, rng);
         if let Outcome::Full = r.outcome {
             let agg = r.aggregate.unwrap();
             for (a, t) in agg.iter().zip(&r.true_mean) {
@@ -146,6 +147,7 @@ fn until_decode_always_terminates_with_something() {
         let net = Network::fig6_setting(setting, 10);
         let st = gcplus_recovery(
             &net,
+            &Iid,
             10,
             7,
             RecoveryMode::UntilDecode { tr: 2, max_blocks: 80 },

@@ -1,0 +1,203 @@
+//! Scenario-engine regression tests: the degenerate-equivalence guard
+//! (stateful channel models configured to be memoryless must reproduce the
+//! i.i.d. figures byte-for-byte), registry/JSON integrity, and end-to-end
+//! coverage of every channel model through the sim and outage estimators.
+
+use cogc::network::Network;
+use cogc::outage::mc::{estimate_outage, gcplus_recovery, RecoveryMode};
+use cogc::parallel::MonteCarlo;
+use cogc::scenario::{
+    run_scenario, ChannelSpec, CorrelatedFading, DeadlineStraggler, GilbertElliott, Iid, Scenario,
+};
+use cogc::sim::{self, Decoder};
+use cogc::util::rng::Rng;
+
+/// Degenerate-equivalence guard, figure level: a Gilbert–Elliott channel
+/// with equal good/bad outage probabilities (scale 1 in both states) must
+/// produce the *byte-identical* fig4 and fig6 CSVs of the i.i.d. channel —
+/// burst-state bookkeeping may never leak into the emission stream.
+#[test]
+fn degenerate_gilbert_elliott_reproduces_iid_fig4_fig6_csvs() {
+    let ge = GilbertElliott::new(0.2, 0.3, (1.0, 1.0), (1.0, 1.0));
+
+    let fig4_iid = cogc::figures::fig4_channel(&Iid, 400, 42, 2).to_csv();
+    let fig4_ge = cogc::figures::fig4_channel(&ge, 400, 42, 2).to_csv();
+    assert_eq!(fig4_iid, fig4_ge, "fig4 CSV must be byte-identical");
+
+    let fig6_iid = cogc::figures::fig6_channel(&Iid, 100, 42, 2).to_csv();
+    let fig6_ge = cogc::figures::fig6_channel(&ge, 100, 42, 2).to_csv();
+    assert_eq!(fig6_iid, fig6_ge, "fig6 CSV must be byte-identical");
+}
+
+/// Degenerate-equivalence guard, estimator level: a deadline-straggler
+/// channel with deadline = ∞ matches the i.i.d. tallies bit-for-bit (the
+/// latency draws live on the private stream and every one of them beats an
+/// infinite deadline).
+#[test]
+fn infinite_deadline_straggler_matches_iid_tallies() {
+    let net = Network::fig6_setting(2, 10);
+    let code = cogc::gc::GcCode::generate(10, 7, &mut Rng::new(1));
+    let ds = DeadlineStraggler::new(f64::INFINITY, 0.5, 1.0, 0.2, 0.2, 3.0);
+
+    let mc = MonteCarlo::new(0xD00D);
+    let po_iid = estimate_outage(&net, &code, &Iid, 3_000, &mc);
+    let po_ds = estimate_outage(&net, &code, &ds, 3_000, &mc);
+    assert_eq!(po_iid.to_bits(), po_ds.to_bits(), "outage estimate must match bit-exactly");
+
+    let rec_iid =
+        gcplus_recovery(&net, &Iid, 10, 7, RecoveryMode::FixedTr(2), 800, &MonteCarlo::new(5));
+    let rec_ds =
+        gcplus_recovery(&net, &ds, 10, 7, RecoveryMode::FixedTr(2), 800, &MonteCarlo::new(5));
+    assert_eq!(rec_iid, rec_ds, "recovery stats (incl. |K4| histogram) must match");
+
+    let sweep_iid =
+        sim::sweep(&net, &Iid, 10, 7, 5, Decoder::GcPlus { tr: 2 }, 300, &MonteCarlo::new(9));
+    let sweep_ds =
+        sim::sweep(&net, &ds, 10, 7, 5, Decoder::GcPlus { tr: 2 }, 300, &MonteCarlo::new(9));
+    assert_eq!(sweep_iid, sweep_ds, "sim sweep stats must match");
+}
+
+/// Zero-coupling correlated fading is the third degenerate case.
+#[test]
+fn zero_coupling_fading_matches_iid_tallies() {
+    let net = Network::homogeneous(8, 0.3, 0.3);
+    let code = cogc::gc::GcCode::generate(8, 5, &mut Rng::new(2));
+    let cf = CorrelatedFading::new(0.0, 25.0, 0.9);
+    let mc = MonteCarlo::new(77);
+    let a = estimate_outage(&net, &code, &Iid, 2_000, &mc);
+    let b = estimate_outage(&net, &code, &cf, 2_000, &mc);
+    assert_eq!(a.to_bits(), b.to_bits());
+}
+
+/// Non-degenerate stateful channels must actually change the statistics —
+/// otherwise the engine is dead code. Per-link chains at stationarity leave
+/// *single-attempt* statistics untouched (links are independent with the
+/// same marginal), so the burstiness is visible exactly where the paper's
+/// repetition protocols live: across stacked attempts. A c2c link that is
+/// alternately perfect/dead with high persistence has the same marginal
+/// outage 0.5 as the i.i.d. channel, but its two stacked attempts are
+/// nearly copies of each other — the GC⁺ recovery split must shift.
+#[test]
+fn bursty_channel_changes_multi_attempt_statistics() {
+    // every link alternates perfect/dead with persistence 0.8 (pb = 0.5,
+    // outage 0 in the good state, 1 in the bad — 0.5·2 clamped), so the
+    // stationary marginal equals the network's iid p = 0.5 on both sides
+    let net = Network::homogeneous(10, 0.5, 0.5);
+    let ge = GilbertElliott::new(0.1, 0.1, (0.0, 2.0), (0.0, 2.0));
+    assert!((ge.stationary_outage_c2c(0.5) - 0.5).abs() < 1e-12);
+    assert!((ge.stationary_outage_c2s(0.5) - 0.5).abs() < 1e-12);
+
+    // single attempt: identical statistics (independent links, same
+    // marginal) — the MC estimates must agree within noise
+    let net2 = Network::homogeneous(10, 0.4, 0.25);
+    let ge2 = GilbertElliott::new(0.05, 0.15, (0.0, 4.0), (1.0, 1.0));
+    assert!((ge2.stationary_outage_c2c(0.25) - 0.25).abs() < 1e-12);
+    let code = cogc::gc::GcCode::generate(10, 7, &mut Rng::new(3));
+    let trials = 20_000;
+    let po_iid = estimate_outage(&net2, &code, &Iid, trials, &MonteCarlo::new(4));
+    let po_ge = estimate_outage(&net2, &code, &ge2, trials, &MonteCarlo::new(4));
+    let sigma = (po_iid.max(1e-3) * (1.0 - po_iid.max(1e-3)) / trials as f64).sqrt();
+    assert!(
+        (po_iid - po_ge).abs() < 6.0 * sigma + 5e-3,
+        "single-attempt P_O must be marginal-equal: iid {po_iid:.4} vs ge {po_ge:.4}"
+    );
+
+    // two stacked attempts: the temporal correlation must move the split
+    // (numpy mirror of this exact config measures TV ≈ 0.11)
+    let rec_trials = 10_000;
+    let mode = RecoveryMode::FixedTr(2);
+    let rec_iid = gcplus_recovery(&net, &Iid, 10, 7, mode, rec_trials, &MonteCarlo::new(6));
+    let rec_ge = gcplus_recovery(&net, &ge, 10, 7, mode, rec_trials, &MonteCarlo::new(6));
+    // total-variation distance over the 4-way outcome split
+    let n = rec_trials as f64;
+    let split = |r: &cogc::outage::RecoveryStats| {
+        [r.standard as f64 / n, r.full as f64 / n, r.partial as f64 / n, r.none as f64 / n]
+    };
+    let (a, b) = (split(&rec_iid), split(&rec_ge));
+    let tv = 0.5 * a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum::<f64>();
+    assert!(
+        tv > 0.03,
+        "bursty dynamics left the 2-attempt recovery split unchanged (TV = {tv:.4}): \
+         iid full/partial/none = {:.3}/{:.3}/{:.3}, ge = {:.3}/{:.3}/{:.3}",
+        rec_iid.p_full(),
+        rec_iid.p_partial(),
+        rec_iid.p_none(),
+        rec_ge.p_full(),
+        rec_ge.p_partial(),
+        rec_ge.p_none()
+    );
+}
+
+/// Every built-in scenario runs end-to-end through the figure harness and
+/// emits a well-formed time series.
+#[test]
+fn every_builtin_scenario_emits_a_well_formed_time_series() {
+    for sc in cogc::scenario::builtin() {
+        let t = cogc::figures::scenario_sweep(&sc, 10, 7, 0);
+        assert_eq!(t.rows.len(), sc.rounds, "{}", sc.name);
+        assert_eq!(t.header.len(), 10, "{}", sc.name);
+        let csv = t.to_csv();
+        assert!(csv.contains(&sc.name), "comment must name the scenario");
+        for row in &t.rows {
+            // p_standard + p_full + p_partial + p_none == 1 (columns 3..=6)
+            let sum: f64 = row[3..=6].iter().map(|c| c.parse::<f64>().unwrap()).sum();
+            assert!((sum - 1.0).abs() < 1e-9, "{}: outcome split sums to {sum}", sc.name);
+            let hit: f64 = row[9].parse().unwrap();
+            assert!((0.0..=1.0).contains(&hit), "{}", sc.name);
+        }
+    }
+}
+
+/// A scenario spec written to disk loads back and runs (the
+/// `cogc scenario run --file` path).
+#[test]
+fn scenario_json_file_roundtrip_and_run() {
+    let sc = cogc::scenario::find("straggler-harsh").unwrap();
+    let path = std::env::temp_dir().join("cogc_scenario_roundtrip.json");
+    std::fs::write(&path, sc.to_json().serialize()).unwrap();
+    let loaded = Scenario::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded, sc);
+    let series = run_scenario(&loaded, 5, &MonteCarlo::new(1));
+    assert_eq!(series.rounds.len(), loaded.rounds);
+    // harsh deadlines must be visible in the diagnostics
+    let misses: usize = series
+        .rounds
+        .iter()
+        .map(|t| t.channel.deadline_total - t.channel.deadline_hits)
+        .sum();
+    assert!(misses > 0, "straggler-harsh should miss deadlines");
+}
+
+/// The trainer accepts a stateful channel spec and stays seed-reproducible
+/// (two identical runs, same CSV), exercising channel state across rounds
+/// inside the full training loop.
+#[test]
+fn trainer_with_bursty_channel_is_reproducible() {
+    use cogc::coordinator::{Aggregator, TrainConfig, Trainer};
+    let backend = cogc::runtime::Backend::native();
+    let m = backend.manifest().m;
+    let net = Network::homogeneous(m, 0.4, 0.2);
+    let mk_cfg = || {
+        let mut cfg = TrainConfig::new(
+            "mnist_cnn",
+            Aggregator::GcPlus { tr: 2, until_decode: true, max_blocks: 10 },
+        );
+        cfg.rounds = 3;
+        cfg.per_client = 40;
+        cfg.eval_batches = 2;
+        cfg.seed = 11;
+        cfg.combine = cogc::runtime::CombineImpl::Native;
+        cfg.channel = ChannelSpec::GilbertElliott {
+            p_gb: 0.1,
+            p_bg: 0.2,
+            c2c_scale: (0.5, 4.0),
+            c2s_scale: (0.5, 4.0),
+        };
+        cfg
+    };
+    let log_a = Trainer::new(&backend, mk_cfg(), net.clone()).unwrap().run().unwrap();
+    let log_b = Trainer::new(&backend, mk_cfg(), net).unwrap().run().unwrap();
+    assert_eq!(log_a.to_csv(), log_b.to_csv(), "bursty training must be seed-reproducible");
+    assert_eq!(log_a.rounds.len(), 3);
+}
