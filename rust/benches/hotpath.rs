@@ -1,8 +1,10 @@
 //! Hot-path microbenchmarks: the per-round compute surface of the
 //! coordinator — coded combines (Pallas artifact vs native rust), RREF
-//! decode, code generation, combinator solve, Monte-Carlo trial sweeps
-//! (serial vs parallel engine), scenario-engine sweeps per channel model,
-//! and single train steps.
+//! decode (batch re-factor vs the incremental engine at until-decode stack
+//! depths 6/20/40), code generation, combinator solve, native dense
+//! kernels (blocked/unrolled vs scalar reference), Monte-Carlo trial
+//! sweeps (serial vs parallel engine), scenario-engine sweeps per channel
+//! model, and single train steps.
 //!
 //!     cargo bench --bench hotpath
 //!
@@ -18,6 +20,7 @@ use cogc::network::{Network, Realization};
 use cogc::outage::exact::poisson_binomial_pmf;
 use cogc::outage::mc::{estimate_outage, gcplus_recovery, RecoveryMode};
 use cogc::parallel::{available_threads, MonteCarlo};
+use cogc::runtime::native::kernels;
 use cogc::runtime::{coded::native_combine, Backend, CodedKernels, CombineImpl, ModelRuntime};
 use cogc::scenario::{self, run_scenario, Iid};
 use cogc::testing::fake_batch;
@@ -54,6 +57,92 @@ fn main() {
     suite.bench("poisson_binomial_pmf M=10", || {
         cogc::bench::black_box(poisson_binomial_pmf(&ps));
     });
+
+    // ── decode engine: batch re-RREF vs incremental (until-decode) ──────
+    // Algorithm 1's until-decode loop polls "anything decodable yet?" after
+    // every tr=2-attempt block. The pre-incremental protocol re-stacked and
+    // re-factored everything received so far on every poll (O(blocks²·M²)
+    // per round); the incremental decoder eliminates each newly delivered
+    // row once (O(rows·rank·M)). Both rows execute the *same* decode
+    // schedule over the same fixed attempt set — only the engine differs.
+    {
+        let net3 = Network::fig6_setting(3, 10); // poor uplinks: sparse rows
+        for target_rows in [6usize, 20, 40] {
+            let mut arng = Rng::new(1000 + target_rows as u64);
+            let mut attempts = Vec::new();
+            let mut rows = 0usize;
+            while rows < target_rows {
+                let code = GcCode::generate(10, 7, &mut arng);
+                let att = gc::Attempt::observe(&code, &Realization::sample(&net3, &mut arng));
+                rows += att.delivered.len();
+                attempts.push(att);
+            }
+            let n_blocks = attempts.len().div_ceil(2);
+            suite.bench(
+                &format!("until-decode batch re-rref  ({rows} rows, {n_blocks} blocks)"),
+                || {
+                    for b in 1..=n_blocks {
+                        let upto = (2 * b).min(attempts.len());
+                        let stacked = gc::stack_attempts(&attempts[..upto]);
+                        cogc::bench::black_box(gc::decode(&stacked).k4.len());
+                    }
+                },
+            );
+            suite.bench(
+                &format!("until-decode incremental    ({rows} rows, {n_blocks} blocks)"),
+                || {
+                    let mut dec = gc::GcPlusDecoder::new(10);
+                    for chunk in attempts.chunks(2) {
+                        for att in chunk {
+                            dec.push_attempt(att);
+                        }
+                        cogc::bench::black_box(dec.decodable_count());
+                    }
+                },
+            );
+        }
+    }
+
+    // ── native kernels: blocked/unrolled vs scalar reference ────────────
+    // The fwd/bwd compute surface of every native train_step, at the
+    // mnist_cnn layer shapes (B=32: 196→64 hidden, 64→10 head).
+    {
+        let mut krng = Rng::new(77);
+        for (rows, n_in, n_out) in [(32usize, 196usize, 64usize), (32, 64, 10)] {
+            let x: Vec<f32> = (0..rows * n_in)
+                .map(|_| if krng.bernoulli(0.5) { 0.0 } else { krng.normal() as f32 })
+                .collect();
+            let w: Vec<f32> = (0..n_in * n_out).map(|_| krng.normal() as f32).collect();
+            let b: Vec<f32> = (0..n_out).map(|_| krng.normal() as f32).collect();
+            let dy: Vec<f32> = (0..rows * n_out).map(|_| krng.normal() as f32).collect();
+            let shape = format!("{rows}x{n_in}->{n_out}");
+            let flops = (2 * rows * n_in * n_out) as f64;
+            suite.bench_throughput(&format!("affine naive    {shape}"), flops, "flop", || {
+                cogc::bench::black_box(kernels::affine_ref(&x, rows, n_in, &w, &b, n_out));
+            });
+            suite.bench_throughput(&format!("affine blocked  {shape}"), flops, "flop", || {
+                cogc::bench::black_box(kernels::affine(&x, rows, n_in, &w, &b, n_out));
+            });
+            suite.bench_throughput(&format!("matmul_bt naive   {shape}"), flops, "flop", || {
+                cogc::bench::black_box(kernels::matmul_bt_ref(&dy, rows, n_out, &w, n_in));
+            });
+            suite.bench_throughput(&format!("matmul_bt blocked {shape}"), flops, "flop", || {
+                cogc::bench::black_box(kernels::matmul_bt(&dy, rows, n_out, &w, n_in));
+            });
+            suite.bench_throughput(&format!("matgrad naive   {shape}"), flops, "flop", || {
+                let mut gw = vec![0.0f32; n_in * n_out];
+                let mut gb = vec![0.0f32; n_out];
+                kernels::accum_matgrad_ref(&x, rows, n_in, &dy, n_out, &mut gw, &mut gb);
+                cogc::bench::black_box((gw, gb));
+            });
+            suite.bench_throughput(&format!("matgrad blocked {shape}"), flops, "flop", || {
+                let mut gw = vec![0.0f32; n_in * n_out];
+                let mut gb = vec![0.0f32; n_out];
+                kernels::accum_matgrad(&x, rows, n_in, &dy, n_out, &mut gw, &mut gb);
+                cogc::bench::black_box((gw, gb));
+            });
+        }
+    }
 
     // ── Monte-Carlo trial sweeps: serial vs parallel engine ─────────────
     // The Fig. 4 / Fig. 6 workload shapes; same seeds at both thread

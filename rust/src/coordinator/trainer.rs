@@ -409,7 +409,11 @@ impl Trainer {
         let blocks = if until_decode { max_blocks.max(1) } else { 1 };
         let mut tx = 0usize;
         let mut attempts_used = 0usize;
-        let mut observed: Vec<gc::Attempt> = Vec::new();
+        // incremental decoder over the delivered coefficient rows: each new
+        // row is eliminated against the reduced form in O(rank·M) — the
+        // per-block "anything decodable yet?" test needs no re-stack and no
+        // re-RREF of everything received so far (§Perf)
+        let mut decoder = gc::GcPlusDecoder::new(self.m);
         // payload rows delivered to the PS, in stack order
         let mut payload_rows: Vec<Vec<f32>> = Vec::new();
         // one gradient literal for the whole round (§Perf)
@@ -443,18 +447,15 @@ impl Trainer {
                 for &r in &att.delivered {
                     payload_rows.push(sums[r * self.d..(r + 1) * self.d].to_vec());
                 }
-                observed.push(att);
+                decoder.push_attempt(&att);
             }
-            // complementary decode over everything received so far
-            let stacked_coeffs = gc::stack_attempts(&observed);
-            if stacked_coeffs.rows == 0 {
+            // complementary decode over everything received so far — the
+            // engine already holds the reduced form of every pushed row
+            if decoder.rows() == 0 || decoder.decodable_count() == 0 {
                 continue;
             }
-            let dec = gc::decode(&stacked_coeffs);
-            if dec.k4.is_empty() {
-                continue;
-            }
-            let rows = stacked_coeffs.rows;
+            let dec = decoder.decode();
+            let rows = decoder.rows();
             let delta = if rows <= self.mt {
                 // Pallas path: pad weights to [M, MT] and payload to [MT, D]
                 let w = gc::gcplus::pad_weights(&dec, self.m, self.mt);

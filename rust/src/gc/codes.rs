@@ -36,16 +36,25 @@ pub struct GcCode {
 impl GcCode {
     /// Cyclic support of row `m`: `{m, m+1, …, m+s} mod M`.
     pub fn support(m: usize, s: usize, row: usize) -> Vec<usize> {
-        (0..=s).map(|o| (row + o) % m).collect()
+        Self::support_iter(m, s, row).collect()
+    }
+
+    /// Allocation-free form of [`GcCode::support`] — the per-row hot loops
+    /// (completeness checks run once per delivered row per attempt)
+    /// iterate the cyclic support without materializing a `Vec`.
+    pub fn support_iter(m: usize, s: usize, row: usize) -> impl Iterator<Item = usize> {
+        (0..=s).map(move |o| (row + o) % m)
     }
 
     /// Incoming-neighbor set `K₂(row)` (paper §III): the clients this client
     /// must hear from — its row support minus itself.
     pub fn incoming(&self, row: usize) -> Vec<usize> {
-        Self::support(self.m, self.s, row)
-            .into_iter()
-            .filter(|&k| k != row)
-            .collect()
+        self.incoming_iter(row).collect()
+    }
+
+    /// Allocation-free form of [`GcCode::incoming`].
+    pub fn incoming_iter(&self, row: usize) -> impl Iterator<Item = usize> {
+        Self::support_iter(self.m, self.s, row).filter(move |&k| k != row)
     }
 
     /// Outgoing-neighbor set `K₁(col)`: the clients this client's gradient is

@@ -18,13 +18,22 @@ use crate::linalg::{solve_consistent, Matrix};
 /// non-received positions, or `None` when the pattern is undecodable
 /// (fewer than `M − s` rows received — the "overall outage").
 pub fn find_combinator(code: &GcCode, received: &[usize]) -> Option<Vec<f64>> {
-    let m = code.m;
+    find_combinator_rows(&code.b, code.s, received)
+}
+
+/// [`find_combinator`] over a raw allocation matrix (e.g. the complete
+/// rows of a perturbed `B̃`, which equal the original code rows) — saves
+/// callers from materializing a `GcCode` wrapper around a matrix they
+/// already hold.
+pub fn find_combinator_rows(b: &Matrix, s: usize, received: &[usize]) -> Option<Vec<f64>> {
+    let m = b.rows;
+    debug_assert_eq!(b.cols, m);
     debug_assert!(received.iter().all(|&r| r < m));
-    if received.len() < m - code.s {
+    if received.len() < m - s {
         return None; // information-theoretically impossible
     }
     // Solve  B_F^T · a_F = 1  (M equations, |F| unknowns).
-    let bf_t = code.b.select_rows(received).transpose();
+    let bf_t = b.select_rows(received).transpose();
     let ones = vec![1.0; m];
     let af = solve_consistent(&bf_t, &ones)?;
     let mut full = vec![0.0; m];

@@ -14,9 +14,16 @@
 //! - [`decode_approx`] — the paper's Algorithm 2, a cheaper full-rank-block
 //!   test (footnote 1 calls it an approximation). It succeeds only when all
 //!   nonzero columns are simultaneously decodable; `decode` subsumes it.
+//!
+//! Both run on the incremental engine ([`crate::linalg::IncrementalRref`]);
+//! the until-decode hot loops use the persistent [`GcPlusDecoder`], which
+//! eliminates each newly delivered row against the existing reduced form
+//! instead of re-factoring the whole growing stack every block — same
+//! results, bit for bit, at `O(rows · rank · M)` per trial instead of
+//! `O(blocks² · M²)`.
 
 use crate::gc::codes::GcCode;
-use crate::linalg::{decodable_columns, rref_with_transform, Matrix};
+use crate::linalg::{IncrementalRref, Matrix};
 use crate::network::Realization;
 
 /// Erasure-perturbed coefficients `B̃ = B ∘ T(r)` (paper eq. (22), before
@@ -43,7 +50,7 @@ pub fn delivered_rows(tau: &[bool]) -> Vec<usize> {
 
 /// Whether a perturbed row is *complete* (heard all incoming neighbors).
 pub fn is_complete_row(code: &GcCode, bt: &Matrix, row: usize) -> bool {
-    code.incoming(row).iter().all(|&k| bt[(row, k)] != 0.0)
+    code.incoming_iter(row).all(|k| bt[(row, k)] != 0.0)
 }
 
 /// One communication attempt as observed by the PS.
@@ -59,14 +66,47 @@ pub struct Attempt {
 
 impl Attempt {
     pub fn observe(code: &GcCode, real: &Realization) -> Attempt {
-        let perturbed = perturb(code, real);
-        let delivered = delivered_rows(&real.tau);
-        let complete = delivered
-            .iter()
-            .copied()
-            .filter(|&r| is_complete_row(code, &perturbed, r))
-            .collect();
-        Attempt { perturbed, delivered, complete }
+        let mut att = Attempt::empty();
+        Attempt::observe_into(code, real, &mut att);
+        att
+    }
+
+    /// An empty buffer suitable for [`Attempt::observe_into`] reuse.
+    pub fn empty() -> Attempt {
+        Attempt {
+            perturbed: Matrix::zeros(0, 0),
+            delivered: Vec::new(),
+            complete: Vec::new(),
+        }
+    }
+
+    /// [`Attempt::observe`] into a reused buffer: resizes `out` on first
+    /// use, allocates nothing on steady-state reuse (the Monte-Carlo
+    /// hot-loop contract — one `Attempt` per worker serves every trial).
+    pub fn observe_into(code: &GcCode, real: &Realization, out: &mut Attempt) {
+        let m = code.m;
+        debug_assert_eq!(real.m(), m);
+        if out.perturbed.rows != m || out.perturbed.cols != m {
+            out.perturbed = Matrix::zeros(m, m);
+        }
+        for i in 0..m {
+            let brow = &code.b.data[i * m..(i + 1) * m];
+            let trow = &real.t[i];
+            let prow = out.perturbed.row_mut(i);
+            for j in 0..m {
+                prow[j] = if i == j || trow[j] { brow[j] } else { 0.0 };
+            }
+        }
+        out.delivered.clear();
+        out.complete.clear();
+        for (i, &up) in real.tau.iter().enumerate() {
+            if up {
+                out.delivered.push(i);
+                if is_complete_row(code, &out.perturbed, i) {
+                    out.complete.push(i);
+                }
+            }
+        }
     }
 
     /// The coefficient rows the PS actually holds from this attempt
@@ -89,23 +129,42 @@ pub struct Decoded {
     pub rank: usize,
 }
 
+/// Extract the [`Decoded`] of the engine's current state: every unit pivot
+/// row pins its column's local model; the transform rows are the
+/// extraction weights. Shared by [`decode`], [`decode_approx`], and
+/// [`GcPlusDecoder::decode`], so every path produces bit-identical output
+/// for the same pushed row stream.
+fn extract_decoded(inc: &IncrementalRref) -> Decoded {
+    let n = inc.rows();
+    let mut k4 = Vec::new();
+    let mut rows = Vec::new();
+    for (c, i) in inc.decodable() {
+        k4.push(c);
+        rows.push(i);
+    }
+    let mut weights = Matrix::zeros(k4.len(), n);
+    for (w, &i) in rows.iter().enumerate() {
+        weights.row_mut(w).copy_from_slice(inc.t_row(i));
+    }
+    Decoded { k4, weights, rank: inc.rank() }
+}
+
 /// Exact GC⁺ detection over the stacked coefficient matrix (rows × M).
 ///
 /// Returns the set of *all* individually decodable local models and the
 /// transform rows that extract them. Empty `k4` means the complementary
 /// decoder failed too (the PS decodes nothing this round).
+///
+/// This is the batch convenience form: it runs the rows through a fresh
+/// [`IncrementalRref`]; a persistent [`GcPlusDecoder`] fed the same rows
+/// decodes bit-identically without re-factoring the stack per block.
 pub fn decode(stacked: &Matrix) -> Decoded {
     if stacked.rows == 0 {
         return Decoded { k4: Vec::new(), weights: Matrix::zeros(0, 0), rank: 0 };
     }
-    let rr = rref_with_transform(stacked);
-    let dec = decodable_columns(&rr);
-    let k4: Vec<usize> = dec.iter().map(|&(c, _)| c).collect();
-    let mut weights = Matrix::zeros(k4.len(), stacked.rows);
-    for (i, &(_, r)) in dec.iter().enumerate() {
-        weights.row_mut(i).copy_from_slice(rr.t.row(r));
-    }
-    Decoded { k4, weights, rank: rr.rank }
+    let mut inc = IncrementalRref::with_capacity(stacked.cols, stacked.rows);
+    inc.push_matrix(stacked);
+    extract_decoded(&inc)
 }
 
 /// The paper's Algorithm 2 (approximate detection): decode only when the
@@ -118,36 +177,107 @@ pub fn decode_approx(stacked: &Matrix) -> Decoded {
     if stacked.rows == 0 {
         return Decoded { k4: Vec::new(), weights: Matrix::zeros(0, 0), rank: 0 };
     }
-    let rr = rref_with_transform(stacked);
+    let mut inc = IncrementalRref::with_capacity(stacked.cols, stacked.rows);
+    inc.push_matrix(stacked);
     // K4: nonzero columns of E;  K5: nonzero rows of E (= rank).
-    let nonzero_cols: Vec<usize> = (0..stacked.cols)
-        .filter(|&c| (0..stacked.rows).any(|r| rr.e[(r, c)] != 0.0))
-        .collect();
-    if nonzero_cols.len() != rr.rank {
-        return Decoded { k4: Vec::new(), weights: Matrix::zeros(0, 0), rank: rr.rank };
+    if inc.nonzero_col_count() != inc.rank() {
+        return Decoded { k4: Vec::new(), weights: Matrix::zeros(0, 0), rank: inc.rank() };
     }
     // Full column rank on the nonzero block: every nonzero column is a
     // pivot with a unit RREF row — identical to the exact extraction.
-    let dec = decodable_columns(&rr);
-    debug_assert_eq!(dec.len(), nonzero_cols.len());
-    let k4: Vec<usize> = dec.iter().map(|&(c, _)| c).collect();
-    let mut weights = Matrix::zeros(k4.len(), stacked.rows);
-    for (i, &(_, r)) in dec.iter().enumerate() {
-        weights.row_mut(i).copy_from_slice(rr.t.row(r));
+    let dec = extract_decoded(&inc);
+    debug_assert_eq!(dec.k4.len(), dec.rank);
+    dec
+}
+
+/// Persistent per-trial GC⁺ decoder: the incremental engine plus the
+/// attempt-feeding conventions of Algorithm 1's until-decode loop.
+///
+/// Feed each communication attempt's delivered coefficient rows with
+/// [`push_attempt`](GcPlusDecoder::push_attempt) (rows stream straight out
+/// of the attempt's perturbed matrix — no intermediate stack is ever
+/// materialized), poll [`decodable_count`](GcPlusDecoder::decodable_count)
+/// after each block (allocation-free), and call
+/// [`decode`](GcPlusDecoder::decode) once something is decodable. The
+/// result is bit-for-bit the [`decode`] of the equivalent
+/// [`stack_attempts`] matrix, at `O(rank · M)` per pushed row instead of a
+/// full re-factor per block. [`reset`](GcPlusDecoder::reset) recycles all
+/// buffers for the next trial.
+pub struct GcPlusDecoder {
+    inc: IncrementalRref,
+}
+
+impl GcPlusDecoder {
+    pub fn new(m: usize) -> GcPlusDecoder {
+        GcPlusDecoder { inc: IncrementalRref::with_capacity(m, 4 * m.max(1)) }
     }
-    Decoded { k4, weights, rank: rr.rank }
+
+    /// Clear for a fresh trial over `m` clients, keeping all allocations.
+    pub fn reset(&mut self, m: usize) {
+        self.inc.reset(m);
+    }
+
+    /// Push the delivered coefficient rows of one attempt, in `delivered`
+    /// order (the same order [`stack_attempts`] emits).
+    pub fn push_attempt(&mut self, att: &Attempt) {
+        for &r in &att.delivered {
+            self.inc.push_row(att.perturbed.row(r));
+        }
+    }
+
+    /// Push one received coefficient row.
+    pub fn push_row(&mut self, coeffs: &[f64]) {
+        self.inc.push_row(coeffs);
+    }
+
+    /// Coefficient rows received so far (the stacked-matrix height).
+    pub fn rows(&self) -> usize {
+        self.inc.rows()
+    }
+
+    /// Numerical rank of the received stack (Lemma 2/3 diagnostics).
+    pub fn rank(&self) -> usize {
+        self.inc.rank()
+    }
+
+    /// `|K₄|` of the current stack without allocating — the per-block
+    /// success test of the until-decode loop.
+    pub fn decodable_count(&self) -> usize {
+        self.inc.decodable_count()
+    }
+
+    /// Full decode of the current stack (identical to batch [`decode`] of
+    /// the stacked rows).
+    pub fn decode(&self) -> Decoded {
+        if self.inc.rows() == 0 {
+            return Decoded { k4: Vec::new(), weights: Matrix::zeros(0, 0), rank: 0 };
+        }
+        extract_decoded(&self.inc)
+    }
+
+    /// The underlying engine (rank/pivot introspection).
+    pub fn engine(&self) -> &IncrementalRref {
+        &self.inc
+    }
 }
 
 /// Stack the received coefficient rows of several attempts
-/// (`B̂(r) = [B̂_1; …; B̂_{t_r}]`, delivered rows only).
+/// (`B̂(r) = [B̂_1; …; B̂_{t_r}]`, delivered rows only). Rows stream
+/// directly from each attempt's perturbed matrix into one output
+/// allocation — no intermediate per-attempt matrices.
 pub fn stack_attempts(attempts: &[Attempt]) -> Matrix {
-    let mats: Vec<Matrix> = attempts.iter().map(|a| a.received_coeffs()).collect();
-    if mats.iter().all(|m| m.rows == 0) {
-        let cols = attempts.first().map(|a| a.perturbed.cols).unwrap_or(0);
-        return Matrix::zeros(0, cols);
+    let cols = attempts.first().map(|a| a.perturbed.cols).unwrap_or(0);
+    let rows: usize = attempts.iter().map(|a| a.delivered.len()).sum();
+    let mut out = Matrix::zeros(rows, cols);
+    let mut i = 0;
+    for att in attempts {
+        debug_assert_eq!(att.perturbed.cols, cols, "mixed attempt widths");
+        for &r in &att.delivered {
+            out.row_mut(i).copy_from_slice(att.perturbed.row(r));
+            i += 1;
+        }
     }
-    let refs: Vec<&Matrix> = mats.iter().filter(|m| m.rows > 0).collect();
-    Matrix::vstack(&refs)
+    out
 }
 
 /// Pad decode weights into the fixed `[M, MT]` shape consumed by the AOT

@@ -9,4 +9,4 @@ pub mod rank;
 
 pub use codes::GcCode;
 pub use combinator::{apply_combinator, find_combinator};
-pub use gcplus::{decode, decode_approx, stack_attempts, Attempt, Decoded};
+pub use gcplus::{decode, decode_approx, stack_attempts, Attempt, Decoded, GcPlusDecoder};

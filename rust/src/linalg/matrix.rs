@@ -62,11 +62,33 @@ impl Matrix {
     }
 
     pub fn col(&self, j: usize) -> Vec<f64> {
-        (0..self.rows).map(|i| self[(i, j)]).collect()
+        if self.rows == 0 {
+            return Vec::new();
+        }
+        debug_assert!(j < self.cols);
+        self.data[j..].iter().step_by(self.cols).copied().collect()
     }
 
+    /// Blocked transpose: walks `B×B` tiles so both the source rows and the
+    /// destination rows stay cache-resident, instead of striding the full
+    /// destination once per source element.
     pub fn transpose(&self) -> Matrix {
-        Matrix::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+        const B: usize = 32;
+        let (n, m) = (self.rows, self.cols);
+        let mut out = Matrix::zeros(m, n);
+        for ib in (0..n).step_by(B) {
+            let i1 = (ib + B).min(n);
+            for jb in (0..m).step_by(B) {
+                let j1 = (jb + B).min(m);
+                for i in ib..i1 {
+                    let row = self.row(i);
+                    for j in jb..j1 {
+                        out.data[j * n + i] = row[j];
+                    }
+                }
+            }
+        }
+        out
     }
 
     pub fn matmul(&self, other: &Matrix) -> Matrix {
@@ -88,11 +110,45 @@ impl Matrix {
         out
     }
 
+    /// `out[i] = row(i) · v`, with 4-wide accumulators over `chunks_exact`
+    /// so the dot products autovectorize instead of forming one serial
+    /// dependency chain per row.
     pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
         assert_eq!(self.cols, v.len());
-        (0..self.rows)
-            .map(|i| self.row(i).iter().zip(v).map(|(a, b)| a * b).sum())
-            .collect()
+        let mut out = Vec::with_capacity(self.rows);
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let rc = row.chunks_exact(4);
+            let vc = v.chunks_exact(4);
+            let (rrem, vrem) = (rc.remainder(), vc.remainder());
+            let mut acc = [0.0f64; 4];
+            for (r4, v4) in rc.zip(vc) {
+                acc[0] += r4[0] * v4[0];
+                acc[1] += r4[1] * v4[1];
+                acc[2] += r4[2] * v4[2];
+                acc[3] += r4[3] * v4[3];
+            }
+            let mut s = (acc[0] + acc[2]) + (acc[1] + acc[3]);
+            for (a, b) in rrem.iter().zip(vrem) {
+                s += a * b;
+            }
+            out.push(s);
+        }
+        out
+    }
+
+    /// Append a row (the growable stacked-payload buffer of the sim hot
+    /// loop). Amortized allocation-free once capacity is warm.
+    pub fn push_row(&mut self, row: &[f64]) {
+        assert_eq!(row.len(), self.cols, "push_row width mismatch");
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+
+    /// Drop all rows, keeping the column width and the allocation.
+    pub fn clear_rows(&mut self) {
+        self.rows = 0;
+        self.data.clear();
     }
 
     /// Vertical concatenation (the GC+ `B(r) = [B_1; ...; B_tr]` stack).

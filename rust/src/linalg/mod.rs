@@ -1,9 +1,12 @@
-//! Dense linear algebra substrate: matrices, RREF with transform tracking,
-//! rank, and consistent-system solves. These power the GC code construction
-//! and the GC⁺ complementary decoder.
+//! Dense linear algebra substrate: matrices, RREF with transform tracking
+//! (batch and incremental), rank, and consistent-system solves. These power
+//! the GC code construction and the GC⁺ complementary decoder; the
+//! incremental engine ([`IncrementalRref`]) is the until-decode hot path.
 
 pub mod matrix;
 pub mod rref;
 
 pub use matrix::Matrix;
-pub use rref::{decodable_columns, rank, rref_with_transform, solve_consistent, Rref};
+pub use rref::{
+    decodable_columns, rank, rref_with_transform, solve_consistent, IncrementalRref, Rref,
+};

@@ -1,11 +1,89 @@
 //! Reduced row-echelon form with transform tracking — the decode engine
 //! behind GC⁺ (paper Algorithm 2).
 //!
-//! `rref_with_transform(A)` returns `(E, T, pivots)` with `T · A = E`,
-//! `E` in RREF, and `pivots[j] = Some(row)` for pivot columns. Because the
-//! received partial sums satisfy `S = B̂ · G`, the same transform gives
-//! `T · S = E · G`; any row of `E` that is a unit vector `e_j` decodes the
-//! local model `g_j` as `(T · S)_row = T_row · S`.
+//! Two entry points share one elimination core:
+//!
+//! - [`IncrementalRref`] — the **incremental engine**: maintains
+//!   `(E, T, pivots, rank)` under a stream of [`push_row`] /
+//!   [`push_rows`] calls. Each newly delivered coefficient row is
+//!   eliminated against the existing reduced form in `O(rank · M)` — the
+//!   until-decode loop of GC⁺ therefore costs `O(rows · rank · M)` per
+//!   trial instead of the `O(blocks² · M²)` of re-factoring the whole
+//!   growing stack at every block.
+//! - [`rref_with_transform`] — the batch form: pushes every row of the
+//!   input through a fresh engine and materializes the classic
+//!   `(E, T, pivots)` with `T · A = E`. Because the batch path **is** the
+//!   incremental engine run to completion, decoding incrementally is
+//!   bit-for-bit identical to batch-decoding the same stacked matrix —
+//!   the equivalence the property tests in `tests/incremental_rref.rs`
+//!   pin down.
+//!
+//! Because the received partial sums satisfy `S = B̂ · G`, the tracked
+//! transform gives `T · S = E · G`; any row of `E` that is a unit vector
+//! `e_j` decodes the local model `g_j` as `T_row · S`.
+//!
+//! # Algorithm (one `push_row`)
+//!
+//! 1. Reduce the incoming row against every stored pivot row: for pivot
+//!    column `c` with stored row `r`, subtract `row[c] · E_r` (and the same
+//!    multiple of `T_r` from the incoming transform row). Stored pivot rows
+//!    are zero at every *other* pivot column, so a single pass suffices.
+//! 2. Scan left-to-right for the first entry above the pivot floor
+//!    (`PIVOT_EPS · scale`, see below); entries at or below the floor are
+//!    flushed to exact zero on the way. No such entry ⇒ the row is
+//!    dependent: rank unchanged, nothing stored (the reduced transform
+//!    row remains readable via [`null_transform`] for callers that track
+//!    the null space, e.g. the batch wrapper).
+//! 3. Otherwise normalize the row by the pivot entry, flush sub-tolerance
+//!    residue, and eliminate the new pivot column from every stored row
+//!    (updating their transform rows identically). The new row joins the
+//!    store; `pivots[c]` records it.
+//!
+//! Sorted by pivot column, the stored rows are exactly the nonzero rows of
+//! the RREF of everything pushed so far: each stored row is zero strictly
+//! left of its pivot (entries there are either other pivots' columns —
+//! eliminated exactly — or sub-floor residue flushed in step 2, and
+//! later eliminations only touch columns at or right of the *newer* pivot,
+//! which is always right of any existing pivot the row is nonzero at), so
+//! in exact arithmetic the engine reproduces the unique RREF regardless of
+//! arrival order.
+//!
+//! # Tolerance policy
+//!
+//! Two relative thresholds, both scaled by the largest absolute input
+//! entry pushed **so far** (`scale`):
+//!
+//! - `tol = EPS · max(1, scale)` — the zero threshold: elimination skips,
+//!   residue flushing, and the unit-row test all treat `|v| ≤ tol` as
+//!   exact zero, as the historical batch path did.
+//! - `pivot floor = PIVOT_EPS · max(1, scale)` — the pivot-acceptance
+//!   threshold. The engine pivots on the *leftmost* surviving entry (the
+//!   left-to-right scan is what keeps [`solve_consistent`]'s augmented-
+//!   column trick sound), so, unlike the magnitude-based partial pivoting
+//!   it replaces, nothing would otherwise stop it normalizing by an entry
+//!   barely above `tol` — amplifying rounding residue by up to `1/EPS`
+//!   into the stored rows and the extraction weights. Requiring
+//!   `|pivot| > PIVOT_EPS · scale` bounds that amplification at
+//!   `1/PIVOT_EPS` (≈1e6, keeping elimination error ~1e-10·scale, far
+//!   inside every decode tolerance); a candidate row with no entry above
+//!   the floor is classified dependent — always *conservative* for
+//!   decoding (a dropped row can only shrink the decodable set, never
+//!   corrupt it). Exact dependencies reduce to ~1e-13·scale residue,
+//!   orders below the floor, so generic rank decisions are unaffected.
+//!
+//! Note the scale is a **running prefix maximum**: a row is judged with
+//! the scale known at its push. This is where the engine deliberately
+//! departs from the pre-incremental batch implementation (which computed
+//! one whole-matrix scale up front): a prefix scale is the only definition
+//! under which pushing rows in chunks and pushing them in one batch
+//! perform the identical operation sequence — the bit-for-bit equivalence
+//! the decode paths are built on. For same-magnitude data (the decode
+//! stacks: O(1) coefficients bounded by the code conditioning guard) the
+//! two definitions coincide.
+//!
+//! [`push_row`]: IncrementalRref::push_row
+//! [`push_rows`]: IncrementalRref::push_rows
+//! [`null_transform`]: IncrementalRref::null_transform
 
 use super::matrix::Matrix;
 
@@ -13,93 +91,348 @@ use super::matrix::Matrix;
 /// below `EPS * max_abs` are treated as exact zeros created by elimination.
 pub const EPS: f64 = 1e-9;
 
+/// Relative pivot-acceptance floor: a candidate row's leftmost surviving
+/// entry must exceed `PIVOT_EPS * max_abs` to become a pivot, bounding the
+/// normalization amplification at `1/PIVOT_EPS` (see the module docs'
+/// tolerance-policy section). Rows with no entry above the floor are
+/// classified dependent — conservative for every decode consumer.
+pub const PIVOT_EPS: f64 = 1e-6;
+
 pub struct Rref {
-    /// RREF of the input.
+    /// The nonzero rows of the reduced form first (in pivot-*creation*
+    /// order, which is arrival order — not sorted by pivot column; permute
+    /// rows by ascending pivot column to obtain the textbook RREF), then
+    /// one zero row per dependent input row. Index rows through `pivots`.
     pub e: Matrix,
     /// Row transform with `t · input = e`.
     pub t: Matrix,
-    /// `pivots[c] = Some(r)` if column `c` has its pivot in row `r`.
+    /// `pivots[c] = Some(r)` if column `c` has its pivot in row `r` of `e`.
     pub pivots: Vec<Option<usize>>,
     /// Numerical rank (= number of pivots).
     pub rank: usize,
 }
 
-/// Compute RREF with partial pivoting, tracking the row transform.
+/// Incremental RREF-with-transform over a stream of rows (see module docs).
+///
+/// Only the `rank` pivot rows are stored; rows that reduce to zero carry no
+/// decode information (their transform rows never enter any extraction) and
+/// are dropped after the push reports them. All buffers survive
+/// [`reset`](IncrementalRref::reset), so a pooled engine performs no steady
+/// -state allocation across trials — the Monte-Carlo hot-loop contract.
+pub struct IncrementalRref {
+    cols: usize,
+    /// Total rows pushed (dependent rows included) — the width of `T`.
+    rows_seen: usize,
+    rank: usize,
+    /// Largest |input entry| seen so far (the tolerance scale).
+    max_abs: f64,
+    /// `pivots[c] = Some(i)` — column `c` pivots in stored row `i`.
+    pivots: Vec<Option<usize>>,
+    /// Stored row `i` pivots in column `row_cols[i]` (inverse of `pivots`).
+    row_cols: Vec<usize>,
+    /// Stored pivot rows of `E`, flat, stride `cols`; one extra trailing
+    /// slot holds the row currently being reduced.
+    e: Vec<f64>,
+    /// Transform rows of the stored pivot rows; each has len `rows_seen`.
+    t: Vec<Vec<f64>>,
+    /// Transform row of the row currently being reduced; after a dependent
+    /// push this is the null-space combination (`t_cand · input = 0`).
+    t_cand: Vec<f64>,
+    /// Recycled transform-row buffers (filled by `reset`).
+    t_spare: Vec<Vec<f64>>,
+}
+
+impl IncrementalRref {
+    pub fn new(cols: usize) -> IncrementalRref {
+        IncrementalRref::with_capacity(cols, 0)
+    }
+
+    /// Engine with buffers pre-sized for `rows_hint` pushed rows.
+    pub fn with_capacity(cols: usize, rows_hint: usize) -> IncrementalRref {
+        IncrementalRref {
+            cols,
+            rows_seen: 0,
+            rank: 0,
+            max_abs: 0.0,
+            pivots: vec![None; cols],
+            row_cols: Vec::with_capacity(cols.min(rows_hint.max(8))),
+            e: Vec::with_capacity(cols * (cols + 1)),
+            t: Vec::new(),
+            t_cand: Vec::with_capacity(rows_hint),
+            t_spare: Vec::new(),
+        }
+    }
+
+    /// Clear all state for a fresh stream of `cols`-wide rows, retaining
+    /// every allocation (pooled per-trial reuse).
+    pub fn reset(&mut self, cols: usize) {
+        self.cols = cols;
+        self.rows_seen = 0;
+        self.rank = 0;
+        self.max_abs = 0.0;
+        self.pivots.clear();
+        self.pivots.resize(cols, None);
+        self.row_cols.clear();
+        self.e.clear();
+        self.t_spare.append(&mut self.t);
+        self.t_cand.clear();
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Total rows pushed so far (the width of the transform rows).
+    pub fn rows(&self) -> usize {
+        self.rows_seen
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Current absolute tolerance, `EPS · max(1, largest input entry)`.
+    pub fn tol(&self) -> f64 {
+        EPS * self.max_abs.max(1.0)
+    }
+
+    /// `pivots[c] = Some(i)` — column `c` pivots in stored row `i`.
+    pub fn pivots(&self) -> &[Option<usize>] {
+        &self.pivots
+    }
+
+    /// Stored pivot row `i` of `E` (reduced coefficients, width `cols`).
+    pub fn e_row(&self, i: usize) -> &[f64] {
+        debug_assert!(i < self.rank);
+        &self.e[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Transform row of stored pivot row `i` (`t_row · pushed = e_row`),
+    /// width [`rows`](IncrementalRref::rows).
+    pub fn t_row(&self, i: usize) -> &[f64] {
+        debug_assert!(i < self.rank);
+        &self.t[i]
+    }
+
+    /// After a [`push_row`](IncrementalRref::push_row) that returned
+    /// `None`: the reduced transform row of the dependent push — a
+    /// null-space combination of everything pushed (width `rows`).
+    pub fn null_transform(&self) -> &[f64] {
+        &self.t_cand
+    }
+
+    /// Push one row; returns `Some(pivot_column)` when it increased the
+    /// rank, `None` when it was dependent on the rows already pushed.
+    pub fn push_row(&mut self, row: &[f64]) -> Option<usize> {
+        let cols = self.cols;
+        assert_eq!(row.len(), cols, "push_row width mismatch");
+        self.rows_seen += 1;
+        // transform rows track every pushed row: grow them by one column
+        for tr in &mut self.t {
+            tr.push(0.0);
+        }
+        for &v in row {
+            self.max_abs = self.max_abs.max(v.abs());
+        }
+        let tol = self.tol();
+
+        // stage the incoming row in the trailing scratch slot of `e`
+        if self.e.len() < (self.rank + 1) * cols {
+            self.e.resize((self.rank + 1) * cols, 0.0);
+        }
+        let (stored, cand) = self.e.split_at_mut(self.rank * cols);
+        let cand = &mut cand[..cols];
+        cand.copy_from_slice(row);
+        self.t_cand.clear();
+        self.t_cand.resize(self.rows_seen, 0.0);
+        self.t_cand[self.rows_seen - 1] = 1.0;
+
+        // 1) reduce against every stored pivot row (single pass: stored
+        // rows are zero at each other's pivot columns)
+        for i in 0..self.rank {
+            let c = self.row_cols[i];
+            let f = cand[c];
+            if f == 0.0 {
+                continue;
+            }
+            if f.abs() <= tol {
+                cand[c] = 0.0;
+                continue;
+            }
+            let erow = &stored[i * cols..(i + 1) * cols];
+            for (x, p) in cand.iter_mut().zip(erow) {
+                *x -= f * p;
+            }
+            cand[c] = 0.0; // exact
+            for (x, p) in self.t_cand.iter_mut().zip(&self.t[i]) {
+                *x -= f * p;
+            }
+        }
+
+        // 2) leftmost entry above the pivot floor is the pivot; smaller
+        // entries are flushed on the way (dividing by a near-tolerance
+        // pivot would amplify rounding residue by up to 1/EPS into the
+        // stored rows — the floor caps amplification at 1/PIVOT_EPS; see
+        // the module docs)
+        let pivot_floor = PIVOT_EPS * self.max_abs.max(1.0);
+        let mut pivot = None;
+        for (c, x) in cand.iter_mut().enumerate() {
+            if x.abs() <= pivot_floor {
+                *x = 0.0;
+            } else {
+                pivot = Some(c);
+                break;
+            }
+        }
+        // dependent row ⇒ None: rank unchanged, t_cand = null combination
+        let c = pivot?;
+
+        // 3) normalize, flush, and eliminate the new column everywhere
+        let inv = 1.0 / cand[c];
+        for x in cand.iter_mut() {
+            *x *= inv;
+        }
+        cand[c] = 1.0; // exact
+        for x in cand.iter_mut() {
+            if x.abs() <= tol {
+                *x = 0.0;
+            }
+        }
+        for x in self.t_cand.iter_mut() {
+            *x *= inv;
+        }
+        for i in 0..self.rank {
+            let erow = &mut stored[i * cols..(i + 1) * cols];
+            let f = erow[c];
+            if f == 0.0 {
+                continue;
+            }
+            if f.abs() <= tol {
+                erow[c] = 0.0;
+                continue;
+            }
+            for (x, p) in erow.iter_mut().zip(cand.iter()) {
+                *x -= f * p;
+            }
+            erow[c] = 0.0; // exact
+            for (x, p) in self.t[i].iter_mut().zip(self.t_cand.iter()) {
+                *x -= f * p;
+            }
+        }
+
+        // commit: the scratch slot becomes stored row `rank`
+        self.pivots[c] = Some(self.rank);
+        self.row_cols.push(c);
+        let mut committed = self.t_spare.pop().unwrap_or_default();
+        committed.clear();
+        committed.extend_from_slice(&self.t_cand);
+        self.t.push(committed);
+        self.rank += 1;
+        Some(c)
+    }
+
+    /// Push a flat block of rows (`rows.len()` must divide into `cols`-wide
+    /// rows); equivalent to pushing each row in order.
+    pub fn push_rows(&mut self, rows: &[f64]) {
+        assert!(
+            self.cols > 0 && rows.len() % self.cols == 0,
+            "push_rows: flat slice must be a multiple of cols"
+        );
+        for row in rows.chunks_exact(self.cols) {
+            self.push_row(row);
+        }
+    }
+
+    /// Push every row of a matrix, in order.
+    pub fn push_matrix(&mut self, a: &Matrix) {
+        assert_eq!(a.cols, self.cols, "push_matrix width mismatch");
+        for i in 0..a.rows {
+            self.push_row(a.row(i));
+        }
+    }
+
+    /// Whether stored pivot row `i` is a unit vector up to tolerance —
+    /// i.e. its pivot column's value is pinned by the pushed row space.
+    /// (The batch path reaches the same verdict by flushing sub-tolerance
+    /// residue and testing for exact zeros.)
+    pub fn is_unit_row(&self, i: usize) -> bool {
+        let c = self.row_cols[i];
+        let tol = self.tol();
+        self.e_row(i)
+            .iter()
+            .enumerate()
+            .all(|(j, &v)| j == c || v.abs() <= tol)
+    }
+
+    /// Number of decodable columns (unit pivot rows) — the `|K₄|` of a
+    /// GC⁺ decode, computed without allocating.
+    pub fn decodable_count(&self) -> usize {
+        (0..self.rank).filter(|&i| self.is_unit_row(i)).count()
+    }
+
+    /// Decodable columns in ascending column order, as
+    /// `(column, stored_row)` pairs; `t_row(stored_row)` extracts the
+    /// column's value from the stacked payloads.
+    pub fn decodable(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.pivots
+            .iter()
+            .enumerate()
+            .filter_map(move |(c, p)| match p {
+                Some(i) if self.is_unit_row(*i) => Some((c, *i)),
+                _ => None,
+            })
+    }
+
+    /// Number of columns with any entry above tolerance (the `|K₅|`-vs-
+    /// `|K₄|` test of the paper's Algorithm 2 approximation).
+    pub fn nonzero_col_count(&self) -> usize {
+        let tol = self.tol();
+        (0..self.cols)
+            .filter(|&c| (0..self.rank).any(|i| self.e_row(i)[c].abs() > tol))
+            .count()
+    }
+}
+
+/// Compute RREF with transform tracking: `t · a = e`, `e` in RREF.
+///
+/// This is the incremental engine run over all rows of `a` in order (see
+/// the module docs for pivot selection and the tolerance policy). Rows of
+/// `e`: the `rank` pivot rows first in pivot-creation order, then the zero
+/// rows of the dependent pushes in arrival order; `pivots[c]` indexes into
+/// that layout. Sub-tolerance residue is flushed to exact zero so
+/// downstream structure checks ([`decodable_columns`]) can compare
+/// against literal `0.0`.
 pub fn rref_with_transform(a: &Matrix) -> Rref {
     let (n, m) = (a.rows, a.cols);
-    let mut e = a.clone();
-    let mut t = Matrix::identity(n);
-    let scale = a.max_abs().max(1.0);
-    let tol = EPS * scale;
-
-    let mut pivots: Vec<Option<usize>> = vec![None; m];
-    let mut r = 0; // next pivot row
-    for c in 0..m {
-        if r >= n {
-            break;
-        }
-        // partial pivot: largest |entry| in column c at/below row r
-        let (mut best, mut best_abs) = (r, e[(r, c)].abs());
-        for i in (r + 1)..n {
-            let v = e[(i, c)].abs();
-            if v > best_abs {
-                best = i;
-                best_abs = v;
-            }
-        }
-        if best_abs <= tol {
-            continue; // no pivot in this column
-        }
-        if best != r {
-            e.data.swap_chunks(best, r, m);
-            t.data.swap_chunks(best, r, n);
-        }
-        // normalize pivot row
-        let inv = 1.0 / e[(r, c)];
-        for x in e.row_mut(r) {
-            *x *= inv;
-        }
-        for x in t.row_mut(r) {
-            *x *= inv;
-        }
-        e[(r, c)] = 1.0; // exact
-        // eliminate column c from every other row
-        for i in 0..n {
-            if i == r {
-                continue;
-            }
-            let f = e[(i, c)];
-            if f.abs() <= tol {
-                e[(i, c)] = 0.0;
-                continue;
-            }
-            // e[i] -= f * e[r];  t[i] -= f * t[r]
-            let (erow, eref) = row_pair(&mut e, i, r);
-            for (x, p) in erow.iter_mut().zip(eref.iter()) {
-                *x -= f * p;
-            }
-            let (trow, tref) = row_pair(&mut t, i, r);
-            for (x, p) in trow.iter_mut().zip(tref.iter()) {
-                *x -= f * p;
-            }
-            e[(i, c)] = 0.0; // exact
-        }
-        pivots[c] = Some(r);
-        r += 1;
-    }
-
-    // flush sub-tolerance residue so downstream structure checks are exact
-    for x in &mut e.data {
-        if x.abs() <= tol {
-            *x = 0.0;
+    let mut inc = IncrementalRref::with_capacity(m, n);
+    let mut null_t: Vec<Vec<f64>> = Vec::new();
+    for i in 0..n {
+        if inc.push_row(a.row(i)).is_none() {
+            null_t.push(inc.null_transform().to_vec());
         }
     }
-    Rref { e, t, pivots, rank: r }
+    let tol = inc.tol();
+    let mut e = Matrix::zeros(n, m);
+    let mut t = Matrix::zeros(n, n);
+    for i in 0..inc.rank() {
+        for (x, &v) in e.row_mut(i).iter_mut().zip(inc.e_row(i)) {
+            *x = if v.abs() <= tol { 0.0 } else { v };
+        }
+        t.row_mut(i).copy_from_slice(inc.t_row(i));
+    }
+    for (k, tr) in null_t.iter().enumerate() {
+        let i = inc.rank() + k;
+        t.row_mut(i)[..tr.len()].copy_from_slice(tr);
+    }
+    let rank = inc.rank();
+    Rref { e, t, pivots: inc.pivots().to_vec(), rank }
 }
 
 /// Numerical rank.
 pub fn rank(a: &Matrix) -> usize {
-    rref_with_transform(a).rank
+    let mut inc = IncrementalRref::with_capacity(a.cols, a.rows);
+    inc.push_matrix(a);
+    inc.rank()
 }
 
 /// Solve `A x = b` if consistent (free variables set to 0); `None` otherwise.
@@ -146,36 +479,6 @@ pub fn decodable_columns(rr: &Rref) -> Vec<(usize, usize)> {
         }
     }
     out
-}
-
-// -- helpers -------------------------------------------------------------------
-
-trait SwapChunks {
-    fn swap_chunks(&mut self, i: usize, j: usize, w: usize);
-}
-
-impl SwapChunks for Vec<f64> {
-    fn swap_chunks(&mut self, i: usize, j: usize, w: usize) {
-        if i == j {
-            return;
-        }
-        let (lo, hi) = (i.min(j), i.max(j));
-        let (a, b) = self.split_at_mut(hi * w);
-        a[lo * w..lo * w + w].swap_with_slice(&mut b[..w]);
-    }
-}
-
-/// Mutable access to two distinct rows.
-fn row_pair(m: &mut Matrix, i: usize, r: usize) -> (&mut [f64], &[f64]) {
-    assert_ne!(i, r);
-    let w = m.cols;
-    if i < r {
-        let (a, b) = m.data.split_at_mut(r * w);
-        (&mut a[i * w..i * w + w], &b[..w])
-    } else {
-        let (a, b) = m.data.split_at_mut(i * w);
-        (&mut b[..w], &a[r * w..r * w + w])
-    }
 }
 
 #[cfg(test)]
@@ -269,6 +572,114 @@ mod tests {
         for (c, r) in dec {
             let got: f64 = rr.t.row(r).iter().zip(&s).map(|(w, v)| w * v).sum();
             assert!((got - g[c]).abs() < 1e-8, "g[{c}]: {got} vs {}", g[c]);
+        }
+    }
+
+    // ── incremental engine ──────────────────────────────────────────────
+
+    #[test]
+    fn incremental_tracks_transform_and_rank() {
+        let mut rng = Rng::new(31);
+        let a = Matrix::from_fn(9, 6, |_, _| rng.normal());
+        let mut inc = IncrementalRref::new(6);
+        for i in 0..a.rows {
+            inc.push_row(a.row(i));
+            // invariant after every push: t_row · pushed-prefix == e_row
+            for r in 0..inc.rank() {
+                let trow = inc.t_row(r);
+                assert_eq!(trow.len(), i + 1);
+                for c in 0..6 {
+                    let want: f64 = trow.iter().zip(0..=i).map(|(w, k)| w * a[(k, c)]).sum();
+                    let got = inc.e_row(r)[c];
+                    assert!((want - got).abs() < 1e-7, "push {i} row {r} col {c}");
+                }
+            }
+        }
+        assert_eq!(inc.rank(), 6);
+        assert_eq!(inc.rows(), 9);
+        assert_eq!(inc.decodable_count(), 6); // full rank => all unit
+    }
+
+    #[test]
+    fn incremental_matches_batch_wrapper_bitwise() {
+        let mut rng = Rng::new(77);
+        for trial in 0..30 {
+            let n = 1 + rng.below(12);
+            let m = 1 + rng.below(8);
+            let a = Matrix::from_fn(n, m, |_, _| {
+                if rng.bernoulli(0.25) { 0.0 } else { rng.normal_ms(0.0, 3.0) }
+            });
+            let rr = rref_with_transform(&a);
+            let mut inc = IncrementalRref::new(m);
+            inc.push_matrix(&a);
+            assert_eq!(inc.rank(), rr.rank, "trial {trial}");
+            assert_eq!(inc.pivots(), &rr.pivots[..], "trial {trial}");
+            for i in 0..inc.rank() {
+                let (tb, ti) = (rr.t.row(i), inc.t_row(i));
+                assert_eq!(tb.len(), ti.len());
+                for (x, y) in tb.iter().zip(ti) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "trial {trial} t row {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dependent_push_exposes_null_transform() {
+        let mut inc = IncrementalRref::new(3);
+        assert_eq!(inc.push_row(&[1.0, 2.0, 0.0]), Some(0));
+        // duplicate row: dependent, null transform = [-1, 1]
+        assert_eq!(inc.push_row(&[1.0, 2.0, 0.0]), None);
+        let nt = inc.null_transform();
+        assert_eq!(nt.len(), 2);
+        assert!((nt[0] + 1.0).abs() < 1e-12 && (nt[1] - 1.0).abs() < 1e-12);
+        assert_eq!(inc.rank(), 1);
+        assert_eq!(inc.rows(), 2);
+    }
+
+    #[test]
+    fn reset_reuses_buffers_and_clears_state() {
+        let mut inc = IncrementalRref::with_capacity(4, 16);
+        inc.push_row(&[1.0, 0.0, 2.0, 0.0]);
+        inc.push_row(&[0.0, 1.0, 0.0, 3.0]);
+        assert_eq!(inc.rank(), 2);
+        inc.reset(4);
+        assert_eq!(inc.rank(), 0);
+        assert_eq!(inc.rows(), 0);
+        assert!(inc.pivots().iter().all(|p| p.is_none()));
+        inc.push_row(&[0.0, 0.0, 0.0, 5.0]);
+        assert_eq!(inc.rank(), 1);
+        assert_eq!(inc.decodable_count(), 1);
+        // reset to a different width
+        inc.reset(2);
+        inc.push_row(&[3.0, 0.0]);
+        assert_eq!(inc.pivots(), &[Some(0), None]);
+    }
+
+    #[test]
+    fn zero_and_empty_rows_are_dependent() {
+        let mut inc = IncrementalRref::new(5);
+        assert_eq!(inc.push_row(&[0.0; 5]), None);
+        assert_eq!(inc.rank(), 0);
+        assert_eq!(inc.rows(), 1);
+        assert_eq!(inc.decodable_count(), 0);
+        assert_eq!(inc.nonzero_col_count(), 0);
+    }
+
+    #[test]
+    fn push_rows_flat_equals_row_by_row() {
+        let mut rng = Rng::new(5);
+        let a = Matrix::from_fn(6, 4, |_, _| rng.normal());
+        let mut one = IncrementalRref::new(4);
+        one.push_rows(&a.data);
+        let mut two = IncrementalRref::new(4);
+        for i in 0..6 {
+            two.push_row(a.row(i));
+        }
+        assert_eq!(one.rank(), two.rank());
+        for i in 0..one.rank() {
+            assert_eq!(one.e_row(i), two.e_row(i));
+            assert_eq!(one.t_row(i), two.t_row(i));
         }
     }
 }

@@ -26,18 +26,39 @@ impl Realization {
     pub fn sample_with(
         m: usize,
         rng: &mut Rng,
+        p_c2c: impl FnMut(usize, usize) -> f64,
+        p_c2s: impl FnMut(usize) -> f64,
+    ) -> Realization {
+        let mut out = Realization { t: Vec::new(), tau: Vec::new() };
+        Realization::sample_with_into(m, rng, p_c2c, p_c2s, &mut out);
+        out
+    }
+
+    /// [`Realization::sample_with`] into a reused buffer: identical draws
+    /// in the identical order (the short-circuited diagonal consumes no
+    /// draw), but steady-state reuse allocates nothing — the Monte-Carlo
+    /// hot loops keep one `Realization` per worker and refill it per
+    /// attempt.
+    pub fn sample_with_into(
+        m: usize,
+        rng: &mut Rng,
         mut p_c2c: impl FnMut(usize, usize) -> f64,
         mut p_c2s: impl FnMut(usize) -> f64,
-    ) -> Realization {
-        let t = (0..m)
-            .map(|i| {
-                (0..m)
-                    .map(|j| i == j || !rng.bernoulli(p_c2c(i, j)))
-                    .collect()
-            })
-            .collect();
-        let tau = (0..m).map(|i| !rng.bernoulli(p_c2s(i))).collect();
-        Realization { t, tau }
+        out: &mut Realization,
+    ) {
+        if out.tau.len() != m || out.t.len() != m {
+            out.t = vec![vec![true; m]; m];
+            out.tau = vec![true; m];
+        }
+        for (i, row) in out.t.iter_mut().enumerate() {
+            debug_assert_eq!(row.len(), m);
+            for (j, up) in row.iter_mut().enumerate() {
+                *up = i == j || !rng.bernoulli(p_c2c(i, j));
+            }
+        }
+        for (i, up) in out.tau.iter_mut().enumerate() {
+            *up = !rng.bernoulli(p_c2s(i));
+        }
     }
 
     /// Draw a fresh memoryless realization from the network's per-link

@@ -8,24 +8,42 @@
 //! (serial reference = the same engine at `threads = 1`; see
 //! `tests/parallel_determinism.rs` for the hand-rolled cross-check).
 //!
-//! Erasures are drawn through a [`ChannelModel`] prototype — each trial
-//! clones it and resets per-trial state from the channel substream, so
-//! bursty/correlated/straggler dynamics ([`crate::scenario`]) slot into
-//! every estimator unchanged. Pass [`Iid`](crate::scenario::Iid) for the
-//! paper's memoryless statistics.
+//! Erasures are drawn through a [`ChannelModel`] prototype — the engine
+//! clones it **once per worker** and resets the per-trial state from the
+//! channel substream, so bursty/correlated/straggler dynamics
+//! ([`crate::scenario`]) slot into every estimator unchanged. Pass
+//! [`Iid`](crate::scenario::Iid) for the paper's memoryless statistics.
+//!
+//! The trial bodies are allocation-free at steady state: each worker pools
+//! one channel box, one [`Realization`], one [`gc::Attempt`], and one
+//! persistent [`gc::GcPlusDecoder`] ([`MonteCarlo::run_scratch`]); the
+//! until-decode loop feeds newly delivered rows into the incremental
+//! decoder instead of re-running a full RREF over the growing stack every
+//! block.
 
 use crate::gc::{self, GcCode};
-use crate::network::Network;
+use crate::network::{Network, Realization};
 use crate::parallel::{Accumulate, MonteCarlo};
 use crate::scenario::{ChannelModel, CHANNEL_STREAM};
 use crate::util::rng::Rng;
 
-/// One outage trial: does this round deliver fewer than `M − s` complete
-/// partial sums?
-fn outage_trial(net: &Network, code: &GcCode, ch: &mut dyn ChannelModel, rng: &mut Rng) -> bool {
-    let real = ch.sample(net, rng);
-    let att = gc::Attempt::observe(code, &real);
-    att.complete.len() < net.m - code.s
+/// Pooled per-worker buffers of the Monte-Carlo trial bodies.
+struct TrialScratch {
+    ch: Box<dyn ChannelModel>,
+    real: Realization,
+    att: gc::Attempt,
+    dec: gc::GcPlusDecoder,
+}
+
+impl TrialScratch {
+    fn new(proto: &dyn ChannelModel, m: usize) -> TrialScratch {
+        TrialScratch {
+            ch: proto.clone_box(),
+            real: Realization::perfect(m),
+            att: gc::Attempt::empty(),
+            dec: gc::GcPlusDecoder::new(m),
+        }
+    }
 }
 
 /// Monte-Carlo estimate of the overall outage probability `P_O` under the
@@ -37,13 +55,18 @@ pub fn estimate_outage(
     trials: usize,
     mc: &MonteCarlo,
 ) -> f64 {
-    let outages: usize = mc.run(trials, |t, rng, acc: &mut usize| {
-        let mut ch = ch.clone_box();
-        ch.reset(net, mc.substream_seed(CHANNEL_STREAM, t));
-        if outage_trial(net, code, &mut *ch, rng) {
-            *acc += 1;
-        }
-    });
+    let outages: usize = mc.run_scratch(
+        trials,
+        || TrialScratch::new(ch, net.m),
+        |t, rng, acc: &mut usize, s| {
+            s.ch.reset(net, mc.substream_seed(CHANNEL_STREAM, t));
+            s.ch.sample_into(net, rng, &mut s.real);
+            gc::Attempt::observe_into(code, &s.real, &mut s.att);
+            if s.att.complete.len() < net.m - code.s {
+                *acc += 1;
+            }
+        },
+    );
     outages as f64 / trials as f64
 }
 
@@ -117,14 +140,20 @@ impl Accumulate for RecoveryStats {
 
 /// One GC⁺ round: run the decoding pipeline (coefficients only, no
 /// payloads), classify the outcome, and fold it into `stats`.
+///
+/// The until-decode loop is incremental: each attempt's delivered rows go
+/// straight into the pooled [`gc::GcPlusDecoder`] and the per-block success
+/// test is the allocation-free `decodable_count()` — bit-identical to
+/// batch-decoding the stacked rows (see `tests/incremental_rref.rs`), but
+/// `O(rank · M)` per new row instead of a full re-factor per block.
 fn recovery_trial(
     net: &Network,
-    ch: &mut dyn ChannelModel,
     m: usize,
     s: usize,
     mode: RecoveryMode,
     rng: &mut Rng,
     stats: &mut RecoveryStats,
+    scratch: &mut TrialScratch,
 ) {
     if stats.k4_hist.len() < m + 1 {
         stats.k4_hist.resize(m + 1, 0);
@@ -135,26 +164,26 @@ fn recovery_trial(
         RecoveryMode::UntilDecode { tr, max_blocks } => (tr, max_blocks),
     };
     stats.trials += 1;
-    let mut attempts: Vec<gc::Attempt> = Vec::new();
+    scratch.dec.reset(m);
     let mut outcome: Option<usize> = None; // |K4| of the decode
     'blocks: for _ in 0..max_blocks {
         for _ in 0..tr {
             let code = GcCode::generate(m, s, rng);
-            let att = gc::Attempt::observe(&code, &ch.sample(net, rng));
+            scratch.ch.sample_into(net, rng, &mut scratch.real);
+            gc::Attempt::observe_into(&code, &scratch.real, &mut scratch.att);
             stats.attempts += 1;
             // standard GC shortcut on any single attempt
-            if att.complete.len() >= need {
+            if scratch.att.complete.len() >= need {
                 stats.standard += 1;
                 stats.k4_hist[m] += 1;
                 outcome = Some(usize::MAX); // marker: standard
                 break 'blocks;
             }
-            attempts.push(att);
+            scratch.dec.push_attempt(&scratch.att);
         }
-        let stacked = gc::stack_attempts(&attempts);
-        let dec = gc::decode(&stacked);
-        if !dec.k4.is_empty() {
-            outcome = Some(dec.k4.len());
+        let k4 = scratch.dec.decodable_count();
+        if k4 > 0 {
+            outcome = Some(k4);
             break 'blocks;
         }
         if matches!(mode, RecoveryMode::FixedTr(_)) {
@@ -181,8 +210,8 @@ fn recovery_trial(
 
 /// Run the GC⁺ decoding pipeline over `trials` rounds through the parallel
 /// engine and classify each round's outcome. The channel prototype `ch` is
-/// cloned and reset per trial; its state evolves across the round's
-/// repeated attempts (a burst can kill a whole block of repeats).
+/// cloned once per worker and reset per trial; its state evolves across the
+/// round's repeated attempts (a burst can kill a whole block of repeats).
 pub fn gcplus_recovery(
     net: &Network,
     ch: &dyn ChannelModel,
@@ -192,11 +221,14 @@ pub fn gcplus_recovery(
     trials: usize,
     mc: &MonteCarlo,
 ) -> RecoveryStats {
-    let mut stats: RecoveryStats = mc.run(trials, |t, rng, acc: &mut RecoveryStats| {
-        let mut ch = ch.clone_box();
-        ch.reset(net, mc.substream_seed(CHANNEL_STREAM, t));
-        recovery_trial(net, &mut *ch, m, s, mode, rng, acc);
-    });
+    let mut stats: RecoveryStats = mc.run_scratch(
+        trials,
+        || TrialScratch::new(ch, m),
+        |t, rng, acc: &mut RecoveryStats, scratch| {
+            scratch.ch.reset(net, mc.substream_seed(CHANNEL_STREAM, t));
+            recovery_trial(net, m, s, mode, rng, acc, scratch);
+        },
+    );
     if stats.k4_hist.len() < m + 1 {
         stats.k4_hist.resize(m + 1, 0); // trials == 0 edge case
     }
@@ -210,6 +242,19 @@ mod tests {
     use crate::parallel::trial_rng;
     use crate::scenario::Iid;
     use crate::testing::Prop;
+
+    /// Allocating reference trial — the hand-rolled serial baseline the
+    /// pooled engine path is asserted against.
+    fn outage_trial(
+        net: &Network,
+        code: &GcCode,
+        ch: &mut dyn ChannelModel,
+        rng: &mut Rng,
+    ) -> bool {
+        let real = ch.sample(net, rng);
+        let att = gc::Attempt::observe(code, &real);
+        att.complete.len() < net.m - code.s
+    }
 
     #[test]
     fn mc_matches_closed_form() {

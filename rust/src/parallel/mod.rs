@@ -267,16 +267,38 @@ impl MonteCarlo {
         A: Accumulate,
         F: Fn(u64, &mut Rng, &mut A) + Sync,
     {
+        self.run_scratch(trials, || (), |t, rng, acc, _| trial(t, rng, acc))
+    }
+
+    /// [`run`](MonteCarlo::run) with **per-worker scratch state**: each
+    /// worker thread calls `scratch()` once and threads the value through
+    /// every trial it executes. This is the zero-allocation hook of the
+    /// Monte-Carlo hot loops — pooled channel-model boxes, `Realization`/
+    /// `Attempt` buffers, and the persistent GC⁺ decoder live in the
+    /// scratch and are *reset*, never reallocated, per trial.
+    ///
+    /// Determinism contract: a trial's outcome must depend only on
+    /// `(t, rng)` — the trial body must re-initialize whatever scratch
+    /// state it reads (e.g. `ChannelModel::reset`, `GcPlusDecoder::reset`),
+    /// since which trials share a scratch instance depends on the
+    /// work-stealing schedule. Under that contract the result is
+    /// bit-identical for every thread count, exactly as with `run`.
+    pub fn run_scratch<A, S, F, G>(&self, trials: usize, scratch: G, trial: F) -> A
+    where
+        A: Accumulate,
+        G: Fn() -> S + Sync,
+        F: Fn(u64, &mut Rng, &mut A, &mut S) + Sync,
+    {
         let chunk = self.chunk.max(1);
         let n_chunks = if trials == 0 { 0 } else { (trials - 1) / chunk + 1 };
 
-        let run_chunk = |c: usize| -> A {
+        let run_chunk = |c: usize, s: &mut S| -> A {
             let mut acc = A::default();
             let lo = c * chunk;
             let hi = ((c + 1) * chunk).min(trials);
             for t in lo..hi {
                 let mut rng = self.trial_rng(t as u64);
-                trial(t as u64, &mut rng, &mut acc);
+                trial(t as u64, &mut rng, &mut acc, s);
             }
             acc
         };
@@ -284,9 +306,10 @@ impl MonteCarlo {
         let workers = self.threads.min(n_chunks).max(1);
         if workers == 1 {
             // Same chunk/merge schedule, executed in order on this thread.
+            let mut s = scratch();
             let mut total = A::default();
             for c in 0..n_chunks {
-                total.merge(run_chunk(c));
+                total.merge(run_chunk(c, &mut s));
             }
             return total;
         }
@@ -299,16 +322,18 @@ impl MonteCarlo {
         std::thread::scope(|scope| {
             let next = &next;
             let run_chunk = &run_chunk;
+            let scratch = &scratch;
             let handles: Vec<_> = (0..workers)
                 .map(|_| {
                     scope.spawn(move || {
+                        let mut s = scratch();
                         let mut done: Vec<(usize, A)> = Vec::new();
                         loop {
                             let c = next.fetch_add(1, Ordering::Relaxed);
                             if c >= n_chunks {
                                 break;
                             }
-                            done.push((c, run_chunk(c)));
+                            done.push((c, run_chunk(c, &mut s)));
                         }
                         done
                     })
@@ -392,6 +417,29 @@ mod tests {
         }
         let mc = MonteCarlo::new(seed);
         assert_eq!(mc.substream_seed(7, 3), trial_substream(seed, 7, 3));
+    }
+
+    #[test]
+    fn run_scratch_matches_run_at_any_thread_count() {
+        // Pooled scratch must be invisible in the results when the trial
+        // body resets it — bit-identical to the scratch-free engine.
+        let trials = 5_000;
+        let want = count_heads(&MonteCarlo::serial(13), trials);
+        for threads in [1usize, 3, 8] {
+            let mc = MonteCarlo::new(13).with_threads(threads);
+            let got: usize = mc.run_scratch(
+                trials,
+                Vec::<u64>::new,
+                |t, rng, acc, buf| {
+                    buf.clear(); // per-trial reset of the pooled buffer
+                    buf.push(t);
+                    if rng.bernoulli(0.37) {
+                        *acc += buf.len();
+                    }
+                },
+            );
+            assert_eq!(got, want, "threads={threads}");
+        }
     }
 
     #[test]

@@ -12,8 +12,10 @@
 //!
 //! Every model separates its randomness into two streams:
 //!
-//! - the **emission stream** — the `rng` passed to [`ChannelModel::sample`].
-//!   Each sample consumes exactly one Bernoulli draw per off-diagonal c2c
+//! - the **emission stream** — the `rng` passed to
+//!   [`ChannelModel::sample_into`] (or its allocating wrapper
+//!   [`ChannelModel::sample`]). Each sample consumes exactly one Bernoulli
+//!   draw per off-diagonal c2c
 //!   link (row-major) and one per uplink, in the order fixed by
 //!   [`Realization::sample_with`] — the same draws, in the same order, as
 //!   the memoryless [`Iid`] model;
@@ -111,10 +113,21 @@ pub trait ChannelModel: Send + Sync {
     /// any thread count.
     fn reset(&mut self, net: &Network, state_seed: u64);
 
-    /// Draw the next attempt's realization, evolving internal state on the
-    /// private stream. Emission draws follow the
-    /// [`Realization::sample_with`] order/count contract exactly.
-    fn sample(&mut self, net: &Network, rng: &mut Rng) -> Realization;
+    /// Draw the next attempt's realization into `out`, evolving internal
+    /// state on the private stream. Emission draws follow the
+    /// [`Realization::sample_with`] order/count contract exactly. `out` is
+    /// resized on first use and refilled in place afterwards — the
+    /// Monte-Carlo hot loops pool one buffer per worker.
+    fn sample_into(&mut self, net: &Network, rng: &mut Rng, out: &mut Realization);
+
+    /// Allocating convenience form of
+    /// [`sample_into`](ChannelModel::sample_into) (draw-for-draw
+    /// identical).
+    fn sample(&mut self, net: &Network, rng: &mut Rng) -> Realization {
+        let mut out = Realization::perfect(net.m);
+        self.sample_into(net, rng, &mut out);
+        out
+    }
 
     /// Drain the diagnostics accumulated since the last call.
     fn take_stats(&mut self) -> ChannelStats {
@@ -150,8 +163,8 @@ impl ChannelModel for Iid {
 
     fn reset(&mut self, _net: &Network, _state_seed: u64) {}
 
-    fn sample(&mut self, net: &Network, rng: &mut Rng) -> Realization {
-        Realization::sample(net, rng)
+    fn sample_into(&mut self, net: &Network, rng: &mut Rng, out: &mut Realization) {
+        Realization::sample_with_into(net.m, rng, |i, j| net.p_c2c[(i, j)], |i| net.p_c2s[i], out);
     }
 
     fn clone_box(&self) -> Box<dyn ChannelModel> {
@@ -271,7 +284,7 @@ impl ChannelModel for GilbertElliott {
         self.stats = ChannelStats::default();
     }
 
-    fn sample(&mut self, net: &Network, rng: &mut Rng) -> Realization {
+    fn sample_into(&mut self, net: &Network, rng: &mut Rng, out: &mut Realization) {
         assert_eq!(self.m, net.m, "GilbertElliott: reset() with this network before sampling");
         let m = self.m;
         let mut bad = 0usize;
@@ -291,11 +304,12 @@ impl ChannelModel for GilbertElliott {
         let (bad_t, bad_tau) = (&self.bad_t, &self.bad_tau);
         let (cg, cb) = self.c2c_scale;
         let (sg, sb) = self.c2s_scale;
-        let real = Realization::sample_with(
+        Realization::sample_with_into(
             m,
             rng,
             |i, j| scaled(net.p_c2c[(i, j)], if bad_t[i][j] { cb } else { cg }),
             |i| scaled(net.p_c2s[i], if bad_tau[i] { sb } else { sg }),
+            out,
         );
 
         // evolve every chain on the private stream
@@ -309,7 +323,6 @@ impl ChannelModel for GilbertElliott {
         for i in 0..m {
             Self::step(&mut self.bad_tau[i], self.p_gb, self.p_bg, &mut self.state_rng);
         }
-        real
     }
 
     fn take_stats(&mut self) -> ChannelStats {
@@ -400,18 +413,19 @@ impl ChannelModel for CorrelatedFading {
         self.stats = ChannelStats::default();
     }
 
-    fn sample(&mut self, net: &Network, rng: &mut Rng) -> Realization {
+    fn sample_into(&mut self, net: &Network, rng: &mut Rng, out: &mut Realization) {
         let m = net.m;
         let faded = self.faded;
         self.stats.samples += 1;
         self.stats.degraded += if faded { m * m } else { 0 };
         self.stats.degraded_denom += m * m;
         let scale = if faded { self.fade_scale } else { 1.0 };
-        let real = Realization::sample_with(
+        Realization::sample_with_into(
             m,
             rng,
             |i, j| scaled(net.p_c2c[(i, j)], scale),
             |i| scaled(net.p_c2s[i], scale),
+            out,
         );
         // evolve the fade chain on the private stream; transition probs are
         // chosen so the stationary fade probability stays ρ at every λ
@@ -421,7 +435,6 @@ impl ChannelModel for CorrelatedFading {
         } else {
             self.state_rng.bernoulli((1.0 - lam) * rho)
         };
-        real
     }
 
     fn take_stats(&mut self) -> ChannelStats {
@@ -554,7 +567,7 @@ impl ChannelModel for DeadlineStraggler {
         self.stats = ChannelStats::default();
     }
 
-    fn sample(&mut self, net: &Network, rng: &mut Rng) -> Realization {
+    fn sample_into(&mut self, net: &Network, rng: &mut Rng, out: &mut Realization) {
         assert_eq!(self.m, net.m, "DeadlineStraggler: reset() with this network before sampling");
         let m = self.m;
         self.stats.samples += 1;
@@ -583,11 +596,12 @@ impl ChannelModel for DeadlineStraggler {
         // a missed deadline forces the outage (probability 1 still consumes
         // the link's emission draw, preserving the Iid stream alignment)
         let (ok_t, ok_tau) = (&self.ok_t, &self.ok_tau);
-        let real = Realization::sample_with(
+        Realization::sample_with_into(
             m,
             rng,
             |i, j| if ok_t[i][j] { net.p_c2c[(i, j)] } else { 1.0 },
             |i| if ok_tau[i] { net.p_c2s[i] } else { 1.0 },
+            out,
         );
 
         // evolve straggler states on the private stream
@@ -599,7 +613,6 @@ impl ChannelModel for DeadlineStraggler {
                 self.state_rng.bernoulli(self.p_slow)
             };
         }
-        real
     }
 
     fn take_stats(&mut self) -> ChannelStats {

@@ -77,29 +77,45 @@ impl Accumulate for RoundSeries {
 
 /// Run `trials` independent episodes of `sc` through the parallel engine
 /// and tally outcomes per round. Bit-identical for any thread count.
+///
+/// The channel box and the round buffers ([`sim::SimScratch`], including
+/// the persistent incremental GC⁺ decoder) are pooled **per worker**: an
+/// episode resets them per trial and every round within the episode reuses
+/// them, so the steady-state episode loop allocates only its tallies.
 pub fn run_scenario(sc: &Scenario, trials: usize, mc: &MonteCarlo) -> RoundSeries {
     let net = sc.net.build();
     let proto = sc.channel.build();
     let m = net.m;
-    let mut series: RoundSeries = mc.run(trials, |t, rng, acc: &mut RoundSeries| {
-        let mut ch = proto.clone_box();
-        ch.reset(&net, mc.substream_seed(CHANNEL_STREAM, t));
-        acc.ensure_len(sc.rounds);
-        for r in 0..sc.rounds {
-            let round =
-                sim::simulate_round(&net, &mut *ch, m, sc.s, sc.payload_dim, sc.decoder, rng);
-            let tally = &mut acc.rounds[r];
-            tally.trials += 1;
-            match round.outcome {
-                Outcome::Standard { .. } => tally.standard += 1,
-                Outcome::Full => tally.full += 1,
-                Outcome::Partial { .. } => tally.partial += 1,
-                Outcome::None => tally.none += 1,
+    let mut series: RoundSeries = mc.run_scratch(
+        trials,
+        || (proto.clone_box(), sim::SimScratch::new()),
+        |t, rng, acc: &mut RoundSeries, (ch, scratch)| {
+            ch.reset(&net, mc.substream_seed(CHANNEL_STREAM, t));
+            acc.ensure_len(sc.rounds);
+            for r in 0..sc.rounds {
+                let round = sim::simulate_round_scratch(
+                    &net,
+                    &mut **ch,
+                    m,
+                    sc.s,
+                    sc.payload_dim,
+                    sc.decoder,
+                    rng,
+                    scratch,
+                );
+                let tally = &mut acc.rounds[r];
+                tally.trials += 1;
+                match round.outcome {
+                    Outcome::Standard { .. } => tally.standard += 1,
+                    Outcome::Full => tally.full += 1,
+                    Outcome::Partial { .. } => tally.partial += 1,
+                    Outcome::None => tally.none += 1,
+                }
+                tally.transmissions += round.transmissions;
+                tally.channel.merge(ch.take_stats());
             }
-            tally.transmissions += round.transmissions;
-            tally.channel.merge(ch.take_stats());
-        }
-    });
+        },
+    );
     series.ensure_len(sc.rounds); // trials == 0 edge case
     series
 }

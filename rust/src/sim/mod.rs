@@ -24,7 +24,7 @@
 
 use crate::gc::{self, GcCode};
 use crate::linalg::Matrix;
-use crate::network::Network;
+use crate::network::{Network, Realization};
 use crate::parallel::{Accumulate, MonteCarlo};
 use crate::scenario::{ChannelModel, CHANNEL_STREAM};
 use crate::util::rng::Rng;
@@ -65,11 +65,49 @@ pub enum Decoder {
     GcPlus { tr: usize },
 }
 
+/// Reusable per-worker buffers of [`simulate_round_scratch`]: the channel
+/// realization, the observed attempts, the delivered partial sums (in
+/// stack order), and the persistent incremental GC⁺ decoder. One instance
+/// per worker serves every trial of a sweep — steady-state rounds allocate
+/// only their returned [`SimRound`].
+pub struct SimScratch {
+    real: Realization,
+    payload: Matrix,
+    /// Observed attempts of the round (slots reused across trials).
+    attempts: Vec<gc::Attempt>,
+    /// Partial sums of the delivered rows, stacked across attempts in the
+    /// exact order the decoder rows were pushed.
+    sums: Matrix,
+    /// Start row of each attempt's block inside `sums`.
+    starts: Vec<usize>,
+    dec: gc::GcPlusDecoder,
+}
+
+impl SimScratch {
+    pub fn new() -> SimScratch {
+        SimScratch {
+            real: Realization::perfect(0),
+            payload: Matrix::zeros(0, 0),
+            attempts: Vec::new(),
+            sums: Matrix::zeros(0, 0),
+            starts: Vec::new(),
+            dec: gc::GcPlusDecoder::new(0),
+        }
+    }
+}
+
+impl Default for SimScratch {
+    fn default() -> Self {
+        SimScratch::new()
+    }
+}
+
 /// Simulate one CoGC round over synthetic payloads `G` (`M×D` normal).
 ///
 /// `ch` supplies the link realizations and must have been `reset` for this
 /// trial (stateless models like `Iid` need no reset); its state evolves
-/// across the round's communication attempts.
+/// across the round's communication attempts. Allocating convenience form
+/// of [`simulate_round_scratch`].
 pub fn simulate_round(
     net: &Network,
     ch: &mut dyn ChannelModel,
@@ -79,7 +117,34 @@ pub fn simulate_round(
     decoder: Decoder,
     rng: &mut Rng,
 ) -> SimRound {
-    let payload = Matrix::from_fn(m, d, |_, _| rng.normal());
+    let mut scratch = SimScratch::new();
+    simulate_round_scratch(net, ch, m, s, d, decoder, rng, &mut scratch)
+}
+
+/// [`simulate_round`] with pooled buffers: the GC⁺ path feeds each
+/// attempt's delivered coefficient rows into the persistent incremental
+/// decoder (no re-stack, no per-block re-RREF) and computes partial sums
+/// only for delivered rows. Identical outcomes and draw order to the
+/// allocating form for every `(net, seed)`.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_round_scratch(
+    net: &Network,
+    ch: &mut dyn ChannelModel,
+    m: usize,
+    s: usize,
+    d: usize,
+    decoder: Decoder,
+    rng: &mut Rng,
+    sc: &mut SimScratch,
+) -> SimRound {
+    // synthetic payloads, drawn in the canonical row-major order
+    if sc.payload.rows != m || sc.payload.cols != d {
+        sc.payload = Matrix::zeros(m, d);
+    }
+    for x in &mut sc.payload.data {
+        *x = rng.normal();
+    }
+    let payload = &sc.payload;
     let true_mean: Vec<f64> = (0..d)
         .map(|j| (0..m).map(|i| payload[(i, j)]).sum::<f64>() / m as f64)
         .collect();
@@ -89,14 +154,23 @@ pub fn simulate_round(
         Decoder::GcPlus { tr } => tr,
     };
 
-    let mut attempts: Vec<gc::Attempt> = Vec::with_capacity(attempts_n);
-    let mut partial_payloads: Vec<Matrix> = Vec::with_capacity(attempts_n);
+    sc.dec.reset(m);
+    if sc.sums.cols != d {
+        sc.sums = Matrix::zeros(0, d);
+    } else {
+        sc.sums.clear_rows();
+    }
+    sc.starts.clear();
     let mut transmissions = 0usize;
 
-    for _ in 0..attempts_n {
+    for a in 0..attempts_n {
         let code = GcCode::generate(m, s, rng);
-        let real = ch.sample(net, rng);
-        let att = gc::Attempt::observe(&code, &real);
+        ch.sample_into(net, rng, &mut sc.real);
+        if sc.attempts.len() <= a {
+            sc.attempts.push(gc::Attempt::empty());
+        }
+        let att = &mut sc.attempts[a];
+        gc::Attempt::observe_into(&code, &sc.real, att);
         // gradient-sharing phase: s transmissions per client
         transmissions += s * m;
         // uplink: standard GC sends only complete sums; GC+ sends all
@@ -104,37 +178,61 @@ pub fn simulate_round(
             Decoder::Standard { .. } => att.complete.len(),
             Decoder::GcPlus { .. } => m, // every client attempts its uplink
         };
-        partial_payloads.push(att.perturbed.matmul(&payload));
-        attempts.push(att);
+        // partial sums of the *delivered* rows only, pushed in stack order
+        sc.starts.push(sc.sums.rows);
+        for &r in &att.delivered {
+            let start = sc.sums.data.len();
+            sc.sums.data.resize(start + d, 0.0);
+            sc.sums.rows += 1;
+            let orow = &mut sc.sums.data[start..start + d];
+            for k in 0..m {
+                let c = att.perturbed[(r, k)];
+                if c == 0.0 {
+                    continue;
+                }
+                for (o, p) in orow.iter_mut().zip(payload.row(k)) {
+                    *o += c * p;
+                }
+            }
+            if matches!(decoder, Decoder::GcPlus { .. }) {
+                sc.dec.push_row(att.perturbed.row(r));
+            }
+        }
     }
 
     // 1) standard decode on any single attempt with >= M - s complete sums
-    for (i, att) in attempts.iter().enumerate() {
+    for (i, att) in sc.attempts[..attempts_n].iter().enumerate() {
         if att.complete.len() < m - s {
             continue;
         }
-        // the PS only uses complete, delivered rows
-        let code_b = &att.perturbed; // complete rows of perturbed == original rows
-        let a = {
-            // reconstruct a GcCode view for combinator solving: complete rows
-            // of the perturbed matrix are exactly the original code rows.
-            let fake = GcCode { m, s, b: code_b.clone(), h: Matrix::zeros(1, m) };
-            gc::find_combinator(&fake, &att.complete)
+        // complete rows of the perturbed matrix are exactly the original
+        // code rows, so the combinator solve runs on them directly
+        let Some(a) = gc::combinator::find_combinator_rows(&att.perturbed, s, &att.complete)
+        else {
+            continue;
         };
-        if let Some(a) = a {
-            let sums = &partial_payloads[i];
-            let got = gc::apply_combinator(&a, sums);
-            let target: Vec<f64> = true_mean.iter().map(|x| x * m as f64).collect();
-            let err = max_abs_diff(&got, &target);
-            let aggregate: Vec<f64> = got.iter().map(|x| x / m as f64).collect();
-            return SimRound {
-                outcome: Outcome::Standard { attempt: i },
-                aggregate: Some(aggregate),
-                true_mean,
-                decode_err: err,
-                transmissions,
-            };
+        // combine the delivered partial sums (combinator support is on
+        // complete ⊆ delivered rows, in ascending order as before)
+        let mut got = vec![0.0f64; d];
+        for (off, &r) in att.delivered.iter().enumerate() {
+            let coef = a[r];
+            if coef == 0.0 {
+                continue;
+            }
+            for (o, v) in got.iter_mut().zip(sc.sums.row(sc.starts[i] + off)) {
+                *o += coef * v;
+            }
         }
+        let target: Vec<f64> = true_mean.iter().map(|x| x * m as f64).collect();
+        let err = max_abs_diff(&got, &target);
+        let aggregate: Vec<f64> = got.iter().map(|x| x / m as f64).collect();
+        return SimRound {
+            outcome: Outcome::Standard { attempt: i },
+            aggregate: Some(aggregate),
+            true_mean,
+            decode_err: err,
+            transmissions,
+        };
     }
 
     if let Decoder::Standard { .. } = decoder {
@@ -147,10 +245,9 @@ pub fn simulate_round(
         };
     }
 
-    // 2) GC+ complementary decode over the stacked received rows
-    let stacked = gc::stack_attempts(&attempts);
-    let dec = gc::decode(&stacked);
-    if dec.k4.is_empty() {
+    // 2) GC+ complementary decode: the incremental engine already holds
+    // the reduced form of every delivered coefficient row
+    if sc.dec.decodable_count() == 0 {
         return SimRound {
             outcome: Outcome::None,
             aggregate: None,
@@ -159,17 +256,8 @@ pub fn simulate_round(
             transmissions,
         };
     }
-    // stack the delivered payload rows in the same order
-    let delivered_payload = {
-        let mats: Vec<Matrix> = attempts
-            .iter()
-            .zip(&partial_payloads)
-            .map(|(att, pp)| pp.select_rows(&att.delivered))
-            .collect();
-        let refs: Vec<&Matrix> = mats.iter().filter(|x| x.rows > 0).collect();
-        Matrix::vstack(&refs)
-    };
-    let decoded = dec.weights.matmul(&delivered_payload);
+    let dec = sc.dec.decode();
+    let decoded = dec.weights.matmul(&sc.sums);
     // decode error vs the true individual payloads
     let mut err = 0.0f64;
     for (i, &client) in dec.k4.iter().enumerate() {
@@ -182,7 +270,7 @@ pub fn simulate_round(
     let outcome = if dec.k4.len() == m {
         Outcome::Full
     } else {
-        Outcome::Partial { k4: dec.k4.clone() }
+        Outcome::Partial { k4: dec.k4 }
     };
     SimRound { outcome, aggregate: Some(aggregate), true_mean, decode_err: err, transmissions }
 }
@@ -240,9 +328,12 @@ impl Accumulate for SweepStats {
 /// Run `trials` independent [`simulate_round`]s through the parallel engine
 /// and tally the outcomes. Bit-identical for any thread count.
 ///
-/// `ch` is a prototype: each trial clones it and resets the clone from the
-/// trial's channel-state substream, so stateful models are independent
-/// across trials and identical for every work-stealing schedule.
+/// `ch` is a prototype: the engine clones it once per worker and resets the
+/// clone from each trial's channel-state substream, so stateful models are
+/// independent across trials and identical for every work-stealing
+/// schedule. All round buffers (realization, attempts, partial sums, the
+/// incremental decoder) are pooled per worker via [`SimScratch`] — the
+/// steady-state trial body allocates only its round result.
 pub fn sweep(
     net: &Network,
     ch: &dyn ChannelModel,
@@ -253,20 +344,23 @@ pub fn sweep(
     trials: usize,
     mc: &MonteCarlo,
 ) -> SweepStats {
-    mc.run(trials, |t, rng, acc: &mut SweepStats| {
-        let mut ch = ch.clone_box();
-        ch.reset(net, mc.substream_seed(CHANNEL_STREAM, t));
-        let r = simulate_round(net, &mut *ch, m, s, d, decoder, rng);
-        acc.trials += 1;
-        match r.outcome {
-            Outcome::Standard { .. } => acc.standard += 1,
-            Outcome::Full => acc.full += 1,
-            Outcome::Partial { .. } => acc.partial += 1,
-            Outcome::None => acc.none += 1,
-        }
-        acc.transmissions += r.transmissions;
-        acc.max_decode_err = acc.max_decode_err.max(r.decode_err);
-    })
+    mc.run_scratch(
+        trials,
+        || (ch.clone_box(), SimScratch::new()),
+        |t, rng, acc: &mut SweepStats, (chb, sc)| {
+            chb.reset(net, mc.substream_seed(CHANNEL_STREAM, t));
+            let r = simulate_round_scratch(net, &mut **chb, m, s, d, decoder, rng, sc);
+            acc.trials += 1;
+            match r.outcome {
+                Outcome::Standard { .. } => acc.standard += 1,
+                Outcome::Full => acc.full += 1,
+                Outcome::Partial { .. } => acc.partial += 1,
+                Outcome::None => acc.none += 1,
+            }
+            acc.transmissions += r.transmissions;
+            acc.max_decode_err = acc.max_decode_err.max(r.decode_err);
+        },
+    )
 }
 
 #[cfg(test)]

@@ -1,0 +1,223 @@
+//! Equivalence and determinism guarantees of the incremental decode engine
+//! (`linalg::IncrementalRref` / `gc::GcPlusDecoder`):
+//!
+//! 1. feeding attempts incrementally is **bit-for-bit** equivalent
+//!    (`k4`, `weights`, `rank`) to batch-decoding the stacked matrix via
+//!    `rref_with_transform` — across random erasure patterns, an M/s grid,
+//!    and degenerate (empty / duplicate-row / zero-row) stacks;
+//! 2. mid-stream decodes equal batch decodes of the same prefix (the
+//!    until-decode loop's per-block poll);
+//! 3. the figure CSVs produced through the incremental path stay
+//!    byte-identical at any `--threads` value.
+
+use cogc::figures;
+use cogc::gc::{self, GcCode, GcPlusDecoder};
+use cogc::linalg::{decodable_columns, rref_with_transform, IncrementalRref, Matrix};
+use cogc::network::{Network, Realization};
+use cogc::scenario;
+use cogc::testing::Prop;
+use cogc::util::rng::Rng;
+
+fn assert_bits_eq(a: &Matrix, b: &Matrix, what: &str) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{what}: shape");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: entry {i}: {x} vs {y}");
+    }
+}
+
+/// Batch-vs-incremental on one attempt set; returns the stacked height.
+fn check_attempts(attempts: &[gc::Attempt], m: usize) -> usize {
+    let stacked = gc::stack_attempts(attempts);
+    let batch = gc::decode(&stacked);
+    let mut dec = GcPlusDecoder::new(m);
+    for att in attempts {
+        dec.push_attempt(att);
+    }
+    assert_eq!(dec.rows(), stacked.rows);
+    assert_eq!(dec.rank(), batch.rank, "rank");
+    assert_eq!(dec.decodable_count(), batch.k4.len(), "decodable_count");
+    let inc = dec.decode();
+    assert_eq!(inc.k4, batch.k4, "k4");
+    assert_bits_eq(&inc.weights, &batch.weights, "weights");
+
+    // and against the batch RREF API itself: the decodable columns of
+    // `rref_with_transform` extract with the very same transform rows
+    if stacked.rows > 0 {
+        let rr = rref_with_transform(&stacked);
+        assert_eq!(rr.rank, batch.rank);
+        let cols: Vec<usize> = decodable_columns(&rr).iter().map(|&(c, _)| c).collect();
+        assert_eq!(cols, batch.k4, "decodable_columns vs decode k4");
+        for (i, &(_, r)) in decodable_columns(&rr).iter().enumerate() {
+            for (x, y) in rr.t.row(r).iter().zip(batch.weights.row(i)) {
+                assert_eq!(x.to_bits(), y.to_bits(), "transform row {r}");
+            }
+        }
+    }
+    stacked.rows
+}
+
+fn sample_attempts(
+    m: usize,
+    s: usize,
+    tr: usize,
+    net: &Network,
+    rng: &mut Rng,
+) -> Vec<gc::Attempt> {
+    (0..tr)
+        .map(|_| {
+            let code = GcCode::generate(m, s, rng);
+            gc::Attempt::observe(&code, &Realization::sample(net, rng))
+        })
+        .collect()
+}
+
+#[test]
+fn prop_incremental_equals_batch_across_erasures_and_ms_grid() {
+    Prop::new(40).forall("incremental == batch", |rng, _| {
+        let m = rng.range(4, 11);
+        let s = rng.range(1, m);
+        let tr = rng.range(1, 5);
+        let p = rng.uniform(0.05, 0.9);
+        let net = Network::homogeneous(m, p, p);
+        let attempts = sample_attempts(m, s, tr, &net, rng);
+        check_attempts(&attempts, m);
+    });
+}
+
+#[test]
+fn incremental_equals_batch_on_paper_settings() {
+    let mut rng = Rng::new(9);
+    for setting in 1..=4 {
+        let net = Network::fig6_setting(setting, 10);
+        for tr in [1usize, 2, 6] {
+            let attempts = sample_attempts(10, 7, tr, &net, &mut rng);
+            check_attempts(&attempts, 10);
+        }
+    }
+}
+
+#[test]
+fn degenerate_stacks_agree() {
+    // empty stack
+    assert_eq!(check_attempts(&[], 10), 0);
+    let dec = GcPlusDecoder::new(10);
+    assert_eq!(dec.decode().k4, Vec::<usize>::new());
+
+    // all uplinks dead: attempts contribute zero rows
+    let mut rng = Rng::new(4);
+    let dead = Network::homogeneous(6, 1.0, 1.0);
+    let attempts = sample_attempts(6, 2, 3, &dead, &mut rng);
+    assert_eq!(check_attempts(&attempts, 6), 0);
+
+    // duplicate rows: pushing the same attempt repeatedly leaves the rank
+    // unchanged and still matches batch on the duplicated stack
+    let net = Network::fig6_setting(2, 10);
+    let base = sample_attempts(10, 7, 2, &net, &mut rng);
+    let mut dup = base.clone();
+    dup.extend(base.iter().cloned());
+    dup.extend(base.iter().cloned());
+    check_attempts(&dup, 10);
+    let mut one = GcPlusDecoder::new(10);
+    for att in &base {
+        one.push_attempt(att);
+    }
+    let rank_once = one.rank();
+    for att in &base {
+        one.push_attempt(att);
+    }
+    assert_eq!(one.rank(), rank_once, "duplicate rows must not raise rank");
+
+    // explicit zero rows are dependent
+    let mut inc = IncrementalRref::new(5);
+    inc.push_rows(&[0.0; 15]);
+    assert_eq!(inc.rank(), 0);
+    assert_eq!(inc.rows(), 3);
+}
+
+/// The until-decode loop's contract: after every block, the incremental
+/// engine's decode equals the batch decode of exactly the rows pushed so
+/// far — bit for bit, at every prefix.
+#[test]
+fn mid_stream_decodes_equal_batch_prefixes() {
+    let mut rng = Rng::new(31);
+    let net = Network::fig6_setting(3, 10);
+    let attempts = sample_attempts(10, 7, 10, &net, &mut rng);
+    let mut dec = GcPlusDecoder::new(10);
+    for upto in 1..=attempts.len() {
+        dec.reset(10);
+        for att in &attempts[..upto] {
+            dec.push_attempt(att);
+        }
+        let stacked = gc::stack_attempts(&attempts[..upto]);
+        let batch = gc::decode(&stacked);
+        let inc = dec.decode();
+        assert_eq!(inc.k4, batch.k4, "prefix {upto}");
+        assert_eq!(inc.rank, batch.rank, "prefix {upto}");
+        assert_bits_eq(&inc.weights, &batch.weights, &format!("prefix {upto} weights"));
+    }
+    // ... and without the reset: one persistent engine fed block by block
+    let mut persistent = GcPlusDecoder::new(10);
+    for (upto, att) in attempts.iter().enumerate() {
+        persistent.push_attempt(att);
+        let stacked = gc::stack_attempts(&attempts[..=upto]);
+        assert_eq!(
+            persistent.decodable_count(),
+            gc::decode(&stacked).k4.len(),
+            "persistent prefix {}",
+            upto + 1
+        );
+    }
+}
+
+#[test]
+fn chunked_pushes_match_one_shot_bitwise() {
+    let mut rng = Rng::new(55);
+    for trial in 0..20 {
+        let n = 2 + rng.below(14);
+        let m = 2 + rng.below(9);
+        let a = Matrix::from_fn(n, m, |_, _| {
+            if rng.bernoulli(0.3) { 0.0 } else { rng.normal_ms(0.0, 2.0) }
+        });
+        let mut one = IncrementalRref::new(m);
+        one.push_matrix(&a);
+        let mut chunked = IncrementalRref::new(m);
+        let mut i = 0;
+        while i < n {
+            let step = 1 + rng.below(3).min(n - i - 1);
+            for r in i..i + step {
+                chunked.push_row(a.row(r));
+            }
+            i += step;
+        }
+        assert_eq!(one.rank(), chunked.rank(), "trial {trial}");
+        assert_eq!(one.pivots(), chunked.pivots(), "trial {trial}");
+        for r in 0..one.rank() {
+            for (x, y) in one.e_row(r).iter().zip(chunked.e_row(r)) {
+                assert_eq!(x.to_bits(), y.to_bits(), "trial {trial} e row {r}");
+            }
+            for (x, y) in one.t_row(r).iter().zip(chunked.t_row(r)) {
+                assert_eq!(x.to_bits(), y.to_bits(), "trial {trial} t row {r}");
+            }
+        }
+    }
+}
+
+/// The headline figure CSVs flow through the incremental decoder now; they
+/// must stay byte-identical at every thread count.
+#[test]
+fn fig6_and_scenario_csvs_are_thread_count_invariant_through_incremental_path() {
+    let reference = figures::fig6(150, 42, 1).to_csv();
+    for threads in [2usize, 8] {
+        assert_eq!(figures::fig6(150, 42, threads).to_csv(), reference, "fig6 threads={threads}");
+    }
+    let mut sc = scenario::find("bursty-c2c").unwrap();
+    sc.rounds = 8;
+    let reference = figures::scenario_sweep(&sc, 60, 7, 1).to_csv();
+    for threads in [2usize, 8] {
+        assert_eq!(
+            figures::scenario_sweep(&sc, 60, 7, threads).to_csv(),
+            reference,
+            "scenario threads={threads}"
+        );
+    }
+}
