@@ -14,9 +14,9 @@
 //! and is skipped (with a message) when either is missing.
 
 use cogc::bench::Suite;
-use cogc::gc::{self, GcCode};
+use cogc::gc::{self, FrCode, GcCode};
 use cogc::linalg::{rref_with_transform, Matrix};
-use cogc::network::{Network, Realization};
+use cogc::network::{Network, Realization, SparseRealization};
 use cogc::outage::exact::poisson_binomial_pmf;
 use cogc::outage::mc::{estimate_outage, gcplus_recovery, RecoveryMode};
 use cogc::parallel::{available_threads, MonteCarlo};
@@ -98,6 +98,88 @@ fn main() {
                         }
                         cogc::bench::black_box(dec.decodable_count());
                     }
+                },
+            );
+        }
+    }
+
+    // ── structured family: sparse vs dense sampling, group scan vs RREF ─
+    // The scaling evidence for the CodeFamily refactor (EXPERIMENTS.md
+    // §Perf): realization sampling is O(M·(s+1)) draws on the sparse path
+    // vs O(M²) dense, and the FR per-group coverage scan replaces the
+    // incremental-RREF decodability test entirely. The dense/RREF rows
+    // stop at M = 1024 — one dense realization beyond that is hundreds of
+    // MB and the row would measure the allocator, not the engine; the cap
+    // is printed, never silent.
+    {
+        let fr_s = 3usize; // every M below is divisible by s+1 = 4
+        for &m in &[64usize, 1024, 10_000, 100_000] {
+            let fr_net = Network::homogeneous(m, 0.3, 0.2);
+            let fr_code = FrCode::new(m, fr_s).unwrap();
+            let sup = fr_code.sparse_support();
+            let mut srng = Rng::new(500 + m as u64);
+            let mut sparse = SparseRealization::perfect(&sup);
+            suite.bench_throughput(
+                &format!("sparse sample_into      M={m} s={fr_s}"),
+                (m * (fr_s + 1)) as f64,
+                "links",
+                || {
+                    SparseRealization::sample_with_into(
+                        &sup,
+                        &mut srng,
+                        |row, _idx, j| fr_net.p_c2c(row, j),
+                        |i| fr_net.p_c2s[i],
+                        &mut sparse,
+                    );
+                    cogc::bench::black_box(sparse.tau[0]);
+                },
+            );
+            let mut covered: Vec<bool> = Vec::new();
+            suite.bench_throughput(
+                &format!("fr group scan (serial)  M={m} s={fr_s}"),
+                fr_code.groups() as f64,
+                "groups",
+                || {
+                    fr_code.covered_into(&sparse, &mut covered);
+                    cogc::bench::black_box(covered.len());
+                },
+            );
+            if m > 1024 {
+                eprintln!(
+                    "note: skipping dense-sampling and incremental-rref rows at M={m} — the \
+                     dense path allocates O(M²) (≈{} MB per realization); the comparison rows \
+                     run at M ≤ 1024",
+                    m * m / 1_000_000
+                );
+                continue;
+            }
+            let mut drng = Rng::new(900 + m as u64);
+            let mut dense = Realization::perfect(m);
+            suite.bench_throughput(
+                &format!("dense sample_into       M={m}"),
+                (m * m) as f64,
+                "links",
+                || {
+                    Realization::sample_with_into(
+                        m,
+                        &mut drng,
+                        |i, j| fr_net.p_c2c(i, j),
+                        |i| fr_net.p_c2s[i],
+                        &mut dense,
+                    );
+                    cogc::bench::black_box(dense.tau[0]);
+                },
+            );
+            // decodability test over one attempt's delivered rows: the FR
+            // scan above vs eliminating the cyclic rows incrementally
+            let cyc = GcCode::generate(m, fr_s, &mut Rng::new(3 + m as u64));
+            let att = gc::Attempt::observe(&cyc, &dense);
+            suite.bench(
+                &format!("incremental rref attempt M={m} ({} rows)", att.delivered.len()),
+                || {
+                    let mut dec = gc::GcPlusDecoder::new(m);
+                    dec.push_attempt(&att);
+                    cogc::bench::black_box(dec.decodable_count());
                 },
             );
         }

@@ -2,6 +2,7 @@
 //! which network, which data partition.
 
 use crate::data::Partition;
+use crate::gc::CodeFamily;
 use crate::runtime::CombineImpl;
 use crate::scenario::ChannelSpec;
 
@@ -37,7 +38,10 @@ pub enum Design {
 pub struct TrainConfig {
     /// Model name in the manifest (mnist_cnn / cifar_cnn / transformer).
     pub model: String,
-    /// Straggler tolerance s of the cyclic code.
+    /// Gradient-code family used by the CoGC aggregators (cyclic, or
+    /// fractional repetition — which additionally needs M % (s+1) == 0).
+    pub code: CodeFamily,
+    /// Straggler tolerance s of the code.
     pub s: usize,
     /// Total training rounds T.
     pub rounds: usize,
@@ -66,6 +70,7 @@ impl TrainConfig {
     pub fn new(model: &str, aggregator: Aggregator) -> TrainConfig {
         TrainConfig {
             model: model.to_string(),
+            code: CodeFamily::Cyclic,
             s: 7,
             rounds: 100,
             local_iters: 5,

@@ -12,10 +12,10 @@
 use super::client::{ClientState, Shard};
 use super::config::{Aggregator, Design, TrainConfig};
 use crate::data::{class_means, partition, ImageDataset, ImageShard, TokenDataset, TokenShard};
-use crate::gc::{self, GcCode};
+use crate::gc::{self, CodeFamily, FrCode, GcCode};
 use crate::linalg::Matrix;
 use crate::metrics::{RoundRecord, RunLog};
-use crate::network::Network;
+use crate::network::{Network, SparseRealization};
 use crate::runtime::{Backend, CodedKernels, InputKind, ModelRuntime};
 use crate::scenario::ChannelModel;
 use crate::util::rng::Rng;
@@ -56,6 +56,7 @@ impl Trainer {
     pub fn new(backend: &Backend, cfg: TrainConfig, net: Network) -> anyhow::Result<Trainer> {
         let man = backend.manifest();
         anyhow::ensure!(net.m == man.m, "network M={} but backend built for M={}", net.m, man.m);
+        cfg.code.validate(man.m, cfg.s)?;
         let model = backend.load_model(&cfg.model)?;
         let coded = backend.coded(&model.spec, cfg.combine)?;
         let mut rng = Rng::new(cfg.seed ^ 0xC0_6C);
@@ -294,15 +295,24 @@ impl Trainer {
                     Ok(self.agg_subset_mean(deltas, &received, "subset", tx))
                 }
             }
-            Aggregator::CoGc { design, attempts } => {
-                self.agg_cogc(deltas, design, attempts, /*replicated=*/ false)
-            }
-            Aggregator::TandonReplicated { attempts } => {
-                self.agg_cogc(deltas, Design::SkipRound, attempts, /*replicated=*/ true)
-            }
-            Aggregator::GcPlus { tr, until_decode, max_blocks } => {
-                self.agg_gcplus(deltas, tr, until_decode, max_blocks)
-            }
+            Aggregator::CoGc { design, attempts } => match self.cfg.code {
+                CodeFamily::Cyclic => self.agg_cogc(deltas, design, attempts, false),
+                CodeFamily::FractionalRepetition => {
+                    self.agg_cogc_fr(deltas, design, attempts, false)
+                }
+            },
+            Aggregator::TandonReplicated { attempts } => match self.cfg.code {
+                CodeFamily::Cyclic => self.agg_cogc(deltas, Design::SkipRound, attempts, true),
+                CodeFamily::FractionalRepetition => {
+                    self.agg_cogc_fr(deltas, Design::SkipRound, attempts, true)
+                }
+            },
+            Aggregator::GcPlus { tr, until_decode, max_blocks } => match self.cfg.code {
+                CodeFamily::Cyclic => self.agg_gcplus(deltas, tr, until_decode, max_blocks),
+                CodeFamily::FractionalRepetition => {
+                    self.agg_gcplus_fr(deltas, tr, until_decode, max_blocks)
+                }
+            },
         }
     }
 
@@ -502,6 +512,170 @@ impl Trainer {
                 delta: Some(delta),
                 outcome,
                 k4: dec.k4.len(),
+                attempts: attempts_used,
+                transmissions: tx,
+            });
+        }
+        Ok(AggResult {
+            delta: None,
+            outcome: "none",
+            k4: 0,
+            attempts: attempts_used,
+            transmissions: tx,
+        })
+    }
+
+    // ── fractional-repetition aggregation ────────────────────────────────
+
+    /// Per-group delta sums under the FR code — the only payloads FR can
+    /// deliver: every row of a group carries the identical all-ones
+    /// combination of its members (the distinct rows of
+    /// [`FrCode::dense_b`]), so one G×M indicator combine per round covers
+    /// every attempt.
+    fn fr_group_sums(&self, code: &FrCode, deltas: &[f32]) -> Vec<f32> {
+        let w = Matrix::from_fn(code.groups(), self.m, |g, j| {
+            if code.group_of(j) == g {
+                1.0
+            } else {
+                0.0
+            }
+        });
+        crate::runtime::coded::native_combine(&w, deltas, self.d)
+    }
+
+    /// Standard CoGC under the FR family: decode succeeds iff every group
+    /// delivers at least one complete sum, and the update is the exact
+    /// mean (one all-ones row per group sums to the total). Coverage is
+    /// the O(M) group scan — no combinator search, no RREF.
+    fn agg_cogc_fr(
+        &mut self,
+        deltas: &[f32],
+        design: Design,
+        attempts: usize,
+        replicated: bool,
+    ) -> anyhow::Result<AggResult> {
+        let code = FrCode::new(self.m, self.cfg.s).expect("code validated in Trainer::new");
+        let sup = code.sparse_support();
+        let max_attempts = match design {
+            Design::RetryUntilSuccess => attempts.max(50),
+            Design::SkipRound => attempts.max(1),
+        };
+        let mut tx = 0usize;
+        let mut covered: Vec<bool> = Vec::new();
+        for attempt in 0..max_attempts {
+            let mut real = self.channel.sample(&self.net, &mut self.rng);
+            if replicated {
+                // dataset replication: partial sums never see c2c erasure
+                real.t = vec![vec![true; self.m]; self.m];
+            }
+            let sreal = SparseRealization::project_from_dense(&sup, &real);
+            code.covered_into(&sreal, &mut covered);
+            // sharing phase: s transmissions per client (none when replicated)
+            tx += if replicated { 0 } else { self.cfg.s * self.m };
+            // uplinks: only complete partial sums are transmitted
+            tx += (0..self.m).filter(|&i| sreal.row_delivered_complete(i)).count();
+            if !FrCode::all_covered(&covered) {
+                continue; // some group delivered nothing — retry or give up
+            }
+            let sums = self.fr_group_sums(&code, deltas);
+            let inv = 1.0 / self.m as f32;
+            let mut delta = vec![0.0f32; self.d];
+            for g in 0..code.groups() {
+                for (o, v) in delta.iter_mut().zip(&sums[g * self.d..(g + 1) * self.d]) {
+                    *o += v;
+                }
+            }
+            for o in &mut delta {
+                *o *= inv;
+            }
+            return Ok(AggResult {
+                delta: Some(delta),
+                outcome: "standard",
+                k4: self.m,
+                attempts: attempt + 1,
+                transmissions: tx,
+            });
+        }
+        Ok(AggResult {
+            delta: None,
+            outcome: "none",
+            k4: 0,
+            attempts: max_attempts,
+            transmissions: tx,
+        })
+    }
+
+    /// GC⁺ under the FR family: covered groups accumulate across attempts;
+    /// any covered group's members are immediately decodable (its all-ones
+    /// sum is the group's exact delta total), so partial recovery is the
+    /// union scan — no stacked-row elimination.
+    fn agg_gcplus_fr(
+        &mut self,
+        deltas: &[f32],
+        tr: usize,
+        until_decode: bool,
+        max_blocks: usize,
+    ) -> anyhow::Result<AggResult> {
+        let code = FrCode::new(self.m, self.cfg.s).expect("code validated in Trainer::new");
+        let sup = code.sparse_support();
+        let blocks = if until_decode { max_blocks.max(1) } else { 1 };
+        let mut tx = 0usize;
+        let mut attempts_used = 0usize;
+        let mut acc = vec![false; code.groups()];
+        let mut covered: Vec<bool> = Vec::new();
+        for _ in 0..blocks {
+            for _ in 0..tr {
+                attempts_used += 1;
+                let real = self.channel.sample(&self.net, &mut self.rng);
+                let sreal = SparseRealization::project_from_dense(&sup, &real);
+                code.covered_into(&sreal, &mut covered);
+                tx += self.cfg.s * self.m + self.m; // all partial sums are uplinked
+                // standard-decode shortcut on any single attempt
+                if FrCode::all_covered(&covered) {
+                    let sums = self.fr_group_sums(&code, deltas);
+                    let inv = 1.0 / self.m as f32;
+                    let mut delta = vec![0.0f32; self.d];
+                    for g in 0..code.groups() {
+                        for (o, v) in delta.iter_mut().zip(&sums[g * self.d..(g + 1) * self.d]) {
+                            *o += v;
+                        }
+                    }
+                    for o in &mut delta {
+                        *o *= inv;
+                    }
+                    return Ok(AggResult {
+                        delta: Some(delta),
+                        outcome: "standard",
+                        k4: self.m,
+                        attempts: attempts_used,
+                        transmissions: tx,
+                    });
+                }
+                FrCode::union_covered(&mut acc, &covered);
+            }
+            let k4 = code.k4_count(&acc);
+            if k4 == 0 {
+                continue;
+            }
+            // mean over the covered groups' members (eq. (23) restricted to K₄)
+            let sums = self.fr_group_sums(&code, deltas);
+            let mut delta = vec![0.0f32; self.d];
+            for (g, &c) in acc.iter().enumerate() {
+                if c {
+                    for (o, v) in delta.iter_mut().zip(&sums[g * self.d..(g + 1) * self.d]) {
+                        *o += v;
+                    }
+                }
+            }
+            let inv = 1.0 / k4 as f32;
+            for o in &mut delta {
+                *o *= inv;
+            }
+            let outcome = if k4 == self.m { "full" } else { "partial" };
+            return Ok(AggResult {
+                delta: Some(delta),
+                outcome,
+                k4,
                 attempts: attempts_used,
                 transmissions: tx,
             });

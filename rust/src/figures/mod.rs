@@ -117,7 +117,7 @@ pub fn fig6_channel(ch: &dyn ChannelModel, trials: usize, seed: u64, threads: us
             t.row(&[
                 setting.to_string(),
                 format!("{}", net.p_c2s[0]),
-                format!("{}", net.p_c2c[(0, 1)]),
+                format!("{}", net.p_c2c(0, 1)),
                 name.to_string(),
                 format!("{:.4}", st.p_full()),
                 format!("{:.4}", st.p_partial()),
@@ -443,9 +443,15 @@ pub fn scenario_sweep(sc: &Scenario, trials: usize, seed: u64, threads: usize) -
         crate::sim::Decoder::GcPlus { tr } => tr.max(1),
     };
     let window = sc.channel.build().round_duration() * attempts_per_round as f64;
+    // non-default code families are flagged in the comment; cyclic output
+    // stays byte-identical to before the family abstraction existed
+    let code_tag = match sc.code {
+        crate::gc::CodeFamily::Cyclic => String::new(),
+        family => format!(" code={}", family.name()),
+    };
     let mut t = Table::new(
         &format!(
-            "scenario {}: {}\nchannel={} net={} decoder={:?} s={} trials={trials}",
+            "scenario {}: {}\nchannel={} net={} decoder={:?} s={}{code_tag} trials={trials}",
             sc.name,
             sc.description,
             sc.channel.name(),
@@ -505,6 +511,7 @@ pub fn scenario_catalog() -> Table {
 }
 
 /// Train a single configuration from the CLI (`cogc train ...`).
+#[allow(clippy::too_many_arguments)]
 pub fn train_once(
     backend: &Backend,
     model: &str,
@@ -514,11 +521,15 @@ pub fn train_once(
     seed: u64,
     combine: crate::runtime::CombineImpl,
     channel: crate::scenario::ChannelSpec,
+    code: crate::gc::CodeFamily,
+    s: usize,
 ) -> anyhow::Result<RunLog> {
     let mut cfg = TrainConfig::new(model, agg);
     cfg.rounds = rounds;
     cfg.seed = seed;
     cfg.combine = combine;
     cfg.channel = channel;
+    cfg.code = code;
+    cfg.s = s;
     run_training(backend, cfg, net)
 }

@@ -172,8 +172,11 @@ pub fn sample_straggler_patterns(
     rng: &mut Rng,
     limit: usize,
 ) -> Vec<Vec<usize>> {
+    // binomial() is None when C(M,s) overflows u128 — then it is certainly
+    // larger than any practical `limit`, so fall through to random sampling
+    // (the pre-guard code silently wrapped and could "enumerate" garbage).
     let total = binomial(m, s);
-    if total <= limit as u128 {
+    if total.is_some_and(|t| t <= limit as u128) {
         // exhaustive enumeration
         let mut out = Vec::new();
         let mut comb: Vec<usize> = (0..s).collect();
@@ -208,17 +211,19 @@ pub fn sample_straggler_patterns(
         .collect()
 }
 
-/// Binomial coefficient (u128 to survive M up to ~60).
-pub fn binomial(n: usize, k: usize) -> u128 {
+/// Binomial coefficient, or `None` when the (intermediate) product
+/// overflows u128 — large-M callers must treat that as "astronomically
+/// many", never as a small wrapped value.
+pub fn binomial(n: usize, k: usize) -> Option<u128> {
     if k > n {
-        return 0;
+        return Some(0);
     }
     let k = k.min(n - k);
     let mut num: u128 = 1;
     for i in 0..k {
-        num = num * (n - i) as u128 / (i + 1) as u128;
+        num = num.checked_mul((n - i) as u128)? / (i + 1) as u128;
     }
-    num
+    Some(num)
 }
 
 #[cfg(test)]
@@ -234,10 +239,33 @@ mod tests {
 
     #[test]
     fn binomial_known() {
-        assert_eq!(binomial(10, 7), 120);
-        assert_eq!(binomial(10, 0), 1);
-        assert_eq!(binomial(5, 6), 0);
-        assert_eq!(binomial(52, 5), 2_598_960);
+        assert_eq!(binomial(10, 7), Some(120));
+        assert_eq!(binomial(10, 0), Some(1));
+        assert_eq!(binomial(5, 6), Some(0));
+        assert_eq!(binomial(52, 5), Some(2_598_960));
+    }
+
+    #[test]
+    fn binomial_overflow_is_none_not_garbage() {
+        // C(100000, 50000) overflows u128 by a huge margin
+        assert_eq!(binomial(100_000, 50_000), None);
+        // symmetric k still short-circuits cheaply
+        assert_eq!(binomial(100_000, 1), Some(100_000));
+        // largest exact row that fits: C(n, n/2) for n ≤ 131 fits u128
+        assert!(binomial(130, 65).is_some());
+    }
+
+    #[test]
+    fn pattern_sampling_survives_overflowing_binomial() {
+        // would previously compare a wrapped C(M,s) against `limit`; now the
+        // overflow falls through to random sampling of the right shape
+        let mut rng = Rng::new(4);
+        let pats = sample_straggler_patterns(100_000, 50_000, &mut rng, 4);
+        assert_eq!(pats.len(), 4);
+        for p in &pats {
+            assert_eq!(p.len(), 50_000);
+            assert!(p.windows(2).all(|w| w[0] < w[1]));
+        }
     }
 
     #[test]

@@ -1,0 +1,286 @@
+//! Structured code families: the dense cyclic construction plus the
+//! fractional-repetition (FR) family that scales to M = 10⁵–10⁶ clients.
+//!
+//! [`CodeFamily`] names the two constructions the stack can run:
+//!
+//! - **Cyclic** — the paper's dense construction ([`super::GcCode`],
+//!   Tandon Alg. 2): random coefficients, RREF/combinator decoding,
+//!   O(M²) state. Unchanged semantics; the small-M oracle.
+//! - **FractionalRepetition** — [`FrCode`]: M divisible by s+1, allocation
+//!   matrix B block-diagonal with all-ones (s+1)×(s+1) groups. B is never
+//!   materialized on the hot path; decoding is a per-group membership scan
+//!   (one complete delivered row per group pins that group's gradient sum —
+//!   the `GC_FR` construction of *Generalized Fractional Repetition Codes
+//!   for Binary Coded Computations*), GC⁺ partial recovery is the count of
+//!   covered groups, and everything is O(M·(s+1)) in time and memory.
+//!
+//! The FR code satisfies the same decodability identity as the cyclic
+//! family — any M−s rows of B span the all-one vector — because erasing at
+//! most s rows cannot wipe out all s+1 identical rows of any group.
+
+use crate::network::{SparseRealization, SparseSupport};
+use crate::parallel::parallel_map;
+
+/// Which code construction a sweep / training run uses.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CodeFamily {
+    /// Dense cyclic gradient code (the paper's construction; small-M oracle).
+    #[default]
+    Cyclic,
+    /// Block-diagonal fractional-repetition code (structured large-M path).
+    FractionalRepetition,
+}
+
+impl CodeFamily {
+    /// Stable CLI/JSON identifier (`cyclic` | `fr`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            CodeFamily::Cyclic => "cyclic",
+            CodeFamily::FractionalRepetition => "fr",
+        }
+    }
+
+    /// Parse the CLI/JSON identifier.
+    pub fn parse(s: &str) -> Option<CodeFamily> {
+        match s {
+            "cyclic" => Some(CodeFamily::Cyclic),
+            "fr" | "fractional_repetition" => Some(CodeFamily::FractionalRepetition),
+            _ => None,
+        }
+    }
+
+    /// Family-specific (M, s) constraint check.
+    pub fn validate(&self, m: usize, s: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(m >= 2, "need at least 2 clients");
+        anyhow::ensure!(s >= 1 && s < m, "straggler tolerance s must be in [1, M-1]");
+        if let CodeFamily::FractionalRepetition = self {
+            anyhow::ensure!(
+                m % (s + 1) == 0,
+                "fractional repetition needs M divisible by s+1 (M={m}, s={s})"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Group-chunk size of the parallel coverage scan: coarse enough that each
+/// [`parallel_map`] job amortizes dispatch, fine enough that M = 10⁵–10⁶
+/// still splits across every worker.
+const DECODE_CHUNK: usize = 4096;
+
+/// A fractional-repetition gradient code: clients are partitioned into
+/// M/(s+1) groups of s+1; every member of a group computes the plain sum of
+/// its group's gradients (all-ones coefficients). The code is fully
+/// determined by (M, s), so this struct stores no matrix — `B` exists only
+/// implicitly (or via [`FrCode::dense_b`] for small-M oracle checks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrCode {
+    pub m: usize,
+    pub s: usize,
+}
+
+impl FrCode {
+    pub fn new(m: usize, s: usize) -> anyhow::Result<FrCode> {
+        CodeFamily::FractionalRepetition.validate(m, s)?;
+        Ok(FrCode { m, s })
+    }
+
+    /// Number of groups, M/(s+1).
+    #[inline]
+    pub fn groups(&self) -> usize {
+        self.m / (self.s + 1)
+    }
+
+    /// Group index of a client row.
+    #[inline]
+    pub fn group_of(&self, row: usize) -> usize {
+        row / (self.s + 1)
+    }
+
+    /// Member rows of group `g` (a contiguous range).
+    #[inline]
+    pub fn members(&self, g: usize) -> std::ops::Range<usize> {
+        g * (self.s + 1)..(g + 1) * (self.s + 1)
+    }
+
+    /// The implicit incoming-link support (each row listens to the other s
+    /// members of its group).
+    pub fn sparse_support(&self) -> SparseSupport {
+        SparseSupport::group(self.m, self.s)
+    }
+
+    /// Serial per-group coverage scan: `covered[g]` ⟺ some member of group
+    /// `g` heard its whole group *and* reached the PS. Resizes `covered` to
+    /// the group count.
+    pub fn covered_into(&self, real: &SparseRealization, covered: &mut Vec<bool>) {
+        debug_assert_eq!(real.m(), self.m);
+        covered.clear();
+        covered.extend(
+            (0..self.groups())
+                .map(|g| self.members(g).any(|row| real.row_delivered_complete(row))),
+        );
+    }
+
+    /// Parallel coverage scan with an explicit group-chunk size: the
+    /// per-group decode dispatched through [`parallel_map`] (order-
+    /// preserving, so the result is identical to [`FrCode::covered_into`]
+    /// at any thread count).
+    pub fn covered_chunked(
+        &self,
+        real: &SparseRealization,
+        threads: usize,
+        chunk: usize,
+    ) -> Vec<bool> {
+        debug_assert_eq!(real.m(), self.m);
+        let g = self.groups();
+        let chunk = chunk.max(1);
+        let chunks: Vec<(usize, usize)> =
+            (0..g).step_by(chunk).map(|a| (a, (a + chunk).min(g))).collect();
+        let parts = parallel_map(&chunks, threads, |_, &(a, b)| {
+            (a..b)
+                .map(|grp| self.members(grp).any(|row| real.row_delivered_complete(row)))
+                .collect::<Vec<bool>>()
+        });
+        parts.concat()
+    }
+
+    /// [`FrCode::covered_chunked`] at the default chunk size.
+    pub fn covered(&self, real: &SparseRealization, threads: usize) -> Vec<bool> {
+        self.covered_chunked(real, threads, DECODE_CHUNK)
+    }
+
+    /// Union another attempt's coverage into an accumulator (GC⁺ repeats:
+    /// a group decoded on any attempt stays decoded).
+    pub fn union_covered(acc: &mut [bool], attempt: &[bool]) {
+        debug_assert_eq!(acc.len(), attempt.len());
+        for (a, &b) in acc.iter_mut().zip(attempt) {
+            *a |= b;
+        }
+    }
+
+    /// Standard (binary) GC decode succeeds ⟺ every group is covered.
+    pub fn all_covered(covered: &[bool]) -> bool {
+        covered.iter().all(|&c| c)
+    }
+
+    /// Number of covered groups.
+    pub fn covered_groups(covered: &[bool]) -> usize {
+        covered.iter().filter(|&&c| c).count()
+    }
+
+    /// GC⁺ partial-recovery set size |K₄|: every member of a covered group
+    /// is recovered (its group's sum is pinned by the delivered row).
+    pub fn k4_count(&self, covered: &[bool]) -> usize {
+        Self::covered_groups(covered) * (self.s + 1)
+    }
+
+    /// Materialize the block-diagonal allocation matrix — O(M²); for the
+    /// small-M oracle tests and the trainer's dense aggregation only.
+    pub fn dense_b(&self) -> crate::linalg::Matrix {
+        crate::linalg::Matrix::from_fn(self.m, self.m, |i, j| {
+            if self.group_of(i) == self.group_of(j) {
+                1.0
+            } else {
+                0.0
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::solve_consistent;
+
+    #[test]
+    fn family_names_roundtrip() {
+        for fam in [CodeFamily::Cyclic, CodeFamily::FractionalRepetition] {
+            assert_eq!(CodeFamily::parse(fam.name()), Some(fam));
+        }
+        assert_eq!(CodeFamily::parse("fractional_repetition"),
+            Some(CodeFamily::FractionalRepetition));
+        assert_eq!(CodeFamily::parse("dense"), None);
+        assert_eq!(CodeFamily::default(), CodeFamily::Cyclic);
+    }
+
+    #[test]
+    fn validation_enforces_divisibility() {
+        assert!(CodeFamily::Cyclic.validate(10, 7).is_ok());
+        assert!(CodeFamily::FractionalRepetition.validate(12, 3).is_ok());
+        assert!(CodeFamily::FractionalRepetition.validate(10, 3).is_err());
+        assert!(CodeFamily::FractionalRepetition.validate(12, 12).is_err());
+        assert!(FrCode::new(10, 3).is_err());
+    }
+
+    #[test]
+    fn groups_and_members() {
+        let code = FrCode::new(12, 2).unwrap();
+        assert_eq!(code.groups(), 4);
+        assert_eq!(code.group_of(0), 0);
+        assert_eq!(code.group_of(5), 1);
+        assert_eq!(code.members(2).collect::<Vec<_>>(), vec![6, 7, 8]);
+    }
+
+    #[test]
+    fn coverage_scan_matches_hand_built_realization() {
+        let code = FrCode::new(6, 1).unwrap(); // 3 groups of 2
+        let sup = code.sparse_support();
+        let mut real = SparseRealization::perfect(&sup);
+        // group 0: row 0 delivered+complete → covered
+        // group 1: row 2 uplink down, row 3 missing its incoming → uncovered
+        real.tau[2] = false;
+        real.t[3] = false; // row 3, idx 0
+        // group 2: row 4 complete but uplink down; row 5 fine → covered
+        real.tau[4] = false;
+        let mut covered = Vec::new();
+        code.covered_into(&real, &mut covered);
+        assert_eq!(covered, vec![true, false, true]);
+        assert!(!FrCode::all_covered(&covered));
+        assert_eq!(FrCode::covered_groups(&covered), 2);
+        assert_eq!(code.k4_count(&covered), 4);
+    }
+
+    #[test]
+    fn parallel_scan_matches_serial_across_chunkings() {
+        let code = FrCode::new(60, 2).unwrap();
+        let sup = code.sparse_support();
+        let mut rng = crate::util::rng::Rng::new(5);
+        let net = crate::network::Network::homogeneous(60, 0.4, 0.3);
+        for _ in 0..20 {
+            let real = SparseRealization::sample(&sup, &net, &mut rng);
+            let mut serial = Vec::new();
+            code.covered_into(&real, &mut serial);
+            for chunk in [1, 3, 7, 4096] {
+                for threads in [1, 4] {
+                    assert_eq!(code.covered_chunked(&real, threads, chunk), serial);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn union_accumulates_gc_plus_repeats() {
+        let mut acc = vec![false, true, false];
+        FrCode::union_covered(&mut acc, &[true, false, false]);
+        assert_eq!(acc, vec![true, true, false]);
+    }
+
+    #[test]
+    fn dense_b_is_block_diagonal_and_decodable() {
+        let code = FrCode::new(8, 1).unwrap();
+        let b = code.dense_b();
+        for i in 0..8 {
+            for j in 0..8 {
+                let want = if i / 2 == j / 2 { 1.0 } else { 0.0 };
+                assert_eq!(b[(i, j)], want);
+            }
+        }
+        // any M - s rows span the all-one vector (decodability identity):
+        // drop one row per trial and solve  B_Fᵀ · a = 𝟙
+        for drop in 0..8 {
+            let rows: Vec<usize> = (0..8).filter(|&r| r != drop).collect();
+            let bsub = b.select_rows(&rows).transpose();
+            assert!(solve_consistent(&bsub, &vec![1.0; 8]).is_some(), "dropping row {drop}");
+        }
+    }
+}

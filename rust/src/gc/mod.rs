@@ -1,12 +1,15 @@
-//! Gradient-coding core: cyclic code construction, the standard (binary)
-//! GC decoder, the complementary GC⁺ decoder, and the rank analyses that
-//! underpin the paper's reliability results.
+//! Gradient-coding core: cyclic code construction, the structured
+//! fractional-repetition family, the standard (binary) GC decoder, the
+//! complementary GC⁺ decoder, and the rank analyses that underpin the
+//! paper's reliability results.
 
 pub mod codes;
 pub mod combinator;
+pub mod family;
 pub mod gcplus;
 pub mod rank;
 
 pub use codes::GcCode;
 pub use combinator::{apply_combinator, find_combinator};
+pub use family::{CodeFamily, FrCode};
 pub use gcplus::{decode, decode_approx, stack_attempts, Attempt, Decoded, GcPlusDecoder};

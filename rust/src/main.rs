@@ -34,9 +34,10 @@
 
 use cogc::coordinator::{Aggregator, Design};
 use cogc::figures;
+use cogc::gc::CodeFamily;
 use cogc::network::Network;
 use cogc::runtime::{Backend, CombineImpl};
-use cogc::scenario::{self, ChannelSpec, Scenario};
+use cogc::scenario::{self, ChannelSpec, NetworkSpec, Scenario};
 use cogc::util::cli::Args;
 
 fn main() {
@@ -45,6 +46,12 @@ fn main() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
+}
+
+fn parse_code(a: &Args) -> anyhow::Result<CodeFamily> {
+    let name = a.str_opt("code", "cyclic");
+    CodeFamily::parse(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown --code {name:?} (cyclic|fr)"))
 }
 
 fn parse_agg(a: &Args) -> anyhow::Result<Aggregator> {
@@ -129,6 +136,11 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
                         "scenario run takes one name, got extra arguments {:?}",
                         &args.positionals[2..]
                     );
+                    // --code/--m/--s retarget a scenario without editing
+                    // JSON; with no name given they default to "smoke"
+                    let has_overrides = args.get("code").is_some()
+                        || args.get("m").is_some()
+                        || args.get("s").is_some();
                     let mut sc: Scenario = match (args.get("file"), args.positionals.get(1)) {
                         (Some(_), Some(name)) => anyhow::bail!(
                             "pass either a scenario name or --file, not both (got {name:?} \
@@ -136,17 +148,47 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
                         ),
                         (Some(path), None) => Scenario::load(std::path::Path::new(path))?,
                         (None, Some(name)) => scenario::find(name)?,
+                        (None, None) if has_overrides => scenario::find("smoke")?,
                         (None, None) => anyhow::bail!(
                             "usage: cogc scenario run <name> (or --file spec.json); \
                              see `cogc scenario list`"
                         ),
                     };
+                    let mut revalidate = false;
                     if let Some(r) = args.get("rounds") {
                         sc.rounds = r.parse().map_err(|_| {
                             anyhow::anyhow!("--rounds expects an integer, got {r:?}")
                         })?;
+                        revalidate = true;
+                    }
+                    if args.get("code").is_some() {
+                        sc.code = parse_code(&args)?;
+                        revalidate = true;
+                    }
+                    if args.get("m").is_some() {
+                        let m = args.usize_opt("m", 0)?;
+                        match &mut sc.net {
+                            NetworkSpec::Homogeneous { m: mm, .. } => *mm = m,
+                            NetworkSpec::Perfect { m: mm } => *mm = m,
+                        }
+                        revalidate = true;
+                    }
+                    if args.get("s").is_some() {
+                        sc.s = args.usize_opt("s", sc.s)?;
+                        revalidate = true;
+                    }
+                    if revalidate {
                         sc.validate()?;
                     }
+                    // dense cyclic materializes M×M matrices per attempt —
+                    // refuse federation scales that only the sparse family
+                    // can carry instead of thrashing for hours
+                    anyhow::ensure!(
+                        sc.code != CodeFamily::Cyclic || sc.net.m() <= 4096,
+                        "M = {} with the dense cyclic family would allocate O(M²) state; \
+                         pass --code fr (fractional repetition, needs M % (s+1) == 0)",
+                        sc.net.m()
+                    );
                     let trials = args.usize_opt("trials", 2_000)?;
                     figures::scenario_sweep(&sc, trials, seed, threads).print();
                 }
@@ -188,8 +230,13 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
                 "iid" => ChannelSpec::Iid,
                 name => scenario::find(name)?.channel,
             };
-            let log =
-                figures::train_once(&backend, &model, agg, net, rounds, seed, combine, channel)?;
+            // code family + straggler tolerance (fr needs M % (s+1) == 0;
+            // at the backends' M=10 that means e.g. --code fr --s 4)
+            let code = parse_code(&args)?;
+            let s = args.usize_opt("s", 7)?;
+            let log = figures::train_once(
+                &backend, &model, agg, net, rounds, seed, combine, channel, code, s,
+            )?;
             print!("{}", log.to_csv());
             eprintln!(
                 "final acc {:.4}, best {:.4}, {} updates, {} transmissions",
@@ -235,6 +282,12 @@ scenarios (stateful channels: bursty / correlated / straggler links):
   scenario run <name>             per-round time-series CSV (outage rate,
         [--trials N] [--rounds R] GC+ full/partial/none split, burst
                                   fraction, deadline hit-rate, wall-clock)
+        [--code cyclic|fr]        code family: dense cyclic (default) or
+        [--m N] [--s S]           fractional repetition — the sparse
+                                  O(M·(s+1)) path that scales to M = 10^5-10^6
+                                  (needs M % (s+1) == 0); --m/--s retarget
+                                  the scenario's federation size in place
+                                  (default scenario: smoke)
   scenario run --file spec.json   run a custom JSON scenario spec
 
 training:
@@ -244,6 +297,8 @@ training:
         [--rounds N] [--seed S] [--p-ps P] [--p-cc P] [--tr T] [--attempts A]
         [--channel iid|<scenario>]  link dynamics: iid or the channel model
                      of a named scenario (e.g. --channel bursty-c2c)
+        [--code cyclic|fr] [--s S]  gradient-code family + straggler
+                     tolerance (fr needs M % (s+1) == 0, e.g. --s 4 at M=10)
         [--combine pallas|native]   coded-combine kernels (NOT the model
                      backend — see --backend); pallas needs PJRT artifacts
 

@@ -64,7 +64,7 @@ impl Realization {
     /// Draw a fresh memoryless realization from the network's per-link
     /// Bernoulli probabilities.
     pub fn sample(net: &Network, rng: &mut Rng) -> Realization {
-        Realization::sample_with(net.m, rng, |i, j| net.p_c2c[(i, j)], |i| net.p_c2s[i])
+        Realization::sample_with(net.m, rng, |i, j| net.p_c2c(i, j), |i| net.p_c2s[i])
     }
 
     /// All links up (ideal-FL baseline / perfect round).
@@ -141,7 +141,7 @@ mod tests {
         for _ in 0..20 {
             let r1 = Realization::sample(&net, &mut a);
             let r2 =
-                Realization::sample_with(7, &mut b, |i, j| net.p_c2c[(i, j)], |i| net.p_c2s[i]);
+                Realization::sample_with(7, &mut b, |i, j| net.p_c2c(i, j), |i| net.p_c2s[i]);
             assert_eq!(r1, r2);
         }
         // the two streams advanced identically

@@ -2,7 +2,9 @@
 //! between clients and from clients to the parameter server.
 
 pub mod channel;
+pub mod sparse;
 pub mod topology;
 
 pub use channel::Realization;
+pub use sparse::{SparseRealization, SparseSupport};
 pub use topology::Network;

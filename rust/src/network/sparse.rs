@@ -1,0 +1,283 @@
+//! Sparse channel realizations for structured code families.
+//!
+//! The dense [`Realization`](super::Realization) samples every off-diagonal
+//! client-to-client link — O(M²) draws and O(M²) bytes — even though a
+//! structured code only ever *reads* the s incoming links on each row's
+//! support. [`SparseRealization`] samples exactly those M·s supported links
+//! (plus the M uplinks), so the structured path stays O(M·(s+1)) in both
+//! time and memory and scales to M = 10⁵–10⁶ clients.
+//!
+//! The support itself is implicit: [`SparseSupport`] maps `(row, idx)` to
+//! the idx-th incoming neighbour arithmetically (cyclic offset or
+//! fractional-repetition group member), so no adjacency lists are stored.
+//!
+//! Draw schedule (the sparse analogue of the dense emission contract):
+//! exactly one Bernoulli per supported incoming link in row-major
+//! `(row, idx)` order, then one per uplink in client order. Any two channel
+//! models that feed identical probabilities therefore consume byte-identical
+//! RNG streams, which is what the degenerate-equivalence tests pin down.
+
+use super::topology::Network;
+use crate::util::rng::Rng;
+
+/// Implicit incoming-link support of a structured code: which s neighbours
+/// each row listens to, computed arithmetically instead of stored.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SparseSupport {
+    /// Cyclic code support: row r listens to rows r+1 … r+s (mod M).
+    Cyclic { m: usize, s: usize },
+    /// Fractional-repetition support: row r listens to the other s members
+    /// of its (s+1)-sized group. Requires M divisible by s+1.
+    Group { m: usize, s: usize },
+}
+
+impl SparseSupport {
+    pub fn cyclic(m: usize, s: usize) -> SparseSupport {
+        assert!(s < m, "cyclic support needs s < M");
+        SparseSupport::Cyclic { m, s }
+    }
+
+    pub fn group(m: usize, s: usize) -> SparseSupport {
+        assert!(s < m && m % (s + 1) == 0, "group support needs s < M and M % (s+1) == 0");
+        SparseSupport::Group { m, s }
+    }
+
+    #[inline]
+    pub fn m(&self) -> usize {
+        match *self {
+            SparseSupport::Cyclic { m, .. } | SparseSupport::Group { m, .. } => m,
+        }
+    }
+
+    /// Incoming links per row (= s for both families).
+    #[inline]
+    pub fn k(&self) -> usize {
+        match *self {
+            SparseSupport::Cyclic { s, .. } | SparseSupport::Group { s, .. } => s,
+        }
+    }
+
+    /// The idx-th incoming neighbour of `row` (idx < k).
+    #[inline]
+    pub fn neighbor(&self, row: usize, idx: usize) -> usize {
+        match *self {
+            SparseSupport::Cyclic { m, s } => {
+                debug_assert!(idx < s);
+                (row + 1 + idx) % m
+            }
+            SparseSupport::Group { s, .. } => {
+                debug_assert!(idx < s);
+                let base = row - row % (s + 1);
+                let off = row - base;
+                // skip self: group members base..base+s, excluding `row`
+                base + idx + (idx >= off) as usize
+            }
+        }
+    }
+
+    /// Iterator over the incoming neighbours of `row`.
+    pub fn incoming_iter(&self, row: usize) -> impl Iterator<Item = usize> + '_ {
+        let k = self.k();
+        (0..k).map(move |idx| self.neighbor(row, idx))
+    }
+
+    /// Total supported incoming links (M·s).
+    pub fn links(&self) -> usize {
+        self.m() * self.k()
+    }
+}
+
+/// One channel realization restricted to a sparse support: M·s incoming
+/// link states plus M uplink states. The structured-path replacement for
+/// the dense M×M [`Realization`](super::Realization).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparseRealization {
+    /// Incoming links per row (mirrors the support's `k`).
+    pub k: usize,
+    /// `t[row * k + idx] = true` iff the link from `support.neighbor(row,
+    /// idx)` to `row` is up. Length M·k.
+    pub t: Vec<bool>,
+    /// `tau[m] = true` iff the uplink from client m to the PS is up.
+    pub tau: Vec<bool>,
+}
+
+impl SparseRealization {
+    /// Draw a realization on `sup`'s links with per-link probabilities
+    /// supplied by closures, into a reused buffer. Exactly one Bernoulli
+    /// per supported link in row-major `(row, idx)` order, then one per
+    /// uplink; steady-state reuse allocates nothing. The c2c closure
+    /// receives `(row, idx, neighbor)` so stateful models can index their
+    /// per-link state by flat `(row, idx)` position without recomputing
+    /// support arithmetic.
+    pub fn sample_with_into(
+        sup: &SparseSupport,
+        rng: &mut Rng,
+        mut p_c2c: impl FnMut(usize, usize, usize) -> f64,
+        mut p_c2s: impl FnMut(usize) -> f64,
+        out: &mut SparseRealization,
+    ) {
+        let (m, k) = (sup.m(), sup.k());
+        if out.k != k || out.tau.len() != m || out.t.len() != m * k {
+            out.k = k;
+            out.t = vec![true; m * k];
+            out.tau = vec![true; m];
+        }
+        for row in 0..m {
+            for idx in 0..k {
+                let j = sup.neighbor(row, idx);
+                out.t[row * k + idx] = !rng.bernoulli(p_c2c(row, idx, j));
+            }
+        }
+        for (i, up) in out.tau.iter_mut().enumerate() {
+            *up = !rng.bernoulli(p_c2s(i));
+        }
+    }
+
+    /// Draw a fresh memoryless realization from the network's per-link
+    /// Bernoulli probabilities, restricted to `sup`.
+    pub fn sample(sup: &SparseSupport, net: &Network, rng: &mut Rng) -> SparseRealization {
+        let mut out = SparseRealization::default();
+        SparseRealization::sample_with_into(
+            sup,
+            rng,
+            |row, _idx, j| net.p_c2c(row, j),
+            |i| net.p_c2s[i],
+            &mut out,
+        );
+        out
+    }
+
+    /// All links up (perfect round).
+    pub fn perfect(sup: &SparseSupport) -> SparseRealization {
+        SparseRealization {
+            k: sup.k(),
+            t: vec![true; sup.links()],
+            tau: vec![true; sup.m()],
+        }
+    }
+
+    /// Project a dense realization onto `sup` — same link states, sparse
+    /// layout. The equivalence tests use this to run the dense oracle and
+    /// the sparse scan on *identical* channel draws.
+    pub fn project_from_dense(sup: &SparseSupport, dense: &super::Realization) -> SparseRealization {
+        let (m, k) = (sup.m(), sup.k());
+        assert_eq!(dense.m(), m);
+        let mut t = vec![true; m * k];
+        for row in 0..m {
+            for idx in 0..k {
+                t[row * k + idx] = dense.t[row][sup.neighbor(row, idx)];
+            }
+        }
+        SparseRealization { k, t, tau: dense.tau.clone() }
+    }
+
+    pub fn m(&self) -> usize {
+        self.tau.len()
+    }
+
+    /// State of the idx-th incoming link of `row`.
+    #[inline]
+    pub fn link_up(&self, row: usize, idx: usize) -> bool {
+        self.t[row * self.k + idx]
+    }
+
+    /// True iff `row` heard every one of its incoming links.
+    #[inline]
+    pub fn heard_all(&self, row: usize) -> bool {
+        self.t[row * self.k..(row + 1) * self.k].iter().all(|&b| b)
+    }
+
+    /// True iff `row`'s coded combination reaches the PS: all incoming
+    /// links up *and* the uplink up.
+    #[inline]
+    pub fn row_delivered_complete(&self, row: usize) -> bool {
+        self.tau[row] && self.heard_all(row)
+    }
+
+    /// Number of up uplinks.
+    pub fn uplinks_up(&self) -> usize {
+        self.tau.iter().filter(|&&b| b).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::Realization;
+
+    #[test]
+    fn cyclic_neighbors_match_offsets() {
+        let sup = SparseSupport::cyclic(10, 3);
+        assert_eq!(sup.incoming_iter(0).collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert_eq!(sup.incoming_iter(8).collect::<Vec<_>>(), vec![9, 0, 1]);
+        assert_eq!(sup.k(), 3);
+        assert_eq!(sup.links(), 30);
+    }
+
+    #[test]
+    fn group_neighbors_skip_self() {
+        let sup = SparseSupport::group(12, 3);
+        // group 0 = rows 0..4
+        assert_eq!(sup.incoming_iter(0).collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert_eq!(sup.incoming_iter(2).collect::<Vec<_>>(), vec![0, 1, 3]);
+        assert_eq!(sup.incoming_iter(3).collect::<Vec<_>>(), vec![0, 1, 2]);
+        // group 2 = rows 8..12
+        assert_eq!(sup.incoming_iter(9).collect::<Vec<_>>(), vec![8, 10, 11]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn group_requires_divisibility() {
+        SparseSupport::group(10, 3);
+    }
+
+    #[test]
+    fn perfect_and_heard_all() {
+        let sup = SparseSupport::group(8, 1);
+        let mut r = SparseRealization::perfect(&sup);
+        assert!(r.heard_all(5));
+        assert!(r.row_delivered_complete(5));
+        r.t[5] = false; // row 5, idx 0
+        assert!(!r.heard_all(5));
+        r.tau[2] = false;
+        assert!(!r.row_delivered_complete(2));
+        assert_eq!(r.uplinks_up(), 7);
+    }
+
+    #[test]
+    fn sample_rates_match_probabilities() {
+        let net = Network::homogeneous(12, 0.4, 0.25);
+        let sup = SparseSupport::cyclic(12, 3);
+        let mut rng = Rng::new(3);
+        let n = 20_000;
+        let (mut up_tau, mut up_t) = (0usize, 0usize);
+        for _ in 0..n {
+            let r = SparseRealization::sample(&sup, &net, &mut rng);
+            up_tau += r.tau[3] as usize;
+            up_t += r.link_up(2, 1) as usize;
+        }
+        let f_tau = up_tau as f64 / n as f64;
+        let f_t = up_t as f64 / n as f64;
+        assert!((f_tau - 0.6).abs() < 0.02, "tau up-rate {f_tau}");
+        assert!((f_t - 0.75).abs() < 0.02, "t up-rate {f_t}");
+    }
+
+    #[test]
+    fn projection_agrees_with_dense_states() {
+        let net = Network::homogeneous(12, 0.3, 0.5);
+        let sup = SparseSupport::group(12, 2);
+        let mut rng = Rng::new(17);
+        for _ in 0..50 {
+            let dense = Realization::sample(&net, &mut rng);
+            let sparse = SparseRealization::project_from_dense(&sup, &dense);
+            assert_eq!(sparse.tau, dense.tau);
+            for row in 0..12 {
+                for idx in 0..sup.k() {
+                    assert_eq!(sparse.link_up(row, idx), dense.t[row][sup.neighbor(row, idx)]);
+                }
+                let inc: Vec<usize> = sup.incoming_iter(row).collect();
+                assert_eq!(sparse.heard_all(row), dense.heard_all(row, &inc));
+            }
+        }
+    }
+}

@@ -1,8 +1,15 @@
 //! Network topologies: per-link Bernoulli outage probabilities (paper §II-B).
 //!
 //! Links are independent binary erasures: client-k → client-m fails with
-//! probability `p_c2c[(m,k)]`; client-m → PS fails with probability
+//! probability `p_c2c(m, k)`; client-m → PS fails with probability
 //! `p_c2s[m]`. Downlink broadcast is error-free (paper assumption).
+//!
+//! Client-to-client probabilities are stored behind an implicit/dense enum:
+//! every homogeneous constructor keeps a single shared value (O(1) storage,
+//! which is what lets the structured large-M path run at M = 10⁵–10⁶
+//! without an M×M matrix), while the heterogeneous constructors fall back
+//! to a dense per-link matrix. The [`Network::p_c2c`] accessor returns the
+//! same values either way, so the dense small-M paths are unchanged.
 //!
 //! The named constructors reproduce the paper's experimental networks:
 //! Fig. 9's Networks 1–3 (homogeneous / heterogeneous client→PS), Fig. 6's
@@ -11,26 +18,30 @@
 use crate::linalg::Matrix;
 use crate::util::rng::Rng;
 
+/// Client-to-client outage storage: one shared off-diagonal value (the only
+/// form the large-M structured path ever builds) or a dense per-link matrix
+/// (the heterogeneous small-M networks).
+#[derive(Clone, Debug)]
+enum C2c {
+    Uniform(f64),
+    Dense(Matrix),
+}
+
 #[derive(Clone, Debug)]
 pub struct Network {
     pub m: usize,
     /// `p_c2s[m]`: outage probability of the uplink from client m to the PS.
     pub p_c2s: Vec<f64>,
-    /// `p_c2c[(m,k)]`: outage probability of the link from client k to
-    /// client m (diagonal is 0 — no transmission to self).
-    pub p_c2c: Matrix,
+    c2c: C2c,
 }
 
 impl Network {
     /// Homogeneous network: every uplink fails w.p. `p_ps`, every
-    /// client-to-client link w.p. `p_cc`.
+    /// client-to-client link w.p. `p_cc`. Stores no per-link state, so this
+    /// is O(M) memory at any M.
     pub fn homogeneous(m: usize, p_ps: f64, p_cc: f64) -> Network {
         assert!((0.0..=1.0).contains(&p_ps) && (0.0..=1.0).contains(&p_cc));
-        let mut p_c2c = Matrix::from_fn(m, m, |_, _| p_cc);
-        for i in 0..m {
-            p_c2c[(i, i)] = 0.0;
-        }
-        Network { m, p_c2s: vec![p_ps; m], p_c2c }
+        Network { m, p_c2s: vec![p_ps; m], c2c: C2c::Uniform(p_cc) }
     }
 
     /// Heterogeneous uplinks drawn from U(lo, hi); homogeneous c2c links.
@@ -43,6 +54,8 @@ impl Network {
     }
 
     /// Fully heterogeneous: uplinks U(lo_s,hi_s), c2c links U(lo_c,hi_c).
+    /// Draw order (uplinks, then row-major off-diagonal c2c) is part of the
+    /// reproducibility contract for the paper networks.
     pub fn heterogeneous(
         m: usize,
         (lo_s, hi_s): (f64, f64),
@@ -53,14 +66,36 @@ impl Network {
         for p in &mut net.p_c2s {
             *p = rng.uniform(lo_s, hi_s);
         }
+        let mut p_c2c = Matrix::from_fn(m, m, |_, _| 0.0);
         for i in 0..m {
             for j in 0..m {
                 if i != j {
-                    net.p_c2c[(i, j)] = rng.uniform(lo_c, hi_c);
+                    p_c2c[(i, j)] = rng.uniform(lo_c, hi_c);
                 }
             }
         }
+        net.c2c = C2c::Dense(p_c2c);
         net
+    }
+
+    /// Outage probability of the link from client `j` to client `i`
+    /// (0 on the diagonal — no transmission to self).
+    #[inline]
+    pub fn p_c2c(&self, i: usize, j: usize) -> f64 {
+        if i == j {
+            return 0.0;
+        }
+        match &self.c2c {
+            C2c::Uniform(p) => *p,
+            C2c::Dense(mat) => mat[(i, j)],
+        }
+    }
+
+    /// True iff client-to-client probabilities are stored implicitly (one
+    /// shared value) rather than as a dense M×M matrix. The large-M
+    /// structured path asserts this to guarantee O(M) resident state.
+    pub fn c2c_is_uniform(&self) -> bool {
+        matches!(self.c2c, C2c::Uniform(_))
     }
 
     // -- paper networks --------------------------------------------------------
@@ -110,15 +145,24 @@ impl Network {
 
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.p_c2s.len() == self.m, "p_c2s length != M");
-        anyhow::ensure!(
-            self.p_c2c.rows == self.m && self.p_c2c.cols == self.m,
-            "p_c2c shape != MxM"
-        );
-        for i in 0..self.m {
-            anyhow::ensure!(self.p_c2c[(i, i)] == 0.0, "p_c2c diagonal must be 0");
-            anyhow::ensure!((0.0..=1.0).contains(&self.p_c2s[i]), "p_c2s out of range");
-            for j in 0..self.m {
-                anyhow::ensure!((0.0..=1.0).contains(&self.p_c2c[(i, j)]), "p_c2c out of range");
+        for p in &self.p_c2s {
+            anyhow::ensure!((0.0..=1.0).contains(p), "p_c2s out of range");
+        }
+        match &self.c2c {
+            C2c::Uniform(p) => {
+                anyhow::ensure!((0.0..=1.0).contains(p), "p_c2c out of range");
+            }
+            C2c::Dense(mat) => {
+                anyhow::ensure!(mat.rows == self.m && mat.cols == self.m, "p_c2c shape != MxM");
+                for i in 0..self.m {
+                    anyhow::ensure!(mat[(i, i)] == 0.0, "p_c2c diagonal must be 0");
+                    for j in 0..self.m {
+                        anyhow::ensure!(
+                            (0.0..=1.0).contains(&mat[(i, j)]),
+                            "p_c2c out of range"
+                        );
+                    }
+                }
             }
         }
         Ok(())
@@ -134,8 +178,26 @@ mod tests {
         let net = Network::homogeneous(10, 0.4, 0.25);
         net.validate().unwrap();
         assert_eq!(net.p_c2s, vec![0.4; 10]);
-        assert_eq!(net.p_c2c[(0, 1)], 0.25);
-        assert_eq!(net.p_c2c[(3, 3)], 0.0);
+        assert_eq!(net.p_c2c(0, 1), 0.25);
+        assert_eq!(net.p_c2c(3, 3), 0.0);
+        assert!(net.c2c_is_uniform());
+    }
+
+    #[test]
+    fn heterogeneous_is_dense_with_zero_diagonal() {
+        let mut rng = Rng::new(9);
+        let net = Network::heterogeneous(6, (0.1, 0.3), (0.2, 0.6), &mut rng);
+        net.validate().unwrap();
+        assert!(!net.c2c_is_uniform());
+        for i in 0..6 {
+            assert_eq!(net.p_c2c(i, i), 0.0);
+            for j in 0..6 {
+                if i != j {
+                    let p = net.p_c2c(i, j);
+                    assert!((0.2..=0.6).contains(&p), "p_c2c({i},{j}) = {p}");
+                }
+            }
+        }
     }
 
     #[test]
@@ -158,12 +220,12 @@ mod tests {
     fn fig6_settings_match_paper() {
         let s3 = Network::fig6_setting(3, 10);
         assert_eq!(s3.p_c2s[0], 0.75);
-        assert_eq!(s3.p_c2c[(0, 1)], 0.5);
+        assert_eq!(s3.p_c2c(0, 1), 0.5);
     }
 
     #[test]
     fn conn_tiers() {
-        assert_eq!(Network::conn_tier("poor", 10).p_c2c[(1, 0)], 0.8);
+        assert_eq!(Network::conn_tier("poor", 10).p_c2c(1, 0), 0.8);
         assert_eq!(Network::conn_tier("good", 10).p_c2s[0], 0.75);
     }
 

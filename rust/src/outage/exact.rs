@@ -22,7 +22,7 @@ pub fn incomplete_probs(net: &Network, code: &GcCode) -> Vec<f64> {
             let all_up: f64 = code
                 .incoming(m)
                 .iter()
-                .map(|&k| 1.0 - net.p_c2c[(m, k)])
+                .map(|&k| 1.0 - net.p_c2c(m, k))
                 .product();
             1.0 - all_up
         })

@@ -21,8 +21,8 @@
 //! decoder instead of re-running a full RREF over the growing stack every
 //! block.
 
-use crate::gc::{self, GcCode};
-use crate::network::{Network, Realization};
+use crate::gc::{self, FrCode, GcCode};
+use crate::network::{Network, Realization, SparseRealization};
 use crate::parallel::{Accumulate, MonteCarlo};
 use crate::scenario::{ChannelModel, CHANNEL_STREAM};
 use crate::util::rng::Rng;
@@ -235,6 +235,140 @@ pub fn gcplus_recovery(
     stats
 }
 
+/// Pooled per-worker buffers of the fractional-repetition trial bodies:
+/// everything is O(M·(s+1)) — no dense matrix, no RREF decoder.
+struct FrTrialScratch {
+    ch: Box<dyn ChannelModel>,
+    real: SparseRealization,
+    covered: Vec<bool>,
+    acc: Vec<bool>,
+}
+
+impl FrTrialScratch {
+    fn new(proto: &dyn ChannelModel, code: &FrCode) -> FrTrialScratch {
+        FrTrialScratch {
+            ch: proto.clone_box(),
+            real: SparseRealization::perfect(&code.sparse_support()),
+            covered: Vec::with_capacity(code.groups()),
+            acc: vec![false; code.groups()],
+        }
+    }
+}
+
+/// Monte-Carlo outage estimate for the fractional-repetition family:
+/// outage iff some group has no member delivering a complete sum. The
+/// trial body is the O(M) group scan over a sparse realization — the
+/// structured-path replacement for [`estimate_outage`]'s rank test.
+pub fn estimate_outage_fr(
+    net: &Network,
+    code: &FrCode,
+    ch: &dyn ChannelModel,
+    trials: usize,
+    mc: &MonteCarlo,
+) -> f64 {
+    let sup = code.sparse_support();
+    let outages: usize = mc.run_scratch(
+        trials,
+        || FrTrialScratch::new(ch, code),
+        |t, rng, acc: &mut usize, s| {
+            s.ch.reset_sparse(&sup, net, mc.substream_seed(CHANNEL_STREAM, t));
+            s.ch.sample_sparse_into(&sup, net, rng, &mut s.real);
+            code.covered_into(&s.real, &mut s.covered);
+            if !FrCode::all_covered(&s.covered) {
+                *acc += 1;
+            }
+        },
+    );
+    outages as f64 / trials as f64
+}
+
+/// One FR GC⁺ round: accumulate covered groups across repeated attempts
+/// and classify like [`recovery_trial`], except "decodable" is the group
+/// coverage scan (each covered group contributes its s+1 models to K₄)
+/// instead of the incremental RREF.
+fn fr_recovery_trial(
+    net: &Network,
+    code: &FrCode,
+    mode: RecoveryMode,
+    rng: &mut Rng,
+    stats: &mut RecoveryStats,
+    scratch: &mut FrTrialScratch,
+) {
+    let m = code.m;
+    if stats.k4_hist.len() < m + 1 {
+        stats.k4_hist.resize(m + 1, 0);
+    }
+    let (tr, max_blocks) = match mode {
+        RecoveryMode::FixedTr(tr) => (tr, 1),
+        RecoveryMode::UntilDecode { tr, max_blocks } => (tr, max_blocks),
+    };
+    stats.trials += 1;
+    let sup = code.sparse_support();
+    scratch.acc.clear();
+    scratch.acc.resize(code.groups(), false);
+    let mut standard = false;
+    'blocks: for _ in 0..max_blocks {
+        for _ in 0..tr {
+            scratch.ch.sample_sparse_into(&sup, net, rng, &mut scratch.real);
+            code.covered_into(&scratch.real, &mut scratch.covered);
+            stats.attempts += 1;
+            // standard FR decode on any single attempt: every group covered
+            if FrCode::all_covered(&scratch.covered) {
+                standard = true;
+                break 'blocks;
+            }
+            FrCode::union_covered(&mut scratch.acc, &scratch.covered);
+        }
+        // any covered group decodes immediately (K₄ ≠ ∅), mirroring the
+        // dense engine's per-block decodable_count() > 0 test
+        if FrCode::covered_groups(&scratch.acc) > 0 {
+            break 'blocks;
+        }
+        if matches!(mode, RecoveryMode::FixedTr(_)) {
+            break 'blocks;
+        }
+    }
+    if standard {
+        stats.standard += 1;
+        stats.k4_hist[m] += 1;
+        return;
+    }
+    let k4 = code.k4_count(&scratch.acc);
+    if k4 == m {
+        stats.full += 1;
+    } else if k4 > 0 {
+        stats.partial += 1;
+    } else {
+        stats.none += 1;
+    }
+    stats.k4_hist[k4] += 1;
+}
+
+/// FR-family analogue of [`gcplus_recovery`]: classify GC⁺ outcomes over
+/// `trials` rounds through the parallel engine using the O(M) group scan.
+pub fn fr_recovery(
+    net: &Network,
+    ch: &dyn ChannelModel,
+    code: &FrCode,
+    mode: RecoveryMode,
+    trials: usize,
+    mc: &MonteCarlo,
+) -> RecoveryStats {
+    let sup = code.sparse_support();
+    let mut stats: RecoveryStats = mc.run_scratch(
+        trials,
+        || FrTrialScratch::new(ch, code),
+        |t, rng, acc: &mut RecoveryStats, scratch| {
+            scratch.ch.reset_sparse(&sup, net, mc.substream_seed(CHANNEL_STREAM, t));
+            fr_recovery_trial(net, code, mode, rng, acc, scratch);
+        },
+    );
+    if stats.k4_hist.len() < code.m + 1 {
+        stats.k4_hist.resize(code.m + 1, 0); // trials == 0 edge case
+    }
+    stats
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -389,5 +523,86 @@ mod tests {
         let st2 =
             gcplus_recovery(&net, &Iid, 10, 7, RecoveryMode::FixedTr(2), 400, &MonteCarlo::new(4));
         assert!(st2.p_none() < 0.7, "fixed-tr decode rate too low: {:.3}", st2.p_none());
+    }
+
+    /// Closed-form FR outage on a homogeneous iid network: a member
+    /// delivers w.p. (1−p_mk)^s (1−p_m); a group is covered unless all
+    /// s+1 members fail; success needs every group covered.
+    fn fr_outage_closed_form(m: usize, s: usize, p_m: f64, p_mk: f64) -> f64 {
+        let p_del = (1.0 - p_mk).powi(s as i32) * (1.0 - p_m);
+        let p_group = 1.0 - (1.0 - p_del).powi((s + 1) as i32);
+        1.0 - p_group.powi((m / (s + 1)) as i32)
+    }
+
+    #[test]
+    fn fr_mc_matches_closed_form() {
+        Prop::new(6).forall("fr mc vs product form", |rng, _| {
+            let s = rng.range(1, 4);
+            let groups = rng.range(2, 5);
+            let m = groups * (s + 1);
+            let (p_m, p_mk) = (rng.uniform(0.05, 0.5), rng.uniform(0.05, 0.5));
+            let net = Network::homogeneous(m, p_m, p_mk);
+            let code = FrCode::new(m, s).unwrap();
+            let exact = fr_outage_closed_form(m, s, p_m, p_mk);
+            let trials = 20_000;
+            let mc = MonteCarlo::new(rng.next_u64());
+            let est = estimate_outage_fr(&net, &code, &Iid, trials, &mc);
+            let sigma = (exact * (1.0 - exact) / trials as f64).sqrt();
+            assert!(
+                (est - exact).abs() < 4.0 * sigma + 5e-3,
+                "exact {exact} vs mc {est} (m={m}, s={s})"
+            );
+        });
+    }
+
+    #[test]
+    fn fr_outage_thread_invariant() {
+        let net = Network::homogeneous(12, 0.3, 0.3);
+        let code = FrCode::new(12, 2).unwrap();
+        let mc1 = MonteCarlo::new(0xF00D).with_threads(1);
+        let want = estimate_outage_fr(&net, &code, &Iid, 3_000, &mc1);
+        for threads in [2usize, 8] {
+            let mc = MonteCarlo::new(0xF00D).with_threads(threads);
+            let got = estimate_outage_fr(&net, &code, &Iid, 3_000, &mc);
+            assert_eq!(got.to_bits(), want.to_bits(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn fr_recovery_stats_partition() {
+        let net = Network::homogeneous(12, 0.4, 0.35);
+        let code = FrCode::new(12, 2).unwrap();
+        for (i, mode) in [
+            RecoveryMode::FixedTr(2),
+            RecoveryMode::UntilDecode { tr: 2, max_blocks: 20 },
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let mc = MonteCarlo::new(91 + i as u64);
+            let st = fr_recovery(&net, &Iid, &code, mode, 300, &mc);
+            assert_eq!(st.trials, 300);
+            assert_eq!(st.standard + st.full + st.partial + st.none, st.trials);
+            assert_eq!(st.k4_hist.iter().sum::<usize>(), st.trials);
+            let total = st.p_full() + st.p_partial() + st.p_none();
+            assert!((total - 1.0).abs() < 1e-12);
+            // FR partial decodes come in whole groups of s+1 models
+            for (k, &n) in st.k4_hist.iter().enumerate() {
+                if n > 0 {
+                    assert_eq!(k % (code.s + 1), 0, "k4 = {k} not group-aligned");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fr_until_decode_rarely_none() {
+        // GC⁺'s operational claim carries over: looping until some group
+        // is covered almost always recovers something.
+        let net = Network::homogeneous(12, 0.5, 0.4);
+        let code = FrCode::new(12, 2).unwrap();
+        let mode = RecoveryMode::UntilDecode { tr: 2, max_blocks: 50 };
+        let st = fr_recovery(&net, &Iid, &code, mode, 300, &MonteCarlo::new(5));
+        assert!(st.p_none() < 0.05, "none = {:.3}", st.p_none());
     }
 }

@@ -8,7 +8,20 @@
 //! bound `P̌_M` of eq. (29), the `K*` bound of Lemma 5 and the Theorem-2
 //! optimality gap.
 
-use crate::gc::codes::binomial;
+/// Binomial coefficient evaluated in f64 (loses exactness beyond ~2⁵³ but
+/// never overflows for any realistic `(M−s)·t_r` — unlike the exact u128
+/// [`crate::gc::codes::binomial`], which returns `None` on overflow).
+fn binomial_f64(n: usize, k: usize) -> f64 {
+    if k > n {
+        return 0.0;
+    }
+    let k = k.min(n - k);
+    let mut num = 1.0f64;
+    for i in 0..k {
+        num = num * (n - i) as f64 / (i + 1) as f64;
+    }
+    num
+}
 
 /// Negative-order polylogarithm `Li₋ᵥ(z) = Σ_{k≥1} kᵛ zᵏ` for v = 0..=4 and
 /// `|z| < 1`, in closed rational form.
@@ -152,7 +165,7 @@ pub fn p_check_full(m: usize, s: usize, tr: usize, p: f64) -> f64 {
     }
     let mut sum = 0.0;
     for v in m..=n {
-        sum += binomial(n, v) as f64 * p.powi((n - v) as i32) * (1.0 - p).powi(v as i32);
+        sum += binomial_f64(n, v) * p.powi((n - v) as i32) * (1.0 - p).powi(v as i32);
     }
     sum.clamp(0.0, 1.0)
 }

@@ -33,8 +33,21 @@
 //! All three non-trivial models *modulate* the [`Network`]'s per-link base
 //! probabilities rather than replacing them, so they compose with every
 //! paper topology (homogeneous, heterogeneous, conn tiers).
+//!
+//! # Sparse path (structured code families, M = 10⁵–10⁶)
+//!
+//! Every model also implements [`ChannelModel::reset_sparse`] /
+//! [`ChannelModel::sample_sparse_into`], which restrict state and emission
+//! to a [`SparseSupport`]'s M·s supported links plus the M uplinks — the
+//! structured path never allocates O(M²). The sparse emission contract
+//! mirrors the dense one: exactly one Bernoulli per supported link in
+//! row-major `(row, idx)` order, then one per uplink; private state (burst
+//! chains, latency draws) follows the same order on the state stream. The
+//! sparse and dense streams are *different* sequences — the FR path has no
+//! byte-level compatibility obligation to the dense oracle, only
+//! distributional equivalence (pinned by `tests/code_families.rs`).
 
-use crate::network::{Network, Realization};
+use crate::network::{Network, Realization, SparseRealization, SparseSupport};
 use crate::parallel::Accumulate;
 use crate::util::json::{self, Json};
 use crate::util::rng::Rng;
@@ -129,6 +142,23 @@ pub trait ChannelModel: Send + Sync {
         out
     }
 
+    /// Sparse analogue of [`reset`](ChannelModel::reset): re-initialize
+    /// per-trial state restricted to `sup`'s links. State storage must be
+    /// O(M·(s+1)) — this is what keeps the structured path dense-free.
+    fn reset_sparse(&mut self, sup: &SparseSupport, net: &Network, state_seed: u64);
+
+    /// Sparse analogue of [`sample_into`](ChannelModel::sample_into): draw
+    /// the next attempt's realization on `sup`'s links only, evolving the
+    /// per-link state on the private stream in the same `(row, idx)` /
+    /// uplink order as the emission draws.
+    fn sample_sparse_into(
+        &mut self,
+        sup: &SparseSupport,
+        net: &Network,
+        rng: &mut Rng,
+        out: &mut SparseRealization,
+    );
+
     /// Drain the diagnostics accumulated since the last call.
     fn take_stats(&mut self) -> ChannelStats {
         ChannelStats::default()
@@ -164,7 +194,25 @@ impl ChannelModel for Iid {
     fn reset(&mut self, _net: &Network, _state_seed: u64) {}
 
     fn sample_into(&mut self, net: &Network, rng: &mut Rng, out: &mut Realization) {
-        Realization::sample_with_into(net.m, rng, |i, j| net.p_c2c[(i, j)], |i| net.p_c2s[i], out);
+        Realization::sample_with_into(net.m, rng, |i, j| net.p_c2c(i, j), |i| net.p_c2s[i], out);
+    }
+
+    fn reset_sparse(&mut self, _sup: &SparseSupport, _net: &Network, _state_seed: u64) {}
+
+    fn sample_sparse_into(
+        &mut self,
+        sup: &SparseSupport,
+        net: &Network,
+        rng: &mut Rng,
+        out: &mut SparseRealization,
+    ) {
+        SparseRealization::sample_with_into(
+            sup,
+            rng,
+            |row, _idx, j| net.p_c2c(row, j),
+            |i| net.p_c2s[i],
+            out,
+        );
     }
 
     fn clone_box(&self) -> Box<dyn ChannelModel> {
@@ -197,6 +245,10 @@ pub struct GilbertElliott {
     m: usize,
     /// `bad_t[m][k]`: the k→m link is in the bad state (diagonal unused).
     bad_t: Vec<Vec<bool>>,
+    /// Sparse-path chain states, `bad_ts[row * k + idx]` for the idx-th
+    /// supported incoming link of `row` (empty in dense mode). The sparse
+    /// and dense state sets are mutually exclusive per reset.
+    bad_ts: Vec<bool>,
     bad_tau: Vec<bool>,
     state_rng: Rng,
     stats: ChannelStats,
@@ -215,6 +267,7 @@ impl GilbertElliott {
             c2s_scale,
             m: 0,
             bad_t: Vec::new(),
+            bad_ts: Vec::new(),
             bad_tau: Vec::new(),
             state_rng: Rng::new(0),
             stats: ChannelStats::default(),
@@ -262,11 +315,12 @@ impl ChannelModel for GilbertElliott {
     fn reset(&mut self, net: &Network, state_seed: u64) {
         let mut srng = Rng::new(state_seed);
         let pb = self.stationary_bad();
-        if self.m != net.m {
+        if self.m != net.m || self.bad_t.len() != net.m {
             // size once; repeated resets of one instance reuse the buffers
             // (fresh clones of an unsized prototype allocate here instead
             // of in clone_box — one allocation per trial either way)
             self.bad_t = vec![vec![false; net.m]; net.m];
+            self.bad_ts = Vec::new();
             self.bad_tau = vec![false; net.m];
             self.m = net.m;
         }
@@ -307,7 +361,7 @@ impl ChannelModel for GilbertElliott {
         Realization::sample_with_into(
             m,
             rng,
-            |i, j| scaled(net.p_c2c[(i, j)], if bad_t[i][j] { cb } else { cg }),
+            |i, j| scaled(net.p_c2c(i, j), if bad_t[i][j] { cb } else { cg }),
             |i| scaled(net.p_c2s[i], if bad_tau[i] { sb } else { sg }),
             out,
         );
@@ -322,6 +376,69 @@ impl ChannelModel for GilbertElliott {
         }
         for i in 0..m {
             Self::step(&mut self.bad_tau[i], self.p_gb, self.p_bg, &mut self.state_rng);
+        }
+    }
+
+    fn reset_sparse(&mut self, sup: &SparseSupport, net: &Network, state_seed: u64) {
+        let mut srng = Rng::new(state_seed);
+        let pb = self.stationary_bad();
+        let (m, k) = (sup.m(), sup.k());
+        assert_eq!(net.m, m, "support / network size mismatch");
+        if self.m != m || self.bad_ts.len() != m * k {
+            self.bad_ts = vec![false; m * k];
+            self.bad_t = Vec::new(); // never hold dense state on the sparse path
+            self.bad_tau = vec![false; m];
+            self.m = m;
+        }
+        // state-stream order: supported links row-major, then uplinks
+        for b in &mut self.bad_ts {
+            *b = srng.bernoulli(pb);
+        }
+        for b in &mut self.bad_tau {
+            *b = srng.bernoulli(pb);
+        }
+        self.state_rng = srng;
+        self.stats = ChannelStats::default();
+    }
+
+    fn sample_sparse_into(
+        &mut self,
+        sup: &SparseSupport,
+        net: &Network,
+        rng: &mut Rng,
+        out: &mut SparseRealization,
+    ) {
+        let (m, k) = (sup.m(), sup.k());
+        assert_eq!(
+            self.bad_ts.len(),
+            m * k,
+            "GilbertElliott: reset_sparse() with this support before sampling"
+        );
+        let bad = self.bad_ts.iter().filter(|&&b| b).count()
+            + self.bad_tau.iter().filter(|&&b| b).count();
+        self.stats.samples += 1;
+        self.stats.degraded += bad;
+        self.stats.degraded_denom += m * (k + 1); // M·s c2c links + M uplinks
+
+        let (bad_ts, bad_tau) = (&self.bad_ts, &self.bad_tau);
+        let (cg, cb) = self.c2c_scale;
+        let (sg, sb) = self.c2s_scale;
+        SparseRealization::sample_with_into(
+            sup,
+            rng,
+            |row, idx, j| {
+                scaled(net.p_c2c(row, j), if bad_ts[row * k + idx] { cb } else { cg })
+            },
+            |i| scaled(net.p_c2s[i], if bad_tau[i] { sb } else { sg }),
+            out,
+        );
+
+        // evolve every chain on the private stream, same order as emission
+        for b in &mut self.bad_ts {
+            Self::step(b, self.p_gb, self.p_bg, &mut self.state_rng);
+        }
+        for b in &mut self.bad_tau {
+            Self::step(b, self.p_gb, self.p_bg, &mut self.state_rng);
         }
     }
 
@@ -399,6 +516,17 @@ impl CorrelatedFading {
             cov / var.sqrt()
         }
     }
+
+    /// Advance the fade chain on the private stream; transition probs are
+    /// chosen so the stationary fade probability stays ρ at every λ.
+    fn evolve_fade(&mut self) {
+        let (rho, lam) = (self.rho, self.persistence);
+        self.faded = if self.faded {
+            self.state_rng.bernoulli(lam + (1.0 - lam) * rho)
+        } else {
+            self.state_rng.bernoulli((1.0 - lam) * rho)
+        };
+    }
 }
 
 impl ChannelModel for CorrelatedFading {
@@ -423,18 +551,39 @@ impl ChannelModel for CorrelatedFading {
         Realization::sample_with_into(
             m,
             rng,
-            |i, j| scaled(net.p_c2c[(i, j)], scale),
+            |i, j| scaled(net.p_c2c(i, j), scale),
             |i| scaled(net.p_c2s[i], scale),
             out,
         );
-        // evolve the fade chain on the private stream; transition probs are
-        // chosen so the stationary fade probability stays ρ at every λ
-        let (rho, lam) = (self.rho, self.persistence);
-        self.faded = if self.faded {
-            self.state_rng.bernoulli(lam + (1.0 - lam) * rho)
-        } else {
-            self.state_rng.bernoulli((1.0 - lam) * rho)
-        };
+        self.evolve_fade();
+    }
+
+    fn reset_sparse(&mut self, _sup: &SparseSupport, net: &Network, state_seed: u64) {
+        // the fade state is O(1) — the sparse reset is the dense reset
+        self.reset(net, state_seed);
+    }
+
+    fn sample_sparse_into(
+        &mut self,
+        sup: &SparseSupport,
+        net: &Network,
+        rng: &mut Rng,
+        out: &mut SparseRealization,
+    ) {
+        let (m, k) = (sup.m(), sup.k());
+        let faded = self.faded;
+        self.stats.samples += 1;
+        self.stats.degraded += if faded { m * (k + 1) } else { 0 };
+        self.stats.degraded_denom += m * (k + 1);
+        let scale = if faded { self.fade_scale } else { 1.0 };
+        SparseRealization::sample_with_into(
+            sup,
+            rng,
+            |row, _idx, j| scaled(net.p_c2c(row, j), scale),
+            |i| scaled(net.p_c2s[i], scale),
+            out,
+        );
+        self.evolve_fade();
     }
 
     fn take_stats(&mut self) -> ChannelStats {
@@ -478,6 +627,9 @@ pub struct DeadlineStraggler {
     /// every sample — repeated samples within a trial/episode allocate
     /// nothing (per-trial clone+reset still costs one buffer set).
     ok_t: Vec<Vec<bool>>,
+    /// Sparse-path deadline gates, `ok_ts[row * k + idx]` (empty in dense
+    /// mode); mutually exclusive with `ok_t` per reset.
+    ok_ts: Vec<bool>,
     ok_tau: Vec<bool>,
     state_rng: Rng,
     stats: ChannelStats,
@@ -504,6 +656,7 @@ impl DeadlineStraggler {
             m: 0,
             slow: Vec::new(),
             ok_t: Vec::new(),
+            ok_ts: Vec::new(),
             ok_tau: Vec::new(),
             state_rng: Rng::new(0),
             stats: ChannelStats::default(),
@@ -544,6 +697,18 @@ impl DeadlineStraggler {
         let f = if self.slow[src] { self.slow_factor } else { 1.0 };
         (self.shift + self.state_rng.exponential(self.rate)) * f
     }
+
+    /// Advance every client's straggler chain on the private stream.
+    fn evolve_slow(&mut self) {
+        for k in 0..self.slow.len() {
+            let cur = self.slow[k];
+            self.slow[k] = if cur {
+                !self.state_rng.bernoulli(self.p_recover)
+            } else {
+                self.state_rng.bernoulli(self.p_slow)
+            };
+        }
+    }
 }
 
 impl ChannelModel for DeadlineStraggler {
@@ -554,9 +719,10 @@ impl ChannelModel for DeadlineStraggler {
     fn reset(&mut self, net: &Network, state_seed: u64) {
         let mut srng = Rng::new(state_seed);
         let ps = self.stationary_slow();
-        if self.m != net.m {
+        if self.m != net.m || self.ok_t.len() != net.m {
             self.slow = vec![false; net.m];
             self.ok_t = vec![vec![true; net.m]; net.m];
+            self.ok_ts = Vec::new();
             self.ok_tau = vec![true; net.m];
             self.m = net.m;
         }
@@ -599,20 +765,78 @@ impl ChannelModel for DeadlineStraggler {
         Realization::sample_with_into(
             m,
             rng,
-            |i, j| if ok_t[i][j] { net.p_c2c[(i, j)] } else { 1.0 },
+            |i, j| if ok_t[i][j] { net.p_c2c(i, j) } else { 1.0 },
             |i| if ok_tau[i] { net.p_c2s[i] } else { 1.0 },
             out,
         );
 
-        // evolve straggler states on the private stream
-        for k in 0..m {
-            let cur = self.slow[k];
-            self.slow[k] = if cur {
-                !self.state_rng.bernoulli(self.p_recover)
-            } else {
-                self.state_rng.bernoulli(self.p_slow)
-            };
+        self.evolve_slow();
+    }
+
+    fn reset_sparse(&mut self, sup: &SparseSupport, net: &Network, state_seed: u64) {
+        let mut srng = Rng::new(state_seed);
+        let ps = self.stationary_slow();
+        let (m, k) = (sup.m(), sup.k());
+        assert_eq!(net.m, m, "support / network size mismatch");
+        if self.m != m || self.ok_ts.len() != m * k {
+            self.slow = vec![false; m];
+            self.ok_ts = vec![true; m * k];
+            self.ok_t = Vec::new(); // never hold dense state on the sparse path
+            self.ok_tau = vec![true; m];
+            self.m = m;
         }
+        for b in &mut self.slow {
+            *b = srng.bernoulli(ps);
+        }
+        self.state_rng = srng;
+        self.stats = ChannelStats::default();
+    }
+
+    fn sample_sparse_into(
+        &mut self,
+        sup: &SparseSupport,
+        net: &Network,
+        rng: &mut Rng,
+        out: &mut SparseRealization,
+    ) {
+        let (m, k) = (sup.m(), sup.k());
+        assert_eq!(
+            self.ok_ts.len(),
+            m * k,
+            "DeadlineStraggler: reset_sparse() with this support before sampling"
+        );
+        self.stats.samples += 1;
+        self.stats.degraded += self.slow.iter().filter(|&&s| s).count();
+        self.stats.degraded_denom += m;
+
+        // latency gates on the private stream, fixed order: supported links
+        // row-major (source = neighbour), then uplinks (source = client)
+        for row in 0..m {
+            for idx in 0..k {
+                let src = sup.neighbor(row, idx);
+                let hit = self.latency(src) <= self.deadline;
+                self.stats.deadline_hits += hit as usize;
+                self.stats.deadline_total += 1;
+                self.ok_ts[row * k + idx] = hit;
+            }
+        }
+        for i in 0..m {
+            let hit = self.latency(i) <= self.deadline;
+            self.stats.deadline_hits += hit as usize;
+            self.stats.deadline_total += 1;
+            self.ok_tau[i] = hit;
+        }
+
+        let (ok_ts, ok_tau) = (&self.ok_ts, &self.ok_tau);
+        SparseRealization::sample_with_into(
+            sup,
+            rng,
+            |row, idx, j| if ok_ts[row * k + idx] { net.p_c2c(row, j) } else { 1.0 },
+            |i| if ok_tau[i] { net.p_c2s[i] } else { 1.0 },
+            out,
+        );
+
+        self.evolve_slow();
     }
 
     fn take_stats(&mut self) -> ChannelStats {

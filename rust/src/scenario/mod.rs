@@ -32,4 +32,4 @@ pub use channel::{
     Iid, CHANNEL_STREAM,
 };
 pub use registry::{builtin, find, NetworkSpec, Scenario};
-pub use sweep::{run_scenario, RoundSeries, RoundTally};
+pub use sweep::{run_scenario, run_scenario_fr, RoundSeries, RoundTally};

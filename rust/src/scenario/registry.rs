@@ -9,6 +9,7 @@
 //! regimes the paper's abstract warns about.
 
 use super::channel::ChannelSpec;
+use crate::gc::CodeFamily;
 use crate::network::Network;
 use crate::sim::Decoder;
 use crate::util::json::{self, Json};
@@ -138,7 +139,10 @@ pub struct Scenario {
     pub net: NetworkSpec,
     pub channel: ChannelSpec,
     pub decoder: Decoder,
-    /// Straggler tolerance of the cyclic code.
+    /// Code family driving per-round decoding (dense cyclic, or the
+    /// sparse fractional-repetition path that scales to M = 10⁵–10⁶).
+    pub code: CodeFamily,
+    /// Straggler tolerance of the code.
     pub s: usize,
     /// Synthetic payload dimension of the sim layer.
     pub payload_dim: usize,
@@ -148,16 +152,24 @@ pub struct Scenario {
 
 impl Scenario {
     pub fn to_json(&self) -> Json {
-        json::obj(vec![
+        let mut fields = vec![
             ("name", json::s(&self.name)),
             ("description", json::s(&self.description)),
             ("network", self.net.to_json()),
             ("channel", self.channel.to_json()),
             ("decoder", decoder_to_json(self.decoder)),
+        ];
+        // "code" is omitted for the cyclic default so pre-existing cyclic
+        // scenario JSON stays byte-identical
+        if self.code != CodeFamily::Cyclic {
+            fields.push(("code", json::s(self.code.name())));
+        }
+        fields.extend([
             ("s", json::num(self.s as f64)),
             ("payload_dim", json::num(self.payload_dim as f64)),
             ("rounds", json::num(self.rounds as f64)),
-        ])
+        ]);
+        json::obj(fields)
     }
 
     pub fn from_json(v: &Json) -> anyhow::Result<Scenario> {
@@ -172,12 +184,23 @@ impl Scenario {
                 .as_usize()
                 .ok_or_else(|| anyhow::anyhow!("scenario field {key:?} must be an integer"))
         };
+        let code = match v.get("code") {
+            None => CodeFamily::Cyclic,
+            Some(c) => {
+                let name = c
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("scenario field \"code\" must be a string"))?;
+                CodeFamily::parse(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown code family {name:?} (cyclic|fr)"))?
+            }
+        };
         let sc = Scenario {
             name: str_field("name")?,
             description: str_field("description")?,
             net: NetworkSpec::from_json(v.req("network")?)?,
             channel: ChannelSpec::from_json(v.req("channel")?)?,
             decoder: decoder_from_json(v.req("decoder")?)?,
+            code,
             s: n("s")?,
             payload_dim: n("payload_dim")?,
             rounds: n("rounds")?,
@@ -207,6 +230,9 @@ impl Scenario {
             self.name,
             self.s
         );
+        self.code
+            .validate(m, self.s)
+            .map_err(|e| anyhow::anyhow!("scenario {:?}: {e}", self.name))?;
         anyhow::ensure!(self.rounds >= 1, "scenario {:?}: rounds must be ≥ 1", self.name);
         anyhow::ensure!(self.payload_dim >= 1, "scenario {:?}: payload_dim ≥ 1", self.name);
         match self.decoder {
@@ -238,6 +264,7 @@ fn scenario(
         net,
         channel,
         decoder,
+        code: CodeFamily::Cyclic,
         s: 7,
         payload_dim: 8,
         rounds: 60,
@@ -400,6 +427,33 @@ mod tests {
             let back = Scenario::from_json_str(&text).unwrap();
             assert_eq!(back, sc, "roundtrip failed for {}", sc.name);
         }
+    }
+
+    #[test]
+    fn code_family_roundtrip_and_default() {
+        // cyclic scenarios omit the "code" key entirely (JSON unchanged
+        // from before the family abstraction existed)
+        let sc = find("smoke").unwrap();
+        assert_eq!(sc.code, CodeFamily::Cyclic);
+        let text = sc.to_json().serialize();
+        assert!(!text.contains("\"code\""), "cyclic JSON should omit code: {text}");
+        // an fr scenario round-trips through the explicit key
+        let mut fr = find("smoke").unwrap();
+        fr.code = CodeFamily::FractionalRepetition;
+        fr.s = 2; // M=6 divisible by s+1=3
+        let text = fr.to_json().serialize();
+        assert!(text.contains("\"code\""));
+        let back = Scenario::from_json_str(&text).unwrap();
+        assert_eq!(back, fr);
+        // fr with M not divisible by s+1 is rejected with a clear error
+        let mut bad = find("smoke").unwrap();
+        bad.code = CodeFamily::FractionalRepetition;
+        bad.s = 3; // M=6, s+1=4 does not divide
+        let err = Scenario::from_json_str(&bad.to_json().serialize()).unwrap_err().to_string();
+        assert!(err.contains("divisible"), "{err}");
+        // unknown family name is rejected
+        let garbled = text.replace("\"fr\"", "\"lt\"");
+        assert!(Scenario::from_json_str(&garbled).is_err());
     }
 
     #[test]

@@ -10,7 +10,8 @@
 
 use super::channel::{ChannelStats, CHANNEL_STREAM};
 use super::registry::Scenario;
-use crate::parallel::{Accumulate, MonteCarlo};
+use crate::gc::{CodeFamily, FrCode};
+use crate::parallel::{parallel_map, Accumulate, MonteCarlo};
 use crate::sim::{self, Outcome};
 
 /// Tallies of one round index across all episodes (all integer fields, so
@@ -78,11 +79,24 @@ impl Accumulate for RoundSeries {
 /// Run `trials` independent episodes of `sc` through the parallel engine
 /// and tally outcomes per round. Bit-identical for any thread count.
 ///
+/// Dispatches on the scenario's code family: dense cyclic episodes go
+/// through the original pooled-scratch engine (byte-identical output to
+/// before the family abstraction existed); fractional-repetition episodes
+/// go through the sparse O(M·(s+1)) path ([`run_scenario_fr`]).
+pub fn run_scenario(sc: &Scenario, trials: usize, mc: &MonteCarlo) -> RoundSeries {
+    match sc.code {
+        CodeFamily::Cyclic => run_scenario_cyclic(sc, trials, mc),
+        CodeFamily::FractionalRepetition => run_scenario_fr(sc, trials, mc),
+    }
+}
+
+/// Dense cyclic episode engine.
+///
 /// The channel box and the round buffers ([`sim::SimScratch`], including
 /// the persistent incremental GC⁺ decoder) are pooled **per worker**: an
 /// episode resets them per trial and every round within the episode reuses
 /// them, so the steady-state episode loop allocates only its tallies.
-pub fn run_scenario(sc: &Scenario, trials: usize, mc: &MonteCarlo) -> RoundSeries {
+fn run_scenario_cyclic(sc: &Scenario, trials: usize, mc: &MonteCarlo) -> RoundSeries {
     let net = sc.net.build();
     let proto = sc.channel.build();
     let m = net.m;
@@ -118,6 +132,65 @@ pub fn run_scenario(sc: &Scenario, trials: usize, mc: &MonteCarlo) -> RoundSerie
     );
     series.ensure_len(sc.rounds); // trials == 0 edge case
     series
+}
+
+/// Fractional-repetition episode engine: every structure is O(M·(s+1)) —
+/// sparse realizations, group-coverage scans, no RREF and no dense M×M
+/// anything — so episodes scale to M = 10⁵–10⁶ clients.
+///
+/// Episodes fan out one-per-job through [`parallel_map`] (at large M a
+/// sweep runs few episodes, so chunking them 256-at-a-time would
+/// serialize the whole run); per-round group scans inside an episode
+/// dispatch through the same engine at the episode level's residual
+/// parallelism. Episode `t` draws its erasures from [`MonteCarlo::trial_rng`]
+/// and its channel state from the [`CHANNEL_STREAM`] substream — the same
+/// two-stream scheme as the dense engine — and the per-episode series are
+/// merged in episode order, so the output is bit-identical at any
+/// `--threads` value.
+pub fn run_scenario_fr(sc: &Scenario, trials: usize, mc: &MonteCarlo) -> RoundSeries {
+    let net = sc.net.build();
+    let proto = sc.channel.build();
+    let code = FrCode::new(net.m, sc.s).expect("scenario validated for the fr family");
+    let sup = code.sparse_support();
+    // leftover cores go to the in-episode group scans when episodes are few
+    let decode_threads = (mc.threads / trials.max(1)).max(1);
+    let episodes: Vec<u64> = (0..trials as u64).collect();
+    let per_episode: Vec<RoundSeries> = parallel_map(&episodes, mc.threads, |_, &t| {
+        let mut ch = proto.clone_box();
+        let mut scratch = sim::FrSimScratch::new();
+        let mut rng = mc.trial_rng(t);
+        ch.reset_sparse(&sup, &net, mc.substream_seed(CHANNEL_STREAM, t));
+        let mut series = RoundSeries::default();
+        series.ensure_len(sc.rounds);
+        for r in 0..sc.rounds {
+            let round = sim::simulate_round_fr(
+                &code,
+                &net,
+                &mut *ch,
+                sc.decoder,
+                decode_threads,
+                &mut rng,
+                &mut scratch,
+            );
+            let tally = &mut series.rounds[r];
+            tally.trials += 1;
+            match round.outcome {
+                sim::FrOutcome::Standard { .. } => tally.standard += 1,
+                sim::FrOutcome::Full => tally.full += 1,
+                sim::FrOutcome::Partial { .. } => tally.partial += 1,
+                sim::FrOutcome::None => tally.none += 1,
+            }
+            tally.transmissions += round.transmissions;
+            tally.channel.merge(ch.take_stats());
+        }
+        series
+    });
+    let mut total = RoundSeries::default();
+    for series in per_episode {
+        total.merge(series);
+    }
+    total.ensure_len(sc.rounds); // trials == 0 edge case
+    total
 }
 
 #[cfg(test)]
@@ -156,6 +229,53 @@ mod tests {
         let hits: usize = series.rounds.iter().map(|t| t.channel.deadline_hits).sum();
         let total: usize = series.rounds.iter().map(|t| t.channel.deadline_total).sum();
         assert!(total > 0 && hits < total, "harsh deadlines must miss sometimes");
+    }
+
+    /// The smoke scenario retargeted at the fr family (M=6, s=2 so
+    /// M % (s+1) == 0 holds).
+    fn fr_smoke() -> Scenario {
+        let mut sc = registry::find("smoke").unwrap();
+        sc.code = crate::gc::CodeFamily::FractionalRepetition;
+        sc.s = 2;
+        sc.validate().unwrap();
+        sc
+    }
+
+    #[test]
+    fn fr_scenario_runs_and_tallies_partition() {
+        let sc = fr_smoke();
+        let series = run_scenario(&sc, 8, &MonteCarlo::new(3));
+        assert_eq!(series.rounds.len(), sc.rounds);
+        for (r, tally) in series.rounds.iter().enumerate() {
+            assert_eq!(tally.trials, 8, "round {r}");
+            assert_eq!(
+                tally.standard + tally.full + tally.partial + tally.none,
+                tally.trials,
+                "round {r}: outcomes must partition"
+            );
+            assert!(tally.transmissions > 0, "round {r}");
+        }
+        // the bursty channel's diagnostics flow through the sparse path too
+        let degraded: usize = series.rounds.iter().map(|t| t.channel.degraded).sum();
+        assert!(degraded > 0, "sparse GE path should report degraded link time");
+    }
+
+    #[test]
+    fn fr_scenario_thread_invariant() {
+        let sc = fr_smoke();
+        let want = run_scenario(&sc, 6, &MonteCarlo::new(17).with_threads(1));
+        for threads in [2usize, 8] {
+            let got = run_scenario(&sc, 6, &MonteCarlo::new(17).with_threads(threads));
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn fr_zero_trials_yields_empty_tallies_of_full_length() {
+        let sc = fr_smoke();
+        let series = run_scenario(&sc, 0, &MonteCarlo::new(1));
+        assert_eq!(series.rounds.len(), sc.rounds);
+        assert!(series.rounds.iter().all(|t| t.trials == 0));
     }
 
     #[test]

@@ -22,9 +22,9 @@
 //! stay bit-identical at any thread count. Pass
 //! [`Iid`](crate::scenario::Iid) for the paper's memoryless behavior.
 
-use crate::gc::{self, GcCode};
+use crate::gc::{self, FrCode, GcCode};
 use crate::linalg::Matrix;
-use crate::network::{Network, Realization};
+use crate::network::{Network, Realization, SparseRealization};
 use crate::parallel::{Accumulate, MonteCarlo};
 use crate::scenario::{ChannelModel, CHANNEL_STREAM};
 use crate::util::rng::Rng;
@@ -279,6 +279,129 @@ fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
     a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
 }
 
+// ── Fractional-repetition round engine (structured large-M path) ────────
+
+/// Outcome of one fractional-repetition round. Mirrors [`Outcome`] but
+/// carries only the covered-group count for partial recovery — never an
+/// O(M) member list — so the structured path stays O(M·(s+1)).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrOutcome {
+    /// A single attempt covered every group (exact-sum standard decode;
+    /// attempt index that succeeded).
+    Standard { attempt: usize },
+    /// The union over GC⁺ repeats covered every group.
+    Full,
+    /// A proper, non-empty subset of groups was covered.
+    Partial { covered_groups: usize },
+    /// Nothing decodable.
+    None,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrRound {
+    pub outcome: FrOutcome,
+    pub transmissions: usize,
+}
+
+impl FrRound {
+    /// |K₄| of the round: recovered clients (members of covered groups).
+    pub fn k4_count(&self, code: &FrCode) -> usize {
+        match self.outcome {
+            FrOutcome::Standard { .. } | FrOutcome::Full => code.m,
+            FrOutcome::Partial { covered_groups } => covered_groups * (code.s + 1),
+            FrOutcome::None => 0,
+        }
+    }
+}
+
+/// Reusable per-worker buffers of [`simulate_round_fr`]: the sparse
+/// realization and the union coverage accumulator — everything O(M·(s+1)).
+#[derive(Default)]
+pub struct FrSimScratch {
+    real: SparseRealization,
+    acc: Vec<bool>,
+}
+
+impl FrSimScratch {
+    pub fn new() -> FrSimScratch {
+        FrSimScratch::default()
+    }
+}
+
+/// Simulate one CoGC round under a fractional-repetition code.
+///
+/// The structured analogue of [`simulate_round_scratch`]: erasures are
+/// drawn only on the group support ([`ChannelModel::sample_sparse_into`])
+/// and decoding is the per-group membership scan of
+/// [`FrCode::covered`] — dispatched through
+/// [`crate::parallel::parallel_map`] with `decode_threads` workers — in
+/// place of the RREF engine. Nothing here allocates O(M²).
+///
+/// Outcome semantics mirror the dense engine: a single attempt covering
+/// every group is a standard (exact-sum) decode; under [`Decoder::GcPlus`]
+/// the coverage union over `tr` repeats yields full / partial / no
+/// recovery. Transmission accounting matches the dense engine too
+/// (`s·M` sharing per attempt; uplinks from complete rows under standard,
+/// from every client under GC⁺). No payload vectors are drawn — the FR
+/// decode is coefficient-free, so the outcome depends only on the channel.
+pub fn simulate_round_fr(
+    code: &FrCode,
+    net: &Network,
+    ch: &mut dyn ChannelModel,
+    decoder: Decoder,
+    decode_threads: usize,
+    rng: &mut Rng,
+    sc: &mut FrSimScratch,
+) -> FrRound {
+    let sup = code.sparse_support();
+    let (m, s) = (code.m, code.s);
+    debug_assert_eq!(net.m, m);
+    let attempts_n = match decoder {
+        Decoder::Standard { attempts } => attempts,
+        Decoder::GcPlus { tr } => tr,
+    };
+    sc.acc.clear();
+    sc.acc.resize(code.groups(), false);
+    let mut transmissions = 0usize;
+    let mut standard_at: Option<usize> = None;
+
+    for a in 0..attempts_n {
+        ch.sample_sparse_into(&sup, net, rng, &mut sc.real);
+        // gradient-sharing phase: s transmissions per client
+        transmissions += s * m;
+        // uplink: standard GC sends only complete delivered sums; GC+ all
+        transmissions += match decoder {
+            Decoder::Standard { .. } => {
+                (0..m).filter(|&r| sc.real.row_delivered_complete(r)).count()
+            }
+            Decoder::GcPlus { .. } => m,
+        };
+        let covered = code.covered(&sc.real, decode_threads);
+        if standard_at.is_none() && FrCode::all_covered(&covered) {
+            standard_at = Some(a);
+        }
+        FrCode::union_covered(&mut sc.acc, &covered);
+    }
+
+    // 1) standard decode: some single attempt covered every group
+    if let Some(attempt) = standard_at {
+        return FrRound { outcome: FrOutcome::Standard { attempt }, transmissions };
+    }
+    if let Decoder::Standard { .. } = decoder {
+        return FrRound { outcome: FrOutcome::None, transmissions };
+    }
+    // 2) GC⁺ complementary decode: union coverage over the tr repeats
+    let covered_groups = FrCode::covered_groups(&sc.acc);
+    let outcome = if covered_groups == code.groups() {
+        FrOutcome::Full
+    } else if covered_groups > 0 {
+        FrOutcome::Partial { covered_groups }
+    } else {
+        FrOutcome::None
+    };
+    FrRound { outcome, transmissions }
+}
+
 /// Aggregate tallies of a [`sweep`] over many simulated rounds.
 ///
 /// Every field combines associatively (counts, integer sums, a maximum), so
@@ -465,5 +588,92 @@ mod tests {
             simulate_round(&net, &mut Iid, 6, 2, 5, Decoder::Standard { attempts: 3 }, &mut rng);
         assert_eq!(r.outcome, Outcome::None);
         assert!(r.aggregate.is_none());
+    }
+
+    #[test]
+    fn fr_perfect_network_standard_decodes_first_attempt() {
+        let code = FrCode::new(12, 3).unwrap();
+        let net = Network::perfect(12);
+        let mut rng = Rng::new(1);
+        let mut sc = FrSimScratch::new();
+        let r = simulate_round_fr(
+            &code,
+            &net,
+            &mut Iid,
+            Decoder::Standard { attempts: 1 },
+            1,
+            &mut rng,
+            &mut sc,
+        );
+        assert_eq!(r.outcome, FrOutcome::Standard { attempt: 0 });
+        // transmissions: sM sharing + M complete uplinks = 3*12 + 12
+        assert_eq!(r.transmissions, 48);
+        assert_eq!(r.k4_count(&code), 12);
+    }
+
+    #[test]
+    fn fr_dead_uplinks_decode_nothing() {
+        let code = FrCode::new(8, 1).unwrap();
+        let net = Network::homogeneous(8, 1.0, 0.0);
+        let mut rng = Rng::new(2);
+        let mut sc = FrSimScratch::new();
+        for dec in [Decoder::Standard { attempts: 2 }, Decoder::GcPlus { tr: 2 }] {
+            let r = simulate_round_fr(&code, &net, &mut Iid, dec, 1, &mut rng, &mut sc);
+            assert_eq!(r.outcome, FrOutcome::None);
+            assert_eq!(r.k4_count(&code), 0);
+        }
+    }
+
+    #[test]
+    fn fr_outcomes_partition_and_partials_appear() {
+        // lossy enough that coverage is usually partial over GC+ repeats
+        let code = FrCode::new(12, 2).unwrap();
+        let net = Network::homogeneous(12, 0.6, 0.5);
+        let mut rng = Rng::new(5);
+        let mut sc = FrSimScratch::new();
+        let (mut partial, mut k4_tot) = (0usize, 0usize);
+        for _ in 0..200 {
+            let r = simulate_round_fr(
+                &code,
+                &net,
+                &mut Iid,
+                Decoder::GcPlus { tr: 2 },
+                1,
+                &mut rng,
+                &mut sc,
+            );
+            if let FrOutcome::Partial { covered_groups } = r.outcome {
+                partial += 1;
+                assert!(covered_groups >= 1 && covered_groups < code.groups());
+                assert_eq!(r.k4_count(&code), covered_groups * 3);
+            }
+            k4_tot += r.k4_count(&code);
+        }
+        assert!(partial > 20, "partials: {partial}");
+        assert!(k4_tot > 0);
+    }
+
+    #[test]
+    fn fr_decode_threads_do_not_change_outcomes() {
+        let code = FrCode::new(24, 3).unwrap();
+        let net = Network::homogeneous(24, 0.4, 0.3);
+        let run = |threads: usize| {
+            let mut rng = Rng::new(7);
+            let mut sc = FrSimScratch::new();
+            (0..50)
+                .map(|_| {
+                    simulate_round_fr(
+                        &code,
+                        &net,
+                        &mut Iid,
+                        Decoder::GcPlus { tr: 2 },
+                        threads,
+                        &mut rng,
+                        &mut sc,
+                    )
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(1), run(4));
     }
 }

@@ -1,0 +1,169 @@
+//! Cross-family equivalence tests for the structured-code refactor.
+//!
+//! The fractional-repetition path never touches the dense linear-algebra
+//! engine — coverage is an O(M) group scan over a sparse realization. These
+//! tests pin that scan to the dense oracle: `FrCode::dense_b()` is the
+//! family's actual M×M generator matrix, a group's sum is declared
+//! recoverable by `solve_consistent` over the delivered-complete rows, and
+//! the two verdicts must agree on *identical* channel draws (the sparse
+//! realization is a projection of the dense one) under all four channel
+//! models. The oracle deliberately bypasses `find_combinator_rows`: its
+//! `received < M − s` early-out is a cyclic-family property — FR decodes
+//! from as few as M/(s+1) rows.
+
+use cogc::gc::FrCode;
+use cogc::linalg::{solve_consistent, Matrix};
+use cogc::network::{Network, Realization, SparseRealization};
+use cogc::scenario::{
+    ChannelModel, CorrelatedFading, DeadlineStraggler, GilbertElliott, Iid,
+};
+use cogc::util::rng::Rng;
+
+/// Dense oracle: is `target` (as a row vector) in the span of the
+/// delivered-complete rows of the FR generator matrix?
+fn dense_spans(code: &FrCode, rows: &[usize], target: &[f64]) -> bool {
+    if rows.is_empty() {
+        return target.iter().all(|&x| x == 0.0);
+    }
+    let b = code.dense_b();
+    let sub = Matrix::from_fn(rows.len(), code.m, |i, j| b[(rows[i], j)]);
+    solve_consistent(&sub.transpose(), target).is_some()
+}
+
+/// Rows usable by the PS under FR semantics: uplink up AND every incoming
+/// group link up (computed from the *dense* realization directly, so the
+/// oracle shares no code with the sparse scan).
+fn delivered_complete_rows(code: &FrCode, real: &Realization) -> Vec<usize> {
+    (0..code.m)
+        .filter(|&i| {
+            real.tau[i]
+                && code
+                    .members(code.group_of(i))
+                    .filter(|&j| j != i)
+                    .all(|j| real.t[i][j])
+        })
+        .collect()
+}
+
+/// FR decodability identity: *any* M − s delivered-complete rows span 𝟙.
+/// (≤ s erasures cannot wipe out a whole group of s+1 identical rows.)
+#[test]
+fn any_m_minus_s_rows_decode_the_full_sum() {
+    for s in [1usize, 2, 3] {
+        let m = 12;
+        let code = FrCode::new(m, s).unwrap();
+        let ones = vec![1.0; m];
+        let mut rng = Rng::new(41 + s as u64);
+        for _ in 0..200 {
+            // drop exactly s random rows; the rest must still span 𝟙
+            let mut rows: Vec<usize> = (0..m).collect();
+            for _ in 0..s {
+                let k = rng.range(0, rows.len());
+                rows.remove(k);
+            }
+            assert!(
+                dense_spans(&code, &rows, &ones),
+                "m={m} s={s}: dropping to rows {rows:?} lost the full sum"
+            );
+        }
+        // and the minimal support decodes too: one row per group
+        let minimal: Vec<usize> = (0..code.groups()).map(|g| g * (s + 1)).collect();
+        assert!(dense_spans(&code, &minimal, &ones));
+        // while wiping a whole group loses it
+        let wiped: Vec<usize> = (s + 1..m).collect();
+        assert!(!dense_spans(&code, &wiped, &ones));
+    }
+}
+
+/// The core identity: the sparse per-group scan agrees with the dense
+/// linear-algebra oracle on identical realizations, for every group and
+/// for the standard (full-sum) decode, across all four channel models and
+/// s ∈ {1, 2, 3}.
+#[test]
+fn sparse_scan_matches_dense_oracle_all_channels() {
+    let m = 12;
+    let net = Network::homogeneous(m, 0.35, 0.3);
+    let models: Vec<(&str, Box<dyn ChannelModel>)> = vec![
+        ("iid", Box::new(Iid)),
+        ("ge", Box::new(GilbertElliott::new(0.15, 0.3, (0.5, 2.5), (0.5, 2.0)))),
+        ("cf", Box::new(CorrelatedFading::new(0.25, 2.5, 0.5))),
+        ("ds", Box::new(DeadlineStraggler::new(2.0, 0.5, 1.0, 0.2, 0.3, 3.0))),
+    ];
+    for (name, mut ch) in models {
+        for s in [1usize, 2, 3] {
+            let code = FrCode::new(m, s).unwrap();
+            let sup = code.sparse_support();
+            let ones = vec![1.0; m];
+            let mut rng = Rng::new(7);
+            ch.reset(&net, 0xABCD + s as u64);
+            for trial in 0..60 {
+                let dense = ch.sample(&net, &mut rng);
+                let sparse = SparseRealization::project_from_dense(&sup, &dense);
+                let covered = code.covered(&sparse, 1);
+                let usable = delivered_complete_rows(&code, &dense);
+                for g in 0..code.groups() {
+                    let target: Vec<f64> = (0..m)
+                        .map(|j| (code.group_of(j) == g) as u8 as f64)
+                        .collect();
+                    assert_eq!(
+                        covered[g],
+                        dense_spans(&code, &usable, &target),
+                        "{name} s={s} trial {trial} group {g}: scan vs oracle"
+                    );
+                }
+                assert_eq!(
+                    FrCode::all_covered(&covered),
+                    dense_spans(&code, &usable, &ones),
+                    "{name} s={s} trial {trial}: standard decode vs oracle"
+                );
+            }
+        }
+    }
+}
+
+/// The chunked/parallel scan is bit-identical to the serial scan.
+#[test]
+fn coverage_scan_thread_invariant() {
+    let m = 120;
+    let s = 3;
+    let net = Network::homogeneous(m, 0.4, 0.3);
+    let code = FrCode::new(m, s).unwrap();
+    let sup = code.sparse_support();
+    let mut rng = Rng::new(9);
+    for _ in 0..30 {
+        let real = SparseRealization::sample(&sup, &net, &mut rng);
+        let want = code.covered(&real, 1);
+        for threads in [2usize, 4, 8] {
+            assert_eq!(code.covered(&real, threads), want, "threads={threads}");
+        }
+    }
+}
+
+/// Degenerate stateful channels collapse to i.i.d. **on the sparse path**:
+/// identical probability streams mean byte-identical sparse realizations.
+#[test]
+fn degenerate_stateful_models_match_iid_sparse_draws() {
+    let m = 12;
+    let s = 2;
+    let net = Network::homogeneous(m, 0.3, 0.25);
+    let sup = FrCode::new(m, s).unwrap().sparse_support();
+    let degenerates: Vec<(&str, Box<dyn ChannelModel>)> = vec![
+        ("ge", Box::new(GilbertElliott::new(0.2, 0.3, (1.0, 1.0), (1.0, 1.0)))),
+        ("cf", Box::new(CorrelatedFading::new(0.0, 25.0, 0.9))),
+        ("ds", Box::new(DeadlineStraggler::new(f64::INFINITY, 0.5, 1.0, 0.2, 0.2, 3.0))),
+    ];
+    for (name, mut ch) in degenerates {
+        let mut iid: Box<dyn ChannelModel> = Box::new(Iid);
+        iid.reset_sparse(&sup, &net, 1);
+        ch.reset_sparse(&sup, &net, 1);
+        let mut r_iid = SparseRealization::default();
+        let mut r_ch = SparseRealization::default();
+        let mut rng_a = Rng::new(77);
+        let mut rng_b = Rng::new(77);
+        for attempt in 0..50 {
+            iid.sample_sparse_into(&sup, &net, &mut rng_a, &mut r_iid);
+            ch.sample_sparse_into(&sup, &net, &mut rng_b, &mut r_ch);
+            assert_eq!(r_ch, r_iid, "{name} attempt {attempt}");
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Memory-bound regression test for the structured-family path.
+//!
+//! The whole point of the fractional-repetition refactor is that nothing on
+//! the structured path allocates O(M²): a dense cyclic run at M = 10⁵ would
+//! need an M×M generator matrix (~80 GB of f64) and M² link booleans
+//! (~10 GB) per realization. This test runs the real scenario engine at
+//! M = 10⁵ under an allocation-counting global allocator and asserts the
+//! peak stays in the tens-of-megabytes range — any accidental reintroduction
+//! of a dense structure blows the bound by two orders of magnitude.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use cogc::gc::{CodeFamily, FrCode};
+use cogc::network::{Network, SparseRealization};
+use cogc::parallel::MonteCarlo;
+use cogc::scenario::{run_scenario, ChannelSpec, NetworkSpec, Scenario};
+use cogc::sim::Decoder;
+use cogc::util::rng::Rng;
+
+/// Tracks live and peak bytes. The peak update races benignly across
+/// threads (compare-and-swap loop), so the reported peak is exact.
+struct PeakAlloc;
+
+static LIVE: AtomicUsize = AtomicUsize::new(0);
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for PeakAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            let live = LIVE.fetch_add(layout.size(), Ordering::Relaxed) + layout.size();
+            let mut peak = PEAK.load(Ordering::Relaxed);
+            while live > peak {
+                match PEAK.compare_exchange_weak(peak, live, Ordering::Relaxed, Ordering::Relaxed)
+                {
+                    Ok(_) => break,
+                    Err(cur) => peak = cur,
+                }
+            }
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, layout: Layout) {
+        LIVE.fetch_sub(layout.size(), Ordering::Relaxed);
+        System.dealloc(p, layout);
+    }
+}
+
+#[global_allocator]
+static ALLOC: PeakAlloc = PeakAlloc;
+
+const M: usize = 100_000;
+const S: usize = 3;
+
+/// A dense cyclic run at this M would allocate ≥ M²·8 bytes ≈ 80 GB for the
+/// generator matrix alone. The sparse path's working set is O(M·(s+1)):
+/// realization bits, coverage flags, and per-episode scratch. 256 MB gives
+/// the test runner, channel state, and allocator slack two orders of
+/// magnitude of headroom while still sitting ~300× below dense.
+const PEAK_BOUND: usize = 256 << 20;
+
+#[test]
+fn fr_scenario_at_m_1e5_stays_far_below_dense_memory() {
+    let sc = Scenario {
+        name: "fr-large-m".into(),
+        description: "memory regression probe".into(),
+        net: NetworkSpec::Homogeneous { m: M, p_ps: 0.3, p_cc: 0.2 },
+        channel: ChannelSpec::GilbertElliott {
+            p_gb: 0.15,
+            p_bg: 0.4,
+            c2c_scale: (0.5, 2.0),
+            c2s_scale: (0.5, 2.0),
+        },
+        decoder: Decoder::GcPlus { tr: 2 },
+        code: CodeFamily::FractionalRepetition,
+        s: S,
+        payload_dim: 1,
+        rounds: 2,
+    };
+    sc.validate().expect("large-M FR scenario must validate");
+
+    let before = PEAK.load(Ordering::Relaxed);
+    let series = run_scenario(&sc, 3, &MonteCarlo::new(42).with_threads(2));
+    let after = PEAK.load(Ordering::Relaxed);
+
+    assert_eq!(series.rounds.len(), sc.rounds);
+    for tally in &series.rounds {
+        assert_eq!(tally.trials, 3);
+        assert_eq!(tally.standard + tally.full + tally.partial + tally.none, 3);
+    }
+
+    // Peak is global (includes test-harness startup), so bound the high-water
+    // mark reached during the run rather than a delta of live bytes.
+    assert!(
+        after < PEAK_BOUND,
+        "peak allocation {after} bytes (was {before} before the run) exceeds \
+         the {PEAK_BOUND}-byte sparse-path budget — something on the FR path \
+         is allocating O(M²)"
+    );
+}
+
+/// Structure-size assertions: the sparse representations really are O(M·k).
+#[test]
+fn sparse_structures_are_linear_in_m() {
+    let net = Network::homogeneous(M, 0.3, 0.2);
+    assert!(net.c2c_is_uniform(), "homogeneous nets must not materialize M² link probabilities");
+
+    let code = FrCode::new(M, S).unwrap();
+    let sup = code.sparse_support();
+    assert_eq!(sup.links(), M * S, "support must hold exactly s in-links per client");
+
+    let mut rng = Rng::new(5);
+    let real = SparseRealization::sample(&sup, &net, &mut rng);
+    assert_eq!(real.t.len(), M * S);
+    assert_eq!(real.tau.len(), M);
+
+    let covered = code.covered(&real, 4);
+    assert_eq!(covered.len(), M / (S + 1));
+}
