@@ -3,8 +3,10 @@
 //! decode (batch re-factor vs the incremental engine at until-decode stack
 //! depths 6/20/40), code generation, combinator solve, native dense
 //! kernels (blocked/unrolled vs scalar reference), Monte-Carlo trial
-//! sweeps (serial vs parallel engine), scenario-engine sweeps per channel
-//! model, and single train steps.
+//! sweeps (serial vs parallel engine), Byzantine audit overhead
+//! (adversarial estimators vs their clean counterparts at the same
+//! shapes), scenario-engine sweeps per channel model, and single train
+//! steps.
 //!
 //!     cargo bench --bench hotpath
 //!
@@ -18,11 +20,14 @@ use cogc::gc::{self, FrCode, GcCode};
 use cogc::linalg::{rref_with_transform, Matrix};
 use cogc::network::{Network, Realization, SparseRealization};
 use cogc::outage::exact::poisson_binomial_pmf;
-use cogc::outage::mc::{estimate_outage, gcplus_recovery, RecoveryMode};
+use cogc::outage::mc::{
+    estimate_outage, estimate_outage_adv, fr_recovery, fr_recovery_adv, gcplus_recovery,
+    gcplus_recovery_adv, RecoveryMode,
+};
 use cogc::parallel::{available_threads, MonteCarlo};
 use cogc::runtime::native::kernels;
 use cogc::runtime::{coded::native_combine, Backend, CodedKernels, CombineImpl, ModelRuntime};
-use cogc::scenario::{self, run_scenario, Iid};
+use cogc::scenario::{self, run_scenario, AdversarySpec, Attack, Iid};
 use cogc::testing::fake_batch;
 use cogc::util::rng::Rng;
 
@@ -266,6 +271,101 @@ fn main() {
                 ));
             },
         );
+    }
+
+    // ── Byzantine audit overhead: adversarial estimators vs clean ───────
+    // Same shapes as the clean rows above, under a 20% sign-flip uplink
+    // adversary; the delta over the clean rows is the price of adversary
+    // sampling + corruption bookkeeping + (gc+/audit) the cross-attempt
+    // parity audit with identify-and-excise re-decode. `nodetect` isolates
+    // the bookkeeping from the audit itself.
+    {
+        let spec = AdversarySpec::fraction(Attack::SignFlip, 0.2);
+        let mut nodetect = spec.clone();
+        nodetect.detect = false;
+        for &threads in &thread_counts {
+            let mc = MonteCarlo::new(11).with_threads(threads);
+            suite.bench_throughput(
+                &format!("mc outage adv fig4-shape, {outage_trials} trials ({threads} thr)"),
+                outage_trials as f64,
+                "rounds",
+                || {
+                    cogc::bench::black_box(estimate_outage_adv(
+                        &net,
+                        &code,
+                        &Iid,
+                        &spec,
+                        outage_trials,
+                        &mc,
+                    ));
+                },
+            );
+        }
+        for &threads in &thread_counts {
+            let mc = MonteCarlo::new(13).with_threads(threads);
+            for (label, sp) in [("audit   ", &spec), ("nodetect", &nodetect)] {
+                suite.bench_throughput(
+                    &format!(
+                        "mc gc+ recovery adv/{label} fig6-shape, {recovery_trials} trials \
+                         ({threads} thr)"
+                    ),
+                    recovery_trials as f64,
+                    "rounds",
+                    || {
+                        cogc::bench::black_box(gcplus_recovery_adv(
+                            &net,
+                            &Iid,
+                            sp,
+                            10,
+                            7,
+                            RecoveryMode::FixedTr(2),
+                            recovery_trials,
+                            &mc,
+                        ));
+                    },
+                );
+            }
+        }
+        // large-M FR shape: the sparse group scan vs the plurality-vote
+        // audit over group copies
+        let m_fr = 10_000usize;
+        let fr_code = FrCode::new(m_fr, 3).unwrap();
+        let fr_net = Network::homogeneous(m_fr, 0.3, 0.2);
+        let fr_trials = 200usize;
+        for &threads in &thread_counts {
+            let mc = MonteCarlo::new(17).with_threads(threads);
+            suite.bench_throughput(
+                &format!("fr recovery clean M={m_fr}, {fr_trials} trials ({threads} thr)"),
+                fr_trials as f64,
+                "rounds",
+                || {
+                    cogc::bench::black_box(fr_recovery(
+                        &fr_net,
+                        &Iid,
+                        &fr_code,
+                        RecoveryMode::FixedTr(2),
+                        fr_trials,
+                        &mc,
+                    ));
+                },
+            );
+            suite.bench_throughput(
+                &format!("fr recovery adv   M={m_fr}, {fr_trials} trials ({threads} thr)"),
+                fr_trials as f64,
+                "rounds",
+                || {
+                    cogc::bench::black_box(fr_recovery_adv(
+                        &fr_net,
+                        &Iid,
+                        &fr_code,
+                        &spec,
+                        RecoveryMode::FixedTr(2),
+                        fr_trials,
+                        &mc,
+                    ));
+                },
+            );
+        }
     }
 
     // ── scenario engine: stateful channel sweeps, serial vs parallel ────

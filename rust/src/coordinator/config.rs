@@ -4,7 +4,7 @@
 use crate::data::Partition;
 use crate::gc::CodeFamily;
 use crate::runtime::CombineImpl;
-use crate::scenario::ChannelSpec;
+use crate::scenario::{AdversarySpec, ChannelSpec};
 
 /// PS-side aggregation protocol (the paper's §VII comparison set).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -64,6 +64,10 @@ pub struct TrainConfig {
     /// Link dynamics: i.i.d. erasures (the paper's model) or a stateful
     /// channel from `scenario` (bursts persist across rounds/attempts).
     pub channel: ChannelSpec,
+    /// Byzantine clients: `None` trains exactly as before; `Some` fixes a
+    /// malicious set for the whole run (sampled once from the run seed)
+    /// that corrupts its emissions every round.
+    pub adversary: Option<AdversarySpec>,
 }
 
 impl TrainConfig {
@@ -92,6 +96,7 @@ impl TrainConfig {
             combine: CombineImpl::Pallas,
             signal: 2.0,
             channel: ChannelSpec::Iid,
+            adversary: None,
         }
     }
 

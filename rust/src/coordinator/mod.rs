@@ -8,4 +8,4 @@ pub mod trainer;
 
 pub use client::{ClientState, Shard};
 pub use config::{Aggregator, Design, TrainConfig};
-pub use trainer::Trainer;
+pub use trainer::{TrainAdvLog, Trainer};

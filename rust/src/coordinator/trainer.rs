@@ -17,7 +17,7 @@ use crate::linalg::Matrix;
 use crate::metrics::{RoundRecord, RunLog};
 use crate::network::{Network, SparseRealization};
 use crate::runtime::{Backend, CodedKernels, InputKind, ModelRuntime};
-use crate::scenario::ChannelModel;
+use crate::scenario::{AdversaryModel, ChannelModel, GroupVerdict, Surface, ADVERSARY_STREAM};
 use crate::util::rng::Rng;
 use std::sync::Arc;
 
@@ -29,6 +29,24 @@ struct AggResult {
     k4: usize,
     attempts: usize,
     transmissions: usize,
+}
+
+/// Relative f32 tolerance for cross-combinator decode comparison: two
+/// distinct combinator row sets must reproduce the same full sum on honest
+/// payloads up to encode/accumulate rounding.
+const CROSS_CHECK_TOL: f32 = 1e-3;
+
+/// Run-level adversary tallies. The trainer sees only what a real PS sees
+/// (values, no ground truth), so it reports what its defenses *did* —
+/// alarms raised and rows/copies excised — not oracle poisoned counts.
+#[derive(Clone, Debug, Default)]
+pub struct TrainAdvLog {
+    /// Malicious clients fixed for this run (0 = clean run).
+    pub malicious: usize,
+    /// Alarms raised by the decode-path audits across the run.
+    pub detected: usize,
+    /// Stacked rows / FR member copies excised across the run.
+    pub excised: usize,
 }
 
 pub struct Trainer {
@@ -46,6 +64,12 @@ pub struct Trainer {
     /// Link dynamics (state persists across rounds and repeat attempts);
     /// built from `cfg.channel`, reset from the run seed in `new`.
     channel: Box<dyn ChannelModel>,
+    /// Byzantine clients (None = clean run). The malicious set is fixed at
+    /// construction from the run seed — a compromised client stays
+    /// compromised for the whole run.
+    adversary: Option<AdversaryModel>,
+    /// What the decode-path defenses did this run (see [`TrainAdvLog`]).
+    pub adv_log: TrainAdvLog,
     eval_shard: Shard,
     /// Denominator for accuracy per eval batch.
     eval_denom: f64,
@@ -139,6 +163,21 @@ impl Trainer {
         // training runs stay bit-reproducible from `--seed` alone
         let mut channel = cfg.channel.build();
         channel.reset(&net, crate::parallel::derive_seed(cfg.seed, 0xC4A2));
+        // the malicious set likewise: fixed for the run, drawn on the
+        // adversary substream so a clean config draws nothing
+        let adversary = match &cfg.adversary {
+            Some(spec) => {
+                spec.validate()?;
+                let mut adv = AdversaryModel::new(spec.clone());
+                adv.reset(m, crate::parallel::derive_seed(cfg.seed, ADVERSARY_STREAM));
+                Some(adv)
+            }
+            None => None,
+        };
+        let adv_log = TrainAdvLog {
+            malicious: adversary.as_ref().map_or(0, |a| a.malicious_count()),
+            ..TrainAdvLog::default()
+        };
         Ok(Trainer {
             cfg,
             net,
@@ -151,6 +190,8 @@ impl Trainer {
             global,
             updated_last: true,
             channel,
+            adversary,
+            adv_log,
             eval_shard,
             eval_denom,
             rng,
@@ -276,8 +317,34 @@ impl Trainer {
     // ── aggregation protocols ────────────────────────────────────────────
 
     fn aggregate(&mut self, deltas: &[f32]) -> anyhow::Result<AggResult> {
+        // A c2c (data-poisoning) adversary substitutes its local update
+        // consistently in everything it emits, so the corruption lands once
+        // on the delta stack before any protocol runs. Consistent
+        // substitution satisfies every coding relation — by construction no
+        // decode-path audit can flag it (the documented blind spot).
+        // Uplink tampering instead lands on the coded sums inside each
+        // protocol, where redundancy checks can catch it.
+        let d = self.d;
+        if let Some(adv) = self.adversary.as_mut() {
+            if adv.any() && matches!(adv.spec.surface, Surface::C2c) {
+                let mut poisoned = deltas.to_vec();
+                for ci in 0..self.m {
+                    if adv.is_malicious(ci) {
+                        adv.corrupt_row_f32(&mut poisoned[ci * d..(ci + 1) * d]);
+                    }
+                }
+                return self.aggregate_inner(&poisoned);
+            }
+        }
+        self.aggregate_inner(deltas)
+    }
+
+    fn aggregate_inner(&mut self, deltas: &[f32]) -> anyhow::Result<AggResult> {
         match self.cfg.aggregator {
-            Aggregator::Ideal => Ok(self.agg_subset_mean(deltas, &(0..self.m).collect::<Vec<_>>(), "ideal", 0)),
+            Aggregator::Ideal => {
+                let all: Vec<usize> = (0..self.m).collect();
+                Ok(self.agg_subset_mean(deltas, &all, "ideal", 0))
+            }
             Aggregator::Intermittent => {
                 let real = self.channel.sample(&self.net, &mut self.rng);
                 let received: Vec<usize> =
@@ -291,6 +358,18 @@ impl Trainer {
                         attempts: 1,
                         transmissions: tx,
                     })
+                } else if self.uplink_adversary_active() {
+                    // uncoded uplinks: a malicious client's update arrives
+                    // corrupted and there is no redundancy to check it with
+                    let mut tampered = deltas.to_vec();
+                    let d = self.d;
+                    let adv = self.adversary.as_mut().expect("checked active");
+                    for &ci in &received {
+                        if adv.is_malicious(ci) {
+                            adv.corrupt_row_f32(&mut tampered[ci * d..(ci + 1) * d]);
+                        }
+                    }
+                    Ok(self.agg_subset_mean(&tampered, &received, "subset", tx))
                 } else {
                     Ok(self.agg_subset_mean(deltas, &received, "subset", tx))
                 }
@@ -314,6 +393,53 @@ impl Trainer {
                 }
             },
         }
+    }
+
+    /// Whether uplink-surface tampering is live this run.
+    fn uplink_adversary_active(&self) -> bool {
+        self.adversary
+            .as_ref()
+            .map_or(false, |a| a.any() && matches!(a.spec.surface, Surface::Uplink))
+    }
+
+    /// Tamper the uplinked coded sums of every malicious client in place.
+    fn corrupt_sums(&mut self, sums: &mut [f32]) {
+        let d = self.d;
+        let adv = self.adversary.as_mut().expect("caller checked active");
+        for ci in 0..self.m {
+            if adv.is_malicious(ci) {
+                adv.corrupt_row_f32(&mut sums[ci * d..(ci + 1) * d]);
+            }
+        }
+    }
+
+    /// Cross-combinator integrity check (the GC-redundancy detector): when
+    /// more than M−s complete rows arrived, two distinct combinator row
+    /// sets must decode to the same full sum; disagreement betrays a
+    /// tampered row. Returns `true` when the decode is consistent (or when
+    /// there is no spare row to check with — a lone minimal set is
+    /// unfalsifiable).
+    fn cross_check(&self, code: &GcCode, complete: &[usize], sums: &[f32]) -> bool {
+        let need = self.m - self.cfg.s;
+        if complete.len() <= need {
+            return true;
+        }
+        let lo = gc::find_combinator(code, &complete[..need]);
+        let hi = gc::find_combinator(code, &complete[complete.len() - need..]);
+        let (Some(a), Some(b)) = (lo, hi) else {
+            return true; // degenerate subsets: fall back to the plain path
+        };
+        let am = Matrix::from_rows(&[a]);
+        let bm = Matrix::from_rows(&[b]);
+        let oa = crate::runtime::coded::native_combine(&am, sums, self.d);
+        let ob = crate::runtime::coded::native_combine(&bm, sums, self.d);
+        let mut err = 0.0f32;
+        let mut scale = 1.0f32;
+        for (x, y) in oa[..self.d].iter().zip(&ob[..self.d]) {
+            err = err.max((x - y).abs());
+            scale = scale.max(x.abs()).max(y.abs());
+        }
+        err <= CROSS_CHECK_TOL * scale
     }
 
     /// Mean over an explicit subset (ideal / intermittent baselines) — the
@@ -381,7 +507,18 @@ impl Trainer {
                 continue;
             };
             // partial sums S = B̂ · Δ  (the Pallas encode artifact)
-            let sums = self.coded.encode_prepared(&att.perturbed, &prepared, deltas)?;
+            let mut sums = self.coded.encode_prepared(&att.perturbed, &prepared, deltas)?;
+            if self.uplink_adversary_active() {
+                self.corrupt_sums(&mut sums);
+                let detect = self.adversary.as_ref().map_or(false, |adv| adv.spec.detect);
+                if detect && !self.cross_check(&code, &att.complete, &sums) {
+                    // redundant complete rows disagree: a tampered uplink
+                    // sits in the minimal set — drop the attempt rather
+                    // than apply a poisoned update
+                    self.adv_log.detected += 1;
+                    continue;
+                }
+            }
             // PS-side combinator application (eq. (9)): a single row dot —
             // native combine (the M×MT Pallas decode shape would compute
             // M·D outputs for 1 needed row; see §Perf)
@@ -428,6 +565,11 @@ impl Trainer {
         let mut payload_rows: Vec<Vec<f32>> = Vec::new();
         // one gradient literal for the whole round (§Perf)
         let prepared = self.coded.prepare_grads(deltas)?;
+        // live uplink tampering + detection: mirror the delivered
+        // coefficient rows so the decode-point audit can excise suspects
+        let audit_live = self.uplink_adversary_active()
+            && self.adversary.as_ref().map_or(false, |adv| adv.spec.detect);
+        let mut coeff_stack = Matrix::zeros(0, self.m);
 
         for _ in 0..blocks {
             for _ in 0..tr {
@@ -436,10 +578,20 @@ impl Trainer {
                 let real = self.channel.sample(&self.net, &mut self.rng);
                 let att = gc::Attempt::observe(&code, &real);
                 tx += self.cfg.s * self.m + self.m; // all partial sums are uplinked
-                let sums = self.coded.encode_prepared(&att.perturbed, &prepared, deltas)?;
-                // standard-GC shortcut (Algorithm 1's first branch)
+                let mut sums = self.coded.encode_prepared(&att.perturbed, &prepared, deltas)?;
+                if self.uplink_adversary_active() {
+                    self.corrupt_sums(&mut sums);
+                }
+                // standard-GC shortcut (Algorithm 1's first branch); under a
+                // live audit the shortcut's row set must also survive the
+                // cross-combinator check before it is trusted
                 if att.complete.len() >= self.m - self.cfg.s {
-                    if let Some(a) = gc::find_combinator(&code, &att.complete) {
+                    if audit_live && !self.cross_check(&code, &att.complete, &sums) {
+                        // tampered uplink in the minimal set: refuse the
+                        // shortcut, keep stacking — the parity audit below
+                        // gets a vote once redundancy accumulates
+                        self.adv_log.detected += 1;
+                    } else if let Some(a) = gc::find_combinator(&code, &att.complete) {
                         let a_m = Matrix::from_rows(&[a]);
                         let out =
                             crate::runtime::coded::native_combine(&a_m, &sums, self.d);
@@ -456,6 +608,9 @@ impl Trainer {
                 }
                 for &r in &att.delivered {
                     payload_rows.push(sums[r * self.d..(r + 1) * self.d].to_vec());
+                    if audit_live {
+                        coeff_stack.push_row(att.perturbed.row(r));
+                    }
                 }
                 decoder.push_attempt(&att);
             }
@@ -463,6 +618,54 @@ impl Trainer {
             // engine already holds the reduced form of every pushed row
             if decoder.rows() == 0 || decoder.decodable_count() == 0 {
                 continue;
+            }
+            if audit_live {
+                // payload-parity audit over the whole stack: every
+                // linearly dependent row yields a check that must vanish
+                // on honest data (tolerance matched to f32 encode
+                // rounding, cf. the f64 RESIDUAL_TOL of the MC oracle)
+                let d = self.d;
+                let audit = gc::audit_rows(&coeff_stack, |combo, kept| {
+                    let mut mag = 0.0f64;
+                    for (i, &orig) in kept.iter().enumerate().take(combo.len()) {
+                        if combo[i] != 0.0 {
+                            let rinf = payload_rows[orig]
+                                .iter()
+                                .fold(0.0f64, |mx, &x| mx.max((x as f64).abs()));
+                            mag += combo[i].abs() * rinf;
+                        }
+                    }
+                    let mut worst = 0.0f64;
+                    for j in 0..d {
+                        let mut acc = 0.0f64;
+                        for (i, &orig) in kept.iter().enumerate().take(combo.len()) {
+                            if combo[i] != 0.0 {
+                                acc += combo[i] * payload_rows[orig][j] as f64;
+                            }
+                        }
+                        worst = worst.max(acc.abs());
+                    }
+                    worst > CROSS_CHECK_TOL as f64 * mag
+                });
+                if audit.alarm {
+                    self.adv_log.detected += 1;
+                    self.adv_log.excised += audit.excised.len();
+                    // realign all three structures on the survivors and
+                    // rebuild the incremental engine
+                    coeff_stack = coeff_stack.select_rows(&audit.kept);
+                    payload_rows = audit
+                        .kept
+                        .iter()
+                        .map(|&i| std::mem::take(&mut payload_rows[i]))
+                        .collect();
+                    decoder.reset(self.m);
+                    for i in 0..coeff_stack.rows {
+                        decoder.push_row(coeff_stack.row(i));
+                    }
+                    if decoder.decodable_count() == 0 {
+                        continue; // excision emptied K₄ — stack more blocks
+                    }
+                }
             }
             let dec = decoder.decode();
             let rows = decoder.rows();
@@ -562,6 +765,8 @@ impl Trainer {
         };
         let mut tx = 0usize;
         let mut covered: Vec<bool> = Vec::new();
+        let mut verdicts: Vec<GroupVerdict> = Vec::new();
+        let vote = self.uplink_adversary_active();
         for attempt in 0..max_attempts {
             let mut real = self.channel.sample(&self.net, &mut self.rng);
             if replicated {
@@ -574,10 +779,32 @@ impl Trainer {
             tx += if replicated { 0 } else { self.cfg.s * self.m };
             // uplinks: only complete partial sums are transmitted
             tx += (0..self.m).filter(|&i| sreal.row_delivered_complete(i)).count();
-            if !FrCode::all_covered(&covered) {
+            // Byzantine uplinks: the PS accepts a group only through the
+            // member-value plurality vote — a tied vote excises the whole
+            // group (→ uncovered), a unanimous malicious group decodes a
+            // poisoned value below
+            let ok = if vote {
+                let adv = self.adversary.as_ref().expect("vote implies adversary");
+                let audit = adv.fr_attempt_verdicts(&code, &sreal, &mut verdicts);
+                self.adv_log.detected += audit.alarms;
+                self.adv_log.excised += audit.excised;
+                verdicts.iter().all(|v| v.covered())
+            } else {
+                FrCode::all_covered(&covered)
+            };
+            if !ok {
                 continue; // some group delivered nothing — retry or give up
             }
-            let sums = self.fr_group_sums(&code, deltas);
+            let mut sums = self.fr_group_sums(&code, deltas);
+            if vote {
+                let d = self.d;
+                let adv = self.adversary.as_mut().expect("vote implies adversary");
+                for (g, v) in verdicts.iter().enumerate() {
+                    if *v == GroupVerdict::Poisoned {
+                        adv.corrupt_row_f32(&mut sums[g * d..(g + 1) * d]);
+                    }
+                }
+            }
             let inv = 1.0 / self.m as f32;
             let mut delta = vec![0.0f32; self.d];
             for g in 0..code.groups() {
@@ -623,6 +850,11 @@ impl Trainer {
         let mut attempts_used = 0usize;
         let mut acc = vec![false; code.groups()];
         let mut covered: Vec<bool> = Vec::new();
+        let vote = self.uplink_adversary_active();
+        let detect = self.adversary.as_ref().map_or(false, |adv| adv.spec.detect);
+        // best verdict per group across repeats (vote runs only)
+        let mut verdicts: Vec<GroupVerdict> = Vec::new();
+        let mut best = vec![GroupVerdict::Uncovered; if vote { code.groups() } else { 0 }];
         for _ in 0..blocks {
             for _ in 0..tr {
                 attempts_used += 1;
@@ -630,9 +862,38 @@ impl Trainer {
                 let sreal = SparseRealization::project_from_dense(&sup, &real);
                 code.covered_into(&sreal, &mut covered);
                 tx += self.cfg.s * self.m + self.m; // all partial sums are uplinked
+                if vote {
+                    let adv = self.adversary.as_ref().expect("vote implies adversary");
+                    let audit = adv.fr_attempt_verdicts(&code, &sreal, &mut verdicts);
+                    self.adv_log.detected += audit.alarms;
+                    self.adv_log.excised += audit.excised;
+                    // under detection the best verdict per group wins across
+                    // repeats; without it the first delivered copy sticks
+                    for (b, &v) in best.iter_mut().zip(verdicts.iter()) {
+                        if detect {
+                            *b = (*b).max(v);
+                        } else if !b.covered() && v != GroupVerdict::Uncovered {
+                            *b = v;
+                        }
+                    }
+                }
                 // standard-decode shortcut on any single attempt
-                if FrCode::all_covered(&covered) {
-                    let sums = self.fr_group_sums(&code, deltas);
+                let standard = if vote {
+                    verdicts.iter().all(|v| v.covered())
+                } else {
+                    FrCode::all_covered(&covered)
+                };
+                if standard {
+                    let mut sums = self.fr_group_sums(&code, deltas);
+                    if vote {
+                        let d = self.d;
+                        let adv = self.adversary.as_mut().expect("vote implies adversary");
+                        for (g, v) in verdicts.iter().enumerate() {
+                            if *v == GroupVerdict::Poisoned {
+                                adv.corrupt_row_f32(&mut sums[g * d..(g + 1) * d]);
+                            }
+                        }
+                    }
                     let inv = 1.0 / self.m as f32;
                     let mut delta = vec![0.0f32; self.d];
                     for g in 0..code.groups() {
@@ -653,14 +914,28 @@ impl Trainer {
                 }
                 FrCode::union_covered(&mut acc, &covered);
             }
-            let k4 = code.k4_count(&acc);
+            let group_ok: Vec<bool> = if vote {
+                best.iter().map(|v| v.covered()).collect()
+            } else {
+                acc.clone()
+            };
+            let k4 = code.k4_count(&group_ok);
             if k4 == 0 {
                 continue;
             }
             // mean over the covered groups' members (eq. (23) restricted to K₄)
-            let sums = self.fr_group_sums(&code, deltas);
+            let mut sums = self.fr_group_sums(&code, deltas);
+            if vote {
+                let d = self.d;
+                let adv = self.adversary.as_mut().expect("vote implies adversary");
+                for (g, v) in best.iter().enumerate() {
+                    if *v == GroupVerdict::Poisoned {
+                        adv.corrupt_row_f32(&mut sums[g * d..(g + 1) * d]);
+                    }
+                }
+            }
             let mut delta = vec![0.0f32; self.d];
-            for (g, &c) in acc.iter().enumerate() {
+            for (g, &c) in group_ok.iter().enumerate() {
                 if c {
                     for (o, v) in delta.iter_mut().zip(&sums[g * self.d..(g + 1) * self.d]) {
                         *o += v;

@@ -256,7 +256,9 @@ pub fn fig10(
 ) -> anyhow::Result<Table> {
     let m = backend.manifest().m;
     let net = Network::homogeneous(m, 0.1, 0.1); // the paper's Fig.10 network
-    let pick = design::cost_efficient_s(&net, 0.5, seed).expect("feasible s*");
+    let pick = design::cost_efficient_s(&net, 0.5, seed).ok_or_else(|| {
+        anyhow::anyhow!("fig10: no straggler tolerance s meets P_O <= 0.5 on the p=0.1 network")
+    })?;
     let mut t = Table::new(
         &format!(
             "fig10: transmissions to reach acc {target_acc} (p=0.1, P_O*=0.5 -> s*={}) \
@@ -377,7 +379,7 @@ pub fn theory_table() -> Table {
 
 /// Lemma 1 privacy: worst-case LMIP leakage of a complete partial sum vs s,
 /// with and without the Gaussian mechanism.
-pub fn privacy_table(d: usize) -> Table {
+pub fn privacy_table(d: usize) -> anyhow::Result<Table> {
     let mut t = Table::new(
         &format!("privacy: worst-case CD-LMIP bits of a complete partial sum (d={d})"),
         &["s", "mu_bits", "mu_bits_per_dim", "mu_bits_gauss_sigma1"],
@@ -391,11 +393,13 @@ pub fn privacy_table(d: usize) -> Table {
             .fold(0.0, f64::max);
         // Gaussian mechanism at sigma_dp^2 = 1
         let coeffs: Vec<f64> = (0..10).map(|k| code.b[(0, k)]).collect();
-        let target = (0..10).find(|&k| coeffs[k] != 0.0).unwrap();
+        let target = (0..10).find(|&k| coeffs[k] != 0.0).ok_or_else(|| {
+            anyhow::anyhow!("privacy: generated code row 0 is all-zero at s={s}")
+        })?;
         let mu_g = privacy::lmip_with_gaussian_mechanism(&coeffs, &vars, target, d, 1.0);
         t.rowf(&[s as f64, mu, mu / d as f64, mu_g]);
     }
-    t
+    Ok(t)
 }
 
 /// Cost-efficient design sweep (§V): P_O(s), expected transmissions, s*,
@@ -449,9 +453,37 @@ pub fn scenario_sweep(sc: &Scenario, trials: usize, seed: u64, threads: usize) -
         crate::gc::CodeFamily::Cyclic => String::new(),
         family => format!(" code={}", family.name()),
     };
+    // adversarial scenarios grow five integrity columns and a comment tag;
+    // clean scenarios stay byte-identical to before the adversary
+    // dimension existed
+    let adv_tag = match &sc.adversary {
+        None => String::new(),
+        Some(spec) => format!(" adversary={}", spec.summary()),
+    };
+    let mut header = vec![
+        "round",
+        "wall_clock",
+        "p_update",
+        "p_standard",
+        "p_full",
+        "p_partial",
+        "p_none",
+        "mean_tx",
+        "degraded_frac",
+        "deadline_hit_rate",
+    ];
+    if sc.adversary.is_some() {
+        header.extend([
+            "p_corrupted",
+            "p_detected",
+            "p_poisoned",
+            "mean_excised",
+            "mean_false_excised",
+        ]);
+    }
     let mut t = Table::new(
         &format!(
-            "scenario {}: {}\nchannel={} net={} decoder={:?} s={}{code_tag} trials={trials}",
+            "scenario {}: {}\nchannel={} net={} decoder={:?} s={}{code_tag}{adv_tag} trials={trials}",
             sc.name,
             sc.description,
             sc.channel.name(),
@@ -459,22 +491,11 @@ pub fn scenario_sweep(sc: &Scenario, trials: usize, seed: u64, threads: usize) -
             sc.decoder,
             sc.s
         ),
-        &[
-            "round",
-            "wall_clock",
-            "p_update",
-            "p_standard",
-            "p_full",
-            "p_partial",
-            "p_none",
-            "mean_tx",
-            "degraded_frac",
-            "deadline_hit_rate",
-        ],
+        &header,
     );
     for (r, tally) in series.rounds.iter().enumerate() {
         let n = tally.trials.max(1) as f64;
-        t.rowf(&[
+        let mut row = vec![
             r as f64,
             (r + 1) as f64 * window,
             tally.p_update(),
@@ -485,9 +506,168 @@ pub fn scenario_sweep(sc: &Scenario, trials: usize, seed: u64, threads: usize) -
             tally.transmissions as f64 / n,
             tally.channel.degraded_frac(),
             tally.channel.deadline_hit_rate(),
-        ]);
+        ];
+        if sc.adversary.is_some() {
+            row.extend([
+                tally.corrupted as f64 / n,
+                tally.p_detected(),
+                tally.p_poisoned(),
+                tally.excised as f64 / n,
+                tally.false_excised as f64 / n,
+            ]);
+        }
+        t.rowf(&row);
     }
     t
+}
+
+/// The 2×2 recovery × integrity split of an adversarial scenario: one
+/// coded attempt per trial, classified clean-decode / poisoned-decode /
+/// outage. `cogc scenario run` prints this to stderr next to the
+/// per-round CSV when the scenario carries an adversary.
+pub fn outage_split_summary(
+    sc: &Scenario,
+    trials: usize,
+    seed: u64,
+    threads: usize,
+) -> anyhow::Result<String> {
+    let spec = sc
+        .adversary
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("scenario {:?} has no adversary", sc.name))?;
+    let net = sc.net.build();
+    let ch = sc.channel.build();
+    let mc = MonteCarlo::new(derive_seed(seed, 0x0B5_A11D)).with_threads(threads);
+    let split = match sc.code {
+        crate::gc::CodeFamily::Cyclic => {
+            let code = GcCode::generate(net.m, sc.s, &mut Rng::new(seed));
+            outage::estimate_outage_adv(&net, &code, ch.as_ref(), spec, trials, &mc)
+        }
+        crate::gc::CodeFamily::FractionalRepetition => {
+            let code = crate::gc::FrCode::new(net.m, sc.s)?;
+            outage::estimate_outage_fr_adv(&net, &code, ch.as_ref(), spec, trials, &mc)
+        }
+    };
+    let n = split.trials.max(1) as f64;
+    Ok(format!(
+        "recovery x integrity split ({} single-attempt trials): \
+         clean-decode {:.4} | poisoned-decode {:.4} | outage {:.4}",
+        split.trials,
+        split.decoded_clean as f64 / n,
+        split.decoded_poisoned as f64 / n,
+        split.p_outage(),
+    ))
+}
+
+/// Detection operating characteristic: audit detection / poisoning /
+/// false-excision rates as the attack strategy and malicious fraction
+/// sweep, through the GC⁺ adversarial recovery estimator at the Fig. 6
+/// geometry (M=10, s=7, setting-2 network, repeat-until-decode t_r=2).
+/// Each (attack, fraction) cell runs on its own derived seed, so the table
+/// is bit-identical at every `threads` value.
+pub fn detection_roc(trials: usize, seed: u64, threads: usize) -> Table {
+    use crate::scenario::{AdversarySpec, Attack};
+    let m = 10;
+    let s = 7;
+    let net = Network::fig6_setting(2, m);
+    let mode = RecoveryMode::UntilDecode { tr: 2, max_blocks: 25 };
+    let attacks: &[(&str, Attack)] = &[
+        ("sign_flip", Attack::SignFlip),
+        ("noise", Attack::Noise { sigma: 1.0 }),
+        ("replace", Attack::Replace { scale: 5.0 }),
+        ("collude", Attack::Collude { scale: 1.0 }),
+    ];
+    let mut t = Table::new(
+        "detection_roc: GC+ decode-path audit vs attack strategy and malicious fraction\n\
+         M=10 s=7 fig6-setting-2 network, repeat-until-decode t_r=2",
+        &[
+            "attack",
+            "fraction",
+            "p_corrupted",
+            "p_detected",
+            "p_poisoned",
+            "p_full",
+            "excised_per_trial",
+            "false_excised_per_trial",
+        ],
+    );
+    for (ai, &(name, attack)) in attacks.iter().enumerate() {
+        for (fi, &frac) in [0.1, 0.2, 0.3, 0.4].iter().enumerate() {
+            let spec = AdversarySpec::fraction(attack, frac);
+            let mc =
+                MonteCarlo::new(derive_seed(seed, (ai * 16 + fi) as u64)).with_threads(threads);
+            let st = outage::gcplus_recovery_adv(&net, &Iid, &spec, m, s, mode, trials, &mc);
+            let n = trials.max(1) as f64;
+            t.row(&[
+                name.to_string(),
+                format!("{frac}"),
+                format!("{:.4}", st.corrupted as f64 / n),
+                format!("{:.4}", st.p_detected()),
+                format!("{:.4}", st.p_poisoned()),
+                format!("{:.4}", st.p_full()),
+                format!("{:.4}", st.excised as f64 / n),
+                format!("{:.4}", st.false_excised as f64 / n),
+            ]);
+        }
+    }
+    t
+}
+
+/// Convergence under attack: the same GC⁺ training configuration run
+/// clean, attacked with the audit disabled, and attacked with the
+/// decode-path audit on. All three cells share `cfg.tag()`, so the column
+/// labels are explicit. The three runs train in parallel.
+pub fn convergence_under_attack(
+    backend: &Backend,
+    model: &str,
+    conn: &str,
+    attack_fraction: f64,
+    rounds: usize,
+    seed: u64,
+    threads: usize,
+) -> anyhow::Result<Table> {
+    use crate::scenario::{AdversarySpec, Attack};
+    let m = backend.manifest().m;
+    let net = Network::conn_tier(conn, m);
+    let agg = Aggregator::GcPlus { tr: 2, until_decode: true, max_blocks: 25 };
+    let mut attacked = AdversarySpec::fraction(Attack::SignFlip, attack_fraction);
+    attacked.detect = false;
+    let defended = AdversarySpec::fraction(Attack::SignFlip, attack_fraction);
+    let cells: Vec<(&str, Option<AdversarySpec>)> =
+        vec![("clean", None), ("attacked", Some(attacked)), ("defended", Some(defended))];
+    let jobs: Vec<(TrainConfig, Network)> = cells
+        .iter()
+        .map(|(_, adv)| {
+            let mut cfg = TrainConfig::new(model, agg);
+            cfg.rounds = rounds;
+            cfg.seed = seed;
+            cfg.adversary = adv.clone();
+            (cfg, net.clone())
+        })
+        .collect();
+    let results = parallel_map(&jobs, threads, |_i, (cfg, net)| {
+        run_training(backend, cfg.clone(), net.clone())
+    });
+    let mut logs = Vec::with_capacity(jobs.len());
+    for ((label, _), result) in cells.iter().zip(results) {
+        logs.push((label.to_string(), result?));
+    }
+    for (label, log) in &logs {
+        crate::info!(
+            "{model} conn={conn} {label}: final acc {:.3}, {} updates",
+            log.final_acc(),
+            log.updates()
+        );
+    }
+    Ok(curves_table(
+        &format!(
+            "convergence_under_attack: {model}, GC+ t_r=2, {conn} client-to-client links, \
+             sign-flip fraction {attack_fraction} (clean / attacked no-detect / attacked+audit) \
+             [{} backend]",
+            backend.name()
+        ),
+        &logs,
+    ))
 }
 
 /// The `cogc scenario list` catalog table.
@@ -523,7 +703,8 @@ pub fn train_once(
     channel: crate::scenario::ChannelSpec,
     code: crate::gc::CodeFamily,
     s: usize,
-) -> anyhow::Result<RunLog> {
+    adversary: Option<crate::scenario::AdversarySpec>,
+) -> anyhow::Result<(RunLog, crate::coordinator::TrainAdvLog)> {
     let mut cfg = TrainConfig::new(model, agg);
     cfg.rounds = rounds;
     cfg.seed = seed;
@@ -531,5 +712,9 @@ pub fn train_once(
     cfg.channel = channel;
     cfg.code = code;
     cfg.s = s;
-    run_training(backend, cfg, net)
+    cfg.adversary = adversary;
+    let mut tr = Trainer::new(backend, cfg, net)?;
+    let log = tr.run()?;
+    let adv_log = tr.adv_log.clone();
+    Ok((log, adv_log))
 }

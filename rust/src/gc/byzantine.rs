@@ -1,0 +1,312 @@
+//! Redundancy-based Byzantine detection in the GC⁺ decode path.
+//!
+//! A stack of delivered coded rows is over-determined whenever more rows
+//! arrive than the code's rank: every vector in the left null space of the
+//! coefficient stack is a **parity check** — an exact linear relation the
+//! corresponding payload rows must satisfy. An uplink-tampered row breaks
+//! every check whose support touches it; rows covered by no check (no
+//! spare redundancy) are undetectable.
+//!
+//! [`audit_rows`] harvests the checks for free from the existing
+//! [`IncrementalRref`] engine (each dependent `push_row` exposes one via
+//! `null_transform()`), evaluates them with a caller-supplied closure
+//! (payload residual in `sim`/trainer, symbolic corruption flags in
+//! `outage::mc`, so the two modes are oracle-comparable in tests), and on
+//! failure excises suspects and repeats on the surviving rows until all
+//! remaining checks pass. Suspicion is conservative: a row implicated by a
+//! failing check is excised unless some *passing* check vouches for it —
+//! trading a little recovery (honest rows excised alongside the liar) for
+//! integrity, which is the right trade for CoGC's exact decode.
+
+use crate::linalg::IncrementalRref;
+use crate::linalg::Matrix;
+
+/// Relative magnitude below which a check coefficient is considered
+/// structurally zero (outside the check's support).
+const SUPPORT_TOL: f64 = 1e-9;
+
+/// Relative residual above which a payload parity check fails. Honest
+/// stacks sit near machine epsilon (≲1e-12 after RREF combination, with
+/// pivot amplification bounded by the engine's 1e6 acceptance floor);
+/// tampered rows contribute O(1) relative residual.
+const RESIDUAL_TOL: f64 = 1e-6;
+
+/// Result of auditing one stack of coded rows.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Audit {
+    /// Surviving row indices into the original stack, ascending.
+    pub kept: Vec<usize>,
+    /// Excised row indices, ascending.
+    pub excised: Vec<usize>,
+    /// Whether any parity check failed (the detection alarm).
+    pub alarm: bool,
+    /// Parity checks evaluated across all passes.
+    pub checks: usize,
+    /// Checks that failed across all passes.
+    pub failing: usize,
+}
+
+/// Indices (into `combo`) carrying structurally non-zero weight.
+pub fn combo_support(combo: &[f64]) -> Vec<usize> {
+    let max = combo.iter().fold(0.0f64, |a, &x| a.max(x.abs()));
+    let tol = SUPPORT_TOL * max.max(1.0);
+    combo
+        .iter()
+        .enumerate()
+        .filter(|(_, &x)| x.abs() > tol)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// Audit a stack of coefficient rows against a check evaluator.
+///
+/// `coeffs` holds one coded coefficient row per stacked observation (the
+/// raw `b̃` rows, in stack order). `check_fails(combo, kept)` receives a
+/// left-null-space combination `combo` aligned with the prefix
+/// `kept[..combo.len()]` of currently kept original indices, and returns
+/// whether the corresponding payload relation is violated.
+///
+/// Each pass rebuilds the RREF engine over the kept rows, harvesting one
+/// check per dependent row; failing-check supports minus rows vouched by a
+/// passing check are excised and the pass repeats, until every check
+/// passes (or nothing more can be excised). Terminates in ≤ rows passes
+/// since each continuing pass removes at least one row.
+pub fn audit_rows<F>(coeffs: &Matrix, mut check_fails: F) -> Audit
+where
+    F: FnMut(&[f64], &[usize]) -> bool,
+{
+    let mut audit = Audit { kept: (0..coeffs.rows).collect(), ..Audit::default() };
+    if coeffs.rows == 0 {
+        return audit;
+    }
+    let mut eng = IncrementalRref::with_capacity(coeffs.cols, coeffs.rows);
+    // (fails, support as local kept-indices) per check of the current pass
+    let mut pass_checks: Vec<(bool, Vec<usize>)> = Vec::new();
+    loop {
+        eng.reset(coeffs.cols);
+        pass_checks.clear();
+        for (local, &orig) in audit.kept.iter().enumerate() {
+            if eng.push_row(coeffs.row(orig)).is_none() {
+                let combo = eng.null_transform();
+                debug_assert_eq!(combo.len(), local + 1);
+                let fails = check_fails(combo, &audit.kept[..=local]);
+                pass_checks.push((fails, combo_support(combo)));
+            }
+        }
+        audit.checks += pass_checks.len();
+        let n_fail = pass_checks.iter().filter(|(f, _)| *f).count();
+        if n_fail == 0 {
+            return audit;
+        }
+        audit.failing += n_fail;
+        audit.alarm = true;
+        let n = audit.kept.len();
+        let mut implicated = vec![false; n];
+        let mut vouched = vec![false; n];
+        for (fails, sup) in &pass_checks {
+            for &i in sup {
+                if *fails {
+                    implicated[i] = true;
+                } else {
+                    vouched[i] = true;
+                }
+            }
+        }
+        let mut suspect: Vec<bool> =
+            (0..n).map(|i| implicated[i] && !vouched[i]).collect();
+        if !suspect.iter().any(|&s| s) {
+            // every implicated row is also vouched (a corrupted row can
+            // slip into a passing check's support through cancellation):
+            // fall back to excising everything the failing checks touch
+            for i in 0..n {
+                suspect[i] = implicated[i];
+            }
+        }
+        if !suspect.iter().any(|&s| s) {
+            // failing checks with empty support — numerically degenerate;
+            // nothing actionable to excise
+            return audit;
+        }
+        let mut kept_next = Vec::with_capacity(n);
+        for (i, &orig) in audit.kept.iter().enumerate() {
+            if suspect[i] {
+                audit.excised.push(orig);
+            } else {
+                kept_next.push(orig);
+            }
+        }
+        audit.kept = kept_next;
+        if audit.kept.is_empty() {
+            return audit;
+        }
+    }
+}
+
+/// Payload parity-check evaluator: the check fails iff the combined
+/// partial-sum residual `Σᵢ comboᵢ · sums[kept[i]]` is non-zero relative
+/// to the magnitudes involved. `sums` rows are aligned with the original
+/// stack indices.
+pub fn payload_check_fails(combo: &[f64], kept: &[usize], sums: &Matrix) -> bool {
+    let d = sums.cols;
+    let mut scale = 0.0f64;
+    let mut worst = 0.0f64;
+    for j in 0..d {
+        let mut acc = 0.0f64;
+        for (i, &orig) in kept.iter().enumerate().take(combo.len()) {
+            acc += combo[i] * sums.row(orig)[j];
+        }
+        worst = worst.max(acc.abs());
+    }
+    for (i, &orig) in kept.iter().enumerate().take(combo.len()) {
+        let row_max = sums.row(orig).iter().fold(0.0f64, |a, &x| a.max(x.abs()));
+        scale += combo[i].abs() * row_max;
+    }
+    worst > RESIDUAL_TOL * scale.max(1.0)
+}
+
+/// Symbolic evaluator for payload-free Monte-Carlo: the check fails iff
+/// its support touches a row flagged as corrupted. This matches the
+/// payload evaluator for generic (non-cancelling) corruptions — the
+/// identity the dense-oracle tests pin down.
+pub fn symbolic_check_fails(combo: &[f64], kept: &[usize], corrupted: &[bool]) -> bool {
+    combo_support(combo).iter().any(|&i| corrupted[kept[i]])
+}
+
+/// Whether a decode weight row (aligned with `kept` stack indices) places
+/// structural weight on any corrupted kept row — i.e. the decoded value is
+/// poisoned.
+pub fn weights_touch_corrupted(weights: &[f64], kept: &[usize], corrupted: &[bool]) -> bool {
+    combo_support(weights).iter().any(|&i| corrupted[kept[i]])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gc::GcCode;
+    use crate::util::rng::Rng;
+
+    /// Stack the full cyclic code twice: M extra rows ⇒ M parity checks.
+    fn double_stack(m: usize, s: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let code_a = GcCode::generate(m, s, &mut rng);
+        let code_b = GcCode::generate(m, s, &mut rng);
+        let d = 4;
+        let payload = Matrix::from_fn(m, d, |_, _| rng.normal());
+        let mut coeffs = Matrix::zeros(0, m);
+        for r in 0..m {
+            coeffs.push_row(code_a.b.row(r));
+        }
+        for r in 0..m {
+            coeffs.push_row(code_b.b.row(r));
+        }
+        let sums = coeffs.matmul(&payload);
+        (coeffs, sums, payload)
+    }
+
+    #[test]
+    fn clean_stack_raises_no_alarm() {
+        for seed in 0..5 {
+            let (coeffs, sums, _) = double_stack(8, 3, seed);
+            let audit = audit_rows(&coeffs, |c, k| payload_check_fails(c, k, &sums));
+            assert!(!audit.alarm, "false alarm at seed {seed}");
+            assert_eq!(audit.kept.len(), coeffs.rows);
+            assert!(audit.checks >= 8, "expected ≥ M checks, got {}", audit.checks);
+        }
+    }
+
+    #[test]
+    fn single_sign_flip_is_excised_and_redecode_is_clean() {
+        for &bad in &[0usize, 5, 11] {
+            let (coeffs, mut sums, _) = double_stack(8, 3, 42);
+            for x in sums.row_mut(bad) {
+                *x = -*x;
+            }
+            let audit = audit_rows(&coeffs, |c, k| payload_check_fails(c, k, &sums));
+            assert!(audit.alarm);
+            assert!(audit.excised.contains(&bad), "row {bad} not excised: {:?}", audit.excised);
+            // surviving rows satisfy all their checks
+            let kept_c = coeffs.select_rows(&audit.kept);
+            let re = audit_rows(&kept_c, |c, k| {
+                let orig: Vec<usize> = k.iter().map(|&i| audit.kept[i]).collect();
+                payload_check_fails(c, &orig, &sums)
+            });
+            assert!(!re.alarm);
+        }
+    }
+
+    #[test]
+    fn symbolic_and_payload_audits_agree_on_generic_corruptions() {
+        let mut rng = Rng::new(7);
+        for trial in 0..20 {
+            let (coeffs, mut sums, _) = double_stack(6, 2, 100 + trial);
+            let mut corrupted = vec![false; coeffs.rows];
+            for r in 0..coeffs.rows {
+                if rng.bernoulli(0.15) {
+                    corrupted[r] = true;
+                    for x in sums.row_mut(r) {
+                        // generic replacement — no accidental cancellation
+                        *x = 3.0 + rng.normal();
+                    }
+                }
+            }
+            let pay = audit_rows(&coeffs, |c, k| payload_check_fails(c, k, &sums));
+            let sym = audit_rows(&coeffs, |c, k| symbolic_check_fails(c, k, &corrupted));
+            assert_eq!(pay.kept, sym.kept, "trial {trial}");
+            assert_eq!(pay.excised, sym.excised, "trial {trial}");
+            assert_eq!(pay.alarm, sym.alarm, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn corruption_without_redundancy_is_missed() {
+        // exactly rank-many independent rows → zero checks → no detection
+        let mut rng = Rng::new(3);
+        let code = GcCode::generate(8, 3, &mut rng);
+        let payload = Matrix::from_fn(8, 4, |_, _| rng.normal());
+        let mut sums = code.b.matmul(&payload);
+        for x in sums.row_mut(2) {
+            *x = -*x;
+        }
+        let audit = audit_rows(&code.b, |c, k| payload_check_fails(c, k, &sums));
+        // the cyclic B is full-rank: every row is a pivot, no null combos
+        assert_eq!(audit.checks, 0);
+        assert!(!audit.alarm);
+        assert_eq!(audit.kept.len(), 8);
+    }
+
+    #[test]
+    fn consistent_payload_substitution_is_invisible() {
+        // c2c-surface model: the adversary swaps client k's gradient for a
+        // fake one *before* encoding — the stack stays self-consistent, so
+        // no parity check can fail (the documented blind spot)
+        let mut rng = Rng::new(9);
+        let code_a = GcCode::generate(8, 3, &mut rng);
+        let code_b = GcCode::generate(8, 3, &mut rng);
+        let mut payload = Matrix::from_fn(8, 4, |_, _| rng.normal());
+        for x in payload.row_mut(3) {
+            *x = 100.0 + rng.normal(); // wildly wrong, but consistent
+        }
+        let mut coeffs = Matrix::zeros(0, 8);
+        for r in 0..8 {
+            coeffs.push_row(code_a.b.row(r));
+        }
+        for r in 0..8 {
+            coeffs.push_row(code_b.b.row(r));
+        }
+        let sums = coeffs.matmul(&payload);
+        let audit = audit_rows(&coeffs, |c, k| payload_check_fails(c, k, &sums));
+        assert!(!audit.alarm);
+        assert!(audit.checks >= 8);
+    }
+
+    #[test]
+    fn weights_touch_corrupted_flags_structural_support_only() {
+        let kept = vec![0, 2, 5];
+        let corrupted = vec![false, true, true, false, false, false];
+        assert!(weights_touch_corrupted(&[0.0, 1.0, 0.0], &kept, &corrupted));
+        assert!(!weights_touch_corrupted(&[1.0, 0.0, 0.0], &kept, &corrupted));
+        assert!(weights_touch_corrupted(&[0.5, 0.0, -0.5], &kept, &corrupted));
+        // sub-tolerance residue does not count as support
+        assert!(!weights_touch_corrupted(&[1.0, 1e-14, 0.0], &kept, &corrupted));
+    }
+}

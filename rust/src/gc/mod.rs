@@ -3,12 +3,14 @@
 //! complementary GC⁺ decoder, and the rank analyses that underpin the
 //! paper's reliability results.
 
+pub mod byzantine;
 pub mod codes;
 pub mod combinator;
 pub mod family;
 pub mod gcplus;
 pub mod rank;
 
+pub use byzantine::{audit_rows, payload_check_fails, symbolic_check_fails, Audit};
 pub use codes::GcCode;
 pub use combinator::{apply_combinator, find_combinator};
 pub use family::{CodeFamily, FrCode};

@@ -15,6 +15,8 @@
 //! cogc theory                                Theorem-1 / Lemma-5 numerics
 //! cogc privacy [--dim 100]                   Lemma-1 LMIP table
 //! cogc design [--p 0.1] [--target-po 0.5]    eq. (21) design sweep + MC check
+//! cogc detection-roc [--trials 2000]         Byzantine audit detection sweep
+//! cogc attack [--fraction 0.3]               convergence under attack curves
 //! cogc scenario list                         built-in channel-scenario catalog
 //! cogc scenario run <name> [--trials 2000]   per-round time-series CSV
 //! cogc train --model M --agg A [...]         single training run (CSV log)
@@ -119,7 +121,26 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         }
         "remark5" => figures::remark5().print(),
         "theory" => figures::theory_table().print(),
-        "privacy" => figures::privacy_table(args.usize_opt("dim", 100)?).print(),
+        "privacy" => figures::privacy_table(args.usize_opt("dim", 100)?)?.print(),
+        "detection-roc" => {
+            figures::detection_roc(args.usize_opt("trials", 2_000)?, seed, threads).print()
+        }
+        "attack" => {
+            let model = args.str_opt("model", "mnist_cnn");
+            let conn = args.str_opt("conn", "moderate");
+            let fraction = args.f64_opt("fraction", 0.3)?;
+            let rounds = args.usize_opt("rounds", 100)?;
+            figures::convergence_under_attack(
+                &backend()?,
+                &model,
+                &conn,
+                fraction,
+                rounds,
+                seed,
+                threads,
+            )?
+            .print();
+        }
         "scenario" => {
             let action = args.positionals.first().map(|s| s.as_str()).unwrap_or("list");
             match action {
@@ -177,6 +198,16 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
                         sc.s = args.usize_opt("s", sc.s)?;
                         revalidate = true;
                     }
+                    // --adversary sign_flip:0.2 (or none) overrides the
+                    // scenario's Byzantine spec in place
+                    if let Some(spec) = args.get("adversary") {
+                        sc.adversary = if spec == "none" {
+                            None
+                        } else {
+                            Some(scenario::AdversarySpec::parse_cli(spec)?)
+                        };
+                        revalidate = true;
+                    }
                     if revalidate {
                         sc.validate()?;
                     }
@@ -191,6 +222,12 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
                     );
                     let trials = args.usize_opt("trials", 2_000)?;
                     figures::scenario_sweep(&sc, trials, seed, threads).print();
+                    if sc.adversary.is_some() {
+                        eprintln!(
+                            "{}",
+                            figures::outage_split_summary(&sc, trials, seed, threads)?
+                        );
+                    }
                 }
                 other => anyhow::bail!("unknown scenario action {other:?} (list|run)"),
             }
@@ -234,10 +271,23 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
             // at the backends' M=10 that means e.g. --code fr --s 4)
             let code = parse_code(&args)?;
             let s = args.usize_opt("s", 7)?;
-            let log = figures::train_once(
-                &backend, &model, agg, net, rounds, seed, combine, channel, code, s,
+            // Byzantine clients: --adversary <attack>:<fraction>[:...]
+            // (compact spec, see `cogc scenario run --adversary`)
+            let adversary = match args.get("adversary") {
+                None => None,
+                Some("none") => None,
+                Some(spec) => Some(scenario::AdversarySpec::parse_cli(spec)?),
+            };
+            let (log, adv_log) = figures::train_once(
+                &backend, &model, agg, net, rounds, seed, combine, channel, code, s, adversary,
             )?;
             print!("{}", log.to_csv());
+            if adv_log.malicious > 0 {
+                eprintln!(
+                    "adversary: {} malicious clients, {} audit alarms, {} rows/copies excised",
+                    adv_log.malicious, adv_log.detected, adv_log.excised
+                );
+            }
             eprintln!(
                 "final acc {:.4}, best {:.4}, {} updates, {} transmissions",
                 log.final_acc(),
@@ -277,11 +327,30 @@ cogc — Cooperative Gradient Coding (CoGC + GC+) launcher
 figures (CSV on stdout):
   fig4 fig6 fig7 fig8 fig10 fig11 fig12 remark5 theory privacy design
 
+byzantine (adversarial clients; see the README threat-model section):
+  detection-roc [--trials N]      audit detection / poisoning / false-excision
+                                  rates vs attack strategy x malicious fraction
+  attack [--model M]              GC+ training curves: clean vs attacked
+        [--conn good|moderate|poor] (no detection) vs attacked + decode audit
+        [--fraction F] [--rounds N]
+  --adversary <spec>              attack spec for `scenario run` / `train`:
+                                  <attack>:<fraction>[:<param>][:c2c][:nodetect]
+                                  attacks: sign_flip | noise | replace | collude
+                                  e.g. sign_flip:0.2, noise:0.1:5.0,
+                                  collude:0.3:1.0:c2c:nodetect, or `none`
+                                  (c2c = consistent-substitution surface — it
+                                  satisfies every coding relation, undetectable
+                                  by parity audits; uplink is the default)
+
 scenarios (stateful channels: bursty / correlated / straggler links):
   scenario list                   built-in catalog (name, channel, regime)
   scenario run <name>             per-round time-series CSV (outage rate,
         [--trials N] [--rounds R] GC+ full/partial/none split, burst
-                                  fraction, deadline hit-rate, wall-clock)
+                                  fraction, deadline hit-rate, wall-clock;
+                                  adversarial scenarios — the byz-* builtins
+                                  or --adversary — add corruption/detection/
+                                  poisoning columns and print the 2x2
+                                  recovery x integrity split)
         [--code cyclic|fr]        code family: dense cyclic (default) or
         [--m N] [--s S]           fractional repetition — the sparse
                                   O(M·(s+1)) path that scales to M = 10^5-10^6
@@ -301,6 +370,9 @@ training:
                      tolerance (fr needs M % (s+1) == 0, e.g. --s 4 at M=10)
         [--combine pallas|native]   coded-combine kernels (NOT the model
                      backend — see --backend); pallas needs PJRT artifacts
+        [--adversary <spec>]        Byzantine clients (fixed set for the run);
+                     the decode-path audit excises corrupted rows unless
+                     :nodetect — alarms/excisions reported after the run
 
 misc:
   info            show backend + model inventory

@@ -105,6 +105,18 @@ pub struct RecoveryStats {
     pub k4_hist: Vec<usize>,
     /// Total communication attempts consumed (for mean attempts/round).
     pub attempts: usize,
+    /// Trials where corrupted rows reached the PS (adversarial runs only;
+    /// 0 otherwise, as are the four tallies below).
+    pub corrupted: usize,
+    /// Trials where the decode-point audit raised an alarm.
+    pub detected: usize,
+    /// Trials whose decode used corrupted data — decoded-but-poisoned,
+    /// the second axis of the 2×2 recovery × integrity split.
+    pub poisoned: usize,
+    /// Stacked rows (or FR member copies) excised by the audit.
+    pub excised: usize,
+    /// Honest rows among the excised (false-alarm cost).
+    pub false_excised: usize,
 }
 
 impl RecoveryStats {
@@ -124,6 +136,16 @@ impl RecoveryStats {
     pub fn mean_attempts(&self) -> f64 {
         self.attempts as f64 / self.trials as f64
     }
+
+    /// Detection rate among trials where corruption reached the PS.
+    pub fn p_detected(&self) -> f64 {
+        self.detected as f64 / self.corrupted.max(1) as f64
+    }
+
+    /// Miss rate: corrupted trials that decoded poisoned.
+    pub fn p_poisoned(&self) -> f64 {
+        self.poisoned as f64 / self.trials.max(1) as f64
+    }
 }
 
 impl Accumulate for RecoveryStats {
@@ -135,6 +157,11 @@ impl Accumulate for RecoveryStats {
         self.none += other.none;
         self.attempts += other.attempts;
         self.k4_hist.merge(other.k4_hist);
+        self.corrupted += other.corrupted;
+        self.detected += other.detected;
+        self.poisoned += other.poisoned;
+        self.excised += other.excised;
+        self.false_excised += other.false_excised;
     }
 }
 
@@ -367,6 +394,485 @@ pub fn fr_recovery(
         stats.k4_hist.resize(code.m + 1, 0); // trials == 0 edge case
     }
     stats
+}
+
+// ── Byzantine-adversarial estimators (symbolic / payload-free) ──────────
+//
+// These mirror the plain estimators but track which stacked rows carry
+// corrupted data, run the redundancy audit at the decode point with the
+// *symbolic* check evaluator (a parity check fails iff its support touches
+// a corrupted row — the generic-position behavior of the payload
+// evaluator, pinned against the dense payload oracle in
+// `tests/adversary.rs`), and classify each trial on the 2×2 of
+// recovery × integrity. Trials whose sampled malicious set is empty run
+// the plain trial body verbatim, so a fraction-0 spec is byte-identical.
+
+use crate::scenario::{AdversaryModel, AdversarySpec, GroupVerdict, Surface, ADVERSARY_STREAM};
+
+/// 2×2 recovery × integrity split of a single-attempt outage estimate.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct OutageSplit {
+    pub trials: usize,
+    /// Decoded and the accepted value is the honest sum.
+    pub decoded_clean: usize,
+    /// Decoded, but the accepted value embeds corrupted data — the state
+    /// classic outage analysis cannot see.
+    pub decoded_poisoned: usize,
+    /// Standard outage (nothing decodable).
+    pub outage: usize,
+}
+
+impl OutageSplit {
+    pub fn p_outage(&self) -> f64 {
+        self.outage as f64 / self.trials.max(1) as f64
+    }
+
+    pub fn p_poisoned(&self) -> f64 {
+        self.decoded_poisoned as f64 / self.trials.max(1) as f64
+    }
+}
+
+impl Accumulate for OutageSplit {
+    fn merge(&mut self, other: Self) {
+        self.trials += other.trials;
+        self.decoded_clean += other.decoded_clean;
+        self.decoded_poisoned += other.decoded_poisoned;
+        self.outage += other.outage;
+    }
+}
+
+/// Whether a coded row's sum embeds a malicious contribution. On the
+/// uplink surface the row owner tampers with what it uplinks; on the c2c
+/// surface any malicious client inside the row's support poisons it.
+fn row_corrupted(adv: &AdversaryModel, coeffs: &[f64], owner: usize) -> bool {
+    match adv.spec.surface {
+        Surface::Uplink => adv.is_malicious(owner),
+        Surface::C2c => coeffs
+            .iter()
+            .enumerate()
+            .any(|(k, &c)| c != 0.0 && adv.is_malicious(k)),
+    }
+}
+
+/// Adversarial [`estimate_outage`]: the single-attempt standard decode
+/// becomes the 2×2 split. A lone attempt of the full-rank cyclic code
+/// carries **zero** parity redundancy, so there is nothing to audit here —
+/// this estimator quantifies what silent poisoning costs when no repeats
+/// are available (detection needs the stacked redundancy of
+/// [`gcplus_recovery_adv`]).
+pub fn estimate_outage_adv(
+    net: &Network,
+    code: &GcCode,
+    ch: &dyn ChannelModel,
+    spec: &AdversarySpec,
+    trials: usize,
+    mc: &MonteCarlo,
+) -> OutageSplit {
+    mc.run_scratch(
+        trials,
+        || (TrialScratch::new(ch, net.m), AdversaryModel::new(spec.clone())),
+        |t, rng, acc: &mut OutageSplit, (s, adv)| {
+            s.ch.reset(net, mc.substream_seed(CHANNEL_STREAM, t));
+            adv.reset(net.m, mc.substream_seed(ADVERSARY_STREAM, t));
+            s.ch.sample_into(net, rng, &mut s.real);
+            gc::Attempt::observe_into(code, &s.real, &mut s.att);
+            acc.trials += 1;
+            if s.att.complete.len() < net.m - code.s {
+                acc.outage += 1;
+            } else if s
+                .att
+                .complete
+                .iter()
+                .any(|&r| adv.any() && row_corrupted(adv, s.att.perturbed.row(r), r))
+            {
+                acc.decoded_poisoned += 1;
+            } else {
+                acc.decoded_clean += 1;
+            }
+        },
+    )
+}
+
+/// Pooled buffers of [`gcplus_recovery_adv`]: the plain scratch plus the
+/// raw coefficient stack and per-row corruption flags the audit consumes.
+struct TrialScratchAdv {
+    base: TrialScratch,
+    adv: AdversaryModel,
+    coeffs: crate::linalg::Matrix,
+    corrupted: Vec<bool>,
+}
+
+/// One adversarial GC⁺ round. Identical attempt/draw structure to
+/// [`recovery_trial`]; additionally stacks every uplinked coefficient row
+/// with its corruption flag and, at the first decode event (standard
+/// shortcut or `decodable_count() > 0`), runs the symbolic audit, excises
+/// suspects, and classifies the post-excision outcome. Conservative by
+/// design: if excision empties the decodable set the trial is classified
+/// `none` (the loop is not resumed) — detection trades a little recovery
+/// for integrity.
+fn recovery_trial_adv(
+    net: &Network,
+    m: usize,
+    s: usize,
+    mode: RecoveryMode,
+    detect: bool,
+    rng: &mut Rng,
+    stats: &mut RecoveryStats,
+    sc: &mut TrialScratchAdv,
+) {
+    if !sc.adv.any() {
+        recovery_trial(net, m, s, mode, rng, stats, &mut sc.base);
+        return;
+    }
+    if stats.k4_hist.len() < m + 1 {
+        stats.k4_hist.resize(m + 1, 0);
+    }
+    let need = m - s;
+    let (tr, max_blocks) = match mode {
+        RecoveryMode::FixedTr(tr) => (tr, 1),
+        RecoveryMode::UntilDecode { tr, max_blocks } => (tr, max_blocks),
+    };
+    stats.trials += 1;
+    sc.base.dec.reset(m);
+    if sc.coeffs.cols != m {
+        sc.coeffs = crate::linalg::Matrix::zeros(0, m);
+    } else {
+        sc.coeffs.clear_rows();
+    }
+    sc.corrupted.clear();
+
+    // run the attempt loop; `event` records how the trial ended
+    enum DecodeEvent {
+        /// Some attempt had ≥ M−s complete rows; payload = their stack indices.
+        StandardShortcut(Vec<usize>),
+        Decodable,
+        Nothing,
+    }
+    let mut event = DecodeEvent::Nothing;
+    'blocks: for _ in 0..max_blocks {
+        for _ in 0..tr {
+            let code = GcCode::generate(m, s, rng);
+            sc.base.ch.sample_into(net, rng, &mut sc.base.real);
+            gc::Attempt::observe_into(&code, &sc.base.real, &mut sc.base.att);
+            stats.attempts += 1;
+            let att = &sc.base.att;
+            let base_row = sc.coeffs.rows;
+            for &r in &att.delivered {
+                sc.coeffs.push_row(att.perturbed.row(r));
+                sc.corrupted.push(row_corrupted(&sc.adv, att.perturbed.row(r), r));
+            }
+            if att.complete.len() >= need {
+                // stack indices of this attempt's complete rows
+                let mut complete_stack = Vec::with_capacity(att.complete.len());
+                let mut ci = 0usize;
+                for (off, &r) in att.delivered.iter().enumerate() {
+                    if ci < att.complete.len() && att.complete[ci] == r {
+                        complete_stack.push(base_row + off);
+                        ci += 1;
+                    }
+                }
+                event = DecodeEvent::StandardShortcut(complete_stack);
+                break 'blocks;
+            }
+            sc.base.dec.push_attempt(att);
+        }
+        if sc.base.dec.decodable_count() > 0 {
+            event = DecodeEvent::Decodable;
+            break 'blocks;
+        }
+        if matches!(mode, RecoveryMode::FixedTr(_)) {
+            break 'blocks;
+        }
+    }
+    stats.corrupted += sc.corrupted.iter().any(|&c| c) as usize;
+
+    // audit everything the PS received (GC⁺ uplinks every delivered row)
+    let mut kept_mask = vec![true; sc.coeffs.rows];
+    if detect && !matches!(event, DecodeEvent::Nothing) {
+        let audit = gc::audit_rows(&sc.coeffs, |combo, kept| {
+            gc::symbolic_check_fails(combo, kept, &sc.corrupted)
+        });
+        stats.detected += audit.alarm as usize;
+        stats.excised += audit.excised.len();
+        for &r in &audit.excised {
+            kept_mask[r] = false;
+            if !sc.corrupted[r] {
+                stats.false_excised += 1;
+            }
+        }
+    }
+
+    match event {
+        DecodeEvent::StandardShortcut(complete_stack) => {
+            let kept_complete = complete_stack.iter().filter(|&&st| kept_mask[st]).count();
+            if kept_complete >= need {
+                stats.standard += 1;
+                stats.k4_hist[m] += 1;
+                // conservative: the combinator may select any surviving
+                // complete row, so a corrupted survivor poisons the decode
+                let poisoned =
+                    complete_stack.iter().any(|&st| kept_mask[st] && sc.corrupted[st]);
+                stats.poisoned += poisoned as usize;
+                return;
+            }
+            // excision broke the shortcut: fall back to GC⁺ over the
+            // surviving stack
+            rebuild_and_classify(&kept_mask, stats, sc, m);
+        }
+        DecodeEvent::Decodable => {
+            if detect && kept_mask.iter().any(|&k| !k) {
+                rebuild_and_classify(&kept_mask, stats, sc, m);
+            } else {
+                classify_decoder(&sc.base.dec, &sc.corrupted, None, stats, m);
+            }
+        }
+        DecodeEvent::Nothing => {
+            stats.none += 1;
+            stats.k4_hist[0] += 1;
+        }
+    }
+}
+
+/// Rebuild the incremental engine on the kept rows and classify.
+fn rebuild_and_classify(
+    kept_mask: &[bool],
+    stats: &mut RecoveryStats,
+    sc: &mut TrialScratchAdv,
+    m: usize,
+) {
+    let kept: Vec<usize> = (0..sc.coeffs.rows).filter(|&r| kept_mask[r]).collect();
+    sc.base.dec.reset(m);
+    for &r in &kept {
+        sc.base.dec.push_row(sc.coeffs.row(r));
+    }
+    classify_decoder(&sc.base.dec, &sc.corrupted, Some(&kept), stats, m);
+}
+
+/// Classify a decoder state on the recovery × integrity grid: the decode
+/// is poisoned iff some decodable client's weight vector places structural
+/// weight on a corrupted stacked row. `kept` maps the decoder's pushed-row
+/// order back to stack indices (`None` = identity).
+fn classify_decoder(
+    dec: &gc::GcPlusDecoder,
+    corrupted: &[bool],
+    kept: Option<&[usize]>,
+    stats: &mut RecoveryStats,
+    m: usize,
+) {
+    let eng = dec.engine();
+    let k4 = dec.decodable_count();
+    if k4 == 0 {
+        stats.none += 1;
+        stats.k4_hist[0] += 1;
+        return;
+    }
+    let identity: Vec<usize>;
+    let kept = match kept {
+        Some(k) => k,
+        None => {
+            identity = (0..eng.rows()).collect();
+            &identity
+        }
+    };
+    let mut poisoned = false;
+    for (_, row_i) in eng.decodable() {
+        if crate::gc::byzantine::weights_touch_corrupted(eng.t_row(row_i), kept, corrupted) {
+            poisoned = true;
+            break;
+        }
+    }
+    stats.poisoned += poisoned as usize;
+    if k4 == m {
+        stats.full += 1;
+    } else {
+        stats.partial += 1;
+    }
+    stats.k4_hist[k4] += 1;
+}
+
+/// Adversarial [`gcplus_recovery`]: symbolic corruption tracking, audit at
+/// the decode point, and the extended [`RecoveryStats`] integrity tallies.
+/// The malicious set is sampled per trial from the [`ADVERSARY_STREAM`]
+/// substream; trials with no malicious client run the plain trial body, so
+/// a fraction-0 spec produces byte-identical recovery tallies.
+#[allow(clippy::too_many_arguments)]
+pub fn gcplus_recovery_adv(
+    net: &Network,
+    ch: &dyn ChannelModel,
+    spec: &AdversarySpec,
+    m: usize,
+    s: usize,
+    mode: RecoveryMode,
+    trials: usize,
+    mc: &MonteCarlo,
+) -> RecoveryStats {
+    let mut stats: RecoveryStats = mc.run_scratch(
+        trials,
+        || TrialScratchAdv {
+            base: TrialScratch::new(ch, m),
+            adv: AdversaryModel::new(spec.clone()),
+            coeffs: crate::linalg::Matrix::zeros(0, m),
+            corrupted: Vec::new(),
+        },
+        |t, rng, acc: &mut RecoveryStats, scratch| {
+            scratch.base.ch.reset(net, mc.substream_seed(CHANNEL_STREAM, t));
+            scratch.adv.reset(m, mc.substream_seed(ADVERSARY_STREAM, t));
+            recovery_trial_adv(net, m, s, mode, spec.detect, rng, acc, scratch);
+        },
+    );
+    if stats.k4_hist.len() < m + 1 {
+        stats.k4_hist.resize(m + 1, 0);
+    }
+    stats
+}
+
+/// Adversarial [`fr_recovery`]: the audit is the per-group plurality vote
+/// ([`AdversaryModel::fr_attempt_verdicts`]), and the union across repeats
+/// keeps the best verdict per group under detection (first covered copy
+/// without). Still O(M·(s+1)) per attempt.
+pub fn fr_recovery_adv(
+    net: &Network,
+    ch: &dyn ChannelModel,
+    code: &FrCode,
+    spec: &AdversarySpec,
+    mode: RecoveryMode,
+    trials: usize,
+    mc: &MonteCarlo,
+) -> RecoveryStats {
+    let sup = code.sparse_support();
+    let m = code.m;
+    let detect = spec.detect;
+    let mut stats: RecoveryStats = mc.run_scratch(
+        trials,
+        || {
+            (
+                FrTrialScratch::new(ch, code),
+                AdversaryModel::new(spec.clone()),
+                Vec::<GroupVerdict>::new(),
+                Vec::<GroupVerdict>::new(),
+            )
+        },
+        |t, rng, acc: &mut RecoveryStats, (scratch, adv, verdicts, accv)| {
+            scratch.ch.reset_sparse(&sup, net, mc.substream_seed(CHANNEL_STREAM, t));
+            adv.reset(m, mc.substream_seed(ADVERSARY_STREAM, t));
+            if !adv.any() {
+                fr_recovery_trial(net, code, mode, rng, acc, scratch);
+                return;
+            }
+            if acc.k4_hist.len() < m + 1 {
+                acc.k4_hist.resize(m + 1, 0);
+            }
+            let (tr, max_blocks) = match mode {
+                RecoveryMode::FixedTr(tr) => (tr, 1),
+                RecoveryMode::UntilDecode { tr, max_blocks } => (tr, max_blocks),
+            };
+            acc.trials += 1;
+            accv.clear();
+            accv.resize(code.groups(), GroupVerdict::Uncovered);
+            let mut active = false;
+            let mut alarmed = false;
+            let mut standard = false;
+            'blocks: for _ in 0..max_blocks {
+                for _ in 0..tr {
+                    scratch.ch.sample_sparse_into(&sup, net, rng, &mut scratch.real);
+                    acc.attempts += 1;
+                    let audit = adv.fr_attempt_verdicts(code, &scratch.real, verdicts);
+                    active |= audit.active;
+                    alarmed |= audit.alarms > 0;
+                    acc.excised += audit.excised;
+                    acc.false_excised += audit.false_excised;
+                    if verdicts.iter().all(|v| v.covered()) {
+                        standard = true;
+                        accv.copy_from_slice(verdicts);
+                        break 'blocks;
+                    }
+                    for (a, &v) in accv.iter_mut().zip(verdicts.iter()) {
+                        if detect {
+                            *a = (*a).max(v);
+                        } else if !a.covered() && v != GroupVerdict::Uncovered {
+                            *a = v;
+                        }
+                    }
+                }
+                if accv.iter().any(|v| v.covered()) {
+                    break 'blocks;
+                }
+                if matches!(mode, RecoveryMode::FixedTr(_)) {
+                    break 'blocks;
+                }
+            }
+            acc.corrupted += active as usize;
+            acc.detected += alarmed as usize;
+            acc.poisoned += accv.iter().any(|&v| v == GroupVerdict::Poisoned) as usize;
+            if standard {
+                acc.standard += 1;
+                acc.k4_hist[m] += 1;
+                return;
+            }
+            let k4 = accv.iter().filter(|v| v.covered()).count() * (code.s + 1);
+            if k4 == m {
+                acc.full += 1;
+            } else if k4 > 0 {
+                acc.partial += 1;
+            } else {
+                acc.none += 1;
+            }
+            acc.k4_hist[k4] += 1;
+        },
+    );
+    if stats.k4_hist.len() < m + 1 {
+        stats.k4_hist.resize(m + 1, 0);
+    }
+    stats
+}
+
+/// Adversarial [`estimate_outage_fr`]: single-attempt FR decode classified
+/// on the 2×2 split by the per-group plurality vote. Outage iff some group
+/// ends uncovered (including groups the vote excised entirely); poisoned
+/// iff any accepted group value embeds corrupted data.
+pub fn estimate_outage_fr_adv(
+    net: &Network,
+    code: &FrCode,
+    ch: &dyn ChannelModel,
+    spec: &AdversarySpec,
+    trials: usize,
+    mc: &MonteCarlo,
+) -> OutageSplit {
+    let sup = code.sparse_support();
+    let m = code.m;
+    mc.run_scratch(
+        trials,
+        || {
+            (
+                FrTrialScratch::new(ch, code),
+                AdversaryModel::new(spec.clone()),
+                Vec::<GroupVerdict>::new(),
+            )
+        },
+        |t, rng, acc: &mut OutageSplit, (s, adv, verdicts)| {
+            s.ch.reset_sparse(&sup, net, mc.substream_seed(CHANNEL_STREAM, t));
+            adv.reset(m, mc.substream_seed(ADVERSARY_STREAM, t));
+            s.ch.sample_sparse_into(&sup, net, rng, &mut s.real);
+            acc.trials += 1;
+            if !adv.any() {
+                code.covered_into(&s.real, &mut s.covered);
+                if FrCode::all_covered(&s.covered) {
+                    acc.decoded_clean += 1;
+                } else {
+                    acc.outage += 1;
+                }
+                return;
+            }
+            adv.fr_attempt_verdicts(code, &s.real, verdicts);
+            if verdicts.iter().any(|v| !v.covered()) {
+                acc.outage += 1;
+            } else if verdicts.iter().any(|&v| v == GroupVerdict::Poisoned) {
+                acc.decoded_poisoned += 1;
+            } else {
+                acc.decoded_clean += 1;
+            }
+        },
+    )
 }
 
 #[cfg(test)]
@@ -604,5 +1110,140 @@ mod tests {
         let mode = RecoveryMode::UntilDecode { tr: 2, max_blocks: 50 };
         let st = fr_recovery(&net, &Iid, &code, mode, 300, &MonteCarlo::new(5));
         assert!(st.p_none() < 0.05, "none = {:.3}", st.p_none());
+    }
+
+    // ── adversarial estimators ──────────────────────────────────────────
+
+    use crate::scenario::Attack;
+
+    #[test]
+    fn adv_fraction_zero_matches_plain_estimators_exactly() {
+        let spec = AdversarySpec::fraction(Attack::SignFlip, 0.0);
+        let net = Network::fig6_setting(2, 10);
+        let mode = RecoveryMode::UntilDecode { tr: 2, max_blocks: 20 };
+
+        let plain = gcplus_recovery(&net, &Iid, 10, 7, mode, 400, &MonteCarlo::new(21));
+        let adv = gcplus_recovery_adv(&net, &Iid, &spec, 10, 7, mode, 400, &MonteCarlo::new(21));
+        assert_eq!(plain, adv);
+        assert_eq!(adv.corrupted + adv.detected + adv.poisoned + adv.excised, 0);
+
+        let code = GcCode::generate(10, 7, &mut Rng::new(3));
+        let po = estimate_outage(&net, &code, &Iid, 3_000, &MonteCarlo::new(9));
+        let split = estimate_outage_adv(&net, &code, &Iid, &spec, 3_000, &MonteCarlo::new(9));
+        assert_eq!(split.trials, 3_000);
+        assert_eq!(split.decoded_poisoned, 0);
+        assert_eq!(po.to_bits(), split.p_outage().to_bits());
+
+        let fnet = Network::homogeneous(12, 0.4, 0.35);
+        let fcode = FrCode::new(12, 2).unwrap();
+        let fplain = fr_recovery(&fnet, &Iid, &fcode, mode, 400, &MonteCarlo::new(31));
+        let fadv = fr_recovery_adv(&fnet, &Iid, &fcode, &spec, mode, 400, &MonteCarlo::new(31));
+        assert_eq!(fplain, fadv);
+        let fr_po = estimate_outage_fr(&fnet, &fcode, &Iid, 3_000, &MonteCarlo::new(17));
+        let fr_split =
+            estimate_outage_fr_adv(&fnet, &fcode, &Iid, &spec, 3_000, &MonteCarlo::new(17));
+        assert_eq!(fr_po.to_bits(), fr_split.p_outage().to_bits());
+    }
+
+    #[test]
+    fn adv_recovery_partition_detection_and_excision_invariants() {
+        let spec = AdversarySpec::fraction(Attack::SignFlip, 0.3);
+        let net = Network::fig6_setting(2, 10);
+        let mode = RecoveryMode::UntilDecode { tr: 2, max_blocks: 20 };
+        let st = gcplus_recovery_adv(&net, &Iid, &spec, 10, 7, mode, 400, &MonteCarlo::new(55));
+        assert_eq!(st.trials, 400);
+        assert_eq!(st.standard + st.full + st.partial + st.none, st.trials);
+        assert_eq!(st.k4_hist.iter().sum::<usize>(), st.trials);
+        // with 30% flippers corruption reaches the PS often and the
+        // repeat-redundancy audit must catch a healthy share of it
+        assert!(st.corrupted > 100, "corrupted = {}", st.corrupted);
+        assert!(st.detected > 0, "audit never fired");
+        assert!(st.detected <= st.corrupted, "alarms on honest trials");
+        assert!(st.excised >= st.detected, "each alarm excises >= 1 row");
+        assert!(st.poisoned <= st.corrupted);
+        assert!(st.p_detected() > 0.5, "detection rate {:.3}", st.p_detected());
+    }
+
+    #[test]
+    fn adv_detection_beats_nodetect_on_poisoning() {
+        let net = Network::fig6_setting(2, 10);
+        let mode = RecoveryMode::UntilDecode { tr: 2, max_blocks: 20 };
+        let on = AdversarySpec::fraction(Attack::SignFlip, 0.3);
+        let off = AdversarySpec { detect: false, ..on.clone() };
+        let with = gcplus_recovery_adv(&net, &Iid, &on, 10, 7, mode, 400, &MonteCarlo::new(77));
+        let without = gcplus_recovery_adv(&net, &Iid, &off, 10, 7, mode, 400, &MonteCarlo::new(77));
+        // same seeds, same draws: the corruption exposure is identical
+        assert_eq!(with.corrupted, without.corrupted);
+        assert_eq!(without.detected, 0);
+        assert_eq!(without.excised, 0);
+        assert!(without.poisoned > 0, "undetected flips must poison decodes");
+        assert!(
+            with.poisoned < without.poisoned,
+            "detection should cut poisoning: {} vs {}",
+            with.poisoned,
+            without.poisoned
+        );
+    }
+
+    #[test]
+    fn adv_fr_plurality_vote_detects_and_stays_group_aligned() {
+        let spec = AdversarySpec::fraction(Attack::SignFlip, 0.3);
+        let net = Network::homogeneous(12, 0.3, 0.25);
+        let code = FrCode::new(12, 2).unwrap();
+        let mode = RecoveryMode::UntilDecode { tr: 2, max_blocks: 20 };
+        let st = fr_recovery_adv(&net, &Iid, &code, &spec, mode, 400, &MonteCarlo::new(13));
+        assert_eq!(st.trials, 400);
+        assert_eq!(st.standard + st.full + st.partial + st.none, st.trials);
+        assert_eq!(st.k4_hist.iter().sum::<usize>(), st.trials);
+        assert!(st.corrupted > 100, "corrupted = {}", st.corrupted);
+        assert!(st.detected > 0, "plurality vote never fired");
+        assert!(st.detected <= st.corrupted);
+        for (k, &n) in st.k4_hist.iter().enumerate() {
+            if n > 0 && k != code.m {
+                assert_eq!(k % (code.s + 1), 0, "k4 = {k} not group-aligned");
+            }
+        }
+    }
+
+    #[test]
+    fn adv_outage_split_partitions_and_poisons() {
+        // near-perfect links: decodes always happen, so a 30% flipper
+        // fraction must convert a visible share into decoded-but-poisoned
+        let net = Network::homogeneous(10, 0.02, 0.02);
+        let code = GcCode::generate(10, 3, &mut Rng::new(7));
+        let spec = AdversarySpec::fraction(Attack::SignFlip, 0.3);
+        let split = estimate_outage_adv(&net, &code, &Iid, &spec, 2_000, &MonteCarlo::new(23));
+        assert_eq!(
+            split.decoded_clean + split.decoded_poisoned + split.outage,
+            split.trials
+        );
+        assert!(split.decoded_poisoned > 200, "poisoned = {}", split.decoded_poisoned);
+        assert!(split.p_poisoned() > split.p_outage());
+
+        let fcode = FrCode::new(12, 2).unwrap();
+        let fnet = Network::homogeneous(12, 0.02, 0.02);
+        let fsplit =
+            estimate_outage_fr_adv(&fnet, &fcode, &Iid, &spec, 2_000, &MonteCarlo::new(29));
+        assert_eq!(
+            fsplit.decoded_clean + fsplit.decoded_poisoned + fsplit.outage,
+            fsplit.trials
+        );
+        // the single-attempt FR vote both excises (→ outage) and, when a
+        // group is unanimously malicious, decodes poisoned
+        assert!(fsplit.decoded_poisoned + fsplit.outage > 0);
+    }
+
+    #[test]
+    fn adv_recovery_thread_invariant() {
+        let spec = AdversarySpec::fraction(Attack::Replace { scale: 5.0 }, 0.25);
+        let net = Network::fig6_setting(2, 10);
+        let mode = RecoveryMode::UntilDecode { tr: 2, max_blocks: 20 };
+        let mc1 = MonteCarlo::new(0xBEEF).with_threads(1);
+        let want = gcplus_recovery_adv(&net, &Iid, &spec, 10, 7, mode, 600, &mc1);
+        for threads in [2usize, 8] {
+            let mc = MonteCarlo::new(0xBEEF).with_threads(threads);
+            let got = gcplus_recovery_adv(&net, &Iid, &spec, 10, 7, mode, 600, &mc);
+            assert_eq!(want, got, "threads={threads}");
+        }
     }
 }

@@ -1,0 +1,806 @@
+//! Byzantine adversary models: malicious clients that corrupt the coded
+//! messages they emit, sampled per trial alongside the channel state.
+//!
+//! The channel engine (PR 4) models links that fail *honestly*; this module
+//! models clients that lie. An [`AdversarySpec`] declares who is malicious
+//! (a per-trial fraction or a fixed set), what they send
+//! ([`Attack`]: sign-flip, additive noise, arbitrary replacement, or a
+//! colluding-consistent shared vector), and where the corruption enters
+//! ([`Surface`]): on the **uplink** (the client tampers with the coded
+//! partial sum it reports to the PS) or on the **c2c** sharing phase (the
+//! client consistently uses a fake local gradient in everything it emits —
+//! the data-poisoning case).
+//!
+//! Determinism contract: all adversarial randomness (who is malicious,
+//! noise/replacement draws) lives on the private [`ADVERSARY_STREAM`]
+//! substream, never on the trial's emission stream — so a configured
+//! adversary with an empty malicious set consumes **zero** emission draws
+//! and every outcome is byte-identical to the non-adversarial path
+//! (asserted in `tests/adversary.rs`).
+//!
+//! Detection guarantees (see the audit layer in [`crate::gc::byzantine`]):
+//! uplink tampering violates the linear relations among redundant coded
+//! rows and is caught by parity checks whenever the redundancy covers the
+//! corrupted row; c2c-consistent corruption produces a stack that is fully
+//! consistent with the *substituted* gradients and is information-
+//! theoretically invisible to coding checks — the documented blind spot.
+
+use crate::gc::FrCode;
+use crate::network::SparseRealization;
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+/// Substream tag for adversarial state (who is malicious + corruption
+/// draws), disjoint from the trial emission stream and from
+/// [`crate::scenario::CHANNEL_STREAM`].
+pub const ADVERSARY_STREAM: u64 = 0xADE5_A21E;
+
+/// What a malicious client sends instead of its honest coded message.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Attack {
+    /// Negate the honest message (the classic model-poisoning flip).
+    SignFlip,
+    /// Honest message plus `sigma`-scaled Gaussian noise.
+    Noise { sigma: f64 },
+    /// Replace with an arbitrary `scale`-Gaussian vector (fresh per trial).
+    Replace { scale: f64 },
+    /// All malicious clients send one shared `scale`-Gaussian vector
+    /// (colluding-consistent: copies agree with each other, defeating
+    /// naive majority votes among the colluders).
+    Collude { scale: f64 },
+}
+
+impl Attack {
+    /// Stable CLI/JSON identifier.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Attack::SignFlip => "sign_flip",
+            Attack::Noise { .. } => "noise",
+            Attack::Replace { .. } => "replace",
+            Attack::Collude { .. } => "collude",
+        }
+    }
+}
+
+/// Where the corruption enters the round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Surface {
+    /// The client tampers with the coded partial sum it uplinks; the
+    /// shares it sent to neighbors were honest. Detectable via redundancy.
+    #[default]
+    Uplink,
+    /// The client uses a fake local gradient consistently in everything it
+    /// emits (c2c shares and its own sum) — data poisoning. Invisible to
+    /// parity checks; recovered values for that client are silently wrong.
+    C2c,
+}
+
+impl Surface {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Surface::Uplink => "uplink",
+            Surface::C2c => "c2c",
+        }
+    }
+}
+
+/// Who is malicious.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Selection {
+    /// Each client is independently malicious w.p. `fraction` per trial
+    /// (drawn on the adversary substream).
+    Fraction(f64),
+    /// A fixed set of client indices (deterministic, no draws).
+    Fixed(Vec<usize>),
+}
+
+/// Declarative adversary configuration, JSON-round-trippable like
+/// [`crate::scenario::ChannelSpec`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdversarySpec {
+    pub attack: Attack,
+    pub selection: Selection,
+    pub surface: Surface,
+    /// Run the detection/excision audit in the decode path.
+    pub detect: bool,
+}
+
+impl AdversarySpec {
+    /// Convenience constructor: fraction-sampled uplink attack with
+    /// detection on.
+    pub fn fraction(attack: Attack, fraction: f64) -> AdversarySpec {
+        AdversarySpec {
+            attack,
+            selection: Selection::Fraction(fraction),
+            surface: Surface::Uplink,
+            detect: true,
+        }
+    }
+
+    /// One-line human summary for table comments.
+    pub fn summary(&self) -> String {
+        let who = match &self.selection {
+            Selection::Fraction(f) => format!("frac={f}"),
+            Selection::Fixed(set) => format!("fixed={set:?}"),
+        };
+        format!(
+            "{}({who}, {}{})",
+            self.attack.name(),
+            self.surface.name(),
+            if self.detect { ", detect" } else { "" }
+        )
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        match self.attack {
+            Attack::Noise { sigma } => {
+                anyhow::ensure!(
+                    sigma.is_finite() && sigma > 0.0,
+                    "noise sigma must be > 0, got {sigma}"
+                )
+            }
+            Attack::Replace { scale } | Attack::Collude { scale } => {
+                anyhow::ensure!(
+                    scale.is_finite() && scale > 0.0,
+                    "attack scale must be > 0, got {scale}"
+                )
+            }
+            Attack::SignFlip => {}
+        }
+        match &self.selection {
+            Selection::Fraction(f) => {
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(f),
+                    "adversary fraction must be in [0, 1], got {f}"
+                )
+            }
+            Selection::Fixed(_) => {} // indices checked against M at reset
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![("attack", json::s(self.attack.name()))];
+        match self.attack {
+            Attack::Noise { sigma } => fields.push(("sigma", json::num(sigma))),
+            Attack::Replace { scale } | Attack::Collude { scale } => {
+                fields.push(("scale", json::num(scale)))
+            }
+            Attack::SignFlip => {}
+        }
+        match &self.selection {
+            Selection::Fraction(f) => fields.push(("fraction", json::num(*f))),
+            Selection::Fixed(set) => fields.push((
+                "clients",
+                Json::Arr(set.iter().map(|&i| json::num(i as f64)).collect()),
+            )),
+        }
+        // defaults are omitted so minimal specs stay minimal
+        if self.surface != Surface::Uplink {
+            fields.push(("surface", json::s(self.surface.name())));
+        }
+        if !self.detect {
+            fields.push(("detect", Json::Bool(false)));
+        }
+        json::obj(fields)
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<AdversarySpec> {
+        let kind = v
+            .req("attack")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("adversary attack must be a string"))?;
+        let num = |key: &str| -> anyhow::Result<f64> {
+            v.req(key)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("adversary field {key:?} must be a number"))
+        };
+        let attack = match kind {
+            "sign_flip" => Attack::SignFlip,
+            "noise" => Attack::Noise { sigma: num("sigma")? },
+            "replace" => Attack::Replace { scale: num("scale")? },
+            "collude" => Attack::Collude { scale: num("scale")? },
+            other => anyhow::bail!(
+                "unknown attack {other:?} (sign_flip|noise|replace|collude)"
+            ),
+        };
+        let selection = match (v.get("fraction"), v.get("clients")) {
+            (Some(f), None) => Selection::Fraction(
+                f.as_f64().ok_or_else(|| anyhow::anyhow!("adversary fraction must be a number"))?,
+            ),
+            (None, Some(arr)) => {
+                let arr = arr
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("adversary clients must be an array"))?;
+                let mut set = Vec::with_capacity(arr.len());
+                for x in arr {
+                    set.push(x.as_usize().ok_or_else(|| {
+                        anyhow::anyhow!("adversary client indices must be integers")
+                    })?);
+                }
+                Selection::Fixed(set)
+            }
+            _ => anyhow::bail!("adversary needs exactly one of \"fraction\" or \"clients\""),
+        };
+        let surface = match v.get("surface") {
+            None => Surface::Uplink,
+            Some(s) => match s.as_str() {
+                Some("uplink") => Surface::Uplink,
+                Some("c2c") => Surface::C2c,
+                _ => anyhow::bail!("adversary surface must be \"uplink\" or \"c2c\""),
+            },
+        };
+        let detect = match v.get("detect") {
+            None => true,
+            Some(b) => b
+                .as_bool()
+                .ok_or_else(|| anyhow::anyhow!("adversary detect must be a bool"))?,
+        };
+        let spec = AdversarySpec { attack, selection, surface, detect };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse the compact CLI form
+    /// `<attack>:<fraction>[:<param>][:c2c][:nodetect]`, e.g.
+    /// `sign_flip:0.2`, `noise:0.1:5.0`, `collude:0.3:1.0:c2c:nodetect`.
+    pub fn parse_cli(text: &str) -> anyhow::Result<AdversarySpec> {
+        let mut it = text.split(':');
+        let kind = it.next().unwrap_or("");
+        let frac: f64 = it
+            .next()
+            .ok_or_else(|| {
+                anyhow::anyhow!("adversary spec needs <attack>:<fraction>, got {text:?}")
+            })?
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad adversary fraction in {text:?}"))?;
+        let mut param: Option<f64> = None;
+        let mut surface = Surface::Uplink;
+        let mut detect = true;
+        for tok in it {
+            match tok {
+                "c2c" => surface = Surface::C2c,
+                "uplink" => surface = Surface::Uplink,
+                "nodetect" => detect = false,
+                _ => match tok.parse::<f64>() {
+                    Ok(x) => param = Some(x),
+                    Err(_) => anyhow::bail!("bad adversary spec token {tok:?} in {text:?}"),
+                },
+            }
+        }
+        let attack = match kind {
+            "sign_flip" => Attack::SignFlip,
+            "noise" => Attack::Noise { sigma: param.unwrap_or(1.0) },
+            "replace" => Attack::Replace { scale: param.unwrap_or(1.0) },
+            "collude" => Attack::Collude { scale: param.unwrap_or(1.0) },
+            other => anyhow::bail!(
+                "unknown attack {other:?} (sign_flip|noise|replace|collude)"
+            ),
+        };
+        let spec = AdversarySpec { attack, selection: Selection::Fraction(frac), surface, detect };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// Stateful per-trial adversary: holds the sampled malicious set and the
+/// private corruption RNG. Reset once per trial (episode) with the trial's
+/// [`ADVERSARY_STREAM`] substream seed; the malicious set then persists
+/// across the trial's rounds/attempts (a compromised client stays
+/// compromised, like a channel state).
+pub struct AdversaryModel {
+    pub spec: AdversarySpec,
+    rng: Rng,
+    malicious: Vec<bool>,
+    count: usize,
+    /// Shared collusion vector of this trial, materialized lazily per
+    /// payload width.
+    collude: Vec<f64>,
+}
+
+impl AdversaryModel {
+    pub fn new(spec: AdversarySpec) -> AdversaryModel {
+        AdversaryModel {
+            spec,
+            rng: Rng::new(0),
+            malicious: Vec::new(),
+            count: 0,
+            collude: Vec::new(),
+        }
+    }
+
+    /// Re-sample the malicious set for a fresh trial over `m` clients.
+    /// Fraction selections draw one Bernoulli per client from the private
+    /// substream; fixed sets draw nothing.
+    pub fn reset(&mut self, m: usize, seed: u64) {
+        self.rng = Rng::new(seed);
+        self.malicious.clear();
+        self.malicious.resize(m, false);
+        self.count = 0;
+        self.collude.clear();
+        match &self.spec.selection {
+            Selection::Fraction(f) => {
+                let f = *f;
+                for flag in self.malicious.iter_mut() {
+                    if f > 0.0 && self.rng.bernoulli(f) {
+                        *flag = true;
+                        self.count += 1;
+                    }
+                }
+            }
+            Selection::Fixed(set) => {
+                for &i in set {
+                    if i < m && !self.malicious[i] {
+                        self.malicious[i] = true;
+                        self.count += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    #[inline]
+    pub fn is_malicious(&self, client: usize) -> bool {
+        self.malicious.get(client).copied().unwrap_or(false)
+    }
+
+    /// Whether this trial has any malicious client at all. `false` means
+    /// the trial must be byte-identical to the non-adversarial path.
+    #[inline]
+    pub fn any(&self) -> bool {
+        self.count > 0
+    }
+
+    pub fn malicious_count(&self) -> usize {
+        self.count
+    }
+
+    fn collude_row(&mut self, d: usize, scale: f64) -> &[f64] {
+        if self.collude.len() != d {
+            self.collude.clear();
+            for _ in 0..d {
+                self.collude.push(scale * self.rng.normal());
+            }
+        }
+        &self.collude
+    }
+
+    /// Corrupt one payload-space row in place (the message a malicious
+    /// client emits instead of the honest `row`). Draws come from the
+    /// private substream only.
+    pub fn corrupt_row(&mut self, row: &mut [f64]) {
+        match self.spec.attack {
+            Attack::SignFlip => {
+                for x in row.iter_mut() {
+                    *x = -*x;
+                }
+            }
+            Attack::Noise { sigma } => {
+                for x in row.iter_mut() {
+                    *x += sigma * self.rng.normal();
+                }
+            }
+            Attack::Replace { scale } => {
+                for x in row.iter_mut() {
+                    *x = scale * self.rng.normal();
+                }
+            }
+            Attack::Collude { scale } => {
+                let d = row.len();
+                let v = self.collude_row(d, scale);
+                row.copy_from_slice(v);
+            }
+        }
+    }
+
+    /// f32 variant for the trainer's payload rows.
+    pub fn corrupt_row_f32(&mut self, row: &mut [f32]) {
+        match self.spec.attack {
+            Attack::SignFlip => {
+                for x in row.iter_mut() {
+                    *x = -*x;
+                }
+            }
+            Attack::Noise { sigma } => {
+                for x in row.iter_mut() {
+                    *x += (sigma * self.rng.normal()) as f32;
+                }
+            }
+            Attack::Replace { scale } => {
+                for x in row.iter_mut() {
+                    *x = (scale * self.rng.normal()) as f32;
+                }
+            }
+            Attack::Collude { scale } => {
+                let d = row.len();
+                let v = self.collude_row(d, scale);
+                for (x, &c) in row.iter_mut().zip(v) {
+                    *x = c as f32;
+                }
+            }
+        }
+    }
+
+    /// Whether two malicious clients' corrupted messages agree with each
+    /// other (value-equality class structure of the FR plurality vote).
+    fn consistent_class(&self, client: usize) -> FrClass {
+        match self.spec.attack {
+            // all sign-flippers of one group negate the same group sum
+            Attack::SignFlip => FrClass::SignFlip,
+            // colluders share one global vector
+            Attack::Collude { .. } => FrClass::Collude,
+            // noise / replacement draws are a.s. pairwise distinct
+            Attack::Noise { .. } | Attack::Replace { .. } => FrClass::Unique(client),
+        }
+    }
+}
+
+/// Value-equality class of one uplinked FR group sum.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum FrClass {
+    Honest,
+    SignFlip,
+    Collude,
+    Unique(usize),
+}
+
+/// Integrity verdict of one FR group after the audit. Ordered worst → best
+/// so a union across GC⁺ repeats can simply take the max (with detection,
+/// a cleanly validated copy from any attempt wins).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum GroupVerdict {
+    /// No member delivered a complete sum.
+    #[default]
+    Uncovered,
+    /// The plurality vote tied — the PS excises the whole group.
+    Excised,
+    /// The accepted value is corrupted (decoded-but-poisoned).
+    Poisoned,
+    /// The accepted value is the honest group sum.
+    Clean,
+}
+
+impl GroupVerdict {
+    /// Whether the group contributes a decoded value (clean or not).
+    pub fn covered(&self) -> bool {
+        matches!(self, GroupVerdict::Poisoned | GroupVerdict::Clean)
+    }
+}
+
+/// Tallies of one FR attempt's audit.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FrAttemptAudit {
+    /// Groups where corrupted data reached the PS this attempt.
+    pub active: bool,
+    /// Groups whose vote raised an alarm (≥ 2 value classes, or a tie).
+    pub alarms: usize,
+    /// Member copies excised by the vote (losing classes + ties).
+    pub excised: usize,
+    /// Honest member copies among the excised (the false-alarm cost).
+    pub false_excised: usize,
+}
+
+impl AdversaryModel {
+    /// Per-group integrity audit of one FR attempt (payload-free — the
+    /// class structure is fully determined by who is malicious and the
+    /// attack's consistency pattern).
+    ///
+    /// Uplink surface: the delivered-complete members of a group each
+    /// uplink a copy of the group sum; malicious members tamper with
+    /// theirs. With `detect`, the PS runs a plurality vote over the value-
+    /// equality classes — the strict winner is accepted (honest sums from
+    /// distinct members agree; sign-flipped copies agree with each other;
+    /// noise/replacement copies are singletons; colluders share one
+    /// vector), a tie excises the group. Without `detect`, the PS takes
+    /// the first delivered copy.
+    ///
+    /// C2c surface: a malicious member's fake gradient enters *every*
+    /// complete member's sum identically, so all copies agree — a single
+    /// (corrupted) class the vote cannot flag. The group decodes poisoned:
+    /// the documented blind spot of redundancy-based detection.
+    pub fn fr_attempt_verdicts(
+        &self,
+        code: &FrCode,
+        real: &SparseRealization,
+        verdicts: &mut Vec<GroupVerdict>,
+    ) -> FrAttemptAudit {
+        verdicts.clear();
+        let mut audit = FrAttemptAudit::default();
+        for g in 0..code.groups() {
+            let members = code.members(g);
+            let group_has_malicious = members.clone().any(|r| self.is_malicious(r));
+            let mut delivered: usize = 0;
+            let mut first: Option<usize> = None;
+            // class census of the delivered copies
+            let mut honest = 0usize;
+            let mut flip = 0usize;
+            let mut collude = 0usize;
+            let mut unique = 0usize;
+            for r in members {
+                if !real.row_delivered_complete(r) {
+                    continue;
+                }
+                delivered += 1;
+                if first.is_none() {
+                    first = Some(r);
+                }
+                match self.surface_class(r) {
+                    FrClass::Honest => honest += 1,
+                    FrClass::SignFlip => flip += 1,
+                    FrClass::Collude => collude += 1,
+                    FrClass::Unique(_) => unique += 1,
+                }
+            }
+            if delivered == 0 {
+                verdicts.push(GroupVerdict::Uncovered);
+                continue;
+            }
+            if self.spec.surface == Surface::C2c {
+                // consistent substitution: every copy equals the same
+                // (possibly corrupted) sum — a single class, no alarm
+                let v = if group_has_malicious {
+                    GroupVerdict::Poisoned
+                } else {
+                    GroupVerdict::Clean
+                };
+                audit.active |= group_has_malicious;
+                verdicts.push(v);
+                continue;
+            }
+            let corrupted_copies = delivered - honest;
+            audit.active |= corrupted_copies > 0;
+            if !self.spec.detect {
+                let v = if self.is_malicious(first.expect("delivered > 0")) {
+                    GroupVerdict::Poisoned
+                } else {
+                    GroupVerdict::Clean
+                };
+                verdicts.push(v);
+                continue;
+            }
+            // plurality vote over the value classes: honest (one class),
+            // sign-flip (one class), collude (one class), uniques (1 each)
+            let classes =
+                (honest > 0) as usize + (flip > 0) as usize + (collude > 0) as usize + unique;
+            if classes <= 1 {
+                // unanimous — no alarm; poisoned iff the one class is bad
+                let v = if honest > 0 { GroupVerdict::Clean } else { GroupVerdict::Poisoned };
+                verdicts.push(v);
+                continue;
+            }
+            audit.alarms += 1;
+            let unique_best = if unique > 0 { 1 } else { 0 };
+            let best = honest.max(flip).max(collude).max(unique_best);
+            let winners = (honest == best) as usize
+                + (flip == best) as usize
+                + (collude == best) as usize
+                + if unique_best == best { unique } else { 0 };
+            if winners != 1 {
+                // tie: drop the whole group
+                audit.excised += delivered;
+                audit.false_excised += honest;
+                verdicts.push(GroupVerdict::Excised);
+                continue;
+            }
+            let honest_wins = honest == best;
+            audit.excised += delivered - best;
+            if !honest_wins {
+                audit.false_excised += honest;
+            }
+            verdicts.push(if honest_wins { GroupVerdict::Clean } else { GroupVerdict::Poisoned });
+        }
+        audit
+    }
+
+    fn surface_class(&self, client: usize) -> FrClass {
+        if self.is_malicious(client) {
+            self.consistent_class(client)
+        } else {
+            FrClass::Honest
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::SparseSupport;
+
+    fn spec(attack: Attack) -> AdversarySpec {
+        AdversarySpec::fraction(attack, 0.5)
+    }
+
+    #[test]
+    fn json_roundtrip_all_attacks() {
+        for s in [
+            spec(Attack::SignFlip),
+            spec(Attack::Noise { sigma: 2.5 }),
+            spec(Attack::Replace { scale: 3.0 }),
+            AdversarySpec {
+                attack: Attack::Collude { scale: 1.5 },
+                selection: Selection::Fixed(vec![0, 3, 7]),
+                surface: Surface::C2c,
+                detect: false,
+            },
+        ] {
+            let text = s.to_json().serialize();
+            let back = AdversarySpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, s, "roundtrip failed for {text}");
+        }
+    }
+
+    #[test]
+    fn json_defaults_are_omitted() {
+        let text = spec(Attack::SignFlip).to_json().serialize();
+        assert!(!text.contains("surface"), "{text}");
+        assert!(!text.contains("detect"), "{text}");
+    }
+
+    #[test]
+    fn json_rejects_bad_specs() {
+        for bad in [
+            r#"{"attack": "sign_flip"}"#,                      // no selection
+            r#"{"attack": "sign_flip", "fraction": 1.5}"#,     // fraction > 1
+            r#"{"attack": "noise", "fraction": 0.1}"#,         // missing sigma
+            r#"{"attack": "nuke", "fraction": 0.1}"#,          // unknown attack
+            r#"{"attack": "sign_flip", "fraction": 0.1, "surface": "psychic"}"#,
+        ] {
+            let v = Json::parse(bad).unwrap();
+            assert!(AdversarySpec::from_json(&v).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn cli_parse_forms() {
+        let s = AdversarySpec::parse_cli("sign_flip:0.2").unwrap();
+        assert_eq!(s.attack, Attack::SignFlip);
+        assert_eq!(s.selection, Selection::Fraction(0.2));
+        assert_eq!(s.surface, Surface::Uplink);
+        assert!(s.detect);
+        let s = AdversarySpec::parse_cli("noise:0.1:5.0").unwrap();
+        assert_eq!(s.attack, Attack::Noise { sigma: 5.0 });
+        let s = AdversarySpec::parse_cli("collude:0.3:2.0:c2c:nodetect").unwrap();
+        assert_eq!(s.attack, Attack::Collude { scale: 2.0 });
+        assert_eq!(s.surface, Surface::C2c);
+        assert!(!s.detect);
+        assert!(AdversarySpec::parse_cli("sign_flip").is_err());
+        assert!(AdversarySpec::parse_cli("sign_flip:2.0").is_err());
+        assert!(AdversarySpec::parse_cli("sign_flip:0.1:what").is_err());
+    }
+
+    #[test]
+    fn fraction_zero_samples_nobody_and_fixed_sets_are_exact() {
+        let mut adv = AdversaryModel::new(spec(Attack::SignFlip));
+        adv.spec.selection = Selection::Fraction(0.0);
+        for seed in 0..50u64 {
+            adv.reset(10, seed);
+            assert!(!adv.any());
+        }
+        adv.spec.selection = Selection::Fixed(vec![1, 4, 4, 99]);
+        adv.reset(10, 7);
+        assert_eq!(adv.malicious_count(), 2); // dup + out-of-range ignored
+        assert!(adv.is_malicious(1) && adv.is_malicious(4));
+        assert!(!adv.is_malicious(0) && !adv.is_malicious(99));
+    }
+
+    #[test]
+    fn fraction_sampling_is_seed_deterministic_and_plausible() {
+        let mut adv = AdversaryModel::new(spec(Attack::SignFlip));
+        let mut total = 0usize;
+        for seed in 0..200u64 {
+            adv.reset(10, seed);
+            total += adv.malicious_count();
+        }
+        let mean = total as f64 / 200.0;
+        assert!((mean - 5.0).abs() < 0.8, "mean malicious {mean} (expect ~5)");
+        // identical seed → identical set
+        adv.reset(10, 3);
+        let a: Vec<bool> = (0..10).map(|i| adv.is_malicious(i)).collect();
+        adv.reset(10, 3);
+        let b: Vec<bool> = (0..10).map(|i| adv.is_malicious(i)).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn corruption_ops_do_what_they_say() {
+        let mut adv = AdversaryModel::new(spec(Attack::SignFlip));
+        adv.reset(4, 1);
+        let mut row = vec![1.0, -2.0, 3.0];
+        adv.corrupt_row(&mut row);
+        assert_eq!(row, vec![-1.0, 2.0, -3.0]);
+
+        let mut adv = AdversaryModel::new(spec(Attack::Replace { scale: 2.0 }));
+        adv.reset(4, 1);
+        let mut row = vec![0.0; 16];
+        adv.corrupt_row(&mut row);
+        assert!(row.iter().any(|&x| x != 0.0));
+
+        // colluders share the trial vector; a fresh trial redraws it
+        let mut adv = AdversaryModel::new(spec(Attack::Collude { scale: 1.0 }));
+        adv.reset(4, 1);
+        let mut a = vec![1.0; 8];
+        let mut b = vec![-5.0; 8];
+        adv.corrupt_row(&mut a);
+        adv.corrupt_row(&mut b);
+        assert_eq!(a, b);
+        adv.reset(4, 2);
+        let mut c = vec![0.0; 8];
+        adv.corrupt_row(&mut c);
+        assert_ne!(a, c);
+    }
+
+    /// Hand-built FR plurality cases over one group of 3 (M=6, s=2).
+    #[test]
+    fn fr_plurality_votes() {
+        let code = FrCode::new(6, 2).unwrap();
+        let sup = code.sparse_support();
+        let all_up = SparseRealization::perfect(&sup);
+        let run = |set: Vec<usize>, attack: Attack, detect: bool| {
+            let mut adv = AdversaryModel::new(AdversarySpec {
+                attack,
+                selection: Selection::Fixed(set),
+                surface: Surface::Uplink,
+                detect,
+            });
+            adv.reset(6, 0);
+            let mut v = Vec::new();
+            let audit = adv.fr_attempt_verdicts(&code, &all_up, &mut v);
+            (v, audit)
+        };
+        // one flipper in group 0: honest wins 2–1, flipper excised
+        let (v, audit) = run(vec![0], Attack::SignFlip, true);
+        assert_eq!(v, vec![GroupVerdict::Clean, GroupVerdict::Clean]);
+        assert_eq!(audit.alarms, 1);
+        assert_eq!(audit.excised, 1);
+        assert_eq!(audit.false_excised, 0);
+        // two flippers outvote the honest member: detected but poisoned
+        let (v, audit) = run(vec![0, 1], Attack::SignFlip, true);
+        assert_eq!(v[0], GroupVerdict::Poisoned);
+        assert_eq!(audit.alarms, 1);
+        assert_eq!(audit.false_excised, 1);
+        // two *noise* attackers are singletons: honest wins 1 vs 1+1
+        // ... a three-way tie (1,1,1) excises the group
+        let (v, audit) = run(vec![0, 1], Attack::Noise { sigma: 1.0 }, true);
+        assert_eq!(v[0], GroupVerdict::Excised);
+        assert!(audit.alarms >= 1);
+        // whole group malicious and consistent: unanimous, silently poisoned
+        let (v, audit) = run(vec![0, 1, 2], Attack::SignFlip, true);
+        assert_eq!(v[0], GroupVerdict::Poisoned);
+        assert_eq!(audit.alarms, 0);
+        // without detection the first copy is taken at face value
+        let (v, _) = run(vec![0], Attack::SignFlip, false);
+        assert_eq!(v[0], GroupVerdict::Poisoned);
+        let (v, _) = run(vec![1], Attack::SignFlip, false);
+        assert_eq!(v[0], GroupVerdict::Clean);
+    }
+
+    #[test]
+    fn fr_c2c_surface_is_the_documented_blind_spot() {
+        let code = FrCode::new(6, 2).unwrap();
+        let sup = code.sparse_support();
+        let all_up = SparseRealization::perfect(&sup);
+        let mut adv = AdversaryModel::new(AdversarySpec {
+            attack: Attack::SignFlip,
+            selection: Selection::Fixed(vec![0]),
+            surface: Surface::C2c,
+            detect: true,
+        });
+        adv.reset(6, 0);
+        let mut v = Vec::new();
+        let audit = adv.fr_attempt_verdicts(&code, &all_up, &mut v);
+        // every copy of group 0's sum embeds the fake gradient identically:
+        // covered, poisoned, zero alarms
+        assert_eq!(v, vec![GroupVerdict::Poisoned, GroupVerdict::Clean]);
+        assert_eq!(audit.alarms, 0);
+        assert!(audit.active);
+    }
+
+    #[test]
+    fn verdict_union_prefers_clean() {
+        assert!(GroupVerdict::Clean > GroupVerdict::Poisoned);
+        assert!(GroupVerdict::Poisoned > GroupVerdict::Excised);
+        assert!(GroupVerdict::Excised > GroupVerdict::Uncovered);
+        assert!(GroupVerdict::Clean.covered() && GroupVerdict::Poisoned.covered());
+        assert!(!GroupVerdict::Excised.covered() && !GroupVerdict::Uncovered.covered());
+    }
+}

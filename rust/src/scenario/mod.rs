@@ -12,6 +12,10 @@
 //!   [`DeadlineStraggler`]), each with closed-form stationary statistics
 //!   for validation and a degenerate configuration that collapses
 //!   byte-identically to i.i.d.;
+//! - [`adversary`] — the Byzantine dimension: [`AdversarySpec`] /
+//!   [`AdversaryModel`] (malicious-client selection × attack strategy ×
+//!   corruption surface), sampled per trial on its own substream so a
+//!   fraction-0 adversary is byte-identical to no adversary at all;
 //! - [`registry`] — the declarative, JSON-round-trippable [`Scenario`]
 //!   spec (network × channel × decoder × schedule) and the built-in
 //!   catalog (`cogc scenario list`);
@@ -23,10 +27,15 @@
 //! Entry points: `cogc scenario list | run <name>` on the CLI, or
 //! [`crate::figures::scenario_sweep`] for the CSV time series.
 
+pub mod adversary;
 pub mod channel;
 pub mod registry;
 pub mod sweep;
 
+pub use adversary::{
+    AdversaryModel, AdversarySpec, Attack, FrAttemptAudit, GroupVerdict, Selection, Surface,
+    ADVERSARY_STREAM,
+};
 pub use channel::{
     ChannelModel, ChannelSpec, ChannelStats, CorrelatedFading, DeadlineStraggler, GilbertElliott,
     Iid, CHANNEL_STREAM,

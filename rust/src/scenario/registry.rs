@@ -8,6 +8,7 @@
 //! named scenarios spanning the good / bursty / correlated / straggler
 //! regimes the paper's abstract warns about.
 
+use super::adversary::{AdversarySpec, Attack, Selection, Surface};
 use super::channel::ChannelSpec;
 use crate::gc::CodeFamily;
 use crate::network::Network;
@@ -148,6 +149,9 @@ pub struct Scenario {
     pub payload_dim: usize,
     /// Rounds per episode (channel state persists across them).
     pub rounds: usize,
+    /// Byzantine adversary, sampled per trial alongside the channel.
+    /// `None` keeps the run byte-identical to the pre-adversary engine.
+    pub adversary: Option<AdversarySpec>,
 }
 
 impl Scenario {
@@ -169,6 +173,11 @@ impl Scenario {
             ("payload_dim", json::num(self.payload_dim as f64)),
             ("rounds", json::num(self.rounds as f64)),
         ]);
+        // "adversary" is omitted when absent so pre-existing scenario JSON
+        // stays byte-identical
+        if let Some(adv) = &self.adversary {
+            fields.push(("adversary", adv.to_json()));
+        }
         json::obj(fields)
     }
 
@@ -204,6 +213,10 @@ impl Scenario {
             s: n("s")?,
             payload_dim: n("payload_dim")?,
             rounds: n("rounds")?,
+            adversary: match v.get("adversary") {
+                None => None,
+                Some(a) => Some(AdversarySpec::from_json(a)?),
+            },
         };
         sc.validate()?;
         Ok(sc)
@@ -246,6 +259,9 @@ impl Scenario {
         self.channel
             .validate()
             .map_err(|e| anyhow::anyhow!("scenario {:?}: {e}", self.name))?;
+        if let Some(adv) = &self.adversary {
+            adv.validate().map_err(|e| anyhow::anyhow!("scenario {:?}: {e}", self.name))?;
+        }
         self.net.validate().map_err(|e| anyhow::anyhow!("scenario {:?}: {e}", self.name))?;
         self.net.build().validate()
     }
@@ -268,6 +284,7 @@ fn scenario(
         s: 7,
         payload_dim: 8,
         rounds: 60,
+        adversary: None,
     }
 }
 
@@ -383,7 +400,83 @@ pub fn builtin() -> Vec<Scenario> {
     );
     smoke.s = 3;
     smoke.rounds = 5;
-    v.push(smoke);
+    v.push(smoke.clone());
+
+    // ── Byzantine grid: adversary fraction × channel regime ─────────────
+    // Each entry reuses a catalog base so the channel side stays pinned to
+    // a regime already characterized above; only the adversary differs.
+    let byz = |base: &str, name: &str, description: &str, adv: AdversarySpec| {
+        let mut sc = v
+            .iter()
+            .find(|s| s.name == base)
+            .expect("byzantine grid bases are defined above")
+            .clone();
+        sc.name = name.to_string();
+        sc.description = description.to_string();
+        sc.adversary = Some(adv);
+        sc
+    };
+    let byz_grid = vec![
+        byz(
+            "iid-moderate",
+            "byz-flip-iid",
+            "20% sign-flipping clients over memoryless links, audit on",
+            AdversarySpec::fraction(Attack::SignFlip, 0.2),
+        ),
+        byz(
+            "iid-moderate",
+            "byz-flip-heavy",
+            "40% sign-flipping clients: past the redundancy's correction budget",
+            AdversarySpec::fraction(Attack::SignFlip, 0.4),
+        ),
+        byz(
+            "bursty-c2c",
+            "byz-flip-bursty",
+            "20% sign-flippers under c2c bursts: erasures and lies compound",
+            AdversarySpec::fraction(Attack::SignFlip, 0.2),
+        ),
+        byz(
+            "iid-moderate",
+            "byz-replace",
+            "20% clients uplinking arbitrary garbage (scale-5 replacement)",
+            AdversarySpec::fraction(Attack::Replace { scale: 5.0 }, 0.2),
+        ),
+        byz(
+            "correlated-fade",
+            "byz-collude-fade",
+            "30% colluders sharing one forged vector during common-cause fades",
+            AdversarySpec::fraction(Attack::Collude { scale: 1.0 }, 0.3),
+        ),
+        byz(
+            "iid-moderate",
+            "byz-c2c-poison",
+            "consistent gradient substitution (c2c surface): the audit's blind spot",
+            AdversarySpec {
+                attack: Attack::Replace { scale: 5.0 },
+                selection: Selection::Fraction(0.2),
+                surface: Surface::C2c,
+                detect: true,
+            },
+        ),
+        byz(
+            "iid-moderate",
+            "byz-nodetect",
+            "20% sign-flippers with the audit disabled (poisoning baseline)",
+            AdversarySpec {
+                attack: Attack::SignFlip,
+                selection: Selection::Fraction(0.2),
+                surface: Surface::Uplink,
+                detect: false,
+            },
+        ),
+        byz(
+            "smoke",
+            "byz-smoke",
+            "tiny adversarial scenario for CI smoke runs (M=6, 30% flippers)",
+            AdversarySpec::fraction(Attack::SignFlip, 0.3),
+        ),
+    ];
+    v.extend(byz_grid);
     v
 }
 
@@ -454,6 +547,29 @@ mod tests {
         // unknown family name is rejected
         let garbled = text.replace("\"fr\"", "\"lt\"");
         assert!(Scenario::from_json_str(&garbled).is_err());
+    }
+
+    #[test]
+    fn byzantine_grid_present_and_clean_json_unchanged() {
+        let all = builtin();
+        let byz: Vec<_> = all.iter().filter(|s| s.adversary.is_some()).collect();
+        assert!(byz.len() >= 6, "only {} byzantine scenarios", byz.len());
+        assert!(byz.iter().any(|s| s.name == "byz-smoke"), "CI smoke entry missing");
+        // the grid spans ≥ 2 channel regimes and ≥ 3 attack kinds
+        let mut kinds: Vec<&str> = byz.iter().map(|s| s.channel.name()).collect();
+        kinds.sort();
+        kinds.dedup();
+        assert!(kinds.len() >= 2, "byzantine grid covers only {kinds:?}");
+        let mut attacks: Vec<&str> =
+            byz.iter().map(|s| s.adversary.as_ref().unwrap().attack.name()).collect();
+        attacks.sort();
+        attacks.dedup();
+        assert!(attacks.len() >= 3, "byzantine grid covers only {attacks:?}");
+        // non-adversarial scenarios still serialize without the key
+        let text = find("smoke").unwrap().to_json().serialize();
+        assert!(!text.contains("adversary"), "{text}");
+        let text = find("byz-collude-fade").unwrap().to_json().serialize();
+        assert!(text.contains("\"adversary\""), "{text}");
     }
 
     #[test]

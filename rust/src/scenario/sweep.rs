@@ -8,11 +8,12 @@
 //! [`CHANNEL_STREAM`] substream, so the full [`RoundSeries`] — every
 //! per-round tally — is bit-identical at any `--threads` value.
 
+use super::adversary::{AdversaryModel, ADVERSARY_STREAM};
 use super::channel::{ChannelStats, CHANNEL_STREAM};
 use super::registry::Scenario;
 use crate::gc::{CodeFamily, FrCode};
 use crate::parallel::{parallel_map, Accumulate, MonteCarlo};
-use crate::sim::{self, Outcome};
+use crate::sim::{self, AdvReport, Outcome};
 
 /// Tallies of one round index across all episodes (all integer fields, so
 /// per-worker instances merge exactly).
@@ -32,12 +33,42 @@ pub struct RoundTally {
     pub transmissions: usize,
     /// Channel diagnostics at this round across episodes.
     pub channel: ChannelStats,
+    /// Rounds where corrupted data actually reached the PS (adversarial
+    /// sweeps only; always 0 otherwise — as are the four tallies below).
+    pub corrupted: usize,
+    /// Rounds where the decode-path audit raised an alarm.
+    pub detected: usize,
+    /// Rounds whose decoded output contained corrupted data — the
+    /// decoded-but-poisoned state of the 2×2 recovery × integrity split.
+    pub poisoned: usize,
+    /// Coded rows / group copies excised by the audit.
+    pub excised: usize,
+    /// Honest rows among the excised (false-alarm cost).
+    pub false_excised: usize,
 }
 
 impl RoundTally {
     /// Fraction of episodes that produced *some* global update this round.
     pub fn p_update(&self) -> f64 {
         (self.standard + self.full + self.partial) as f64 / self.trials.max(1) as f64
+    }
+
+    /// Detection rate among rounds where corruption reached the PS.
+    pub fn p_detected(&self) -> f64 {
+        self.detected as f64 / self.corrupted.max(1) as f64
+    }
+
+    /// Fraction of all rounds whose accepted update was poisoned.
+    pub fn p_poisoned(&self) -> f64 {
+        self.poisoned as f64 / self.trials.max(1) as f64
+    }
+
+    fn absorb_adv(&mut self, rep: &AdvReport) {
+        self.corrupted += rep.active as usize;
+        self.detected += rep.detected as usize;
+        self.poisoned += rep.poisoned as usize;
+        self.excised += rep.excised;
+        self.false_excised += rep.false_excised;
     }
 }
 
@@ -50,6 +81,11 @@ impl Accumulate for RoundTally {
         self.none += other.none;
         self.transmissions += other.transmissions;
         self.channel.merge(other.channel);
+        self.corrupted += other.corrupted;
+        self.detected += other.detected;
+        self.poisoned += other.poisoned;
+        self.excised += other.excised;
+        self.false_excised += other.false_excised;
     }
 }
 
@@ -84,9 +120,11 @@ impl Accumulate for RoundSeries {
 /// before the family abstraction existed); fractional-repetition episodes
 /// go through the sparse O(M·(s+1)) path ([`run_scenario_fr`]).
 pub fn run_scenario(sc: &Scenario, trials: usize, mc: &MonteCarlo) -> RoundSeries {
-    match sc.code {
-        CodeFamily::Cyclic => run_scenario_cyclic(sc, trials, mc),
-        CodeFamily::FractionalRepetition => run_scenario_fr(sc, trials, mc),
+    match (&sc.adversary, sc.code) {
+        (None, CodeFamily::Cyclic) => run_scenario_cyclic(sc, trials, mc),
+        (None, CodeFamily::FractionalRepetition) => run_scenario_fr(sc, trials, mc),
+        (Some(_), CodeFamily::Cyclic) => run_scenario_cyclic_adv(sc, trials, mc),
+        (Some(_), CodeFamily::FractionalRepetition) => run_scenario_fr_adv(sc, trials, mc),
     }
 }
 
@@ -193,6 +231,108 @@ pub fn run_scenario_fr(sc: &Scenario, trials: usize, mc: &MonteCarlo) -> RoundSe
     total
 }
 
+/// Dense cyclic episode engine under a Byzantine adversary. The malicious
+/// set is sampled per trial from the [`ADVERSARY_STREAM`] substream and
+/// persists across the episode's rounds — a compromised client stays
+/// compromised, exactly like a channel state. Trials where nobody turns
+/// malicious take the plain round path and consume zero emission draws for
+/// the adversary, so a fraction-0 spec reproduces the non-adversarial
+/// series byte-for-byte (asserted in `tests/adversary.rs`).
+fn run_scenario_cyclic_adv(sc: &Scenario, trials: usize, mc: &MonteCarlo) -> RoundSeries {
+    let spec = sc.adversary.clone().expect("dispatched on Some");
+    let net = sc.net.build();
+    let proto = sc.channel.build();
+    let m = net.m;
+    let mut series: RoundSeries = mc.run_scratch(
+        trials,
+        || (proto.clone_box(), sim::AdvSimScratch::new(), AdversaryModel::new(spec.clone())),
+        |t, rng, acc: &mut RoundSeries, (ch, scratch, adv)| {
+            ch.reset(&net, mc.substream_seed(CHANNEL_STREAM, t));
+            adv.reset(m, mc.substream_seed(ADVERSARY_STREAM, t));
+            acc.ensure_len(sc.rounds);
+            for r in 0..sc.rounds {
+                let (round, rep) = sim::simulate_round_adv(
+                    &net,
+                    &mut **ch,
+                    adv,
+                    m,
+                    sc.s,
+                    sc.payload_dim,
+                    sc.decoder,
+                    rng,
+                    scratch,
+                );
+                let tally = &mut acc.rounds[r];
+                tally.trials += 1;
+                match round.outcome {
+                    Outcome::Standard { .. } => tally.standard += 1,
+                    Outcome::Full => tally.full += 1,
+                    Outcome::Partial { .. } => tally.partial += 1,
+                    Outcome::None => tally.none += 1,
+                }
+                tally.transmissions += round.transmissions;
+                tally.channel.merge(ch.take_stats());
+                tally.absorb_adv(&rep);
+            }
+        },
+    );
+    series.ensure_len(sc.rounds);
+    series
+}
+
+/// Fractional-repetition episode engine under a Byzantine adversary —
+/// the sparse analogue of [`run_scenario_cyclic_adv`]: per-group plurality
+/// votes instead of parity checks, still O(M·(s+1)) per round.
+fn run_scenario_fr_adv(sc: &Scenario, trials: usize, mc: &MonteCarlo) -> RoundSeries {
+    let spec = sc.adversary.clone().expect("dispatched on Some");
+    let net = sc.net.build();
+    let proto = sc.channel.build();
+    let code = FrCode::new(net.m, sc.s).expect("scenario validated for the fr family");
+    let sup = code.sparse_support();
+    let decode_threads = (mc.threads / trials.max(1)).max(1);
+    let episodes: Vec<u64> = (0..trials as u64).collect();
+    let per_episode: Vec<RoundSeries> = parallel_map(&episodes, mc.threads, |_, &t| {
+        let mut ch = proto.clone_box();
+        let mut scratch = sim::FrAdvScratch::new();
+        let mut adv = AdversaryModel::new(spec.clone());
+        let mut rng = mc.trial_rng(t);
+        ch.reset_sparse(&sup, &net, mc.substream_seed(CHANNEL_STREAM, t));
+        adv.reset(net.m, mc.substream_seed(ADVERSARY_STREAM, t));
+        let mut series = RoundSeries::default();
+        series.ensure_len(sc.rounds);
+        for r in 0..sc.rounds {
+            let (round, rep) = sim::simulate_round_fr_adv(
+                &code,
+                &net,
+                &mut *ch,
+                &mut adv,
+                sc.decoder,
+                decode_threads,
+                &mut rng,
+                &mut scratch,
+            );
+            let tally = &mut series.rounds[r];
+            tally.trials += 1;
+            match round.outcome {
+                sim::FrOutcome::Standard { .. } => tally.standard += 1,
+                sim::FrOutcome::Full => tally.full += 1,
+                sim::FrOutcome::Partial { .. } => tally.partial += 1,
+                sim::FrOutcome::None => tally.none += 1,
+            }
+            tally.transmissions += round.transmissions;
+            tally.channel.merge(ch.take_stats());
+            tally.absorb_adv(&rep);
+        }
+        series
+    });
+    let mut total = RoundSeries::default();
+    for series in per_episode {
+        total.merge(series);
+    }
+    total.ensure_len(sc.rounds);
+    total
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -276,6 +416,48 @@ mod tests {
         let series = run_scenario(&sc, 0, &MonteCarlo::new(1));
         assert_eq!(series.rounds.len(), sc.rounds);
         assert!(series.rounds.iter().all(|t| t.trials == 0));
+    }
+
+    #[test]
+    fn adversarial_sweeps_fill_the_integrity_tallies() {
+        // audit on: attacks are mostly caught, poisoning is rare
+        let sc = registry::find("byz-flip-iid").unwrap();
+        let series = run_scenario(&sc, 10, &MonteCarlo::new(5));
+        let sum = |f: fn(&RoundTally) -> usize| series.rounds.iter().map(f).sum::<usize>();
+        let corrupted = sum(|t| t.corrupted);
+        let detected = sum(|t| t.detected);
+        assert!(corrupted > 0, "20% flippers over 10×60 rounds must corrupt something");
+        assert!(detected > 0, "the audit should catch uplink sign flips");
+        assert!(detected <= corrupted, "alarms only fire on active corruption");
+        assert!(sum(|t| t.excised) >= detected, "detections excise rows");
+        // outcome partition still holds under the adversary
+        for (r, t) in series.rounds.iter().enumerate() {
+            assert_eq!(t.standard + t.full + t.partial + t.none, t.trials, "round {r}");
+        }
+        // audit off: same attack, now it lands — poisoned rounds appear
+        // and nothing is ever detected
+        let sc = registry::find("byz-nodetect").unwrap();
+        let series = run_scenario(&sc, 10, &MonteCarlo::new(5));
+        let sum = |f: fn(&RoundTally) -> usize| series.rounds.iter().map(f).sum::<usize>();
+        assert_eq!(sum(|t| t.detected), 0);
+        assert_eq!(sum(|t| t.excised), 0);
+        assert!(sum(|t| t.poisoned) > 0, "undetected sign flips must poison decodes");
+    }
+
+    #[test]
+    fn adversarial_fr_sweep_votes_and_stays_thread_invariant() {
+        let mut sc = fr_smoke();
+        sc.adversary =
+            Some(crate::scenario::AdversarySpec::fraction(crate::scenario::Attack::SignFlip, 0.3));
+        sc.validate().unwrap();
+        let want = run_scenario(&sc, 8, &MonteCarlo::new(13).with_threads(1));
+        for threads in [2usize, 8] {
+            let got = run_scenario(&sc, 8, &MonteCarlo::new(13).with_threads(threads));
+            assert_eq!(got, want, "threads={threads}");
+        }
+        let sum = |f: fn(&RoundTally) -> usize| want.rounds.iter().map(f).sum::<usize>();
+        assert!(sum(|t| t.corrupted) > 0);
+        assert!(sum(|t| t.detected) > 0, "the FR plurality vote should raise alarms");
     }
 
     #[test]

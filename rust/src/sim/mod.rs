@@ -402,6 +402,412 @@ pub fn simulate_round_fr(
     FrRound { outcome, transmissions }
 }
 
+// ── Byzantine-adversarial round engine ──────────────────────────────────
+
+/// Decode error above which a round counts as poisoned. Honest rounds sit
+/// below 1e-5 (asserted across the test suite); surviving attacks show
+/// O(1) relative error.
+const POISON_TOL: f64 = 1e-4;
+
+/// Integrity report of one adversarial round, alongside the usual
+/// recovery outcome — the second axis of the 2×2 recovery × integrity
+/// split.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AdvReport {
+    /// Corrupted data actually reached the PS this round (malicious
+    /// clients whose tampered messages were all erased don't count).
+    pub active: bool,
+    /// The audit raised an alarm (some parity check / group vote failed).
+    pub detected: bool,
+    /// The round's decoded output contains corrupted data — the
+    /// decoded-but-poisoned state.
+    pub poisoned: bool,
+    /// Rows (cyclic) or member copies (FR) excised by the audit.
+    pub excised: usize,
+    /// Honest rows among the excised (the false-alarm cost).
+    pub false_excised: usize,
+}
+
+/// Per-worker buffers of [`simulate_round_adv`]: the plain scratch plus
+/// the raw coefficient stack, per-row corruption flags, and the
+/// kept-row staging used after excision.
+#[derive(Default)]
+pub struct AdvSimScratch {
+    sim: SimScratch,
+    /// Raw coded coefficient rows in exact stack order (audit input).
+    coeffs: Matrix,
+    /// Whether each stacked row carries corrupted data.
+    corrupted: Vec<bool>,
+    /// Stack indices the PS actually received (standard GC uplinks only
+    /// complete sums; GC⁺ uplinks everything) — the audit's input rows.
+    uplinked: Vec<usize>,
+    /// Payload with malicious rows substituted (c2c surface only).
+    adv_payload: Matrix,
+}
+
+impl AdvSimScratch {
+    pub fn new() -> AdvSimScratch {
+        AdvSimScratch::default()
+    }
+}
+
+/// [`simulate_round_scratch`] under a Byzantine adversary.
+///
+/// `adv` must have been `reset` for this trial (its malicious set is the
+/// trial's state, like the channel's). When no client is malicious this
+/// trial, the round is **byte-identical** to the plain path: same draws,
+/// same outcome, zero audit work. Otherwise malicious clients corrupt
+/// what they emit — on the [`Surface::Uplink`](crate::scenario::Surface)
+/// the coded partial sums they uplink, on `Surface::C2c` the local
+/// gradient embedded in everything they send — and, when
+/// `adv.spec.detect` is set, the decode path audits the stack with
+/// [`gc::byzantine::audit_rows`], excises suspect rows, and re-decodes on
+/// the survivors (standard path: re-solve the combinator on the kept
+/// complete rows; GC⁺: rebuild the RREF engine on the kept stack).
+///
+/// Ground truth is known here, so the report's `poisoned` flag is exact:
+/// decode error vs the *honest* payloads above [`POISON_TOL`].
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_round_adv(
+    net: &Network,
+    ch: &mut dyn ChannelModel,
+    adv: &mut crate::scenario::AdversaryModel,
+    m: usize,
+    s: usize,
+    d: usize,
+    decoder: Decoder,
+    rng: &mut Rng,
+    sc: &mut AdvSimScratch,
+) -> (SimRound, AdvReport) {
+    if !adv.any() {
+        let round = simulate_round_scratch(net, ch, m, s, d, decoder, rng, &mut sc.sim);
+        return (round, AdvReport::default());
+    }
+    use crate::scenario::Surface;
+    let surface = adv.spec.surface;
+    let detect = adv.spec.detect;
+
+    // emission phase: identical draw order to the plain path
+    if sc.sim.payload.rows != m || sc.sim.payload.cols != d {
+        sc.sim.payload = Matrix::zeros(m, d);
+    }
+    for x in &mut sc.sim.payload.data {
+        *x = rng.normal();
+    }
+    let true_mean: Vec<f64> = (0..d)
+        .map(|j| (0..m).map(|i| sc.sim.payload[(i, j)]).sum::<f64>() / m as f64)
+        .collect();
+    // c2c surface: malicious clients encode a substituted gradient
+    // consistently everywhere (draws on the adversary substream only)
+    if surface == Surface::C2c {
+        sc.adv_payload = sc.sim.payload.clone();
+        for k in 0..m {
+            if adv.is_malicious(k) {
+                adv.corrupt_row(sc.adv_payload.row_mut(k));
+            }
+        }
+    }
+
+    let attempts_n = match decoder {
+        Decoder::Standard { attempts } => attempts,
+        Decoder::GcPlus { tr } => tr,
+    };
+    if sc.sim.sums.cols != d {
+        sc.sim.sums = Matrix::zeros(0, d);
+    } else {
+        sc.sim.sums.clear_rows();
+    }
+    if sc.coeffs.cols != m {
+        sc.coeffs = Matrix::zeros(0, m);
+    } else {
+        sc.coeffs.clear_rows();
+    }
+    sc.corrupted.clear();
+    sc.uplinked.clear();
+    sc.sim.starts.clear();
+    let mut transmissions = 0usize;
+
+    for a in 0..attempts_n {
+        let code = GcCode::generate(m, s, rng);
+        ch.sample_into(net, rng, &mut sc.sim.real);
+        if sc.sim.attempts.len() <= a {
+            sc.sim.attempts.push(gc::Attempt::empty());
+        }
+        let att = &mut sc.sim.attempts[a];
+        gc::Attempt::observe_into(&code, &sc.sim.real, att);
+        transmissions += s * m;
+        transmissions += match decoder {
+            Decoder::Standard { .. } => att.complete.len(),
+            Decoder::GcPlus { .. } => m,
+        };
+        sc.sim.starts.push(sc.sim.sums.rows);
+        for &r in &att.delivered {
+            let start = sc.sim.sums.data.len();
+            sc.sim.sums.data.resize(start + d, 0.0);
+            sc.sim.sums.rows += 1;
+            let payload =
+                if surface == Surface::C2c { &sc.adv_payload } else { &sc.sim.payload };
+            let orow = &mut sc.sim.sums.data[start..start + d];
+            let mut touches_malicious = false;
+            for k in 0..m {
+                let c = att.perturbed[(r, k)];
+                if c == 0.0 {
+                    continue;
+                }
+                touches_malicious |= adv.is_malicious(k);
+                for (o, p) in orow.iter_mut().zip(payload.row(k)) {
+                    *o += c * p;
+                }
+            }
+            // an uplink-tampering client corrupts only sums it actually
+            // uplinks: all delivered rows under GC⁺, complete rows under
+            // standard GC (incomplete sums never reach the PS there)
+            let uplinked = matches!(decoder, Decoder::GcPlus { .. })
+                || att.complete.binary_search(&r).is_ok();
+            let row_corrupt = match surface {
+                Surface::Uplink => {
+                    if adv.is_malicious(r) && uplinked {
+                        adv.corrupt_row(orow);
+                        true
+                    } else {
+                        false
+                    }
+                }
+                Surface::C2c => touches_malicious,
+            };
+            sc.coeffs.push_row(att.perturbed.row(r));
+            sc.corrupted.push(row_corrupt);
+            if uplinked {
+                sc.uplinked.push(sc.coeffs.rows - 1);
+            }
+        }
+    }
+    let mut report = AdvReport {
+        active: sc.uplinked.iter().any(|&i| sc.corrupted[i]),
+        ..AdvReport::default()
+    };
+
+    // Decode-path audit, run ONCE over everything the PS received. The
+    // cyclic B is full-rank, so the rows of a single attempt satisfy no
+    // non-trivial linear relation — every parity check crosses attempt
+    // boundaries, i.e. detection power is bought with repeat redundancy
+    // (attempts/tr ≥ 2); a lone attempt is auditable but unfalsifiable.
+    let mut kept_mask = vec![true; sc.coeffs.rows];
+    if detect && !sc.uplinked.is_empty() {
+        let audit_coeffs = sc.coeffs.select_rows(&sc.uplinked);
+        let audit = gc::audit_rows(&audit_coeffs, |combo, kept| {
+            // map local audit indices to stack rows
+            let orig: Vec<usize> = kept.iter().map(|&j| sc.uplinked[j]).collect();
+            gc::payload_check_fails(combo, &orig, &sc.sim.sums)
+        });
+        report.detected = audit.alarm;
+        report.excised = audit.excised.len();
+        for &j in &audit.excised {
+            let stack_row = sc.uplinked[j];
+            kept_mask[stack_row] = false;
+            if !sc.corrupted[stack_row] {
+                report.false_excised += 1;
+            }
+        }
+    }
+
+    // 1) standard decode on the surviving complete rows of any attempt
+    for (i, att) in sc.sim.attempts[..attempts_n].iter().enumerate() {
+        if att.complete.len() < m - s {
+            continue;
+        }
+        // stack index of each delivered row is starts[i] + offset;
+        // complete ⊆ delivered, both ascending
+        let mut kept_clients: Vec<usize> = Vec::with_capacity(att.complete.len());
+        {
+            let mut ci = 0usize;
+            for (off, &r) in att.delivered.iter().enumerate() {
+                if ci < att.complete.len() && att.complete[ci] == r {
+                    if kept_mask[sc.sim.starts[i] + off] {
+                        kept_clients.push(r);
+                    }
+                    ci += 1;
+                }
+            }
+        }
+        if kept_clients.len() < m - s {
+            continue; // excision cost this attempt its decodability
+        }
+        let Some(a) = gc::combinator::find_combinator_rows(&att.perturbed, s, &kept_clients)
+        else {
+            continue;
+        };
+        let mut got = vec![0.0f64; d];
+        for (off, &r) in att.delivered.iter().enumerate() {
+            let coef = a[r];
+            if coef == 0.0 {
+                continue;
+            }
+            for (o, v) in got.iter_mut().zip(sc.sim.sums.row(sc.sim.starts[i] + off)) {
+                *o += coef * v;
+            }
+        }
+        let target: Vec<f64> = true_mean.iter().map(|x| x * m as f64).collect();
+        let err = max_abs_diff(&got, &target);
+        report.poisoned = err > POISON_TOL;
+        let aggregate: Vec<f64> = got.iter().map(|x| x / m as f64).collect();
+        let round = SimRound {
+            outcome: Outcome::Standard { attempt: i },
+            aggregate: Some(aggregate),
+            true_mean,
+            decode_err: err,
+            transmissions,
+        };
+        return (round, report);
+    }
+
+    if let Decoder::Standard { .. } = decoder {
+        let round = SimRound {
+            outcome: Outcome::None,
+            aggregate: None,
+            true_mean,
+            decode_err: 0.0,
+            transmissions,
+        };
+        return (round, report);
+    }
+
+    // 2) GC⁺: rebuild the incremental engine on the audit's survivors
+    let kept: Vec<usize> = (0..sc.coeffs.rows).filter(|&r| kept_mask[r]).collect();
+    sc.sim.dec.reset(m);
+    for &r in &kept {
+        sc.sim.dec.push_row(sc.coeffs.row(r));
+    }
+    if sc.sim.dec.decodable_count() == 0 {
+        let round = SimRound {
+            outcome: Outcome::None,
+            aggregate: None,
+            true_mean,
+            decode_err: 0.0,
+            transmissions,
+        };
+        return (round, report);
+    }
+    let dec = sc.sim.dec.decode();
+    let kept_sums = sc.sim.sums.select_rows(&kept);
+    let decoded = dec.weights.matmul(&kept_sums);
+    let mut err = 0.0f64;
+    for (i, &client) in dec.k4.iter().enumerate() {
+        err = err.max(max_abs_diff(decoded.row(i), sc.sim.payload.row(client)));
+    }
+    report.poisoned = err > POISON_TOL;
+    let aggregate: Vec<f64> = (0..d)
+        .map(|j| (0..dec.k4.len()).map(|i| decoded[(i, j)]).sum::<f64>() / dec.k4.len() as f64)
+        .collect();
+    let outcome =
+        if dec.k4.len() == m { Outcome::Full } else { Outcome::Partial { k4: dec.k4 } };
+    let round = SimRound {
+        outcome,
+        aggregate: Some(aggregate),
+        true_mean,
+        decode_err: err,
+        transmissions,
+    };
+    (round, report)
+}
+
+/// Per-worker buffers of [`simulate_round_fr_adv`].
+#[derive(Default)]
+pub struct FrAdvScratch {
+    fr: FrSimScratch,
+    verdicts: Vec<crate::scenario::GroupVerdict>,
+    acc: Vec<crate::scenario::GroupVerdict>,
+}
+
+impl FrAdvScratch {
+    pub fn new() -> FrAdvScratch {
+        FrAdvScratch::default()
+    }
+}
+
+/// [`simulate_round_fr`] under a Byzantine adversary — payload-free, so
+/// the integrity audit is the structural plurality vote of
+/// [`AdversaryModel::fr_attempt_verdicts`](crate::scenario::AdversaryModel::fr_attempt_verdicts)
+/// over each group's delivered copies, still O(M·(s+1)) per attempt.
+/// With detection, the union across GC⁺ repeats keeps the best verdict
+/// per group (a cleanly validated copy from any attempt wins); without,
+/// the first delivered copy sticks, exactly as a vote-less PS would
+/// behave.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_round_fr_adv(
+    code: &FrCode,
+    net: &Network,
+    ch: &mut dyn ChannelModel,
+    adv: &mut crate::scenario::AdversaryModel,
+    decoder: Decoder,
+    decode_threads: usize,
+    rng: &mut Rng,
+    sc: &mut FrAdvScratch,
+) -> (FrRound, AdvReport) {
+    if !adv.any() {
+        let round = simulate_round_fr(code, net, ch, decoder, decode_threads, rng, &mut sc.fr);
+        return (round, AdvReport::default());
+    }
+    use crate::scenario::GroupVerdict;
+    let sup = code.sparse_support();
+    let (m, s) = (code.m, code.s);
+    let detect = adv.spec.detect;
+    let attempts_n = match decoder {
+        Decoder::Standard { attempts } => attempts,
+        Decoder::GcPlus { tr } => tr,
+    };
+    sc.acc.clear();
+    sc.acc.resize(code.groups(), GroupVerdict::Uncovered);
+    let mut transmissions = 0usize;
+    let mut standard_at: Option<usize> = None;
+    let mut report = AdvReport::default();
+
+    for a in 0..attempts_n {
+        ch.sample_sparse_into(&sup, net, rng, &mut sc.fr.real);
+        transmissions += s * m;
+        transmissions += match decoder {
+            Decoder::Standard { .. } => {
+                (0..m).filter(|&r| sc.fr.real.row_delivered_complete(r)).count()
+            }
+            Decoder::GcPlus { .. } => m,
+        };
+        let audit = adv.fr_attempt_verdicts(code, &sc.fr.real, &mut sc.verdicts);
+        report.active |= audit.active;
+        report.detected |= audit.alarms > 0;
+        report.excised += audit.excised;
+        report.false_excised += audit.false_excised;
+        if standard_at.is_none() && sc.verdicts.iter().all(|v| v.covered()) {
+            standard_at = Some(a);
+        }
+        for (acc, &v) in sc.acc.iter_mut().zip(sc.verdicts.iter()) {
+            if detect {
+                // best verdict wins: Clean > Poisoned > Excised > Uncovered
+                *acc = (*acc).max(v);
+            } else if !acc.covered() && v != GroupVerdict::Uncovered {
+                *acc = v; // the PS keeps the first value it accepted
+            }
+        }
+    }
+    report.poisoned = sc.acc.iter().any(|&v| v == GroupVerdict::Poisoned);
+
+    if let Some(attempt) = standard_at {
+        let round = FrRound { outcome: FrOutcome::Standard { attempt }, transmissions };
+        return (round, report);
+    }
+    if let Decoder::Standard { .. } = decoder {
+        return (FrRound { outcome: FrOutcome::None, transmissions }, report);
+    }
+    let covered_groups = sc.acc.iter().filter(|v| v.covered()).count();
+    let outcome = if covered_groups == code.groups() {
+        FrOutcome::Full
+    } else if covered_groups > 0 {
+        FrOutcome::Partial { covered_groups }
+    } else {
+        FrOutcome::None
+    };
+    (FrRound { outcome, transmissions }, report)
+}
+
 /// Aggregate tallies of a [`sweep`] over many simulated rounds.
 ///
 /// Every field combines associatively (counts, integer sums, a maximum), so

@@ -29,7 +29,7 @@ impl Args {
         if expect_subcommand {
             if let Some(first) = it.peek() {
                 if !first.starts_with('-') {
-                    out.subcommand = Some(it.next().unwrap().clone());
+                    out.subcommand = it.next().cloned();
                 }
             }
         }

@@ -1,0 +1,282 @@
+//! Byzantine-adversary integration tests: spec round-trips, the
+//! fraction-0 identity (an adversary that never corrupts anything leaves
+//! every tally and CSV untouched), symbolic-vs-payload audit agreement on
+//! hand-built corruptions against the dense small-M oracle, and
+//! detection-rate assertions over the built-in `byz-*` scenario grid.
+
+use cogc::gc::{self, GcCode};
+use cogc::linalg::Matrix;
+use cogc::network::{Network, Realization};
+use cogc::parallel::MonteCarlo;
+use cogc::scenario::{self, run_scenario, AdversarySpec, Attack, Selection, Surface};
+use cogc::util::rng::Rng;
+
+const SEED: u64 = 0xBADC_0DE5;
+
+#[test]
+fn adversary_spec_cli_and_json_round_trip() {
+    for text in [
+        "sign_flip:0.2",
+        "noise:0.1:5.0",
+        "replace:0.25:3.0",
+        "collude:0.3:1.0:c2c:nodetect",
+        "sign_flip:0.4:nodetect",
+        "replace:0.2:5.0:uplink",
+    ] {
+        let spec = AdversarySpec::parse_cli(text).unwrap();
+        let back = AdversarySpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(spec, back, "CLI -> JSON -> spec changed for {text:?}");
+    }
+    // malformed specs fail loudly, not silently
+    assert!(AdversarySpec::parse_cli("sign_flip").is_err(), "missing fraction");
+    assert!(AdversarySpec::parse_cli("sign_flip:1.5").is_err(), "fraction > 1");
+    assert!(AdversarySpec::parse_cli("frobnicate:0.2").is_err(), "unknown attack");
+    assert!(AdversarySpec::parse_cli("noise:0.1:bogus").is_err(), "bad param token");
+}
+
+#[test]
+fn byz_scenarios_round_trip_through_json() {
+    for name in ["byz-flip-iid", "byz-c2c-poison", "byz-nodetect", "byz-collude-fade"] {
+        let sc = scenario::find(name).unwrap();
+        let back = scenario::Scenario::from_json(&sc.to_json()).unwrap();
+        assert_eq!(sc.adversary, back.adversary, "{name}");
+        assert_eq!(sc.to_json().serialize(), back.to_json().serialize(), "{name}");
+    }
+}
+
+/// A fraction-0 adversary draws its (empty) malicious set on a private
+/// substream and then delegates to the plain trial body, so the full
+/// RoundSeries — every count, every channel statistic — is identical to
+/// running with no adversary at all. Covers both code families.
+#[test]
+fn fraction_zero_adversary_is_identical_to_no_adversary() {
+    for base in ["iid-moderate", "bursty-c2c"] {
+        let mut clean = scenario::find(base).unwrap();
+        clean.rounds = 8;
+        let mut armed = clean.clone();
+        armed.adversary = Some(AdversarySpec::fraction(Attack::SignFlip, 0.0));
+        let mc = MonteCarlo::new(SEED).with_threads(2);
+        let a = run_scenario(&clean, 150, &mc);
+        let b = run_scenario(&armed, 150, &mc);
+        assert_eq!(a, b, "{base}: fraction-0 series diverged from the plain engine");
+        assert!(b.rounds.iter().all(|r| r.corrupted == 0 && r.detected == 0 && r.poisoned == 0));
+    }
+    // FR family: the sparse group-scan engine has its own adversarial path
+    let mut clean = scenario::find("smoke").unwrap();
+    clean.code = cogc::gc::CodeFamily::FractionalRepetition;
+    match &mut clean.net {
+        scenario::NetworkSpec::Homogeneous { m, .. } => *m = 8,
+        scenario::NetworkSpec::Perfect { m } => *m = 8,
+    }
+    clean.validate().unwrap();
+    let mut armed = clean.clone();
+    armed.adversary = Some(AdversarySpec::fraction(Attack::Replace { scale: 5.0 }, 0.0));
+    let mc = MonteCarlo::new(SEED ^ 1).with_threads(2);
+    assert_eq!(run_scenario(&clean, 150, &mc), run_scenario(&armed, 150, &mc));
+}
+
+/// The CSV contract of the gating: a clean scenario's table has no
+/// integrity columns at all (byte-layout unchanged from the pre-adversary
+/// harness), while an adversarial scenario grows exactly the five new
+/// columns plus a comment tag.
+#[test]
+fn clean_csv_has_no_adversary_columns_and_armed_csv_does() {
+    let mut clean = scenario::find("iid-moderate").unwrap();
+    clean.rounds = 4;
+    let clean_csv = cogc::figures::scenario_sweep(&clean, 40, 42, 1).to_csv();
+    assert!(!clean_csv.contains("p_corrupted"), "clean CSV grew adversary columns");
+    assert!(!clean_csv.contains("adversary="), "clean CSV grew an adversary tag");
+
+    let mut armed = clean.clone();
+    armed.adversary = Some(AdversarySpec::fraction(Attack::SignFlip, 0.2));
+    let armed_csv = cogc::figures::scenario_sweep(&armed, 40, 42, 1).to_csv();
+    for col in ["p_corrupted", "p_detected", "p_poisoned", "mean_excised", "mean_false_excised"] {
+        assert!(armed_csv.contains(col), "armed CSV missing column {col}");
+    }
+    assert!(armed_csv.contains("adversary="), "armed CSV missing the comment tag");
+}
+
+/// Stack delivered coded rows across a few lossy attempts at dense small M,
+/// replace the payloads of two malicious clients' rows with independent
+/// garbage, and audit the stack twice: once against the actual payloads
+/// (the production payload-parity closure) and once symbolically from the
+/// ground-truth corruption flags (the outage estimators' oracle). The two
+/// audits must agree check-for-check.
+///
+/// Replacement corruption (independent draw per uplinked row) is used
+/// because it makes every corrupted-support parity check fail generically;
+/// a deterministic corruption (e.g. sign-flip) repeated on two identical
+/// copies of the same complete row cancels in their pairwise check, which
+/// is exactly why the sim layer audits payloads rather than flags.
+#[test]
+fn payload_audit_matches_symbolic_oracle_on_hand_built_corruptions() {
+    let d = 6;
+    let mut exercised = 0usize;
+    for (m, s, seed) in [(10usize, 7usize, 3u64), (12, 4, 4), (9, 2, 5)] {
+        let mut rng = Rng::new(seed);
+        let code = GcCode::generate(m, s, &mut rng);
+        let net = Network::homogeneous(m, 0.35, 0.35);
+        // client gradients: rows of an M x d matrix
+        let grads = Matrix::from_fn(m, d, |_, _| rng.normal());
+        let malicious = [1usize, m - 2];
+
+        let mut coeffs = Matrix::zeros(0, m);
+        let mut sums = Matrix::zeros(0, d);
+        let mut corrupted: Vec<bool> = Vec::new();
+        let mut attempts = 0;
+        while coeffs.rows < m + 4 && attempts < 20 {
+            attempts += 1;
+            let att = gc::Attempt::observe(&code, &Realization::sample(&net, &mut rng));
+            for &r in &att.delivered {
+                let row = att.perturbed.row(r);
+                coeffs.push_row(row);
+                // honest payload of this uplink: coeff-combination of grads
+                let mut payload = vec![0.0f64; d];
+                for (k, &c) in row.iter().enumerate() {
+                    for (j, p) in payload.iter_mut().enumerate() {
+                        *p += c * grads.row(k)[j];
+                    }
+                }
+                if malicious.contains(&r) {
+                    for p in payload.iter_mut() {
+                        *p = 5.0 * rng.normal();
+                    }
+                }
+                sums.push_row(&payload);
+                corrupted.push(malicious.contains(&r));
+            }
+        }
+        if coeffs.rows <= m || !corrupted.iter().any(|&c| c) {
+            continue; // no redundancy or no corruption landed; next shape
+        }
+        exercised += 1;
+        let by_payload =
+            gc::audit_rows(&coeffs, |combo, kept| gc::payload_check_fails(combo, kept, &sums));
+        let by_flags = gc::audit_rows(&coeffs, |combo, kept| {
+            gc::symbolic_check_fails(combo, kept, &corrupted)
+        });
+        assert_eq!(
+            by_payload, by_flags,
+            "M={m} s={s}: payload audit diverged from the symbolic oracle"
+        );
+        assert!(by_payload.checks > 0, "M={m} s={s}: stack produced no parity checks");
+        if by_payload.alarm {
+            assert!(
+                by_payload.excised.iter().all(|&i| corrupted[i]),
+                "M={m} s={s}: excised an honest row: {:?} corrupted={corrupted:?}",
+                by_payload.excised
+            );
+        }
+    }
+    assert!(exercised >= 2, "only {exercised} shapes produced an auditable corrupted stack");
+}
+
+/// An honest stack never alarms under the payload audit (the floating-point
+/// residuals of exact-arithmetic relations sit far below the tolerance).
+#[test]
+fn honest_payload_stack_never_alarms() {
+    let d = 5;
+    let mut rng = Rng::new(11);
+    let m = 10;
+    let code = GcCode::generate(m, 7, &mut rng);
+    let net = Network::homogeneous(m, 0.3, 0.3);
+    let grads = Matrix::from_fn(m, d, |_, _| rng.normal());
+    let mut coeffs = Matrix::zeros(0, m);
+    let mut sums = Matrix::zeros(0, d);
+    for _ in 0..4 {
+        let att = gc::Attempt::observe(&code, &Realization::sample(&net, &mut rng));
+        for &r in &att.delivered {
+            let row = att.perturbed.row(r);
+            coeffs.push_row(row);
+            let mut payload = vec![0.0f64; d];
+            for (k, &c) in row.iter().enumerate() {
+                for (j, p) in payload.iter_mut().enumerate() {
+                    *p += c * grads.row(k)[j];
+                }
+            }
+            sums.push_row(&payload);
+        }
+    }
+    assert!(coeffs.rows > m, "stack too thin to exercise any checks");
+    let audit =
+        gc::audit_rows(&coeffs, |combo, kept| gc::payload_check_fails(combo, kept, &sums));
+    assert!(!audit.alarm, "false alarm on honest data: {audit:?}");
+    assert!(audit.checks > 0);
+    assert_eq!(audit.kept.len(), coeffs.rows);
+}
+
+/// Scenario-grid detection rates: uplink sign-flip and replacement attacks
+/// are detected in well over half the rounds where corruption reaches the
+/// PS, the no-detect baseline never alarms but gets poisoned, and the c2c
+/// consistent-substitution surface is the documented blind spot — zero
+/// alarms, nonzero poisoning.
+#[test]
+fn byz_grid_detection_rates() {
+    let mc = MonteCarlo::new(SEED).with_threads(2);
+    let totals = |name: &str| {
+        let mut sc = scenario::find(name).unwrap();
+        sc.rounds = 6;
+        let series = run_scenario(&sc, 300, &mc);
+        let mut c = 0usize;
+        let mut det = 0usize;
+        let mut poi = 0usize;
+        for r in &series.rounds {
+            c += r.corrupted;
+            det += r.detected;
+            poi += r.poisoned;
+        }
+        (c, det, poi)
+    };
+
+    for name in ["byz-flip-iid", "byz-replace"] {
+        let (corrupted, detected, poisoned) = totals(name);
+        assert!(corrupted > 200, "{name}: corruption too rare ({corrupted}) to assert rates");
+        assert!(
+            detected as f64 >= 0.5 * corrupted as f64,
+            "{name}: detection rate {detected}/{corrupted} below 0.5"
+        );
+        assert!(poisoned <= corrupted, "{name}: poisoned {poisoned} > corrupted {corrupted}");
+    }
+
+    let (corrupted, detected, poisoned) = totals("byz-nodetect");
+    assert!(corrupted > 200, "byz-nodetect: corruption too rare ({corrupted})");
+    assert_eq!(detected, 0, "byz-nodetect: audit disabled but alarms fired");
+    assert!(poisoned > 0, "byz-nodetect: undefended poisoning never landed");
+
+    let (corrupted, detected, poisoned) = totals("byz-c2c-poison");
+    assert!(corrupted > 200, "byz-c2c-poison: corruption too rare ({corrupted})");
+    assert_eq!(detected, 0, "c2c substitution satisfies every coding relation — no alarms");
+    assert!(poisoned > 0, "byz-c2c-poison: blind-spot poisoning never landed");
+}
+
+/// Fixed-set selection pins the same clients every trial; a fixed empty set
+/// behaves exactly like fraction 0.
+#[test]
+fn fixed_selection_variants() {
+    let mut sc = scenario::find("iid-moderate").unwrap();
+    sc.rounds = 5;
+    let mc = MonteCarlo::new(SEED ^ 7).with_threads(2);
+    let clean = run_scenario(&sc, 120, &mc);
+
+    let mut empty = sc.clone();
+    empty.adversary = Some(AdversarySpec {
+        attack: Attack::SignFlip,
+        selection: Selection::Fixed(vec![]),
+        surface: Surface::Uplink,
+        detect: true,
+    });
+    assert_eq!(run_scenario(&empty, 120, &mc), clean, "fixed-empty diverged from clean");
+
+    let mut armed = sc.clone();
+    armed.adversary = Some(AdversarySpec {
+        attack: Attack::SignFlip,
+        selection: Selection::Fixed(vec![0, 3]),
+        surface: Surface::Uplink,
+        detect: true,
+    });
+    let series = run_scenario(&armed, 120, &mc);
+    let corrupted: usize = series.rounds.iter().map(|r| r.corrupted).sum();
+    let detected: usize = series.rounds.iter().map(|r| r.detected).sum();
+    assert!(corrupted > 0, "fixed {{0,3}} never corrupted anything");
+    assert!(detected > 0, "fixed {{0,3}} never detected");
+}

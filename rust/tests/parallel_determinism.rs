@@ -211,3 +211,48 @@ fn scenario_sweeps_are_bit_identical_across_thread_counts() {
         }
     }
 }
+
+/// Adversarial sweeps obey the same contract: the malicious set and every
+/// corruption decision live on per-trial substreams, so the corruption /
+/// detection / excision tallies — and the extended CSV — are bit-identical
+/// at 1/2/8 threads. Covers bursty and memoryless channels, the no-detect
+/// baseline, and (via a retargeted smoke scenario) the sparse FR family.
+#[test]
+fn adversarial_sweeps_are_bit_identical_across_thread_counts() {
+    let mut cases: Vec<scenario::Scenario> =
+        ["byz-flip-bursty", "byz-replace", "byz-nodetect", "byz-smoke"]
+            .iter()
+            .map(|name| scenario::find(name).unwrap())
+            .collect();
+    // FR-family variant: the group-scan decode path under attack
+    // (M=8 is divisible by s+1=4, the sparse family's constraint)
+    let mut fr = scenario::find("byz-smoke").unwrap();
+    fr.name = "byz-smoke-fr".into();
+    fr.code = cogc::gc::CodeFamily::FractionalRepetition;
+    match &mut fr.net {
+        scenario::NetworkSpec::Homogeneous { m, .. } => *m = 8,
+        scenario::NetworkSpec::Perfect { m } => *m = 8,
+    }
+    fr.validate().unwrap();
+    cases.push(fr);
+
+    for sc in &mut cases {
+        sc.rounds = 8; // keep the test CI-sized
+        let name = sc.name.as_str();
+        let reference = run_scenario(sc, 100, &MonteCarlo::new(SEED).with_threads(1));
+        assert_eq!(reference.rounds.len(), sc.rounds);
+        assert!(
+            reference.rounds.iter().any(|r| r.corrupted > 0),
+            "{name}: adversary never reached the PS — assertions below are vacuous"
+        );
+        for threads in THREAD_COUNTS {
+            let got = run_scenario(sc, 100, &MonteCarlo::new(SEED).with_threads(threads));
+            assert_eq!(got, reference, "{name} threads={threads}");
+        }
+        let csv1 = cogc::figures::scenario_sweep(sc, 60, 42, 1).to_csv();
+        for threads in [2usize, 8] {
+            let csvn = cogc::figures::scenario_sweep(sc, 60, 42, threads).to_csv();
+            assert_eq!(csv1, csvn, "{name} CSV threads={threads}");
+        }
+    }
+}
