@@ -1,7 +1,9 @@
 //! Hot-path microbenchmarks: the per-round compute surface of the
 //! coordinator — coded combines (Pallas artifact vs native rust), RREF
-//! decode (batch re-factor vs the incremental engine at until-decode stack
-//! depths 6/20/40), code generation, combinator solve, native dense
+//! decode (batch re-factor vs the incremental engine — peeling-fronted
+//! and bare — at until-decode stack depths 6/20/40), the binary family's
+//! exact integer engine vs the float peeling decoder (paper shape and
+//! M = 10⁴), code generation, combinator solve, native dense
 //! kernels (blocked/unrolled vs scalar reference), Monte-Carlo trial
 //! sweeps (serial vs parallel engine), Byzantine audit overhead
 //! (adversarial estimators vs their clean counterparts at the same
@@ -16,8 +18,8 @@
 //! and is skipped (with a message) when either is missing.
 
 use cogc::bench::Suite;
-use cogc::gc::{self, FrCode, GcCode};
-use cogc::linalg::{rref_with_transform, Matrix};
+use cogc::gc::{self, BinaryCode, FrCode, GcCode, IntRref};
+use cogc::linalg::{rref_with_transform, IncrementalRref, Matrix, PeelingDecoder};
 use cogc::network::{Network, Realization, SparseRealization};
 use cogc::outage::exact::poisson_binomial_pmf;
 use cogc::outage::mc::{
@@ -105,7 +107,71 @@ fn main() {
                     }
                 },
             );
+            // the incremental row above runs peeling-fronted (the decoder's
+            // default); this one is the bare elimination engine on the same
+            // schedule — the delta is what the degree-≤1 fast path buys
+            suite.bench(
+                &format!("until-decode pure rref      ({rows} rows, {n_blocks} blocks)"),
+                || {
+                    let mut eng = IncrementalRref::new(10);
+                    for chunk in attempts.chunks(2) {
+                        for att in chunk {
+                            for &r in &att.delivered {
+                                eng.push_row(att.perturbed.row(r));
+                            }
+                        }
+                        cogc::bench::black_box(eng.decodable_count());
+                    }
+                },
+            );
         }
+    }
+
+    // ── binary family: exact integer engine vs float peeling decoder ────
+    // The ±1 family decodes in exact i128 rational arithmetic; these rows
+    // price that exactness against the float peeling decoder on the same
+    // row stream, at the paper shape and a federation-scale M. Rows are
+    // built sparsely from the deterministic support — no dense M×M bridge
+    // is materialized at the large-M shape.
+    {
+        for &(m, s, n_rows) in &[(10usize, 4usize, 12usize), (10_000, 4, 64)] {
+            let bcode = BinaryCode::new(m, s).unwrap();
+            let mut brng = Rng::new(4_000 + m as u64);
+            let mut irows: Vec<Vec<i64>> = Vec::new();
+            let mut frows: Vec<Vec<f64>> = Vec::new();
+            let mut buf: Vec<i64> = Vec::new();
+            for _ in 0..n_rows {
+                bcode.int_row_into(brng.below(m), &mut buf);
+                // erode ~40% of each row's support, as erased uplinks would
+                for v in buf.iter_mut() {
+                    if *v != 0 && brng.bernoulli(0.4) {
+                        *v = 0;
+                    }
+                }
+                irows.push(buf.clone());
+                frows.push(buf.iter().map(|&x| x as f64).collect());
+            }
+            suite.bench(&format!("binary int-rref push  M={m} ({n_rows} rows)"), || {
+                let mut eng = IntRref::new(m);
+                for row in &irows {
+                    eng.push_row(row);
+                }
+                cogc::bench::black_box(eng.decodable_count());
+            });
+            suite.bench(&format!("float peeling push    M={m} ({n_rows} rows)"), || {
+                let mut dec = PeelingDecoder::new(m);
+                for row in &frows {
+                    dec.push_row(row);
+                }
+                cogc::bench::black_box(dec.decodable_count());
+            });
+        }
+        // the exact rational combinator solve at the paper shape
+        let bcode = BinaryCode::new(10, 4).unwrap();
+        let complete: Vec<usize> = (0..6).collect();
+        suite.bench("binary combinator_weights M=10 (6 rows)", || {
+            cogc::bench::black_box(bcode.combinator_weights(&complete));
+        });
     }
 
     // ── structured family: sparse vs dense sampling, group scan vs RREF ─

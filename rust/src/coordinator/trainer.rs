@@ -12,7 +12,7 @@
 use super::client::{ClientState, Shard};
 use super::config::{Aggregator, Design, TrainConfig};
 use crate::data::{class_means, partition, ImageDataset, ImageShard, TokenDataset, TokenShard};
-use crate::gc::{self, CodeFamily, FrCode, GcCode};
+use crate::gc::{self, BinaryCode, CodeFamily, FrCode, GcCode, IntRref};
 use crate::linalg::Matrix;
 use crate::metrics::{RoundRecord, RunLog};
 use crate::network::{Network, SparseRealization};
@@ -374,20 +374,29 @@ impl Trainer {
                     Ok(self.agg_subset_mean(deltas, &received, "subset", tx))
                 }
             }
+            // the binary family shares the cyclic aggregation pipeline;
+            // inside, the code is the deterministic ±1 bridge and the
+            // combinator / extraction solves run in exact arithmetic
             Aggregator::CoGc { design, attempts } => match self.cfg.code {
-                CodeFamily::Cyclic => self.agg_cogc(deltas, design, attempts, false),
+                CodeFamily::Cyclic | CodeFamily::Binary => {
+                    self.agg_cogc(deltas, design, attempts, false)
+                }
                 CodeFamily::FractionalRepetition => {
                     self.agg_cogc_fr(deltas, design, attempts, false)
                 }
             },
             Aggregator::TandonReplicated { attempts } => match self.cfg.code {
-                CodeFamily::Cyclic => self.agg_cogc(deltas, Design::SkipRound, attempts, true),
+                CodeFamily::Cyclic | CodeFamily::Binary => {
+                    self.agg_cogc(deltas, Design::SkipRound, attempts, true)
+                }
                 CodeFamily::FractionalRepetition => {
                     self.agg_cogc_fr(deltas, Design::SkipRound, attempts, true)
                 }
             },
             Aggregator::GcPlus { tr, until_decode, max_blocks } => match self.cfg.code {
-                CodeFamily::Cyclic => self.agg_gcplus(deltas, tr, until_decode, max_blocks),
+                CodeFamily::Cyclic | CodeFamily::Binary => {
+                    self.agg_gcplus(deltas, tr, until_decode, max_blocks)
+                }
                 CodeFamily::FractionalRepetition => {
                     self.agg_gcplus_fr(deltas, tr, until_decode, max_blocks)
                 }
@@ -485,25 +494,53 @@ impl Trainer {
             Design::SkipRound => attempts.max(1),
         };
         let mut tx = 0usize;
+        // binary runs: one deterministic ±1 code for the whole round,
+        // bridged to the dense form for observation/encode; combinator
+        // solves go through the exact rational engine instead of floats
+        let binary = match self.cfg.code {
+            CodeFamily::Binary => Some(
+                BinaryCode::new(self.m, self.cfg.s).expect("code validated in Trainer::new"),
+            ),
+            _ => None,
+        };
+        let bridged = binary.map(|bc| bc.to_gc_code());
         // the gradient stack is identical across attempts: build its device
         // literal once (saves an M·D host copy per retry — §Perf)
         let prepared = self.coded.prepare_grads(deltas)?;
         for attempt in 0..max_attempts {
-            let code = GcCode::generate(self.m, self.cfg.s, &mut self.rng);
+            let generated;
+            let code = match &bridged {
+                Some(c) => c,
+                None => {
+                    generated = GcCode::generate(self.m, self.cfg.s, &mut self.rng);
+                    &generated
+                }
+            };
             let mut real = self.channel.sample(&self.net, &mut self.rng);
             if replicated {
                 // dataset replication: partial sums never see c2c erasure
                 real.t = vec![vec![true; self.m]; self.m];
             }
-            let att = gc::Attempt::observe(&code, &real);
+            let att = gc::Attempt::observe(code, &real);
             // sharing phase: s transmissions per client (none when replicated)
             tx += if replicated { 0 } else { self.cfg.s * self.m };
             // uplinks: only complete partial sums are transmitted
             tx += att.complete.len();
             if att.complete.len() < self.m - self.cfg.s {
-                continue; // binary failure — try again or give up
+                continue; // all-or-nothing failure — try again or give up
             }
-            let Some(a) = gc::find_combinator(&code, &att.complete) else {
+            let combinator = match binary {
+                // exact rational solve, scattered back to client indexing
+                Some(bc) => bc.combinator_weights(&att.complete).map(|w| {
+                    let mut full = vec![0.0f64; self.m];
+                    for (k, &r) in att.complete.iter().enumerate() {
+                        full[r] = w[k];
+                    }
+                    full
+                }),
+                None => gc::find_combinator(code, &att.complete),
+            };
+            let Some(a) = combinator else {
                 continue;
             };
             // partial sums S = B̂ · Δ  (the Pallas encode artifact)
@@ -511,7 +548,7 @@ impl Trainer {
             if self.uplink_adversary_active() {
                 self.corrupt_sums(&mut sums);
                 let detect = self.adversary.as_ref().map_or(false, |adv| adv.spec.detect);
-                if detect && !self.cross_check(&code, &att.complete, &sums) {
+                if detect && !self.cross_check(code, &att.complete, &sums) {
                     // redundant complete rows disagree: a tampered uplink
                     // sits in the minimal set — drop the attempt rather
                     // than apply a poisoned update
@@ -561,6 +598,18 @@ impl Trainer {
         // per-block "anything decodable yet?" test needs no re-stack and no
         // re-RREF of everything received so far (§Perf)
         let mut decoder = gc::GcPlusDecoder::new(self.m);
+        // binary runs: fixed ±1 code bridged for observation/encode, plus
+        // an exact integer engine fed in lockstep with the float decoder —
+        // gates and extraction weights come from the exact engine
+        let binary = match self.cfg.code {
+            CodeFamily::Binary => Some(
+                BinaryCode::new(self.m, self.cfg.s).expect("code validated in Trainer::new"),
+            ),
+            _ => None,
+        };
+        let bridged = binary.map(|bc| bc.to_gc_code());
+        let mut ieng = binary.map(|_| IntRref::new(self.m));
+        let mut ibuf: Vec<i64> = Vec::new();
         // payload rows delivered to the PS, in stack order
         let mut payload_rows: Vec<Vec<f32>> = Vec::new();
         // one gradient literal for the whole round (§Perf)
@@ -574,9 +623,16 @@ impl Trainer {
         for _ in 0..blocks {
             for _ in 0..tr {
                 attempts_used += 1;
-                let code = GcCode::generate(self.m, self.cfg.s, &mut self.rng);
+                let generated;
+                let code = match &bridged {
+                    Some(c) => c,
+                    None => {
+                        generated = GcCode::generate(self.m, self.cfg.s, &mut self.rng);
+                        &generated
+                    }
+                };
                 let real = self.channel.sample(&self.net, &mut self.rng);
-                let att = gc::Attempt::observe(&code, &real);
+                let att = gc::Attempt::observe(code, &real);
                 tx += self.cfg.s * self.m + self.m; // all partial sums are uplinked
                 let mut sums = self.coded.encode_prepared(&att.perturbed, &prepared, deltas)?;
                 if self.uplink_adversary_active() {
@@ -586,12 +642,26 @@ impl Trainer {
                 // live audit the shortcut's row set must also survive the
                 // cross-combinator check before it is trusted
                 if att.complete.len() >= self.m - self.cfg.s {
-                    if audit_live && !self.cross_check(&code, &att.complete, &sums) {
+                    let shortcut = if audit_live && !self.cross_check(code, &att.complete, &sums)
+                    {
                         // tampered uplink in the minimal set: refuse the
                         // shortcut, keep stacking — the parity audit below
                         // gets a vote once redundancy accumulates
                         self.adv_log.detected += 1;
-                    } else if let Some(a) = gc::find_combinator(&code, &att.complete) {
+                        None
+                    } else {
+                        match binary {
+                            Some(bc) => bc.combinator_weights(&att.complete).map(|w| {
+                                let mut full = vec![0.0f64; self.m];
+                                for (k, &r) in att.complete.iter().enumerate() {
+                                    full[r] = w[k];
+                                }
+                                full
+                            }),
+                            None => gc::find_combinator(code, &att.complete),
+                        }
+                    };
+                    if let Some(a) = shortcut {
                         let a_m = Matrix::from_rows(&[a]);
                         let out =
                             crate::runtime::coded::native_combine(&a_m, &sums, self.d);
@@ -611,12 +681,23 @@ impl Trainer {
                     if audit_live {
                         coeff_stack.push_row(att.perturbed.row(r));
                     }
+                    if let Some(eng) = &mut ieng {
+                        // delivered ±1 rows are integer-exact by construction
+                        ibuf.clear();
+                        ibuf.extend(att.perturbed.row(r).iter().map(|&v| v as i64));
+                        eng.push_row(&ibuf);
+                    }
                 }
                 decoder.push_attempt(&att);
             }
             // complementary decode over everything received so far — the
             // engine already holds the reduced form of every pushed row
-            if decoder.rows() == 0 || decoder.decodable_count() == 0 {
+            // (binary runs gate on the exact engine, not the float one)
+            let decodable_now = match &ieng {
+                Some(eng) => eng.decodable_count(),
+                None => decoder.decodable_count(),
+            };
+            if decoder.rows() == 0 || decodable_now == 0 {
                 continue;
             }
             if audit_live {
@@ -662,12 +743,38 @@ impl Trainer {
                     for i in 0..coeff_stack.rows {
                         decoder.push_row(coeff_stack.row(i));
                     }
-                    if decoder.decodable_count() == 0 {
+                    if let Some(eng) = &mut ieng {
+                        eng.reset(self.m);
+                        for i in 0..coeff_stack.rows {
+                            ibuf.clear();
+                            ibuf.extend(coeff_stack.row(i).iter().map(|&v| v as i64));
+                            eng.push_row(&ibuf);
+                        }
+                    }
+                    let decodable_now = match &ieng {
+                        Some(eng) => eng.decodable_count(),
+                        None => decoder.decodable_count(),
+                    };
+                    if decodable_now == 0 {
                         continue; // excision emptied K₄ — stack more blocks
                     }
                 }
             }
-            let dec = decoder.decode();
+            let dec = match &ieng {
+                // exact extraction: K₄ and weights from the integer engine
+                Some(eng) => {
+                    let mut k4 = Vec::new();
+                    let mut weights = Matrix::zeros(0, decoder.rows());
+                    let mut wrow = Vec::new();
+                    for (client, row) in eng.decodable() {
+                        k4.push(client);
+                        eng.t_row_f64(row, &mut wrow);
+                        weights.push_row(&wrow);
+                    }
+                    gc::Decoded { k4, weights, rank: eng.rank() }
+                }
+                None => decoder.decode(),
+            };
             let rows = decoder.rows();
             let delta = if rows <= self.mt {
                 // Pallas path: pad weights to [M, MT] and payload to [MT, D]

@@ -547,6 +547,11 @@ pub fn outage_split_summary(
             let code = crate::gc::FrCode::new(net.m, sc.s)?;
             outage::estimate_outage_fr_adv(&net, &code, ch.as_ref(), spec, trials, &mc)
         }
+        crate::gc::CodeFamily::Binary => {
+            // Scenario::validate rejects binary + adversary, so this is
+            // unreachable through the CLI; keep it an error, not a panic
+            anyhow::bail!("the binary family does not support adversarial sweeps yet")
+        }
     };
     let n = split.trials.max(1) as f64;
     Ok(format!(

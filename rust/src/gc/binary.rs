@@ -1,0 +1,520 @@
+//! The {±1}-valued binary gradient-code family and its exact integer
+//! decode engine.
+//!
+//! *Numerically Stable Binary Gradient Coding* (PAPERS.md) observes that
+//! gradient codes over {−1, +1} decode in integer arithmetic: no pivot
+//! floors, no residue flushing, no rounding — a row is dependent iff it is
+//! *exactly* dependent. [`BinaryCode`] realizes that idea on the cyclic
+//! support of the paper's construction:
+//!
+//! - row `r` covers blocks `{r, r+1, …, r+s} mod M` (the same support as
+//!   the dense cyclic family, so the c2c traffic pattern is identical);
+//! - the coefficient at offset `t` is `(−1)^t` — `+1` on the client's own
+//!   diagonal, alternating outward.
+//!
+//! `s` must be **even**: each row then has `s+1` (odd) alternating terms
+//! summing to exactly `+1`, so the all-ones combinator decodes a fully
+//! delivered round and `𝟙` lies in the row span. (Odd `s` makes every row
+//! sum to `0`, putting `𝟙` outside the span — the family would never
+//! decode.) Unlike the random cyclic family, a ±1 code cannot promise the
+//! any-(M−s)-rows identity (e.g. M = 3, s = 2: rows sum pairwise to rank-
+//! deficient stacks for some erasure patterns), so both decode paths here
+//! *test* solvability exactly instead of assuming it — the same
+//! family-specific-semantics precedent the FR family set.
+//!
+//! The decode engine is [`IntRref`]: an incremental reduced-row-echelon
+//! form over exact rationals (one `i128` denominator per stored row,
+//! `i128` numerators, gcd-reduced after every update). Its push/query
+//! surface mirrors the float engine's, but membership decisions compare
+//! integers with zero — this file contains no floating-point comparison
+//! machinery at all, which `tests/binary_family.rs` pins at the source
+//! level. Floats appear only at the extraction boundary, where exact
+//! rational weights are rounded once into `f64` for the payload combine.
+//!
+//! The dense float mirror ([`BinaryCode::dense_b`] +
+//! [`BinaryCode::to_gc_code`]) feeds the generic float pipeline (attempt
+//! observation, peeling/RREF, the small-M oracle tests); the exact paths
+//! here are the production decode for `--code binary`.
+
+use crate::gc::codes::GcCode;
+use crate::gc::family::CodeFamily;
+use crate::linalg::Matrix;
+
+/// Deterministic {±1} cyclic-support gradient code. Fully determined by
+/// (M, s) — no RNG, no stored matrix; every accessor is O(1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BinaryCode {
+    pub m: usize,
+    pub s: usize,
+}
+
+impl BinaryCode {
+    pub fn new(m: usize, s: usize) -> anyhow::Result<BinaryCode> {
+        CodeFamily::Binary.validate(m, s)?;
+        Ok(BinaryCode { m, s })
+    }
+
+    /// Integer coefficient `B[i][j] ∈ {−1, 0, +1}`.
+    #[inline]
+    pub fn coeff(&self, i: usize, j: usize) -> i64 {
+        let t = (j + self.m - i) % self.m;
+        if t > self.s {
+            0
+        } else if t % 2 == 0 {
+            1
+        } else {
+            -1
+        }
+    }
+
+    /// Support of row `r` in coverage order, `(block, coefficient)` pairs.
+    pub fn support_iter(&self, r: usize) -> impl Iterator<Item = (usize, i64)> + '_ {
+        let m = self.m;
+        (0..=self.s).map(move |t| ((r + t) % m, if t % 2 == 0 { 1 } else { -1 }))
+    }
+
+    /// Write row `r` as integers into `buf` (length M, zero-filled first).
+    pub fn int_row_into(&self, r: usize, buf: &mut Vec<i64>) {
+        buf.clear();
+        buf.resize(self.m, 0);
+        for (j, c) in self.support_iter(r) {
+            buf[j] = c;
+        }
+    }
+
+    /// Dense float mirror of the allocation matrix — the small-M oracle
+    /// and the bridge into the generic attempt/observation pipeline.
+    pub fn dense_b(&self) -> Matrix {
+        Matrix::from_fn(self.m, self.m, |i, j| self.coeff(i, j) as f64)
+    }
+
+    /// Bridge into the generic [`GcCode`] container (same `m`, `s`, and
+    /// cyclic support, so `incoming_iter`/completeness logic applies
+    /// unchanged). The parity block `h` is left empty — it only feeds the
+    /// cyclic construction's structural diagnostic, never a decode path.
+    pub fn to_gc_code(&self) -> GcCode {
+        GcCode { m: self.m, s: self.s, b: self.dense_b(), h: Matrix::zeros(0, self.m) }
+    }
+
+    /// Exact standard-GC decode: combinator weights `a` with
+    /// `Σ a_f · B[rows[f]] = 𝟙`, or `None` when the received complete rows
+    /// cannot reproduce the all-ones vector. Solved over the rationals —
+    /// a pattern either decodes or it does not, with no tolerance band.
+    pub fn combinator_weights(&self, rows: &[usize]) -> Option<Vec<f64>> {
+        if rows.len() < self.m - self.s {
+            // the standard decoder's protocol threshold, mirroring the
+            // float path's `find_combinator_rows`
+            return None;
+        }
+        // unknowns: one weight per received row; equations: one per block,
+        // augmented with the all-ones right-hand side
+        let n = rows.len();
+        let mut eng = IntRref::new(n + 1);
+        let mut eq: Vec<i64> = Vec::with_capacity(n + 1);
+        for j in 0..self.m {
+            eq.clear();
+            eq.extend(rows.iter().map(|&r| self.coeff(r, j)));
+            eq.push(1);
+            eng.push_row(&eq);
+        }
+        eng.solve_augmented(n)
+    }
+}
+
+/// Greatest common divisor of two non-negative i128 values.
+fn gcd(mut a: i128, mut b: i128) -> i128 {
+    while b != 0 {
+        let r = a % b;
+        a = b;
+        b = r;
+    }
+    a
+}
+
+/// Divide a rational row (numerators + denominator) by its content so the
+/// entries stay small across eliminations.
+fn reduce_row(nums: &mut [i128], more: &mut [i128], den: &mut i128) {
+    let mut g = den.abs();
+    for &x in nums.iter().chain(more.iter()) {
+        if g == 1 {
+            break;
+        }
+        g = gcd(g, x.abs());
+    }
+    if g > 1 {
+        for x in nums.iter_mut().chain(more.iter_mut()) {
+            *x /= g;
+        }
+        *den /= g;
+    }
+    if *den < 0 {
+        for x in nums.iter_mut().chain(more.iter_mut()) {
+            *x = -*x;
+        }
+        *den = -*den;
+    }
+}
+
+fn mul(a: i128, b: i128) -> i128 {
+    a.checked_mul(b).expect("IntRref overflow: stack exceeds exact i128 range")
+}
+
+fn fused(a: i128, da: i128, b: i128, f: i128) -> i128 {
+    // a·da − b·f, checked
+    mul(a, da).checked_sub(mul(b, f)).expect("IntRref overflow: stack exceeds exact i128 range")
+}
+
+/// Incremental reduced row-echelon form over exact rationals.
+///
+/// Stored row `i` represents the rational row `e[i][·] / den[i]`
+/// (`den[i] > 0`, gcd-reduced, pivot entry equal to `den[i]` so the pivot
+/// value is exactly 1); `t[i] / den[i]` is its transform over the pushed
+/// rows. The push algorithm is the integer mirror of the float engine's:
+/// reduce against stored pivots in creation order, pivot on the leftmost
+/// **non-zero** entry (exactness makes a pivot floor meaningless), then
+/// eliminate the new column from the store. Dependence and decodability
+/// are integer-zero tests, so the engine's verdicts are exact for any
+/// input the `i128` range can hold (the ±1 decode stacks sit far inside
+/// it; overflow panics rather than mis-decoding).
+pub struct IntRref {
+    cols: usize,
+    rows_seen: usize,
+    rank: usize,
+    pivots: Vec<Option<usize>>,
+    row_cols: Vec<usize>,
+    /// Stored numerator rows of E, width `cols`.
+    e: Vec<Vec<i128>>,
+    /// Stored numerator transform rows, width `rows_seen`.
+    t: Vec<Vec<i128>>,
+    /// Per-row positive denominator.
+    den: Vec<i128>,
+    /// Null-space transform of the latest dependent push (numerators).
+    null_t: Vec<i128>,
+    null_den: i128,
+}
+
+impl IntRref {
+    pub fn new(cols: usize) -> IntRref {
+        IntRref {
+            cols,
+            rows_seen: 0,
+            rank: 0,
+            pivots: vec![None; cols],
+            row_cols: Vec::new(),
+            e: Vec::new(),
+            t: Vec::new(),
+            den: Vec::new(),
+            null_t: Vec::new(),
+            null_den: 1,
+        }
+    }
+
+    /// Clear all state for a fresh stream of `cols`-wide rows, keeping
+    /// allocations.
+    pub fn reset(&mut self, cols: usize) {
+        self.cols = cols;
+        self.rows_seen = 0;
+        self.rank = 0;
+        self.pivots.clear();
+        self.pivots.resize(cols, None);
+        self.row_cols.clear();
+        self.e.clear();
+        self.t.clear();
+        self.den.clear();
+        self.null_t.clear();
+        self.null_den = 1;
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows_seen
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn pivots(&self) -> &[Option<usize>] {
+        &self.pivots
+    }
+
+    /// Push one integer row; `Some(pivot_column)` when it increased the
+    /// rank, `None` when it is exactly dependent on the rows pushed so far.
+    pub fn push_row(&mut self, row: &[i64]) -> Option<usize> {
+        assert_eq!(row.len(), self.cols, "push_row width mismatch");
+        self.rows_seen += 1;
+        for tr in &mut self.t {
+            tr.push(0);
+        }
+        let mut ce: Vec<i128> = row.iter().map(|&v| v as i128).collect();
+        let mut ct: Vec<i128> = vec![0; self.rows_seen];
+        ct[self.rows_seen - 1] = 1;
+        let mut cden: i128 = 1;
+
+        // reduce against stored pivot rows (creation order)
+        for i in 0..self.rank {
+            let c = self.row_cols[i];
+            let f = ce[c];
+            if f == 0 {
+                continue;
+            }
+            let di = self.den[i];
+            for (x, &p) in ce.iter_mut().zip(&self.e[i]) {
+                *x = fused(*x, di, p, f);
+            }
+            for (x, &p) in ct.iter_mut().zip(&self.t[i]) {
+                *x = fused(*x, di, p, f);
+            }
+            cden = mul(cden, di);
+            debug_assert_eq!(ce[c], 0);
+            reduce_row(&mut ce, &mut ct, &mut cden);
+        }
+
+        // leftmost non-zero entry pivots; none ⇒ exactly dependent
+        let Some(c) = ce.iter().position(|&x| x != 0) else {
+            reduce_row(&mut ce, &mut ct, &mut cden);
+            self.null_t = ct;
+            self.null_den = cden;
+            return None;
+        };
+
+        // normalize: the pivot numerator becomes the denominator (pivot
+        // value exactly 1), then eliminate column `c` from the store
+        let mut p = ce[c];
+        if p < 0 {
+            for x in ce.iter_mut().chain(ct.iter_mut()) {
+                *x = -*x;
+            }
+            p = -p;
+        }
+        let mut pden = p;
+        reduce_row(&mut ce, &mut ct, &mut pden);
+        let p = ce[c]; // == reduced denominator
+        debug_assert_eq!(p, pden);
+        for i in 0..self.rank {
+            let f = self.e[i][c];
+            if f == 0 {
+                continue;
+            }
+            for (x, &q) in self.e[i].iter_mut().zip(&ce) {
+                *x = fused(*x, p, q, f);
+            }
+            for (x, &q) in self.t[i].iter_mut().zip(&ct) {
+                *x = fused(*x, p, q, f);
+            }
+            self.den[i] = mul(self.den[i], p);
+            debug_assert_eq!(self.e[i][c], 0);
+            let (e_i, t_i) = (&mut self.e[i], &mut self.t[i]);
+            reduce_row(e_i, t_i, &mut self.den[i]);
+        }
+        self.pivots[c] = Some(self.rank);
+        self.row_cols.push(c);
+        self.e.push(ce);
+        self.t.push(ct);
+        self.den.push(pden);
+        self.rank += 1;
+        Some(c)
+    }
+
+    /// Whether stored row `i` is a unit row — exact integer zeros at every
+    /// non-pivot column (the pivot entry equals the denominator by
+    /// construction).
+    pub fn is_unit_row(&self, i: usize) -> bool {
+        let c = self.row_cols[i];
+        self.e[i].iter().enumerate().all(|(k, &v)| k == c || v == 0)
+    }
+
+    /// Number of decodable columns (unit pivot rows), exactly.
+    pub fn decodable_count(&self) -> usize {
+        (0..self.rank).filter(|&i| self.is_unit_row(i)).count()
+    }
+
+    /// Decodable columns ascending, as `(column, stored_row)` pairs.
+    pub fn decodable(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.pivots.iter().enumerate().filter_map(move |(c, p)| match p {
+            Some(i) if self.is_unit_row(*i) => Some((c, *i)),
+            _ => None,
+        })
+    }
+
+    /// Extraction weights of stored row `i`, rounded once into `f64`
+    /// (`weights · pushed_rows = e_row`, so for a unit row the weights
+    /// recover its pivot column's payload).
+    pub fn t_row_f64(&self, i: usize, out: &mut Vec<f64>) {
+        let d = self.den[i] as f64;
+        out.clear();
+        out.extend(self.t[i].iter().map(|&x| x as f64 / d));
+    }
+
+    /// Null-space transform of the latest dependent push, rounded into
+    /// `f64` (`combo · pushed_rows = 0`, exactly).
+    pub fn null_transform_f64(&self, out: &mut Vec<f64>) {
+        let d = self.null_den as f64;
+        out.clear();
+        out.extend(self.null_t.iter().map(|&x| x as f64 / d));
+    }
+
+    /// Treat the engine as an augmented system `[A | b]` whose first `n`
+    /// columns are unknown coefficients: return the consistent solution
+    /// with free unknowns at zero, or `None` if column `n` pivots
+    /// (inconsistent). Exact; rounded into `f64` once at extraction.
+    pub fn solve_augmented(&self, n: usize) -> Option<Vec<f64>> {
+        assert_eq!(self.cols, n + 1, "solve_augmented: engine width must be n+1");
+        if self.pivots[n].is_some() {
+            return None;
+        }
+        let mut x = vec![0.0; n];
+        for (c, p) in self.pivots[..n].iter().enumerate() {
+            if let Some(r) = p {
+                x[c] = self.e[*r][n] as f64 / self.den[*r] as f64;
+            }
+        }
+        Some(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn construction_is_deterministic_and_alternating() {
+        let code = BinaryCode::new(8, 4).unwrap();
+        assert_eq!(code.coeff(0, 0), 1);
+        assert_eq!(code.coeff(0, 1), -1);
+        assert_eq!(code.coeff(0, 4), 1);
+        assert_eq!(code.coeff(0, 5), 0);
+        assert_eq!(code.coeff(6, 1), -1); // wraparound support
+        // every row sums to exactly +1 (s even)
+        for r in 0..8 {
+            let sum: i64 = (0..8).map(|j| code.coeff(r, j)).sum();
+            assert_eq!(sum, 1, "row {r}");
+        }
+        // dense mirror agrees entry-for-entry
+        let b = code.dense_b();
+        for i in 0..8 {
+            for j in 0..8 {
+                assert_eq!(b[(i, j)], code.coeff(i, j) as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn odd_s_is_rejected() {
+        assert!(BinaryCode::new(8, 3).is_err());
+        assert!(BinaryCode::new(8, 2).is_ok());
+        assert!(CodeFamily::Binary.validate(9, 4).is_ok());
+        assert!(CodeFamily::Binary.validate(9, 3).is_err());
+    }
+
+    #[test]
+    fn full_reception_decodes_with_all_ones() {
+        for (m, s) in [(6, 2), (9, 4), (12, 6)] {
+            let code = BinaryCode::new(m, s).unwrap();
+            let rows: Vec<usize> = (0..m).collect();
+            let a = code.combinator_weights(&rows).expect("full reception must decode");
+            // Σ a_f · B[f] = 𝟙, checked exactly in integers scaled by 1
+            for j in 0..m {
+                let got: f64 = rows.iter().zip(&a).map(|(&r, &w)| w * code.coeff(r, j) as f64).sum();
+                assert!((got - 1.0).abs() < 1e-12, "m={m} s={s} block {j}: {got}");
+            }
+        }
+    }
+
+    #[test]
+    fn undecodable_patterns_return_none_not_garbage() {
+        let code = BinaryCode::new(6, 2).unwrap();
+        // fewer than M−s rows can never decode
+        assert!(code.combinator_weights(&[0, 1, 2]).is_none());
+        // exhaustively: every received set either solves 𝟙 exactly or is
+        // refused — verify the returned weights whenever Some
+        for mask in 0u32..64 {
+            let rows: Vec<usize> = (0..6).filter(|&r| mask & (1 << r) != 0).collect();
+            if let Some(a) = code.combinator_weights(&rows) {
+                for j in 0..6 {
+                    let got: f64 =
+                        rows.iter().zip(&a).map(|(&r, &w)| w * code.coeff(r, j) as f64).sum();
+                    assert!((got - 1.0).abs() < 1e-9, "mask {mask:#b} block {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int_rref_matches_float_engine_verdicts_on_pm1_stacks() {
+        let mut rng = Rng::new(515);
+        for trial in 0..40 {
+            let m = 2 + rng.below(9);
+            let s = 2 * (1 + rng.below(((m - 1) / 2).max(1)));
+            let Ok(code) = BinaryCode::new(m, s) else { continue };
+            let mut eng = IntRref::new(m);
+            let mut flt = crate::linalg::IncrementalRref::new(m);
+            let mut ibuf = Vec::new();
+            for _ in 0..2 * m {
+                let r = rng.below(m);
+                code.int_row_into(r, &mut ibuf);
+                // random erasures on the off-diagonal support
+                for (j, v) in ibuf.iter_mut().enumerate() {
+                    if j != r && rng.bernoulli(0.3) {
+                        *v = 0;
+                    }
+                }
+                let frow: Vec<f64> = ibuf.iter().map(|&v| v as f64).collect();
+                let a = eng.push_row(&ibuf);
+                let b = flt.push_row(&frow);
+                // ±1 stacks are exactly representable: verdicts agree
+                assert_eq!(a, b, "trial {trial}");
+                assert_eq!(eng.rank(), flt.rank(), "trial {trial}");
+                assert_eq!(eng.decodable_count(), flt.decodable_count(), "trial {trial}");
+            }
+        }
+    }
+
+    #[test]
+    fn unit_rows_extract_exact_weights() {
+        let mut eng = IntRref::new(3);
+        eng.push_row(&[1, -1, 0]);
+        eng.push_row(&[0, 1, -1]);
+        eng.push_row(&[0, 0, 2]);
+        assert_eq!(eng.rank(), 3);
+        assert_eq!(eng.decodable_count(), 3);
+        // decode block 0: g0 = row0 + row1 + row2/2
+        let (c, i) = eng.decodable().next().unwrap();
+        assert_eq!(c, 0);
+        let mut w = Vec::new();
+        eng.t_row_f64(i, &mut w);
+        assert_eq!(w, vec![1.0, 1.0, 0.5]);
+    }
+
+    #[test]
+    fn dependent_pushes_expose_exact_null_transforms() {
+        let mut eng = IntRref::new(4);
+        eng.push_row(&[1, -1, 1, 0]);
+        eng.push_row(&[0, 1, -1, 1]);
+        // sum of the two rows
+        assert_eq!(eng.push_row(&[1, 0, 0, 1]), None);
+        let mut combo = Vec::new();
+        eng.null_transform_f64(&mut combo);
+        assert_eq!(combo.len(), 3);
+        // combo · pushed = 0 exactly: scaled to integers it is (1, 1, -1)
+        let scale = combo[2].abs();
+        assert!(scale > 0.0);
+        assert_eq!(combo.iter().map(|x| x / scale).collect::<Vec<_>>(), vec![-1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn reset_reuses_engine() {
+        let mut eng = IntRref::new(3);
+        eng.push_row(&[1, 1, 0]);
+        eng.reset(2);
+        assert_eq!(eng.rank(), 0);
+        assert_eq!(eng.rows(), 0);
+        eng.push_row(&[0, 5]);
+        assert_eq!(eng.rank(), 1);
+        assert_eq!(eng.decodable_count(), 1);
+    }
+}

@@ -7,18 +7,32 @@
 //! every check whose support touches it; rows covered by no check (no
 //! spare redundancy) are undetectable.
 //!
-//! [`audit_rows`] harvests the checks for free from the existing
-//! [`IncrementalRref`] engine (each dependent `push_row` exposes one via
-//! `null_transform()`), evaluates them with a caller-supplied closure
-//! (payload residual in `sim`/trainer, symbolic corruption flags in
-//! `outage::mc`, so the two modes are oracle-comparable in tests), and on
-//! failure excises suspects and repeats on the surviving rows until all
-//! remaining checks pass. Suspicion is conservative: a row implicated by a
-//! failing check is excised unless some *passing* check vouches for it —
-//! trading a little recovery (honest rows excised alongside the liar) for
-//! integrity, which is the right trade for CoGC's exact decode.
+//! [`audit_rows`] harvests the checks for free from the decode engine
+//! (each dependent `push_row` exposes one via `null_transform()`),
+//! evaluates them with a caller-supplied closure (payload residual in
+//! `sim`/trainer, symbolic corruption flags in `outage::mc`, so the two
+//! modes are oracle-comparable in tests), and on failure excises suspects
+//! and repeats on the surviving rows until all remaining checks pass.
+//! Suspicion is conservative: a row implicated by a failing check is
+//! excised unless some *passing* check vouches for it — trading a little
+//! recovery (honest rows excised alongside the liar) for integrity, which
+//! is the right trade for CoGC's exact decode.
+//!
+//! # Peeling and the audit
+//!
+//! The peeling front-end ([`PeelingDecoder`]) does **not** exempt any row
+//! from the parity audit. Peel-resolved rows enter the engine at their
+//! arrival index exactly like eliminated rows, and a dependent row
+//! produces the bit-identical `null_transform()` whether its reduction
+//! took the fast path or the dense one — so every check the pure engine
+//! would harvest is harvested, with the same coefficients, in the same
+//! order. [`audit_rows`] therefore runs its passes *on* the peeling
+//! decoder (dependent redundant rows — the very rows that carry checks —
+//! are the fast path's best case), and [`audit_rows_pure`] keeps the
+//! plain-engine reference; detection rates are pinned equal by the
+//! differential tests here and in `tests/decode_equivalence.rs`.
 
-use crate::linalg::IncrementalRref;
+use crate::linalg::{IncrementalRref, PeelingDecoder};
 use crate::linalg::Matrix;
 
 /// Relative magnitude below which a check coefficient is considered
@@ -58,6 +72,39 @@ pub fn combo_support(combo: &[f64]) -> Vec<usize> {
         .collect()
 }
 
+/// The engine surface the audit passes need. Implemented by the pure
+/// incremental engine and by the peeling front-end; the two are
+/// bit-identical state machines, so either harvests the same checks.
+trait CheckEngine {
+    fn reset(&mut self, cols: usize);
+    fn push_row(&mut self, row: &[f64]) -> Option<usize>;
+    fn null_transform(&self) -> &[f64];
+}
+
+impl CheckEngine for IncrementalRref {
+    fn reset(&mut self, cols: usize) {
+        IncrementalRref::reset(self, cols)
+    }
+    fn push_row(&mut self, row: &[f64]) -> Option<usize> {
+        IncrementalRref::push_row(self, row)
+    }
+    fn null_transform(&self) -> &[f64] {
+        IncrementalRref::null_transform(self)
+    }
+}
+
+impl CheckEngine for PeelingDecoder {
+    fn reset(&mut self, cols: usize) {
+        PeelingDecoder::reset(self, cols)
+    }
+    fn push_row(&mut self, row: &[f64]) -> Option<usize> {
+        PeelingDecoder::push_row(self, row)
+    }
+    fn null_transform(&self) -> &[f64] {
+        PeelingDecoder::null_transform(self)
+    }
+}
+
 /// Audit a stack of coefficient rows against a check evaluator.
 ///
 /// `coeffs` holds one coded coefficient row per stacked observation (the
@@ -71,15 +118,38 @@ pub fn combo_support(combo: &[f64]) -> Vec<usize> {
 /// passing check are excised and the pass repeats, until every check
 /// passes (or nothing more can be excised). Terminates in ≤ rows passes
 /// since each continuing pass removes at least one row.
-pub fn audit_rows<F>(coeffs: &Matrix, mut check_fails: F) -> Audit
+///
+/// Runs on the peeling front-end (see the module docs);
+/// [`audit_rows_pure`] is the plain-engine reference with pinned-equal
+/// output.
+pub fn audit_rows<F>(coeffs: &Matrix, check_fails: F) -> Audit
 where
+    F: FnMut(&[f64], &[usize]) -> bool,
+{
+    let mut eng = PeelingDecoder::with_capacity(coeffs.cols, coeffs.rows);
+    audit_rows_with(&mut eng, coeffs, check_fails)
+}
+
+/// [`audit_rows`] on the pure incremental engine — the reference
+/// implementation the differential tests compare the peeling audit
+/// against.
+pub fn audit_rows_pure<F>(coeffs: &Matrix, check_fails: F) -> Audit
+where
+    F: FnMut(&[f64], &[usize]) -> bool,
+{
+    let mut eng = IncrementalRref::with_capacity(coeffs.cols, coeffs.rows);
+    audit_rows_with(&mut eng, coeffs, check_fails)
+}
+
+fn audit_rows_with<E, F>(eng: &mut E, coeffs: &Matrix, mut check_fails: F) -> Audit
+where
+    E: CheckEngine,
     F: FnMut(&[f64], &[usize]) -> bool,
 {
     let mut audit = Audit { kept: (0..coeffs.rows).collect(), ..Audit::default() };
     if coeffs.rows == 0 {
         return audit;
     }
-    let mut eng = IncrementalRref::with_capacity(coeffs.cols, coeffs.rows);
     // (fails, support as local kept-indices) per check of the current pass
     let mut pass_checks: Vec<(bool, Vec<usize>)> = Vec::new();
     loop {
@@ -297,6 +367,35 @@ mod tests {
         let audit = audit_rows(&coeffs, |c, k| payload_check_fails(c, k, &sums));
         assert!(!audit.alarm);
         assert!(audit.checks >= 8);
+    }
+
+    #[test]
+    fn peeling_audit_matches_pure_audit_on_adversarial_grid() {
+        // satellite regression: detection behavior with the peeling
+        // front-end in the audit loop is identical to the pure engine —
+        // alarms, checks, excisions, survivors, bit for bit
+        let mut rng = Rng::new(88);
+        for (m, s) in [(6usize, 2usize), (8, 3), (10, 4)] {
+            for trial in 0u64..15 {
+                let (coeffs, mut sums, _) = double_stack(m, s, 1000 + trial);
+                let mut corrupted = vec![false; coeffs.rows];
+                for r in 0..coeffs.rows {
+                    if rng.bernoulli(0.2) {
+                        corrupted[r] = true;
+                        for x in sums.row_mut(r) {
+                            *x = 5.0 + rng.normal();
+                        }
+                    }
+                }
+                let peel = audit_rows(&coeffs, |c, k| payload_check_fails(c, k, &sums));
+                let pure = audit_rows_pure(&coeffs, |c, k| payload_check_fails(c, k, &sums));
+                assert_eq!(peel, pure, "payload audit m={m} s={s} trial {trial}");
+                let peel = audit_rows(&coeffs, |c, k| symbolic_check_fails(c, k, &corrupted));
+                let pure =
+                    audit_rows_pure(&coeffs, |c, k| symbolic_check_fails(c, k, &corrupted));
+                assert_eq!(peel, pure, "symbolic audit m={m} s={s} trial {trial}");
+            }
+        }
     }
 
     #[test]

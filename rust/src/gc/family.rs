@@ -1,7 +1,8 @@
 //! Structured code families: the dense cyclic construction plus the
-//! fractional-repetition (FR) family that scales to M = 10⁵–10⁶ clients.
+//! fractional-repetition (FR) family that scales to M = 10⁵–10⁶ clients
+//! and the exact-arithmetic binary family.
 //!
-//! [`CodeFamily`] names the two constructions the stack can run:
+//! [`CodeFamily`] names the constructions the stack can run:
 //!
 //! - **Cyclic** — the paper's dense construction ([`super::GcCode`],
 //!   Tandon Alg. 2): random coefficients, RREF/combinator decoding,
@@ -13,10 +14,18 @@
 //!   the `GC_FR` construction of *Generalized Fractional Repetition Codes
 //!   for Binary Coded Computations*), GC⁺ partial recovery is the count of
 //!   covered groups, and everything is O(M·(s+1)) in time and memory.
+//! - **Binary** — [`super::BinaryCode`] (`gc::binary`): deterministic
+//!   {±1} coefficients on the cyclic support, `s` even. Standard decode
+//!   and GC⁺ block solves run in exact integer/rational arithmetic
+//!   ([`super::binary::IntRref`]) — no pivot-tolerance machinery — with
+//!   the dense float mirror retained as the small-M oracle.
 //!
 //! The FR code satisfies the same decodability identity as the cyclic
 //! family — any M−s rows of B span the all-one vector — because erasing at
-//! most s rows cannot wipe out all s+1 identical rows of any group.
+//! most s rows cannot wipe out all s+1 identical rows of any group. The
+//! binary family does *not* carry that identity (±1 rows admit erasure
+//! patterns whose span misses 𝟙), so its decode paths test solvability
+//! exactly instead of assuming it.
 
 use crate::network::{SparseRealization, SparseSupport};
 use crate::parallel::parallel_map;
@@ -29,14 +38,17 @@ pub enum CodeFamily {
     Cyclic,
     /// Block-diagonal fractional-repetition code (structured large-M path).
     FractionalRepetition,
+    /// Deterministic {±1} cyclic-support code with exact integer decoding.
+    Binary,
 }
 
 impl CodeFamily {
-    /// Stable CLI/JSON identifier (`cyclic` | `fr`).
+    /// Stable CLI/JSON identifier (`cyclic` | `fr` | `binary`).
     pub fn name(&self) -> &'static str {
         match self {
             CodeFamily::Cyclic => "cyclic",
             CodeFamily::FractionalRepetition => "fr",
+            CodeFamily::Binary => "binary",
         }
     }
 
@@ -45,6 +57,7 @@ impl CodeFamily {
         match s {
             "cyclic" => Some(CodeFamily::Cyclic),
             "fr" | "fractional_repetition" => Some(CodeFamily::FractionalRepetition),
+            "binary" => Some(CodeFamily::Binary),
             _ => None,
         }
     }
@@ -53,11 +66,20 @@ impl CodeFamily {
     pub fn validate(&self, m: usize, s: usize) -> anyhow::Result<()> {
         anyhow::ensure!(m >= 2, "need at least 2 clients");
         anyhow::ensure!(s >= 1 && s < m, "straggler tolerance s must be in [1, M-1]");
-        if let CodeFamily::FractionalRepetition = self {
-            anyhow::ensure!(
-                m % (s + 1) == 0,
-                "fractional repetition needs M divisible by s+1 (M={m}, s={s})"
-            );
+        match self {
+            CodeFamily::Cyclic => {}
+            CodeFamily::FractionalRepetition => {
+                anyhow::ensure!(
+                    m % (s + 1) == 0,
+                    "fractional repetition needs M divisible by s+1 (M={m}, s={s})"
+                );
+            }
+            CodeFamily::Binary => {
+                anyhow::ensure!(
+                    s % 2 == 0,
+                    "binary needs even s so each ±1 row sums to 1 (M={m}, s={s})"
+                );
+            }
         }
         Ok(())
     }
@@ -194,7 +216,9 @@ mod tests {
 
     #[test]
     fn family_names_roundtrip() {
-        for fam in [CodeFamily::Cyclic, CodeFamily::FractionalRepetition] {
+        for fam in
+            [CodeFamily::Cyclic, CodeFamily::FractionalRepetition, CodeFamily::Binary]
+        {
             assert_eq!(CodeFamily::parse(fam.name()), Some(fam));
         }
         assert_eq!(CodeFamily::parse("fractional_repetition"),
@@ -210,6 +234,8 @@ mod tests {
         assert!(CodeFamily::FractionalRepetition.validate(10, 3).is_err());
         assert!(CodeFamily::FractionalRepetition.validate(12, 12).is_err());
         assert!(FrCode::new(10, 3).is_err());
+        assert!(CodeFamily::Binary.validate(10, 4).is_ok());
+        assert!(CodeFamily::Binary.validate(10, 3).is_err());
     }
 
     #[test]

@@ -23,7 +23,7 @@
 //! `O(blocks² · M²)`.
 
 use crate::gc::codes::GcCode;
-use crate::linalg::{IncrementalRref, Matrix};
+use crate::linalg::{IncrementalRref, Matrix, PeelingDecoder};
 use crate::network::Realization;
 
 /// Erasure-perturbed coefficients `B̃ = B ∘ T(r)` (paper eq. (22), before
@@ -190,74 +190,83 @@ pub fn decode_approx(stacked: &Matrix) -> Decoded {
     dec
 }
 
-/// Persistent per-trial GC⁺ decoder: the incremental engine plus the
-/// attempt-feeding conventions of Algorithm 1's until-decode loop.
+/// Persistent per-trial GC⁺ decoder: the degree-one peeling front-end over
+/// the incremental engine, plus the attempt-feeding conventions of
+/// Algorithm 1's until-decode loop.
 ///
 /// Feed each communication attempt's delivered coefficient rows with
 /// [`push_attempt`](GcPlusDecoder::push_attempt) (rows stream straight out
 /// of the attempt's perturbed matrix — no intermediate stack is ever
 /// materialized), poll [`decodable_count`](GcPlusDecoder::decodable_count)
 /// after each block (allocation-free), and call
-/// [`decode`](GcPlusDecoder::decode) once something is decodable. The
-/// result is bit-for-bit the [`decode`] of the equivalent
-/// [`stack_attempts`] matrix, at `O(rank · M)` per pushed row instead of a
-/// full re-factor per block. [`reset`](GcPlusDecoder::reset) recycles all
-/// buffers for the next trial.
+/// [`decode`](GcPlusDecoder::decode) once something is decodable. Rows
+/// whose support is already resolved down to degree ≤ 1 take the
+/// [`PeelingDecoder`] fast path past the dense elimination; the engine
+/// state — and therefore the result — stays bit-for-bit the [`decode`] of
+/// the equivalent [`stack_attempts`] matrix (`tests/decode_equivalence.rs`).
+/// [`reset`](GcPlusDecoder::reset) recycles all buffers for the next trial.
 pub struct GcPlusDecoder {
-    inc: IncrementalRref,
+    peel: PeelingDecoder,
 }
 
 impl GcPlusDecoder {
     pub fn new(m: usize) -> GcPlusDecoder {
-        GcPlusDecoder { inc: IncrementalRref::with_capacity(m, 4 * m.max(1)) }
+        GcPlusDecoder { peel: PeelingDecoder::with_capacity(m, 4 * m.max(1)) }
     }
 
     /// Clear for a fresh trial over `m` clients, keeping all allocations.
     pub fn reset(&mut self, m: usize) {
-        self.inc.reset(m);
+        self.peel.reset(m);
     }
 
     /// Push the delivered coefficient rows of one attempt, in `delivered`
     /// order (the same order [`stack_attempts`] emits).
     pub fn push_attempt(&mut self, att: &Attempt) {
         for &r in &att.delivered {
-            self.inc.push_row(att.perturbed.row(r));
+            self.peel.push_row(att.perturbed.row(r));
         }
     }
 
     /// Push one received coefficient row.
     pub fn push_row(&mut self, coeffs: &[f64]) {
-        self.inc.push_row(coeffs);
+        self.peel.push_row(coeffs);
     }
 
     /// Coefficient rows received so far (the stacked-matrix height).
     pub fn rows(&self) -> usize {
-        self.inc.rows()
+        self.peel.rows()
     }
 
     /// Numerical rank of the received stack (Lemma 2/3 diagnostics).
     pub fn rank(&self) -> usize {
-        self.inc.rank()
+        self.peel.rank()
     }
 
     /// `|K₄|` of the current stack without allocating — the per-block
     /// success test of the until-decode loop.
     pub fn decodable_count(&self) -> usize {
-        self.inc.decodable_count()
+        self.peel.decodable_count()
+    }
+
+    /// Rows resolved by the peeling fast path / forwarded to the dense
+    /// elimination (bench telemetry).
+    pub fn peel_split(&self) -> (usize, usize) {
+        (self.peel.peeled(), self.peel.forwarded())
     }
 
     /// Full decode of the current stack (identical to batch [`decode`] of
     /// the stacked rows).
     pub fn decode(&self) -> Decoded {
-        if self.inc.rows() == 0 {
+        if self.peel.rows() == 0 {
             return Decoded { k4: Vec::new(), weights: Matrix::zeros(0, 0), rank: 0 };
         }
-        extract_decoded(&self.inc)
+        extract_decoded(self.peel.engine())
     }
 
-    /// The underlying engine (rank/pivot introspection).
+    /// The underlying engine (rank/pivot introspection, audit checks) —
+    /// bit-identical to a pure [`IncrementalRref`] fed the same rows.
     pub fn engine(&self) -> &IncrementalRref {
-        &self.inc
+        self.peel.engine()
     }
 }
 

@@ -1,8 +1,10 @@
 //! Gradient-coding core: cyclic code construction, the structured
-//! fractional-repetition family, the standard (binary) GC decoder, the
-//! complementary GC⁺ decoder, and the rank analyses that underpin the
-//! paper's reliability results.
+//! fractional-repetition and exact ±1 binary families, the standard
+//! (combinator) GC decoder, the complementary GC⁺ decoder with its
+//! peeling front-end, and the rank analyses that underpin the paper's
+//! reliability results.
 
+pub mod binary;
 pub mod byzantine;
 pub mod codes;
 pub mod combinator;
@@ -10,7 +12,10 @@ pub mod family;
 pub mod gcplus;
 pub mod rank;
 
-pub use byzantine::{audit_rows, payload_check_fails, symbolic_check_fails, Audit};
+pub use binary::{BinaryCode, IntRref};
+pub use byzantine::{
+    audit_rows, audit_rows_pure, payload_check_fails, symbolic_check_fails, Audit,
+};
 pub use codes::GcCode;
 pub use combinator::{apply_combinator, find_combinator};
 pub use family::{CodeFamily, FrCode};

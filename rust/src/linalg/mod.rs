@@ -1,12 +1,15 @@
 //! Dense linear algebra substrate: matrices, RREF with transform tracking
 //! (batch and incremental), rank, and consistent-system solves. These power
 //! the GC code construction and the GC⁺ complementary decoder; the
-//! incremental engine ([`IncrementalRref`]) is the until-decode hot path.
+//! incremental engine ([`IncrementalRref`]) behind the degree-one peeling
+//! front-end ([`PeelingDecoder`]) is the until-decode hot path.
 
 pub mod matrix;
+pub mod peeling;
 pub mod rref;
 
 pub use matrix::Matrix;
+pub use peeling::PeelingDecoder;
 pub use rref::{
     decodable_columns, rank, rref_with_transform, solve_consistent, IncrementalRref, Rref,
 };

@@ -1,0 +1,368 @@
+//! Degree-one peeling front-end for the incremental RREF engine.
+//!
+//! GC coefficient rows are sparse — `s+1` non-zeros on a cyclic support —
+//! so most delivered rows arrive with every support block but (at most)
+//! one already resolved. Classic online-fountain peeling (decode stacks,
+//! block→row adjacency, O(1) propagation per resolved block) exploits
+//! exactly this; [`PeelingDecoder`] is that idea adapted to the streaming,
+//! bit-for-bit-reproducible setting of the GC⁺ decode path:
+//!
+//! - A **resolution map** tracks, per stored pivot row, whether it is a
+//!   *bit-exact unit* (pivot entry exactly `1.0`, all else `== 0.0`) —
+//!   i.e. whether its pivot block is fully resolved.
+//! - Each pushed row is classified in one sparse pass over its support:
+//!   if every support column but at most one (`j`) pivots in an exact-unit
+//!   row, the row is **degree ≤ 1** and takes the peel fast path
+//!   ([`IncrementalRref::peel_push`]): O(rank + rows) transform
+//!   back-substitution instead of the O(rank · M) dense elimination.
+//!   Otherwise it forwards to the ordinary [`IncrementalRref::push_row`].
+//! - A **ripple stack**: committing block `j` zeroes column `j` in stored
+//!   rows, which may promote them to exact units; promoted rows resolve
+//!   their blocks, which can promote further rows on later pushes.
+//!
+//! Unlike a deferred fountain decoder, rows are never buffered for later
+//! peeling: every row enters the engine at its arrival index, because the
+//! decode paths (and the Byzantine audit, which consumes the
+//! [`null_transform`](IncrementalRref::null_transform) of each dependent
+//! push *in arrival order*) are pinned bit-for-bit to the pure-RREF
+//! operation sequence. Deferring a row would reorder the transform
+//! accumulation and change every downstream weight at the last ulp. The
+//! fast path instead performs the *identical* state transition to
+//! `push_row` whenever sparsity makes that transition cheap — so after
+//! every push the wrapped engine is bit-identical to a pure
+//! `IncrementalRref` fed the same stream, and `decodable_count`, decode
+//! weights, outcome classification, and audit alarms are unchanged by
+//! construction (`tests/decode_equivalence.rs` pins this per prefix).
+//!
+//! The biggest single win in the until-decode loop is the *dependent* fast
+//! path: once a block set is resolved, every further row over those blocks
+//! is recognized as redundant from its support alone — O(s) — where the
+//! pure engine would spend a full O(rank · M) reduction to discover the
+//! same thing.
+
+use super::rref::IncrementalRref;
+
+/// Peeling + RREF hybrid decoder: a drop-in for [`IncrementalRref`] on the
+/// GC⁺ decode path (same push/query surface, bit-identical state), with
+/// degree-≤1 rows short-circuited past the dense elimination.
+pub struct PeelingDecoder {
+    inc: IncrementalRref,
+    /// `unit[i]` — stored row `i` is a bit-exact unit (block resolved).
+    /// Monotone: exact-unit rows are never modified again (elimination
+    /// factors read exactly `0.0` and are skipped).
+    unit: Vec<bool>,
+    /// Scratch: `in_support[c]` for the row being pushed (all-false
+    /// between pushes).
+    in_support: Vec<bool>,
+    /// Scratch: support columns of the row being pushed.
+    support: Vec<usize>,
+    /// Ripple stack: stored rows whose column-`j` entry a peel just
+    /// zeroed, pending an exact-unit re-check.
+    ripple: Vec<usize>,
+    peeled: usize,
+    forwarded: usize,
+}
+
+impl PeelingDecoder {
+    pub fn new(cols: usize) -> PeelingDecoder {
+        PeelingDecoder::with_capacity(cols, 0)
+    }
+
+    /// Decoder with engine buffers pre-sized for `rows_hint` pushed rows.
+    pub fn with_capacity(cols: usize, rows_hint: usize) -> PeelingDecoder {
+        PeelingDecoder {
+            inc: IncrementalRref::with_capacity(cols, rows_hint),
+            unit: Vec::new(),
+            in_support: vec![false; cols],
+            support: Vec::new(),
+            ripple: Vec::new(),
+            peeled: 0,
+            forwarded: 0,
+        }
+    }
+
+    /// Clear all state for a fresh stream of `cols`-wide rows, retaining
+    /// every allocation (pooled per-trial reuse).
+    pub fn reset(&mut self, cols: usize) {
+        self.inc.reset(cols);
+        self.unit.clear();
+        self.in_support.clear();
+        self.in_support.resize(cols, false);
+        self.support.clear();
+        self.ripple.clear();
+        self.peeled = 0;
+        self.forwarded = 0;
+    }
+
+    /// The wrapped engine (read-only): pivot rows, transforms, null
+    /// transforms — bit-identical to a pure [`IncrementalRref`] fed the
+    /// same rows.
+    pub fn engine(&self) -> &IncrementalRref {
+        &self.inc
+    }
+
+    /// Rows taken by the degree-≤1 fast path so far.
+    pub fn peeled(&self) -> usize {
+        self.peeled
+    }
+
+    /// Rows forwarded to the dense elimination so far.
+    pub fn forwarded(&self) -> usize {
+        self.forwarded
+    }
+
+    /// Push one row; returns exactly what [`IncrementalRref::push_row`]
+    /// would, leaving the engine in the identical state.
+    pub fn push_row(&mut self, row: &[f64]) -> Option<usize> {
+        assert_eq!(row.len(), self.inc.cols(), "push_row width mismatch");
+        // classify: sparse support scan + resolution check
+        self.support.clear();
+        for (c, &v) in row.iter().enumerate() {
+            if v != 0.0 {
+                self.support.push(c);
+                self.in_support[c] = true;
+            }
+        }
+        let mut j = None;
+        let mut degree_le1 = true;
+        for &c in &self.support {
+            match self.inc.pivots()[c] {
+                Some(i) if self.unit[i] => {}
+                Some(_) => {
+                    degree_le1 = false;
+                    break;
+                }
+                None if j.is_none() => j = Some(c),
+                None => {
+                    degree_le1 = false;
+                    break;
+                }
+            }
+        }
+
+        let res = if degree_le1 {
+            self.peeled += 1;
+            let res = self.inc.peel_push(row, &self.in_support, j, &mut self.ripple);
+            if res.is_some() {
+                self.unit.push(true);
+                // ripple: rows whose last off-pivot entry was just zeroed
+                // resolve their own blocks
+                while let Some(i) = self.ripple.pop() {
+                    if !self.unit[i] && self.exact_unit(i) {
+                        self.unit[i] = true;
+                    }
+                }
+            }
+            res
+        } else {
+            self.forwarded += 1;
+            let res = self.inc.push_row(row);
+            if res.is_some() {
+                // the commit may have eliminated its pivot column from any
+                // stored row; re-check the non-units (the push itself was
+                // already O(rank · M), so this does not change the order)
+                self.unit.push(self.exact_unit(self.inc.rank() - 1));
+                for i in 0..self.inc.rank() - 1 {
+                    if !self.unit[i] && self.exact_unit(i) {
+                        self.unit[i] = true;
+                    }
+                }
+            }
+            res
+        };
+        for &c in &self.support {
+            self.in_support[c] = false;
+        }
+        res
+    }
+
+    /// Push every `cols`-wide row of a flat slice, in order.
+    pub fn push_rows(&mut self, rows: &[f64]) {
+        let cols = self.inc.cols();
+        assert!(cols > 0 && rows.len() % cols == 0, "push_rows: flat slice must be a multiple of cols");
+        for row in rows.chunks_exact(cols) {
+            self.push_row(row);
+        }
+    }
+
+    /// Whether stored row `i` is a bit-exact unit: pivot entry exactly
+    /// `1.0`, every other entry `== 0.0`. Strictly stronger than the
+    /// engine's tolerance-based [`is_unit_row`](IncrementalRref::is_unit_row)
+    /// — only bit-exact units make reduction a provable no-op.
+    fn exact_unit(&self, i: usize) -> bool {
+        let c = self.inc.row_cols()[i];
+        self.inc
+            .e_row(i)
+            .iter()
+            .enumerate()
+            .all(|(k, &v)| if k == c { v == 1.0 } else { v == 0.0 })
+    }
+
+    // ── delegated queries (identical answers to the pure engine) ───────
+
+    pub fn cols(&self) -> usize {
+        self.inc.cols()
+    }
+
+    /// Total rows pushed so far (the width of the transform rows).
+    pub fn rows(&self) -> usize {
+        self.inc.rows()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.inc.rank()
+    }
+
+    /// See [`IncrementalRref::null_transform`].
+    pub fn null_transform(&self) -> &[f64] {
+        self.inc.null_transform()
+    }
+
+    /// See [`IncrementalRref::decodable_count`].
+    pub fn decodable_count(&self) -> usize {
+        self.inc.decodable_count()
+    }
+
+    /// See [`IncrementalRref::decodable`].
+    pub fn decodable(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.inc.decodable()
+    }
+
+    /// See [`IncrementalRref::nonzero_col_count`].
+    pub fn nonzero_col_count(&self) -> usize {
+        self.inc.nonzero_col_count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::util::rng::Rng;
+
+    /// Engine-state equality, bit-for-bit, after every push.
+    fn assert_state_eq(peel: &PeelingDecoder, pure: &IncrementalRref, ctx: &str) {
+        let (a, b) = (peel.engine(), pure);
+        assert_eq!(a.rank(), b.rank(), "{ctx}: rank");
+        assert_eq!(a.rows(), b.rows(), "{ctx}: rows");
+        assert_eq!(a.pivots(), b.pivots(), "{ctx}: pivots");
+        assert_eq!(a.row_cols(), b.row_cols(), "{ctx}: row_cols");
+        for i in 0..a.rank() {
+            for (x, y) in a.e_row(i).iter().zip(b.e_row(i)) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: e row {i}");
+            }
+            for (x, y) in a.t_row(i).iter().zip(b.t_row(i)) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: t row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn degree_one_stream_peels_and_matches() {
+        // identity rows arrive one by one: everything after the forwarded
+        // classification is degree ≤ 1
+        let mut peel = PeelingDecoder::new(4);
+        let mut pure = IncrementalRref::new(4);
+        for c in 0..4 {
+            let mut row = [0.0; 4];
+            row[c] = 2.0 + c as f64;
+            assert_eq!(peel.push_row(&row), pure.push_row(&row));
+            assert_state_eq(&peel, &pure, &format!("unit row {c}"));
+        }
+        assert_eq!(peel.peeled(), 4, "single-support rows are degree one");
+        assert_eq!(peel.decodable_count(), 4);
+        // a now-redundant sparse row takes the dependent fast path
+        let row = [1.0, -1.0, 0.0, 0.5];
+        assert_eq!(peel.push_row(&row), pure.push_row(&row));
+        assert_eq!(peel.peeled(), 5);
+        assert_state_eq(&peel, &pure, "redundant row");
+        for (x, y) in peel.null_transform().iter().zip(pure.null_transform()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "null transform");
+        }
+    }
+
+    #[test]
+    fn ripple_promotes_stored_rows() {
+        let mut peel = PeelingDecoder::new(3);
+        // dense row: forwarded (two unpivoted support columns)
+        peel.push_row(&[1.0, 1.0, 0.0]);
+        assert_eq!(peel.forwarded(), 1);
+        // resolves block 1 AND promotes the stored row to a unit (its
+        // column-1 entry is eliminated)
+        peel.push_row(&[0.0, 3.0, 0.0]);
+        assert_eq!(peel.peeled(), 1);
+        assert_eq!(peel.decodable_count(), 2);
+        // both blocks resolved ⇒ this row is degree ≤ 1 (residual block 2)
+        peel.push_row(&[1.0, 1.0, 1.0]);
+        assert_eq!(peel.peeled(), 2);
+        assert_eq!(peel.decodable_count(), 3);
+    }
+
+    #[test]
+    fn random_sparse_streams_match_pure_engine_bitwise() {
+        let mut rng = Rng::new(4021);
+        for trial in 0..60 {
+            let m = 2 + rng.below(10);
+            let s = 1 + rng.below(3.min(m - 1));
+            let n_rows = 1 + rng.below(3 * m);
+            let mut peel = PeelingDecoder::new(m);
+            let mut pure = IncrementalRref::new(m);
+            for r in 0..n_rows {
+                // cyclic-support row with occasional extra zeros and
+                // occasional all-zero rows
+                let start = rng.below(m);
+                let mut row = vec![0.0; m];
+                if !rng.bernoulli(0.05) {
+                    for o in 0..=s {
+                        if !rng.bernoulli(0.2) {
+                            row[(start + o) % m] = rng.normal_ms(0.0, 2.0);
+                        }
+                    }
+                }
+                assert_eq!(peel.push_row(&row), pure.push_row(&row), "trial {trial} row {r}");
+                assert_state_eq(&peel, &pure, &format!("trial {trial} row {r}"));
+                assert_eq!(
+                    peel.decodable_count(),
+                    pure.decodable_count(),
+                    "trial {trial} row {r}"
+                );
+            }
+            assert_eq!(peel.peeled() + peel.forwarded(), n_rows, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn reset_clears_resolution_state() {
+        let mut peel = PeelingDecoder::with_capacity(3, 8);
+        peel.push_row(&[0.0, 5.0, 0.0]);
+        assert_eq!(peel.peeled(), 1);
+        peel.reset(2);
+        assert_eq!(peel.rank(), 0);
+        assert_eq!(peel.rows(), 0);
+        assert_eq!(peel.peeled(), 0);
+        assert_eq!(peel.forwarded(), 0);
+        peel.push_row(&[0.0, 1.5]);
+        assert_eq!(peel.rank(), 1);
+        assert_eq!(peel.decodable_count(), 1);
+    }
+
+    #[test]
+    fn batch_matrix_agrees_with_batch_rref() {
+        let mut rng = Rng::new(909);
+        let a = Matrix::from_fn(12, 6, |_, _| {
+            if rng.bernoulli(0.55) { 0.0 } else { rng.normal() }
+        });
+        let rr = crate::linalg::rref_with_transform(&a);
+        let mut peel = PeelingDecoder::new(6);
+        for i in 0..a.rows {
+            peel.push_row(a.row(i));
+        }
+        assert_eq!(peel.rank(), rr.rank);
+        assert_eq!(peel.engine().pivots(), &rr.pivots[..]);
+        for i in 0..peel.rank() {
+            for (x, y) in peel.engine().t_row(i).iter().zip(rr.t.row(i)) {
+                assert_eq!(x.to_bits(), y.to_bits(), "t row {i}");
+            }
+        }
+    }
+}

@@ -201,6 +201,12 @@ impl IncrementalRref {
         &self.pivots
     }
 
+    /// Stored row `i` pivots in column `row_cols()[i]` (inverse of
+    /// [`pivots`](IncrementalRref::pivots), in pivot-creation order).
+    pub fn row_cols(&self) -> &[usize] {
+        &self.row_cols
+    }
+
     /// Stored pivot row `i` of `E` (reduced coefficients, width `cols`).
     pub fn e_row(&self, i: usize) -> &[f64] {
         debug_assert!(i < self.rank);
@@ -329,6 +335,122 @@ impl IncrementalRref {
         self.t.push(committed);
         self.rank += 1;
         Some(c)
+    }
+
+    /// Degree-≤1 fast-path push — the peeling back-substitution used by
+    /// [`PeelingDecoder`](super::peeling::PeelingDecoder).
+    ///
+    /// **Precondition** (checked by the caller, debug-asserted here): every
+    /// support column of `row` (`in_support[c] == (row[c] != 0.0)`) except
+    /// the at-most-one unpivoted column `j` pivots in a stored row that is a
+    /// *bit-exact unit* (pivot entry exactly `1.0`, every other entry
+    /// `== 0.0`). Under that precondition [`push_row`] would perform the
+    /// identical state transition: reducing by an exact-unit row is a
+    /// bit-level no-op on every candidate column except the pivot column
+    /// itself (which `push_row` then overwrites with exact `0.0`), so the
+    /// candidate's residual value at `j` is the raw `row[j]`, the committed
+    /// row is exactly the unit vector `e_j` (normalization flushes every
+    /// off-pivot entry of a degree-one row), and eliminating column `j` from
+    /// a stored row by an exact-unit candidate only touches that row's
+    /// column-`j` entry. This method performs exactly those updates — O(rank
+    /// + rows) transform work instead of `push_row`'s O(rank · cols)
+    /// elimination — leaving the engine state **bit-for-bit identical** to
+    /// what [`push_row`] would have produced (pinned per-prefix by
+    /// `tests/decode_equivalence.rs`).
+    ///
+    /// `j = None` means every support column is already resolved: the row is
+    /// necessarily dependent and only the null transform is produced.
+    /// Stored rows whose column-`j` entry was zeroed by the elimination are
+    /// appended to `touched` — each may have just become a unit row (the
+    /// caller's ripple re-check). Returns what `push_row` would return.
+    pub(crate) fn peel_push(
+        &mut self,
+        row: &[f64],
+        in_support: &[bool],
+        j: Option<usize>,
+        touched: &mut Vec<usize>,
+    ) -> Option<usize> {
+        let cols = self.cols;
+        assert_eq!(row.len(), cols, "peel_push width mismatch");
+        debug_assert!(row.iter().zip(in_support).all(|(&v, &s)| s == (v != 0.0)));
+        debug_assert!(j.map_or(true, |jc| self.pivots[jc].is_none()));
+        // prologue: identical to push_row
+        self.rows_seen += 1;
+        for tr in &mut self.t {
+            tr.push(0.0);
+        }
+        for &v in row {
+            self.max_abs = self.max_abs.max(v.abs());
+        }
+        let tol = self.tol();
+        self.t_cand.clear();
+        self.t_cand.resize(self.rows_seen, 0.0);
+        self.t_cand[self.rows_seen - 1] = 1.0;
+
+        // step 1 mirror: stored rows in creation order; in-support pivot
+        // rows are exact units, so only the transform accumulates (the
+        // factor is the raw entry — no earlier reduction can have changed
+        // it) and sub-tolerance factors flush without a transform update,
+        // exactly as in push_row
+        for i in 0..self.rank {
+            let c = self.row_cols[i];
+            if !in_support[c] {
+                continue; // push_row: f == 0.0 ⇒ skip
+            }
+            let f = row[c];
+            if f.abs() <= tol {
+                continue; // push_row: flush only, no transform update
+            }
+            for (x, p) in self.t_cand.iter_mut().zip(&self.t[i]) {
+                *x -= f * p;
+            }
+        }
+
+        // step 2 mirror: the only surviving entry is the residual at `j`
+        let pivot_floor = PIVOT_EPS * self.max_abs.max(1.0);
+        let jc = match j {
+            Some(jc) if row[jc].abs() > pivot_floor => jc,
+            // dependent: rank unchanged, t_cand is the null combination
+            _ => return None,
+        };
+
+        // step 3 mirror: normalize the transform, eliminate column `jc`
+        // from every stored row (an exact-unit candidate touches nothing
+        // else), commit the unit row e_jc
+        let inv = 1.0 / row[jc];
+        for x in self.t_cand.iter_mut() {
+            *x *= inv;
+        }
+        for i in 0..self.rank {
+            let f = self.e[i * cols + jc];
+            if f == 0.0 {
+                continue;
+            }
+            self.e[i * cols + jc] = 0.0; // exact, in both branches below
+            touched.push(i);
+            if f.abs() <= tol {
+                continue; // push_row: flush only, no transform update
+            }
+            for (x, p) in self.t[i].iter_mut().zip(self.t_cand.iter()) {
+                *x -= f * p;
+            }
+        }
+        if self.e.len() < (self.rank + 1) * cols {
+            self.e.resize((self.rank + 1) * cols, 0.0);
+        }
+        let slot = &mut self.e[self.rank * cols..(self.rank + 1) * cols];
+        for x in slot.iter_mut() {
+            *x = 0.0;
+        }
+        slot[jc] = 1.0;
+        self.pivots[jc] = Some(self.rank);
+        self.row_cols.push(jc);
+        let mut committed = self.t_spare.pop().unwrap_or_default();
+        committed.clear();
+        committed.extend_from_slice(&self.t_cand);
+        self.t.push(committed);
+        self.rank += 1;
+        Some(jc)
     }
 
     /// Push a flat block of rows (`rows.len()` must divide into `cols`-wide

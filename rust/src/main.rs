@@ -53,7 +53,7 @@ fn main() {
 fn parse_code(a: &Args) -> anyhow::Result<CodeFamily> {
     let name = a.str_opt("code", "cyclic");
     CodeFamily::parse(&name)
-        .ok_or_else(|| anyhow::anyhow!("unknown --code {name:?} (cyclic|fr)"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --code {name:?} (cyclic|fr|binary)"))
 }
 
 fn parse_agg(a: &Args) -> anyhow::Result<Aggregator> {
@@ -211,14 +211,16 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
                     if revalidate {
                         sc.validate()?;
                     }
-                    // dense cyclic materializes M×M matrices per attempt —
-                    // refuse federation scales that only the sparse family
-                    // can carry instead of thrashing for hours
+                    // dense cyclic — and the binary family's dense bridge —
+                    // materialize M×M matrices per attempt; refuse federation
+                    // scales that only the sparse family can carry instead of
+                    // thrashing for hours
                     anyhow::ensure!(
-                        sc.code != CodeFamily::Cyclic || sc.net.m() <= 4096,
-                        "M = {} with the dense cyclic family would allocate O(M²) state; \
+                        sc.code == CodeFamily::FractionalRepetition || sc.net.m() <= 4096,
+                        "M = {} with the {} family would allocate O(M²) state; \
                          pass --code fr (fractional repetition, needs M % (s+1) == 0)",
-                        sc.net.m()
+                        sc.net.m(),
+                        sc.code.name()
                     );
                     let trials = args.usize_opt("trials", 2_000)?;
                     figures::scenario_sweep(&sc, trials, seed, threads).print();
@@ -351,12 +353,13 @@ scenarios (stateful channels: bursty / correlated / straggler links):
                                   or --adversary — add corruption/detection/
                                   poisoning columns and print the 2x2
                                   recovery x integrity split)
-        [--code cyclic|fr]        code family: dense cyclic (default) or
+        [--code cyclic|fr|binary] code family: dense cyclic (default),
         [--m N] [--s S]           fractional repetition — the sparse
                                   O(M·(s+1)) path that scales to M = 10^5-10^6
-                                  (needs M % (s+1) == 0); --m/--s retarget
-                                  the scenario's federation size in place
-                                  (default scenario: smoke)
+                                  (needs M % (s+1) == 0) — or the exact ±1
+                                  binary family (needs even s); --m/--s
+                                  retarget the scenario's federation size in
+                                  place (default scenario: smoke)
   scenario run --file spec.json   run a custom JSON scenario spec
 
 training:
@@ -366,8 +369,9 @@ training:
         [--rounds N] [--seed S] [--p-ps P] [--p-cc P] [--tr T] [--attempts A]
         [--channel iid|<scenario>]  link dynamics: iid or the channel model
                      of a named scenario (e.g. --channel bursty-c2c)
-        [--code cyclic|fr] [--s S]  gradient-code family + straggler
-                     tolerance (fr needs M % (s+1) == 0, e.g. --s 4 at M=10)
+        [--code cyclic|fr|binary] [--s S]  gradient-code family + straggler
+                     tolerance (fr needs M % (s+1) == 0, e.g. --s 4 at M=10;
+                     binary decodes exactly and needs even s)
         [--combine pallas|native]   coded-combine kernels (NOT the model
                      backend — see --backend); pallas needs PJRT artifacts
         [--adversary <spec>]        Byzantine clients (fixed set for the run);

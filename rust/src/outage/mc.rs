@@ -21,7 +21,7 @@
 //! decoder instead of re-running a full RREF over the growing stack every
 //! block.
 
-use crate::gc::{self, FrCode, GcCode};
+use crate::gc::{self, BinaryCode, FrCode, GcCode, IntRref};
 use crate::network::{Network, Realization, SparseRealization};
 use crate::parallel::{Accumulate, MonteCarlo};
 use crate::scenario::{ChannelModel, CHANNEL_STREAM};
@@ -254,6 +254,133 @@ pub fn gcplus_recovery(
         |t, rng, acc: &mut RecoveryStats, scratch| {
             scratch.ch.reset(net, mc.substream_seed(CHANNEL_STREAM, t));
             recovery_trial(net, m, s, mode, rng, acc, scratch);
+        },
+    );
+    if stats.k4_hist.len() < m + 1 {
+        stats.k4_hist.resize(m + 1, 0); // trials == 0 edge case
+    }
+    stats
+}
+
+/// Pooled per-worker buffers of the binary-family trial bodies: the float
+/// decoder is replaced by the exact [`IntRref`] and the deterministic code
+/// is bridged to its dense form once per worker.
+struct BinTrialScratch {
+    ch: Box<dyn ChannelModel>,
+    real: Realization,
+    att: gc::Attempt,
+    bridge: GcCode,
+    ieng: IntRref,
+    ibuf: Vec<i64>,
+}
+
+impl BinTrialScratch {
+    fn new(proto: &dyn ChannelModel, code: BinaryCode) -> BinTrialScratch {
+        BinTrialScratch {
+            ch: proto.clone_box(),
+            real: Realization::perfect(code.m),
+            att: gc::Attempt::empty(),
+            bridge: code.to_gc_code(),
+            ieng: IntRref::new(code.m),
+            ibuf: Vec::with_capacity(code.m),
+        }
+    }
+}
+
+/// [`recovery_trial`] for the binary {±1} family, decoded exactly.
+///
+/// Two deliberate departures from the cyclic trial: the code is fixed (no
+/// per-attempt draw — the family is deterministic), and the standard-GC
+/// shortcut *tests* the received pattern with the exact rational
+/// combinator solve instead of assuming it — the binary family carries no
+/// any-(M−s)-rows decodability guarantee, so `complete.len() >= M − s` is
+/// necessary but not sufficient.
+fn binary_recovery_trial(
+    net: &Network,
+    code: BinaryCode,
+    mode: RecoveryMode,
+    rng: &mut Rng,
+    stats: &mut RecoveryStats,
+    scratch: &mut BinTrialScratch,
+) {
+    let (m, s) = (code.m, code.s);
+    if stats.k4_hist.len() < m + 1 {
+        stats.k4_hist.resize(m + 1, 0);
+    }
+    let need = m - s;
+    let (tr, max_blocks) = match mode {
+        RecoveryMode::FixedTr(tr) => (tr, 1),
+        RecoveryMode::UntilDecode { tr, max_blocks } => (tr, max_blocks),
+    };
+    stats.trials += 1;
+    scratch.ieng.reset(m);
+    let mut outcome: Option<usize> = None; // |K4| of the decode
+    'blocks: for _ in 0..max_blocks {
+        for _ in 0..tr {
+            scratch.ch.sample_into(net, rng, &mut scratch.real);
+            gc::Attempt::observe_into(&scratch.bridge, &scratch.real, &mut scratch.att);
+            stats.attempts += 1;
+            // standard GC shortcut, solvability *tested* exactly
+            if scratch.att.complete.len() >= need
+                && code.combinator_weights(&scratch.att.complete).is_some()
+            {
+                stats.standard += 1;
+                stats.k4_hist[m] += 1;
+                outcome = Some(usize::MAX); // marker: standard
+                break 'blocks;
+            }
+            for &r in &scratch.att.delivered {
+                scratch.ibuf.clear();
+                scratch
+                    .ibuf
+                    .extend(scratch.att.perturbed.row(r).iter().map(|&v| v as i64));
+                scratch.ieng.push_row(&scratch.ibuf);
+            }
+        }
+        let k4 = scratch.ieng.decodable_count();
+        if k4 > 0 {
+            outcome = Some(k4);
+            break 'blocks;
+        }
+        if matches!(mode, RecoveryMode::FixedTr(_)) {
+            outcome = Some(0);
+            break 'blocks;
+        }
+    }
+    match outcome {
+        Some(usize::MAX) => {} // standard, already recorded
+        Some(0) | None => {
+            stats.none += 1;
+            stats.k4_hist[0] += 1;
+        }
+        Some(k) if k == m => {
+            stats.full += 1;
+            stats.k4_hist[m] += 1;
+        }
+        Some(k) => {
+            stats.partial += 1;
+            stats.k4_hist[k] += 1;
+        }
+    }
+}
+
+/// Binary-family analogue of [`gcplus_recovery`]: classify GC⁺ outcomes
+/// over the deterministic ±1 code with the exact integer decoder.
+pub fn binary_recovery(
+    net: &Network,
+    ch: &dyn ChannelModel,
+    code: BinaryCode,
+    mode: RecoveryMode,
+    trials: usize,
+    mc: &MonteCarlo,
+) -> RecoveryStats {
+    let m = code.m;
+    let mut stats: RecoveryStats = mc.run_scratch(
+        trials,
+        || BinTrialScratch::new(ch, code),
+        |t, rng, acc: &mut RecoveryStats, scratch| {
+            scratch.ch.reset(net, mc.substream_seed(CHANNEL_STREAM, t));
+            binary_recovery_trial(net, code, mode, rng, acc, scratch);
         },
     );
     if stats.k4_hist.len() < m + 1 {
@@ -956,6 +1083,40 @@ mod tests {
             let total = st.p_full() + st.p_partial() + st.p_none();
             assert!((total - 1.0).abs() < 1e-12);
             assert!(st.mean_attempts() >= 1.0);
+        }
+    }
+
+    #[test]
+    fn binary_recovery_stats_partition_and_thread_invariance() {
+        let net = Network::fig6_setting(2, 10);
+        let code = BinaryCode::new(10, 4).unwrap();
+        for (i, mode) in [
+            RecoveryMode::FixedTr(2),
+            RecoveryMode::UntilDecode { tr: 2, max_blocks: 20 },
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let mc = MonteCarlo::new(42 + i as u64);
+            let st = binary_recovery(&net, &Iid, code, mode, 300, &mc);
+            assert_eq!(st.trials, 300);
+            assert_eq!(st.standard + st.full + st.partial + st.none, st.trials);
+            assert_eq!(st.k4_hist.iter().sum::<usize>(), st.trials);
+            let total = st.p_full() + st.p_partial() + st.p_none();
+            assert!((total - 1.0).abs() < 1e-12);
+            assert!(st.mean_attempts() >= 1.0);
+        }
+        let mode = RecoveryMode::UntilDecode { tr: 2, max_blocks: 20 };
+        let want = binary_recovery(&net, &Iid, code, mode, 300, &MonteCarlo::new(9));
+        for threads in [2usize, 8] {
+            let mc = MonteCarlo::new(9).with_threads(threads);
+            let got = binary_recovery(&net, &Iid, code, mode, 300, &mc);
+            assert_eq!(got.trials, want.trials, "threads={threads}");
+            assert_eq!(got.standard, want.standard, "threads={threads}");
+            assert_eq!(got.full, want.full, "threads={threads}");
+            assert_eq!(got.partial, want.partial, "threads={threads}");
+            assert_eq!(got.none, want.none, "threads={threads}");
+            assert_eq!(got.k4_hist, want.k4_hist, "threads={threads}");
         }
     }
 

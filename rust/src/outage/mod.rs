@@ -10,6 +10,7 @@ pub mod theory;
 pub use design::{cost_efficient_s, sweep, sweep_mc, DesignPoint};
 pub use exact::{incomplete_probs, overall_outage, subcase_probs};
 pub use mc::{
-    estimate_outage, estimate_outage_adv, estimate_outage_fr, estimate_outage_fr_adv, fr_recovery,
-    fr_recovery_adv, gcplus_recovery, gcplus_recovery_adv, OutageSplit, RecoveryMode, RecoveryStats,
+    binary_recovery, estimate_outage, estimate_outage_adv, estimate_outage_fr,
+    estimate_outage_fr_adv, fr_recovery, fr_recovery_adv, gcplus_recovery, gcplus_recovery_adv,
+    OutageSplit, RecoveryMode, RecoveryStats,
 };

@@ -199,8 +199,9 @@ impl Scenario {
                 let name = c
                     .as_str()
                     .ok_or_else(|| anyhow::anyhow!("scenario field \"code\" must be a string"))?;
-                CodeFamily::parse(name)
-                    .ok_or_else(|| anyhow::anyhow!("unknown code family {name:?} (cyclic|fr)"))?
+                CodeFamily::parse(name).ok_or_else(|| {
+                    anyhow::anyhow!("unknown code family {name:?} (cyclic|fr|binary)")
+                })?
             }
         };
         let sc = Scenario {
@@ -261,6 +262,14 @@ impl Scenario {
             .map_err(|e| anyhow::anyhow!("scenario {:?}: {e}", self.name))?;
         if let Some(adv) = &self.adversary {
             adv.validate().map_err(|e| anyhow::anyhow!("scenario {:?}: {e}", self.name))?;
+            // the parity-audit machinery runs on the float decode path;
+            // the binary family decodes in exact integer arithmetic and
+            // has no audit port yet (see README "Code families")
+            anyhow::ensure!(
+                self.code != CodeFamily::Binary,
+                "scenario {:?}: the binary family does not support adversarial sweeps yet",
+                self.name
+            );
         }
         self.net.validate().map_err(|e| anyhow::anyhow!("scenario {:?}: {e}", self.name))?;
         self.net.build().validate()

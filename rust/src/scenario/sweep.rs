@@ -11,7 +11,7 @@
 use super::adversary::{AdversaryModel, ADVERSARY_STREAM};
 use super::channel::{ChannelStats, CHANNEL_STREAM};
 use super::registry::Scenario;
-use crate::gc::{CodeFamily, FrCode};
+use crate::gc::{BinaryCode, CodeFamily, FrCode};
 use crate::parallel::{parallel_map, Accumulate, MonteCarlo};
 use crate::sim::{self, AdvReport, Outcome};
 
@@ -123,9 +123,55 @@ pub fn run_scenario(sc: &Scenario, trials: usize, mc: &MonteCarlo) -> RoundSerie
     match (&sc.adversary, sc.code) {
         (None, CodeFamily::Cyclic) => run_scenario_cyclic(sc, trials, mc),
         (None, CodeFamily::FractionalRepetition) => run_scenario_fr(sc, trials, mc),
+        (None, CodeFamily::Binary) => run_scenario_binary(sc, trials, mc),
         (Some(_), CodeFamily::Cyclic) => run_scenario_cyclic_adv(sc, trials, mc),
         (Some(_), CodeFamily::FractionalRepetition) => run_scenario_fr_adv(sc, trials, mc),
+        (Some(_), CodeFamily::Binary) => {
+            unreachable!("Scenario::validate rejects adversarial binary scenarios")
+        }
     }
+}
+
+/// Binary {±1} episode engine: identical pooling and stream discipline to
+/// [`run_scenario_cyclic`], with the round driven by the exact-arithmetic
+/// [`sim::simulate_round_binary_scratch`]. The code is deterministic per
+/// (M, s), so episodes consume emission draws only for payloads (the
+/// cyclic engine additionally draws a fresh code per attempt).
+fn run_scenario_binary(sc: &Scenario, trials: usize, mc: &MonteCarlo) -> RoundSeries {
+    let net = sc.net.build();
+    let proto = sc.channel.build();
+    let code = BinaryCode::new(net.m, sc.s).expect("scenario validated for the binary family");
+    let mut series: RoundSeries = mc.run_scratch(
+        trials,
+        || (proto.clone_box(), sim::BinSimScratch::new()),
+        |t, rng, acc: &mut RoundSeries, (ch, scratch)| {
+            ch.reset(&net, mc.substream_seed(CHANNEL_STREAM, t));
+            acc.ensure_len(sc.rounds);
+            for r in 0..sc.rounds {
+                let round = sim::simulate_round_binary_scratch(
+                    &net,
+                    &mut **ch,
+                    code,
+                    sc.payload_dim,
+                    sc.decoder,
+                    rng,
+                    scratch,
+                );
+                let tally = &mut acc.rounds[r];
+                tally.trials += 1;
+                match round.outcome {
+                    Outcome::Standard { .. } => tally.standard += 1,
+                    Outcome::Full => tally.full += 1,
+                    Outcome::Partial { .. } => tally.partial += 1,
+                    Outcome::None => tally.none += 1,
+                }
+                tally.transmissions += round.transmissions;
+                tally.channel.merge(ch.take_stats());
+            }
+        },
+    );
+    series.ensure_len(sc.rounds); // trials == 0 edge case
+    series
 }
 
 /// Dense cyclic episode engine.
@@ -413,6 +459,52 @@ mod tests {
     #[test]
     fn fr_zero_trials_yields_empty_tallies_of_full_length() {
         let sc = fr_smoke();
+        let series = run_scenario(&sc, 0, &MonteCarlo::new(1));
+        assert_eq!(series.rounds.len(), sc.rounds);
+        assert!(series.rounds.iter().all(|t| t.trials == 0));
+    }
+
+    /// The smoke scenario retargeted at the binary family (s=2 is even).
+    fn binary_smoke() -> Scenario {
+        let mut sc = registry::find("smoke").unwrap();
+        sc.code = crate::gc::CodeFamily::Binary;
+        sc.s = 2;
+        sc.validate().unwrap();
+        sc
+    }
+
+    #[test]
+    fn binary_scenario_runs_and_tallies_partition() {
+        let sc = binary_smoke();
+        let series = run_scenario(&sc, 8, &MonteCarlo::new(3));
+        assert_eq!(series.rounds.len(), sc.rounds);
+        for (r, tally) in series.rounds.iter().enumerate() {
+            assert_eq!(tally.trials, 8, "round {r}");
+            assert_eq!(
+                tally.standard + tally.full + tally.partial + tally.none,
+                tally.trials,
+                "round {r}: outcomes must partition"
+            );
+            assert!(tally.transmissions > 0, "round {r}");
+        }
+        let decoded: usize =
+            series.rounds.iter().map(|t| t.standard + t.full + t.partial).sum();
+        assert!(decoded > 0, "the smoke channel should let some binary rounds decode");
+    }
+
+    #[test]
+    fn binary_scenario_thread_invariant() {
+        let sc = binary_smoke();
+        let want = run_scenario(&sc, 6, &MonteCarlo::new(17).with_threads(1));
+        for threads in [2usize, 8] {
+            let got = run_scenario(&sc, 6, &MonteCarlo::new(17).with_threads(threads));
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn binary_zero_trials_yields_empty_tallies_of_full_length() {
+        let sc = binary_smoke();
         let series = run_scenario(&sc, 0, &MonteCarlo::new(1));
         assert_eq!(series.rounds.len(), sc.rounds);
         assert!(series.rounds.iter().all(|t| t.trials == 0));

@@ -22,7 +22,7 @@
 //! stay bit-identical at any thread count. Pass
 //! [`Iid`](crate::scenario::Iid) for the paper's memoryless behavior.
 
-use crate::gc::{self, FrCode, GcCode};
+use crate::gc::{self, BinaryCode, FrCode, GcCode, IntRref};
 use crate::linalg::Matrix;
 use crate::network::{Network, Realization, SparseRealization};
 use crate::parallel::{Accumulate, MonteCarlo};
@@ -277,6 +277,241 @@ pub fn simulate_round_scratch(
 
 fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
     a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+// ── Binary {±1} round engine (exact integer decode path) ────────────────
+
+/// Reusable per-worker buffers of [`simulate_round_binary_scratch`]:
+/// mirrors [`SimScratch`] with the float GC⁺ decoder replaced by the exact
+/// integer engine ([`IntRref`]) and a cached dense bridge of the
+/// deterministic code (the code is fixed per (M, s), so the bridge is
+/// built once per worker, not per attempt).
+pub struct BinSimScratch {
+    real: Realization,
+    payload: Matrix,
+    /// Dense float mirror of the binary code, for attempt observation
+    /// (erasure masking + completeness); rebuilt only when (m, s) change.
+    bridge: Option<(BinaryCode, gc::GcCode)>,
+    attempts: Vec<gc::Attempt>,
+    sums: Matrix,
+    starts: Vec<usize>,
+    ieng: IntRref,
+    /// Integer row buffer for pushes into the exact engine.
+    ibuf: Vec<i64>,
+    /// Extraction-weight buffer (one decodable row at a time).
+    wbuf: Vec<f64>,
+}
+
+impl BinSimScratch {
+    pub fn new() -> BinSimScratch {
+        BinSimScratch {
+            real: Realization::perfect(0),
+            payload: Matrix::zeros(0, 0),
+            bridge: None,
+            attempts: Vec::new(),
+            sums: Matrix::zeros(0, 0),
+            starts: Vec::new(),
+            ieng: IntRref::new(0),
+            ibuf: Vec::new(),
+            wbuf: Vec::new(),
+        }
+    }
+}
+
+impl Default for BinSimScratch {
+    fn default() -> Self {
+        BinSimScratch::new()
+    }
+}
+
+/// Allocating convenience form of [`simulate_round_binary_scratch`].
+pub fn simulate_round_binary(
+    net: &Network,
+    ch: &mut dyn ChannelModel,
+    code: BinaryCode,
+    d: usize,
+    decoder: Decoder,
+    rng: &mut Rng,
+) -> SimRound {
+    let mut scratch = BinSimScratch::new();
+    simulate_round_binary_scratch(net, ch, code, d, decoder, rng, &mut scratch)
+}
+
+/// One CoGC round over the deterministic {±1} binary code, decoded in
+/// exact arithmetic.
+///
+/// Same round structure, transmission accounting, and outcome
+/// classification as [`simulate_round_scratch`], with three differences:
+/// the code is fixed across attempts (the family is deterministic, so no
+/// per-attempt code draw — only channel state consumes randomness); the
+/// standard decode solves the combinator over the rationals
+/// ([`BinaryCode::combinator_weights`] — a pattern either decodes or it
+/// does not, no tolerance band); and the GC⁺ path pushes the delivered
+/// ±1 rows into the exact [`IntRref`], whose unit rows and extraction
+/// weights are integer-exact. Floats enter only when the exact weights
+/// combine the payload sums.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_round_binary_scratch(
+    net: &Network,
+    ch: &mut dyn ChannelModel,
+    code: BinaryCode,
+    d: usize,
+    decoder: Decoder,
+    rng: &mut Rng,
+    sc: &mut BinSimScratch,
+) -> SimRound {
+    let (m, s) = (code.m, code.s);
+    debug_assert_eq!(net.m, m);
+    if sc.payload.rows != m || sc.payload.cols != d {
+        sc.payload = Matrix::zeros(m, d);
+    }
+    for x in &mut sc.payload.data {
+        *x = rng.normal();
+    }
+    let payload = &sc.payload;
+    let true_mean: Vec<f64> = (0..d)
+        .map(|j| (0..m).map(|i| payload[(i, j)]).sum::<f64>() / m as f64)
+        .collect();
+
+    let attempts_n = match decoder {
+        Decoder::Standard { attempts } => attempts,
+        Decoder::GcPlus { tr } => tr,
+    };
+
+    if !matches!(&sc.bridge, Some((c, _)) if *c == code) {
+        sc.bridge = Some((code, code.to_gc_code()));
+    }
+    let gc_code = &sc.bridge.as_ref().expect("bridge built above").1;
+
+    sc.ieng.reset(m);
+    if sc.sums.cols != d {
+        sc.sums = Matrix::zeros(0, d);
+    } else {
+        sc.sums.clear_rows();
+    }
+    sc.starts.clear();
+    let mut transmissions = 0usize;
+
+    for a in 0..attempts_n {
+        ch.sample_into(net, rng, &mut sc.real);
+        if sc.attempts.len() <= a {
+            sc.attempts.push(gc::Attempt::empty());
+        }
+        let att = &mut sc.attempts[a];
+        gc::Attempt::observe_into(gc_code, &sc.real, att);
+        transmissions += s * m;
+        transmissions += match decoder {
+            Decoder::Standard { .. } => att.complete.len(),
+            Decoder::GcPlus { .. } => m,
+        };
+        sc.starts.push(sc.sums.rows);
+        for &r in &att.delivered {
+            let start = sc.sums.data.len();
+            sc.sums.data.resize(start + d, 0.0);
+            sc.sums.rows += 1;
+            let orow = &mut sc.sums.data[start..start + d];
+            for k in 0..m {
+                let c = att.perturbed[(r, k)];
+                if c == 0.0 {
+                    continue;
+                }
+                for (o, p) in orow.iter_mut().zip(payload.row(k)) {
+                    *o += c * p;
+                }
+            }
+            if matches!(decoder, Decoder::GcPlus { .. }) {
+                // the perturbed entries are exactly 0.0 / ±1.0
+                sc.ibuf.clear();
+                sc.ibuf.extend(att.perturbed.row(r).iter().map(|&v| {
+                    debug_assert_eq!(v, v as i64 as f64);
+                    v as i64
+                }));
+                sc.ieng.push_row(&sc.ibuf);
+            }
+        }
+    }
+
+    // 1) standard decode: exact rational combinator over the complete rows
+    // (complete perturbed rows equal the original deterministic rows)
+    for (i, att) in sc.attempts[..attempts_n].iter().enumerate() {
+        if att.complete.len() < m - s {
+            continue;
+        }
+        let Some(a) = code.combinator_weights(&att.complete) else {
+            continue;
+        };
+        let mut got = vec![0.0f64; d];
+        let mut next = 0usize;
+        for (off, &r) in att.delivered.iter().enumerate() {
+            // complete ⊆ delivered, both ascending: advance in lockstep
+            if next >= att.complete.len() || att.complete[next] != r {
+                continue;
+            }
+            let coef = a[next];
+            next += 1;
+            if coef == 0.0 {
+                continue;
+            }
+            for (o, v) in got.iter_mut().zip(sc.sums.row(sc.starts[i] + off)) {
+                *o += coef * v;
+            }
+        }
+        let target: Vec<f64> = true_mean.iter().map(|x| x * m as f64).collect();
+        let err = max_abs_diff(&got, &target);
+        let aggregate: Vec<f64> = got.iter().map(|x| x / m as f64).collect();
+        return SimRound {
+            outcome: Outcome::Standard { attempt: i },
+            aggregate: Some(aggregate),
+            true_mean,
+            decode_err: err,
+            transmissions,
+        };
+    }
+
+    if let Decoder::Standard { .. } = decoder {
+        return SimRound {
+            outcome: Outcome::None,
+            aggregate: None,
+            true_mean,
+            decode_err: 0.0,
+            transmissions,
+        };
+    }
+
+    // 2) GC⁺ complementary decode on the exact engine
+    let k4_n = sc.ieng.decodable_count();
+    if k4_n == 0 {
+        return SimRound {
+            outcome: Outcome::None,
+            aggregate: None,
+            true_mean,
+            decode_err: 0.0,
+            transmissions,
+        };
+    }
+    let mut k4 = Vec::with_capacity(k4_n);
+    let mut err = 0.0f64;
+    let mut agg = vec![0.0f64; d];
+    for (client, row) in sc.ieng.decodable() {
+        k4.push(client);
+        sc.ieng.t_row_f64(row, &mut sc.wbuf);
+        let mut decoded = vec![0.0f64; d];
+        for (k, &w) in sc.wbuf.iter().enumerate() {
+            if w == 0.0 {
+                continue;
+            }
+            for (o, v) in decoded.iter_mut().zip(sc.sums.row(k)) {
+                *o += w * v;
+            }
+        }
+        err = err.max(max_abs_diff(&decoded, payload.row(client)));
+        for (a, v) in agg.iter_mut().zip(&decoded) {
+            *a += v;
+        }
+    }
+    let aggregate: Vec<f64> = agg.iter().map(|x| x / k4.len() as f64).collect();
+    let outcome = if k4.len() == m { Outcome::Full } else { Outcome::Partial { k4 } };
+    SimRound { outcome, aggregate: Some(aggregate), true_mean, decode_err: err, transmissions }
 }
 
 // ── Fractional-repetition round engine (structured large-M path) ────────

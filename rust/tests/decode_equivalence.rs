@@ -1,0 +1,423 @@
+//! Differential decode-equivalence harness: the contract that locks the
+//! hybrid peeling decoder and the binary family to the reference engines.
+//!
+//! Three independent decode paths must agree on every stream this file can
+//! draw:
+//!
+//! 1. **peeling + elimination** (`linalg::PeelingDecoder`, the engine
+//!    behind `gc::GcPlusDecoder`) — bit-for-bit equal internal state
+//!    (pivots, reduced rows, transforms) to
+//! 2. **pure incremental elimination** (`linalg::IncrementalRref`, the
+//!    pre-peeling engine) at *every prefix* of the stream, and both to
+//! 3. **batch factorization** (`linalg::rref_with_transform`) of the full
+//!    stacked matrix: same rank, same decodable set `K₄`, same extraction
+//!    weights, same decoded payload sums — to the bit.
+//!
+//! Streams are drawn across all three code families (cyclic, fractional
+//! repetition bridged dense, binary ±1), all four channel models (iid,
+//! Gilbert–Elliott, correlated fading, deadline straggler), a random
+//! (M, s, attempt-depth) grid, and a seed corpus of degenerate stacks
+//! (empty, dead-uplink, duplicate-row, explicit-zero-row). The binary
+//! streams additionally pin the exact integer engine's verdicts to the
+//! float path at oracle sizes, and the scenario CSVs through the peeling
+//! path must stay byte-identical at any `--threads` value.
+
+use cogc::figures;
+use cogc::gc::{self, BinaryCode, FrCode, GcCode, GcPlusDecoder, IntRref};
+use cogc::linalg::{
+    decodable_columns, rref_with_transform, IncrementalRref, Matrix, PeelingDecoder,
+};
+use cogc::network::{Network, Realization};
+use cogc::parallel::MonteCarlo;
+use cogc::scenario::{self, run_scenario, ChannelModel};
+use cogc::testing::Prop;
+use cogc::util::rng::Rng;
+
+// ── helpers ─────────────────────────────────────────────────────────────
+
+fn assert_slice_bits(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: entry {i}: {x} vs {y}");
+    }
+}
+
+fn assert_matrix_bits(a: &Matrix, b: &Matrix, what: &str) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{what}: shape");
+    assert_slice_bits(&a.data, &b.data, what);
+}
+
+/// One of the four channel-model kinds, by registry scenario.
+fn channel(kind: usize) -> Box<dyn ChannelModel> {
+    let name = ["iid-moderate", "bursty-c2c", "correlated-fade", "straggler-harsh"]
+        [kind % 4];
+    scenario::find(name).unwrap().channel.build()
+}
+
+/// The three families as dense codes an `Attempt` can observe. The cyclic
+/// draw consumes `rng`; fr/binary are deterministic per (m, s) — their
+/// validity constraints are coerced by the caller.
+fn family_code(fam: usize, m: usize, s: usize, rng: &mut Rng) -> GcCode {
+    match fam % 3 {
+        0 => GcCode::generate(m, s, rng),
+        1 => {
+            let fr = FrCode::new(m, s).unwrap();
+            GcCode { m, s, b: fr.dense_b(), h: Matrix::zeros(0, m) }
+        }
+        _ => BinaryCode::new(m, s).unwrap().to_gc_code(),
+    }
+}
+
+/// Coerce (m, s) into a shape every family accepts: s even (binary) and
+/// m % (s+1) == 0 (fr).
+fn family_shape(fam: usize, m_raw: usize, s_raw: usize) -> (usize, usize) {
+    match fam % 3 {
+        1 => {
+            let s = s_raw.clamp(1, m_raw.saturating_sub(1).max(1));
+            let m = (m_raw / (s + 1)).max(1) * (s + 1);
+            (m.max(s + 1), s)
+        }
+        2 => {
+            let s = (s_raw & !1).max(2);
+            (m_raw.max(s + 1), s)
+        }
+        _ => (m_raw, s_raw.clamp(1, m_raw - 1)),
+    }
+}
+
+/// The tentpole check: feed `stream` (a stacked row matrix) through the
+/// peeling decoder and the pure engine in lockstep, asserting bit-equal
+/// internal state at every prefix; then check both against the batch
+/// factorization and, when payloads are given, the decoded sums.
+fn check_stream(stream: &Matrix, payload: Option<&Matrix>, what: &str) {
+    let cols = stream.cols;
+    let mut peel = PeelingDecoder::new(cols);
+    let mut pure = IncrementalRref::new(cols);
+    for r in 0..stream.rows {
+        let row = stream.row(r);
+        peel.push_row(row);
+        pure.push_row(row);
+        // per-prefix: same verdict on the row just pushed, same summary
+        assert_eq!(peel.rank(), pure.rank(), "{what}: prefix {r}: rank");
+        assert_eq!(
+            peel.decodable_count(),
+            pure.decodable_count(),
+            "{what}: prefix {r}: decodable_count"
+        );
+        assert_slice_bits(
+            peel.null_transform(),
+            pure.null_transform(),
+            &format!("{what}: prefix {r}: null transform"),
+        );
+    }
+    // full internal state, to the bit
+    let eng = peel.engine();
+    assert_eq!(eng.pivots(), pure.pivots(), "{what}: pivots");
+    assert_eq!(eng.rows(), pure.rows(), "{what}: rows_seen");
+    for i in 0..pure.rank() {
+        assert_slice_bits(eng.e_row(i), pure.e_row(i), &format!("{what}: e row {i}"));
+        assert_slice_bits(eng.t_row(i), pure.t_row(i), &format!("{what}: t row {i}"));
+    }
+    if stream.rows == 0 {
+        return;
+    }
+    // batch factorization of the full stack
+    let rr = rref_with_transform(stream);
+    assert_eq!(rr.rank, pure.rank(), "{what}: batch rank");
+    let batch_dec = decodable_columns(&rr);
+    let batch_k4: Vec<usize> = batch_dec.iter().map(|&(c, _)| c).collect();
+    let inc_k4: Vec<usize> = pure.decodable().map(|(c, _)| c).collect();
+    assert_eq!(inc_k4, batch_k4, "{what}: K4");
+    for (&(_, br), &(_, ir)) in batch_dec.iter().zip(pure.decodable().collect::<Vec<_>>().iter())
+    {
+        assert_slice_bits(
+            rr.t.row(br),
+            pure.t_row(ir),
+            &format!("{what}: extraction weights col-pair ({br},{ir})"),
+        );
+    }
+    // decoded payload sums, through both weight sets
+    if let Some(g) = payload {
+        let sums = stream.matmul(g);
+        let mut w_inc = Matrix::zeros(0, stream.rows);
+        for (_, i) in pure.decodable() {
+            w_inc.push_row(pure.t_row(i));
+        }
+        let mut w_batch = Matrix::zeros(0, stream.rows);
+        for &(_, r) in &batch_dec {
+            w_batch.push_row(rr.t.row(r));
+        }
+        assert_matrix_bits(
+            &w_inc.matmul(&sums),
+            &w_batch.matmul(&sums),
+            &format!("{what}: decoded sums"),
+        );
+    }
+}
+
+/// Draw `tr` attempts of family `fam` over `net` through channel `ch` and
+/// return the delivered-row stack (the decoder's input stream).
+fn sample_stream(
+    fam: usize,
+    m: usize,
+    s: usize,
+    tr: usize,
+    net: &Network,
+    ch: &mut dyn ChannelModel,
+    rng: &mut Rng,
+) -> Matrix {
+    let mut stream = Matrix::zeros(0, m);
+    let mut real = Realization::perfect(m);
+    for _ in 0..tr {
+        let code = family_code(fam, m, s, rng);
+        ch.sample_into(net, rng, &mut real);
+        let att = gc::Attempt::observe(&code, &real);
+        for &r in &att.delivered {
+            stream.push_row(att.perturbed.row(r));
+        }
+    }
+    stream
+}
+
+// ── the random differential sweep ───────────────────────────────────────
+
+#[test]
+fn prop_peeling_equals_pure_equals_batch_across_families_and_channels() {
+    Prop::new(60).forall("peeling == pure == batch", |rng, trial| {
+        let fam = rng.below(3);
+        let (m, s) = family_shape(fam, rng.range(4, 13), rng.range(1, 6));
+        let tr = rng.range(1, 5);
+        let p = rng.uniform(0.05, 0.9);
+        let net = Network::homogeneous(m, p, p);
+        let mut ch = channel(rng.below(4));
+        ch.reset(&net, 0xDEC0 + trial as u64);
+        let stream = sample_stream(fam, m, s, tr, &net, &mut *ch, rng);
+        let payload = Matrix::from_fn(m, 3, |_, _| rng.normal());
+        check_stream(&stream, Some(&payload), &format!("fam {fam} m={m} s={s} tr={tr}"));
+    });
+}
+
+#[test]
+fn gcplus_decoder_decode_matches_batch_decode_bitwise() {
+    // the public decoder API (peeling-fronted) against gc::decode on the
+    // same stacks — k4, rank, weights, and decoded sums, to the bit
+    let mut rng = Rng::new(77);
+    for setting in 1..=4 {
+        let net = Network::fig6_setting(setting, 10);
+        for tr in [1usize, 2, 6] {
+            let attempts: Vec<gc::Attempt> = (0..tr)
+                .map(|_| {
+                    let code = GcCode::generate(10, 7, &mut rng);
+                    gc::Attempt::observe(&code, &Realization::sample(&net, &mut rng))
+                })
+                .collect();
+            let stacked = gc::stack_attempts(&attempts);
+            let batch = gc::decode(&stacked);
+            let mut dec = GcPlusDecoder::new(10);
+            for att in &attempts {
+                dec.push_attempt(att);
+            }
+            assert_eq!(dec.rank(), batch.rank);
+            assert_eq!(dec.decodable_count(), batch.k4.len());
+            let inc = dec.decode();
+            assert_eq!(inc.k4, batch.k4);
+            assert_matrix_bits(&inc.weights, &batch.weights, "weights");
+            if stacked.rows > 0 {
+                let payload = Matrix::from_fn(10, 4, |_, _| rng.normal());
+                let sums = stacked.matmul(&payload);
+                assert_matrix_bits(
+                    &inc.weights.matmul(&sums),
+                    &batch.weights.matmul(&sums),
+                    "decoded sums",
+                );
+            }
+            let (peeled, forwarded) = dec.peel_split();
+            assert_eq!(peeled + forwarded, stacked.rows, "peel_split partition");
+        }
+    }
+}
+
+// ── seed corpus: degenerate stacks ──────────────────────────────────────
+
+#[test]
+fn seed_corpus_degenerate_stacks() {
+    // empty stream
+    check_stream(&Matrix::zeros(0, 8), None, "empty");
+
+    // explicit zero rows (all dependent, all peelable as resolved rows)
+    let zeros = Matrix::zeros(5, 6);
+    check_stream(&zeros, None, "all-zero rows");
+
+    // dead uplinks: attempts that deliver nothing
+    let mut rng = Rng::new(4);
+    let dead = Network::homogeneous(6, 1.0, 1.0);
+    let mut ch = channel(0);
+    ch.reset(&dead, 1);
+    let stream = sample_stream(0, 6, 2, 3, &dead, &mut *ch, &mut rng);
+    assert_eq!(stream.rows, 0, "dead net must deliver nothing");
+    check_stream(&stream, None, "dead uplinks");
+
+    // duplicate rows: every repeat is dependent in both engines
+    let net = Network::fig6_setting(2, 10);
+    let mut ch = channel(0);
+    ch.reset(&net, 2);
+    let base = sample_stream(0, 10, 7, 2, &net, &mut *ch, &mut rng);
+    let mut dup = Matrix::zeros(0, 10);
+    for _ in 0..3 {
+        for r in 0..base.rows {
+            dup.push_row(base.row(r));
+        }
+    }
+    check_stream(&dup, None, "duplicate rows");
+
+    // unit-vector rows (maximally peelable stream)
+    let mut units = Matrix::zeros(0, 7);
+    for c in [3usize, 0, 6, 3, 1] {
+        let mut row = vec![0.0; 7];
+        row[c] = 1.0;
+        units.push_row(&row);
+    }
+    check_stream(&units, None, "unit rows");
+}
+
+/// Mid-stream equality with a *persistent* engine: the until-decode loop
+/// polls after every block; each poll must match a batch factorization of
+/// exactly the prefix pushed so far.
+#[test]
+fn mid_stream_prefixes_match_batch() {
+    let mut rng = Rng::new(31);
+    for fam in 0..3usize {
+        let (m, s) = family_shape(fam, 12, 3);
+        let net = Network::homogeneous(m, 0.5, 0.6);
+        let mut ch = channel(fam);
+        ch.reset(&net, 9 + fam as u64);
+        let stream = sample_stream(fam, m, s, 8, &net, &mut *ch, &mut rng);
+        let mut peel = PeelingDecoder::new(m);
+        for upto in 0..stream.rows {
+            peel.push_row(stream.row(upto));
+            let mut prefix = Matrix::zeros(0, m);
+            for r in 0..=upto {
+                prefix.push_row(stream.row(r));
+            }
+            let rr = rref_with_transform(&prefix);
+            assert_eq!(peel.rank(), rr.rank, "fam {fam} prefix {upto}: rank");
+            assert_eq!(
+                peel.decodable_count(),
+                decodable_columns(&rr).len(),
+                "fam {fam} prefix {upto}: decodable"
+            );
+        }
+    }
+}
+
+// ── binary family: exact engine vs float path ───────────────────────────
+
+#[test]
+fn binary_exact_engine_agrees_with_float_path_at_oracle_sizes() {
+    // at M <= 10 the float engine's tolerance floors cannot misjudge a ±1
+    // stack, so the exact integer verdicts must coincide exactly
+    let mut rng = Rng::new(123);
+    for trial in 0u64..40 {
+        let m = 4 + (trial as usize % 7); // 4..=10
+        let s = 2 + 2 * (trial as usize % ((m - 1) / 2).max(1)).min((m - 3) / 2);
+        let code = BinaryCode::new(m, s.min(m - 1) & !1).unwrap_or_else(|_| {
+            BinaryCode::new(m, 2).unwrap()
+        });
+        let gcode = code.to_gc_code();
+        let p = 0.2 + 0.1 * (trial % 5) as f64;
+        let net = Network::homogeneous(m, p, p);
+        let mut stream_f = Matrix::zeros(0, m);
+        let mut ieng = IntRref::new(m);
+        let mut ibuf: Vec<i64> = Vec::new();
+        for _ in 0..3 {
+            let att = gc::Attempt::observe(&gcode, &Realization::sample(&net, &mut rng));
+            for &r in &att.delivered {
+                stream_f.push_row(att.perturbed.row(r));
+                ibuf.clear();
+                ibuf.extend(att.perturbed.row(r).iter().map(|&v| v as i64));
+                ieng.push_row(&ibuf);
+            }
+        }
+        let mut peel = PeelingDecoder::new(m);
+        for r in 0..stream_f.rows {
+            peel.push_row(stream_f.row(r));
+        }
+        assert_eq!(peel.rank(), ieng.rank(), "trial {trial}: rank");
+        let float_k4: Vec<usize> = peel.decodable().map(|(c, _)| c).collect();
+        let exact_k4: Vec<usize> = ieng.decodable().map(|(c, _)| c).collect();
+        assert_eq!(float_k4, exact_k4, "trial {trial}: K4");
+        check_stream(&stream_f, None, &format!("binary trial {trial}"));
+    }
+}
+
+// ── thread / CSV invariance through the peeling path ────────────────────
+
+#[test]
+fn scenario_sweeps_thread_invariant_through_peeling_and_binary_paths() {
+    // cyclic scenario (peeling-fronted decoder underneath)
+    let sc = scenario::find("iid-moderate").unwrap();
+    let want = run_scenario(&sc, 6, &MonteCarlo::new(21).with_threads(1));
+    for threads in [2usize, 8] {
+        let got = run_scenario(&sc, 6, &MonteCarlo::new(21).with_threads(threads));
+        assert_eq!(got, want, "cyclic threads={threads}");
+    }
+    // binary scenario (exact integer decode underneath)
+    let mut sc = scenario::find("smoke").unwrap();
+    sc.code = cogc::gc::CodeFamily::Binary;
+    sc.s = 2;
+    sc.validate().unwrap();
+    let want = run_scenario(&sc, 6, &MonteCarlo::new(22).with_threads(1));
+    for threads in [2usize, 8] {
+        let got = run_scenario(&sc, 6, &MonteCarlo::new(22).with_threads(threads));
+        assert_eq!(got, want, "binary threads={threads}");
+    }
+    // and the CSV surface stays byte-identical
+    let reference = figures::scenario_sweep(&sc, 20, 7, 1).to_csv();
+    for threads in [2usize, 8] {
+        assert_eq!(
+            figures::scenario_sweep(&sc, 20, 7, threads).to_csv(),
+            reference,
+            "csv threads={threads}"
+        );
+    }
+}
+
+// ── audit parity: peeling-backed audit vs pure-engine audit ─────────────
+
+#[test]
+fn audit_detection_verdicts_identical_between_engines() {
+    // audit_rows runs on the peeling decoder, audit_rows_pure on the bare
+    // engine; dependent rows yield bit-identical null transforms either
+    // way, so every harvested check — and thus every verdict — must match
+    let mut rng = Rng::new(9001);
+    for trial in 0u64..20 {
+        let m = 6 + (trial as usize % 5);
+        let s = 2 + (trial as usize % 3);
+        let mut stack = Matrix::zeros(0, m);
+        for _ in 0..3 {
+            let code = GcCode::generate(m, s.min(m - 1), &mut rng);
+            let net = Network::homogeneous(m, 0.3, 0.3);
+            let att = gc::Attempt::observe(&code, &Realization::sample(&net, &mut rng));
+            for &r in &att.delivered {
+                stack.push_row(att.perturbed.row(r));
+            }
+        }
+        // corrupt ~20% of rows so the symbolic audit has something to find
+        let corrupted: Vec<bool> =
+            (0..stack.rows).map(|_| rng.bernoulli(0.2)).collect();
+        for (r, &bad) in corrupted.iter().enumerate() {
+            if bad {
+                let c = rng.below(m);
+                stack.data[r * m + c] += 3.5 + rng.normal().abs();
+            }
+        }
+        let flags = corrupted.clone();
+        let peeled = gc::audit_rows(&stack, |combo, kept| {
+            gc::symbolic_check_fails(combo, kept, &flags)
+        });
+        let pure = gc::audit_rows_pure(&stack, |combo, kept| {
+            gc::symbolic_check_fails(combo, kept, &flags)
+        });
+        assert_eq!(peeled, pure, "trial {trial}");
+    }
+}
