@@ -339,6 +339,66 @@ fn main() {
         );
     }
 
+    // ── telemetry overhead: armed vs disabled, same shapes ──────────────
+    // The disabled rows above already price the zero-cost default (the
+    // shard plumbing compiles to integer bumps into pooled scratch); these
+    // re-run the same workloads with the registry armed, so the delta is
+    // the full price of counting + phase clocks + shard merges. Feeds the
+    // EXPERIMENTS.md telemetry-overhead table.
+    {
+        use cogc::telemetry;
+        let mc = MonteCarlo::new(11).with_threads(cores.max(1));
+        telemetry::reset();
+        telemetry::arm();
+        suite.bench_throughput(
+            &format!("mc outage sweep fig4-shape ARMED, {outage_trials} trials ({cores} thr)"),
+            outage_trials as f64,
+            "rounds",
+            || {
+                cogc::bench::black_box(estimate_outage(&net, &code, &Iid, outage_trials, &mc));
+            },
+        );
+        let mc13 = MonteCarlo::new(13).with_threads(cores.max(1));
+        suite.bench_throughput(
+            &format!("mc gc+ recovery fig6-shape ARMED, {recovery_trials} trials ({cores} thr)"),
+            recovery_trials as f64,
+            "rounds",
+            || {
+                cogc::bench::black_box(gcplus_recovery(
+                    &net,
+                    &Iid,
+                    10,
+                    7,
+                    RecoveryMode::FixedTr(2),
+                    recovery_trials,
+                    &mc13,
+                ));
+            },
+        );
+        let m_fr = 10_000usize;
+        let fr_code_tel = FrCode::new(m_fr, 3).unwrap();
+        let fr_net_tel = Network::homogeneous(m_fr, 0.3, 0.2);
+        let fr_trials = 200usize;
+        let mc17 = MonteCarlo::new(17).with_threads(cores.max(1));
+        suite.bench_throughput(
+            &format!("fr recovery clean M={m_fr} ARMED, {fr_trials} trials ({cores} thr)"),
+            fr_trials as f64,
+            "rounds",
+            || {
+                cogc::bench::black_box(fr_recovery(
+                    &fr_net_tel,
+                    &Iid,
+                    &fr_code_tel,
+                    RecoveryMode::FixedTr(2),
+                    fr_trials,
+                    &mc17,
+                ));
+            },
+        );
+        telemetry::disarm();
+        telemetry::reset();
+    }
+
     // ── Byzantine audit overhead: adversarial estimators vs clean ───────
     // Same shapes as the clean rows above, under a 20% sign-flip uplink
     // adversary; the delta over the clean rows is the price of adversary

@@ -18,6 +18,7 @@ use crate::metrics::{RoundRecord, RunLog};
 use crate::network::{Network, SparseRealization};
 use crate::runtime::{Backend, CodedKernels, InputKind, ModelRuntime};
 use crate::scenario::{AdversaryModel, ChannelModel, GroupVerdict, Surface, ADVERSARY_STREAM};
+use crate::telemetry;
 use crate::util::rng::Rng;
 use std::sync::Arc;
 
@@ -236,15 +237,21 @@ impl Trainer {
     }
 
     fn round(&mut self, round: usize) -> anyhow::Result<RoundRecord> {
+        // Phase scopes record wall-clock into the telemetry registry's
+        // non-deterministic section; disarmed they read no clock at all.
         // ── 1. broadcast (eq. (7)) ────────────────────────────────────────
-        let broadcast_always = !matches!(self.cfg.aggregator, Aggregator::CoGc { .. });
-        if self.updated_last || broadcast_always {
-            for c in &mut self.clients {
-                c.params.copy_from_slice(&self.global);
-            }
-        } // else: clients continue from their latest local models
+        {
+            let _t = telemetry::phase("train/broadcast");
+            let broadcast_always = !matches!(self.cfg.aggregator, Aggregator::CoGc { .. });
+            if self.updated_last || broadcast_always {
+                for c in &mut self.clients {
+                    c.params.copy_from_slice(&self.global);
+                }
+            } // else: clients continue from their latest local models
+        }
 
         // ── 2. local training (eq. (2)) ───────────────────────────────────
+        let _local = telemetry::phase("train/local");
         let mut deltas = vec![0.0f32; self.m * self.d];
         let mut train_loss = 0.0f64;
         for ci in 0..self.m {
@@ -254,8 +261,10 @@ impl Trainer {
             for it in 0..self.cfg.local_iters {
                 let batch = self.clients[ci].shard.next_batch();
                 let seed = (round * 1_000_003 + ci * 1009 + it) as u32;
+                let _k = telemetry::phase("train/kernel");
                 let (new_params, loss) =
                     self.model.train_step(&params, &batch, seed, self.cfg.lr)?;
+                drop(_k);
                 params = new_params;
                 last_loss = loss;
                 self.clients[ci].steps += 1;
@@ -267,13 +276,18 @@ impl Trainer {
             self.clients[ci].params = params;
         }
         train_loss /= self.m as f64;
+        drop(_local);
 
         // ── 3. communication + decode ─────────────────────────────────────
-        let agg = self.aggregate(&deltas)?;
+        let agg = {
+            let _t = telemetry::phase("train/aggregate");
+            self.aggregate(&deltas)?
+        };
 
         // ── 4. global update ──────────────────────────────────────────────
         let updated = agg.delta.is_some();
         if let Some(delta) = &agg.delta {
+            let _t = telemetry::phase("train/apply");
             // g_r <- g_{r-1} + delta  via the fused Pallas sgd kernel (lr=-1)
             self.global = self.model.sgd_apply(&self.global, delta, -1.0)?;
         }
@@ -283,6 +297,7 @@ impl Trainer {
         let (test_loss, test_acc) = if round % self.cfg.eval_every == 0
             || round + 1 == self.cfg.rounds
         {
+            let _t = telemetry::phase("train/eval");
             self.evaluate()?
         } else {
             (f64::NAN, f64::NAN)
@@ -619,6 +634,19 @@ impl Trainer {
         let audit_live = self.uplink_adversary_active()
             && self.adversary.as_ref().map_or(false, |adv| adv.spec.detect);
         let mut coeff_stack = Matrix::zeros(0, self.m);
+        // armed-only decode introspection: fold the engine state into the
+        // global registry at each return point (one merge per round — no
+        // shard pooling needed outside the MC trial loops)
+        let harvest = |decoder: &gc::GcPlusDecoder, ieng: &Option<IntRref>| {
+            if telemetry::armed() {
+                let mut sh = telemetry::Shard::new();
+                match ieng {
+                    Some(eng) => sh.absorb_int_engine(eng.rows() as u64, eng.rank() as u64),
+                    None => decoder.harvest(&mut sh),
+                }
+                telemetry::merge_shard(&sh);
+            }
+        };
 
         for _ in 0..blocks {
             for _ in 0..tr {
@@ -667,6 +695,7 @@ impl Trainer {
                             crate::runtime::coded::native_combine(&a_m, &sums, self.d);
                         let inv = 1.0 / self.m as f32;
                         let delta: Vec<f32> = out[..self.d].iter().map(|x| x * inv).collect();
+                        harvest(&decoder, &ieng);
                         return Ok(AggResult {
                             delta: Some(delta),
                             outcome: "standard",
@@ -728,6 +757,12 @@ impl Trainer {
                     }
                     worst > CROSS_CHECK_TOL as f64 * mag
                 });
+                if telemetry::armed() {
+                    let mut sh = telemetry::Shard::new();
+                    sh.inc(telemetry::metric::AUDIT_CHECKS);
+                    sh.add(telemetry::metric::AUDIT_EXCISIONS, audit.excised.len() as u64);
+                    telemetry::merge_shard(&sh);
+                }
                 if audit.alarm {
                     self.adv_log.detected += 1;
                     self.adv_log.excised += audit.excised.len();
@@ -818,6 +853,7 @@ impl Trainer {
                 delta
             };
             let outcome = if dec.k4.len() == self.m { "full" } else { "partial" };
+            harvest(&decoder, &ieng);
             return Ok(AggResult {
                 delta: Some(delta),
                 outcome,
@@ -826,6 +862,7 @@ impl Trainer {
                 transmissions: tx,
             });
         }
+        harvest(&decoder, &ieng);
         Ok(AggResult {
             delta: None,
             outcome: "none",

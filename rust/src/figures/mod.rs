@@ -481,6 +481,13 @@ pub fn scenario_sweep(sc: &Scenario, trials: usize, seed: u64, threads: usize) -
             "mean_false_excised",
         ]);
     }
+    // armed telemetry appends the GC⁺ peel/forward split per round; clean
+    // (disarmed) CSVs stay byte-identical — the determinism contract of
+    // `tests/telemetry.rs`
+    let armed = crate::telemetry::armed();
+    if armed {
+        header.extend(["mean_peeled", "mean_forwarded"]);
+    }
     let mut t = Table::new(
         &format!(
             "scenario {}: {}\nchannel={} net={} decoder={:?} s={}{code_tag}{adv_tag} trials={trials}",
@@ -515,6 +522,9 @@ pub fn scenario_sweep(sc: &Scenario, trials: usize, seed: u64, threads: usize) -
                 tally.excised as f64 / n,
                 tally.false_excised as f64 / n,
             ]);
+        }
+        if armed {
+            row.extend([tally.peeled as f64 / n, tally.forwarded as f64 / n]);
         }
         t.rowf(&row);
     }

@@ -249,9 +249,29 @@ impl GcPlusDecoder {
     }
 
     /// Rows resolved by the peeling fast path / forwarded to the dense
-    /// elimination (bench telemetry).
+    /// elimination (telemetry + per-round sweep CSV columns).
     pub fn peel_split(&self) -> (usize, usize) {
         (self.peel.peeled(), self.peel.forwarded())
+    }
+
+    /// Record one decode episode's work into a telemetry shard: rows
+    /// pushed, peeling fast-path vs forwarded split, and final rank
+    /// (counter totals, log₂ histograms, and max-gauges). Integer bumps
+    /// only — safe in the Monte-Carlo hot loops armed or disarmed.
+    pub fn harvest(&self, sh: &mut crate::telemetry::Shard) {
+        use crate::telemetry::metric;
+        let rows = self.rows() as u64;
+        let rank = self.rank() as u64;
+        let (peeled, forwarded) = self.peel_split();
+        sh.inc(metric::DEC_EPISODES);
+        sh.add(metric::DEC_ROWS_PUSHED, rows);
+        sh.add(metric::DEC_ROWS_PEELED, peeled as u64);
+        sh.add(metric::DEC_ROWS_FORWARDED, forwarded as u64);
+        sh.observe(metric::H_DEC_ROWS, rows);
+        sh.observe(metric::H_DEC_RANK, rank);
+        sh.observe(metric::H_DEC_PEELED, peeled as u64);
+        sh.gauge_max(metric::DEC_MAX_RANK, rank);
+        sh.gauge_max(metric::DEC_MAX_ROWS, rows);
     }
 
     /// Full decode of the current stack (identical to batch [`decode`] of

@@ -48,5 +48,6 @@ pub mod privacy;
 pub mod runtime;
 pub mod scenario;
 pub mod sim;
+pub mod telemetry;
 pub mod testing;
 pub mod util;

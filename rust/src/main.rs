@@ -20,8 +20,13 @@
 //! cogc scenario list                         built-in channel-scenario catalog
 //! cogc scenario run <name> [--trials 2000]   per-round time-series CSV
 //! cogc train --model M --agg A [...]         single training run (CSV log)
+//! cogc telemetry check <file.json>           validate a --telemetry export
 //! cogc info                                  backend / model inventory
 //! ```
+//!
+//! Any subcommand accepts `--telemetry <out.json>`: it arms the global
+//! telemetry registry (deterministic counters + a segregated wall-clock
+//! section) and writes the JSON export after the run.
 //!
 //! Training subcommands take `--backend auto|native|pjrt` (default `auto`:
 //! PJRT when `artifacts/manifest.json` and the real bindings exist, the
@@ -96,6 +101,15 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
     let threads = args.usize_opt("threads", 0)?;
     let backend = || Backend::from_flag(&args.str_opt("backend", "auto"));
     let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    // --telemetry <out.json> arms the registry for any subcommand; the
+    // deterministic counters land in the JSON export, the human summary on
+    // stderr (stdout stays pure CSV). Disarmed (the default) the hot paths
+    // skip every clock read and registry lock.
+    let telemetry_out = args.get("telemetry").map(String::from);
+    if telemetry_out.is_some() {
+        cogc::telemetry::reset();
+        cogc::telemetry::arm();
+    }
     match sub.as_str() {
         "fig4" => figures::fig4(args.usize_opt("trials", 20_000)?, seed, threads).print(),
         "fig6" => figures::fig6(args.usize_opt("trials", 2_000)?, seed, threads).print(),
@@ -298,6 +312,22 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
                 log.total_transmissions()
             );
         }
+        "telemetry" => {
+            let action = args.positionals.first().map(|s| s.as_str()).unwrap_or("");
+            match action {
+                "check" => {
+                    let path = args.positionals.get(1).ok_or_else(|| {
+                        anyhow::anyhow!("usage: cogc telemetry check <file.json>")
+                    })?;
+                    let text = std::fs::read_to_string(path)?;
+                    match cogc::telemetry::check_json(&text) {
+                        Ok(msg) => println!("{msg}"),
+                        Err(e) => anyhow::bail!("telemetry check failed for {path}: {e}"),
+                    }
+                }
+                other => anyhow::bail!("unknown telemetry action {other:?} (check)"),
+            }
+        }
         "info" => {
             let backend = backend()?;
             println!("backend: {} | platform: {}", backend.name(), backend.platform());
@@ -319,6 +349,13 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         _ => {
             println!("{}", HELP.trim());
         }
+    }
+    if let Some(path) = telemetry_out {
+        cogc::telemetry::write_json(std::path::Path::new(&path))
+            .map_err(|e| anyhow::anyhow!("writing telemetry to {path}: {e}"))?;
+        eprint!("{}", cogc::telemetry::summary_table().to_csv());
+        eprintln!("telemetry written to {path}");
+        cogc::telemetry::disarm();
     }
     Ok(())
 }
@@ -377,6 +414,17 @@ training:
         [--adversary <spec>]        Byzantine clients (fixed set for the run);
                      the decode-path audit excises corrupted rows unless
                      :nodetect — alarms/excisions reported after the run
+
+observability:
+  --telemetry FILE  arm the telemetry registry for any subcommand and write
+                  a JSON export after the run: counters/gauges/histograms
+                  are deterministic (bit-identical at any --threads); phase
+                  wall-clock and worker throughput live in a separate
+                  non_deterministic section. Armed `scenario run` CSVs
+                  append mean_peeled/mean_forwarded columns; a stderr
+                  summary table prints after the run (stdout stays CSV)
+  telemetry check <file.json>   validate a --telemetry export (schema
+                  version, counter/histogram integrity) — the CI smoke gate
 
 misc:
   info            show backend + model inventory

@@ -25,6 +25,7 @@ use crate::gc::{self, BinaryCode, FrCode, GcCode, IntRref};
 use crate::network::{Network, Realization, SparseRealization};
 use crate::parallel::{Accumulate, MonteCarlo};
 use crate::scenario::{ChannelModel, CHANNEL_STREAM};
+use crate::telemetry;
 use crate::util::rng::Rng;
 
 /// Pooled per-worker buffers of the Monte-Carlo trial bodies.
@@ -33,6 +34,9 @@ struct TrialScratch {
     real: Realization,
     att: gc::Attempt,
     dec: gc::GcPlusDecoder,
+    /// Pooled telemetry shard — flat integer arrays, no heap, merged into
+    /// the global registry in worker-index order by the engine.
+    tel: telemetry::Shard,
 }
 
 impl TrialScratch {
@@ -42,8 +46,26 @@ impl TrialScratch {
             real: Realization::perfect(m),
             att: gc::Attempt::empty(),
             dec: gc::GcPlusDecoder::new(m),
+            tel: telemetry::Shard::new(),
         }
     }
+}
+
+// Named shard projections (plain `fn` items for `run_scratch_tel`).
+fn trial_shard(s: &mut TrialScratch) -> Option<&mut telemetry::Shard> {
+    Some(&mut s.tel)
+}
+
+fn bin_trial_shard(s: &mut BinTrialScratch) -> Option<&mut telemetry::Shard> {
+    Some(&mut s.tel)
+}
+
+fn fr_trial_shard(s: &mut FrTrialScratch) -> Option<&mut telemetry::Shard> {
+    Some(&mut s.tel)
+}
+
+fn adv_trial_shard(s: &mut TrialScratchAdv) -> Option<&mut telemetry::Shard> {
+    Some(&mut s.base.tel)
 }
 
 /// Monte-Carlo estimate of the overall outage probability `P_O` under the
@@ -55,9 +77,10 @@ pub fn estimate_outage(
     trials: usize,
     mc: &MonteCarlo,
 ) -> f64 {
-    let outages: usize = mc.run_scratch(
+    let outages: usize = mc.run_scratch_tel(
         trials,
         || TrialScratch::new(ch, net.m),
+        trial_shard,
         |t, rng, acc: &mut usize, s| {
             s.ch.reset(net, mc.substream_seed(CHANNEL_STREAM, t));
             s.ch.sample_into(net, rng, &mut s.real);
@@ -248,12 +271,14 @@ pub fn gcplus_recovery(
     trials: usize,
     mc: &MonteCarlo,
 ) -> RecoveryStats {
-    let mut stats: RecoveryStats = mc.run_scratch(
+    let mut stats: RecoveryStats = mc.run_scratch_tel(
         trials,
         || TrialScratch::new(ch, m),
+        trial_shard,
         |t, rng, acc: &mut RecoveryStats, scratch| {
             scratch.ch.reset(net, mc.substream_seed(CHANNEL_STREAM, t));
             recovery_trial(net, m, s, mode, rng, acc, scratch);
+            scratch.dec.harvest(&mut scratch.tel);
         },
     );
     if stats.k4_hist.len() < m + 1 {
@@ -272,6 +297,7 @@ struct BinTrialScratch {
     bridge: GcCode,
     ieng: IntRref,
     ibuf: Vec<i64>,
+    tel: telemetry::Shard,
 }
 
 impl BinTrialScratch {
@@ -283,6 +309,7 @@ impl BinTrialScratch {
             bridge: code.to_gc_code(),
             ieng: IntRref::new(code.m),
             ibuf: Vec::with_capacity(code.m),
+            tel: telemetry::Shard::new(),
         }
     }
 }
@@ -375,12 +402,14 @@ pub fn binary_recovery(
     mc: &MonteCarlo,
 ) -> RecoveryStats {
     let m = code.m;
-    let mut stats: RecoveryStats = mc.run_scratch(
+    let mut stats: RecoveryStats = mc.run_scratch_tel(
         trials,
         || BinTrialScratch::new(ch, code),
+        bin_trial_shard,
         |t, rng, acc: &mut RecoveryStats, scratch| {
             scratch.ch.reset(net, mc.substream_seed(CHANNEL_STREAM, t));
             binary_recovery_trial(net, code, mode, rng, acc, scratch);
+            scratch.tel.absorb_int_engine(scratch.ieng.rows() as u64, scratch.ieng.rank() as u64);
         },
     );
     if stats.k4_hist.len() < m + 1 {
@@ -396,6 +425,9 @@ struct FrTrialScratch {
     real: SparseRealization,
     covered: Vec<bool>,
     acc: Vec<bool>,
+    /// The FR scan has no row engine; its shard carries only the engine's
+    /// trial/chunk throughput counters.
+    tel: telemetry::Shard,
 }
 
 impl FrTrialScratch {
@@ -405,6 +437,7 @@ impl FrTrialScratch {
             real: SparseRealization::perfect(&code.sparse_support()),
             covered: Vec::with_capacity(code.groups()),
             acc: vec![false; code.groups()],
+            tel: telemetry::Shard::new(),
         }
     }
 }
@@ -421,9 +454,10 @@ pub fn estimate_outage_fr(
     mc: &MonteCarlo,
 ) -> f64 {
     let sup = code.sparse_support();
-    let outages: usize = mc.run_scratch(
+    let outages: usize = mc.run_scratch_tel(
         trials,
         || FrTrialScratch::new(ch, code),
+        fr_trial_shard,
         |t, rng, acc: &mut usize, s| {
             s.ch.reset_sparse(&sup, net, mc.substream_seed(CHANNEL_STREAM, t));
             s.ch.sample_sparse_into(&sup, net, rng, &mut s.real);
@@ -509,9 +543,10 @@ pub fn fr_recovery(
     mc: &MonteCarlo,
 ) -> RecoveryStats {
     let sup = code.sparse_support();
-    let mut stats: RecoveryStats = mc.run_scratch(
+    let mut stats: RecoveryStats = mc.run_scratch_tel(
         trials,
         || FrTrialScratch::new(ch, code),
+        fr_trial_shard,
         |t, rng, acc: &mut RecoveryStats, scratch| {
             scratch.ch.reset_sparse(&sup, net, mc.substream_seed(CHANNEL_STREAM, t));
             fr_recovery_trial(net, code, mode, rng, acc, scratch);
@@ -719,6 +754,8 @@ fn recovery_trial_adv(
         let audit = gc::audit_rows(&sc.coeffs, |combo, kept| {
             gc::symbolic_check_fails(combo, kept, &sc.corrupted)
         });
+        sc.base.tel.inc(telemetry::metric::AUDIT_CHECKS);
+        sc.base.tel.add(telemetry::metric::AUDIT_EXCISIONS, audit.excised.len() as u64);
         stats.detected += audit.alarm as usize;
         stats.excised += audit.excised.len();
         for &r in &audit.excised {
@@ -833,7 +870,7 @@ pub fn gcplus_recovery_adv(
     trials: usize,
     mc: &MonteCarlo,
 ) -> RecoveryStats {
-    let mut stats: RecoveryStats = mc.run_scratch(
+    let mut stats: RecoveryStats = mc.run_scratch_tel(
         trials,
         || TrialScratchAdv {
             base: TrialScratch::new(ch, m),
@@ -841,10 +878,12 @@ pub fn gcplus_recovery_adv(
             coeffs: crate::linalg::Matrix::zeros(0, m),
             corrupted: Vec::new(),
         },
+        adv_trial_shard,
         |t, rng, acc: &mut RecoveryStats, scratch| {
             scratch.base.ch.reset(net, mc.substream_seed(CHANNEL_STREAM, t));
             scratch.adv.reset(m, mc.substream_seed(ADVERSARY_STREAM, t));
             recovery_trial_adv(net, m, s, mode, spec.detect, rng, acc, scratch);
+            scratch.base.dec.harvest(&mut scratch.base.tel);
         },
     );
     if stats.k4_hist.len() < m + 1 {

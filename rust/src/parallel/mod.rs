@@ -67,6 +67,7 @@
 //! into an accumulator; use `parallel_map` for a handful of expensive jobs
 //! whose outputs you need individually.
 
+use crate::telemetry;
 use crate::util::rng::{splitmix64, Rng};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -144,6 +145,15 @@ where
     F: Fn(usize, &T) -> R + Sync,
 {
     let n = items.len();
+    // Item totals are deterministic (input length); per-worker throughput
+    // is wall-clock and goes to the non-deterministic section. Both are
+    // recorded only when telemetry is armed: this path runs inside
+    // per-round hot loops (FR decode fan-out), so disarmed it must not
+    // touch the registry lock at all.
+    let armed = telemetry::armed();
+    if armed {
+        telemetry::count(telemetry::metric::PM_ITEMS, n as u64);
+    }
     let workers = resolve_threads(threads).min(n).max(1);
     if workers == 1 {
         return items.iter().enumerate().map(|(i, item)| f(i, item)).collect();
@@ -157,6 +167,7 @@ where
         let handles: Vec<_> = (0..workers)
             .map(|_| {
                 scope.spawn(move || {
+                    let t0 = armed.then(std::time::Instant::now);
                     let mut done: Vec<(usize, R)> = Vec::new();
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
@@ -165,13 +176,18 @@ where
                         }
                         done.push((i, f(i, &items[i])));
                     }
-                    done
+                    (done, t0.map(|t0| t0.elapsed()))
                 })
             })
             .collect();
-        for h in handles {
-            for (i, r) in h.join().expect("parallel_map worker panicked") {
+        for (w, h) in handles.into_iter().enumerate() {
+            let (done, elapsed) = h.join().expect("parallel_map worker panicked");
+            let items_done = done.len() as u64;
+            for (i, r) in done {
                 slots[i] = Some(r);
+            }
+            if let Some(elapsed) = elapsed {
+                telemetry::record_worker("parallel_map", w, items_done, elapsed);
             }
         }
     });
@@ -289,6 +305,40 @@ impl MonteCarlo {
         G: Fn() -> S + Sync,
         F: Fn(u64, &mut Rng, &mut A, &mut S) + Sync,
     {
+        self.run_scratch_tel(trials, scratch, telemetry::no_shard::<S>, trial)
+    }
+
+    /// [`run_scratch`](MonteCarlo::run_scratch) with a **telemetry shard
+    /// projection**: `tel` exposes the [`telemetry::Shard`] pooled inside
+    /// the worker scratch (or `None` — [`telemetry::no_shard`] — for
+    /// scratch types that carry none). The trial bodies bump the shard
+    /// with plain integer ops; after the join the engine snapshots each
+    /// worker's shard and merges them into the global registry **in
+    /// worker-index order**, so the registry's deterministic section is
+    /// bit-identical at any thread count even though the chunk→worker
+    /// assignment is racy (shard merges are commutative integer ops).
+    ///
+    /// Per-worker wall-clock throughput is recorded into the registry's
+    /// non-deterministic section only when telemetry is
+    /// [`armed`](telemetry::armed) — disarmed, this path reads no clock,
+    /// takes no lock per trial, and allocates nothing beyond
+    /// [`run_scratch`] itself (`tests/telemetry_alloc.rs`).
+    ///
+    /// `tel` is a plain `fn` pointer (not a generic closure) so the
+    /// projection cannot capture state and higher-ranked lifetime
+    /// inference stays trivial at every call site.
+    pub fn run_scratch_tel<A, S, F, G>(
+        &self,
+        trials: usize,
+        scratch: G,
+        tel: fn(&mut S) -> Option<&mut telemetry::Shard>,
+        trial: F,
+    ) -> A
+    where
+        A: Accumulate,
+        G: Fn() -> S + Sync,
+        F: Fn(u64, &mut Rng, &mut A, &mut S) + Sync,
+    {
         let chunk = self.chunk.max(1);
         let n_chunks = if trials == 0 { 0 } else { (trials - 1) / chunk + 1 };
 
@@ -300,7 +350,21 @@ impl MonteCarlo {
                 let mut rng = self.trial_rng(t as u64);
                 trial(t as u64, &mut rng, &mut acc, s);
             }
+            if let Some(sh) = tel(s) {
+                sh.inc(telemetry::metric::MC_CHUNKS);
+                sh.add(telemetry::metric::MC_TRIALS, (hi - lo) as u64);
+            }
             acc
+        };
+
+        // Snapshot a worker's shard for the ordered registry merge; a
+        // Shard is flat arrays, so the clone is a memcpy, not a heap op.
+        let take_shard = |s: &mut S| -> Option<telemetry::Shard> {
+            tel(s).map(|sh| {
+                let snap = sh.clone();
+                sh.clear();
+                snap
+            })
         };
 
         let workers = self.threads.min(n_chunks).max(1);
@@ -311,37 +375,55 @@ impl MonteCarlo {
             for c in 0..n_chunks {
                 total.merge(run_chunk(c, &mut s));
             }
+            if let Some(snap) = take_shard(&mut s) {
+                telemetry::merge_shard(&snap);
+            }
             return total;
         }
 
         // Work-stealing over chunk indices; each worker returns its chunks
         // tagged with their index so the final merge is order-fixed.
+        let armed = telemetry::armed();
         let next = AtomicUsize::new(0);
         let mut slots: Vec<Option<A>> = Vec::with_capacity(n_chunks);
         slots.resize_with(n_chunks, || None);
         std::thread::scope(|scope| {
             let next = &next;
             let run_chunk = &run_chunk;
+            let take_shard = &take_shard;
             let scratch = &scratch;
             let handles: Vec<_> = (0..workers)
                 .map(|_| {
                     scope.spawn(move || {
+                        let t0 = armed.then(std::time::Instant::now);
                         let mut s = scratch();
                         let mut done: Vec<(usize, A)> = Vec::new();
+                        let mut n_trials = 0u64;
                         loop {
                             let c = next.fetch_add(1, Ordering::Relaxed);
                             if c >= n_chunks {
                                 break;
                             }
+                            let lo = c * chunk;
+                            let hi = ((c + 1) * chunk).min(trials);
+                            n_trials += (hi - lo) as u64;
                             done.push((c, run_chunk(c, &mut s)));
                         }
-                        done
+                        (done, take_shard(&mut s), t0.map(|t0| (n_trials, t0.elapsed())))
                     })
                 })
                 .collect();
-            for h in handles {
-                for (c, acc) in h.join().expect("monte-carlo worker panicked") {
+            for (w, h) in handles.into_iter().enumerate() {
+                let (done, shard, stat) = h.join().expect("monte-carlo worker panicked");
+                for (c, acc) in done {
                     slots[c] = Some(acc);
+                }
+                // worker-index order: handles are joined 0..workers
+                if let Some(snap) = shard {
+                    telemetry::merge_shard(&snap);
+                }
+                if let Some((items, elapsed)) = stat {
+                    telemetry::record_worker("monte_carlo", w, items, elapsed);
                 }
             }
         });
@@ -440,6 +522,44 @@ mod tests {
             );
             assert_eq!(got, want, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn run_scratch_tel_registry_is_thread_invariant() {
+        // The merged deterministic section must be bit-identical at any
+        // thread count: shards ride in the scratch, and the engine merges
+        // worker snapshots in index order after the join.
+        let _lock = telemetry::TEST_LOCK.lock().unwrap();
+        telemetry::disarm();
+        let trials = 3_000;
+        fn shard_of(s: &mut telemetry::Shard) -> Option<&mut telemetry::Shard> {
+            Some(s)
+        }
+        let run = |threads: usize| -> telemetry::Shard {
+            telemetry::reset();
+            let mc = MonteCarlo::new(21).with_threads(threads).with_chunk(64);
+            let _: usize = mc.run_scratch_tel(
+                trials,
+                telemetry::Shard::default,
+                shard_of,
+                |_t, rng, acc, sh| {
+                    sh.inc(telemetry::metric::DEC_EPISODES);
+                    sh.observe(telemetry::metric::H_DEC_RANK, rng.range(0, 9) as u64);
+                    if rng.bernoulli(0.37) {
+                        *acc += 1;
+                    }
+                },
+            );
+            telemetry::snapshot()
+        };
+        let want = run(1);
+        assert_eq!(want.counter(telemetry::metric::DEC_EPISODES), trials as u64);
+        assert_eq!(want.counter(telemetry::metric::MC_TRIALS), trials as u64);
+        assert_eq!(want.hist_count(telemetry::metric::H_DEC_RANK), trials as u64);
+        for threads in [2usize, 3, 8] {
+            assert_eq!(run(threads), want, "threads={threads}");
+        }
+        telemetry::reset();
     }
 
     #[test]

@@ -78,6 +78,10 @@ pub struct ChannelStats {
     pub deadline_hits: usize,
     /// Total latency draws (0 for models without deadlines).
     pub deadline_total: usize,
+    /// Degraded→healthy state-chain transitions (a burst, fade, or
+    /// straggle spell ended). With `degraded`, this yields the mean
+    /// degraded dwell time: `degraded / burst_ends` attempts per spell.
+    pub burst_ends: usize,
 }
 
 impl ChannelStats {
@@ -100,6 +104,16 @@ impl ChannelStats {
             self.deadline_hits as f64 / self.deadline_total as f64
         }
     }
+
+    /// Mean degraded dwell in chain steps per completed spell
+    /// (0 when no spell has ended — nothing dwelt).
+    pub fn mean_burst_dwell(&self) -> f64 {
+        if self.burst_ends == 0 {
+            0.0
+        } else {
+            self.degraded as f64 / self.burst_ends as f64
+        }
+    }
 }
 
 impl Accumulate for ChannelStats {
@@ -109,6 +123,7 @@ impl Accumulate for ChannelStats {
         self.degraded_denom += other.degraded_denom;
         self.deadline_hits += other.deadline_hits;
         self.deadline_total += other.deadline_total;
+        self.burst_ends += other.burst_ends;
     }
 }
 
@@ -302,8 +317,12 @@ impl GilbertElliott {
         self.bad_t[m][k]
     }
 
-    fn step(bad: &mut bool, p_gb: f64, p_bg: f64, rng: &mut Rng) {
+    /// Advance one chain; returns whether a burst just ended (bad→good),
+    /// the event the dwell diagnostics count.
+    fn step(bad: &mut bool, p_gb: f64, p_bg: f64, rng: &mut Rng) -> bool {
+        let was = *bad;
         *bad = if *bad { !rng.bernoulli(p_bg) } else { rng.bernoulli(p_gb) };
+        was && !*bad
     }
 }
 
@@ -367,16 +386,22 @@ impl ChannelModel for GilbertElliott {
         );
 
         // evolve every chain on the private stream
+        let mut ends = 0usize;
         for i in 0..m {
             for j in 0..m {
-                if i != j {
-                    Self::step(&mut self.bad_t[i][j], self.p_gb, self.p_bg, &mut self.state_rng);
+                if i != j
+                    && Self::step(&mut self.bad_t[i][j], self.p_gb, self.p_bg, &mut self.state_rng)
+                {
+                    ends += 1;
                 }
             }
         }
         for i in 0..m {
-            Self::step(&mut self.bad_tau[i], self.p_gb, self.p_bg, &mut self.state_rng);
+            if Self::step(&mut self.bad_tau[i], self.p_gb, self.p_bg, &mut self.state_rng) {
+                ends += 1;
+            }
         }
+        self.stats.burst_ends += ends;
     }
 
     fn reset_sparse(&mut self, sup: &SparseSupport, net: &Network, state_seed: u64) {
@@ -434,12 +459,18 @@ impl ChannelModel for GilbertElliott {
         );
 
         // evolve every chain on the private stream, same order as emission
+        let mut ends = 0usize;
         for b in &mut self.bad_ts {
-            Self::step(b, self.p_gb, self.p_bg, &mut self.state_rng);
+            if Self::step(b, self.p_gb, self.p_bg, &mut self.state_rng) {
+                ends += 1;
+            }
         }
         for b in &mut self.bad_tau {
-            Self::step(b, self.p_gb, self.p_bg, &mut self.state_rng);
+            if Self::step(b, self.p_gb, self.p_bg, &mut self.state_rng) {
+                ends += 1;
+            }
         }
+        self.stats.burst_ends += ends;
     }
 
     fn take_stats(&mut self) -> ChannelStats {
@@ -521,11 +552,15 @@ impl CorrelatedFading {
     /// chosen so the stationary fade probability stays ρ at every λ.
     fn evolve_fade(&mut self) {
         let (rho, lam) = (self.rho, self.persistence);
+        let was = self.faded;
         self.faded = if self.faded {
             self.state_rng.bernoulli(lam + (1.0 - lam) * rho)
         } else {
             self.state_rng.bernoulli((1.0 - lam) * rho)
         };
+        if was && !self.faded {
+            self.stats.burst_ends += 1;
+        }
     }
 }
 
@@ -700,6 +735,7 @@ impl DeadlineStraggler {
 
     /// Advance every client's straggler chain on the private stream.
     fn evolve_slow(&mut self) {
+        let mut ends = 0usize;
         for k in 0..self.slow.len() {
             let cur = self.slow[k];
             self.slow[k] = if cur {
@@ -707,7 +743,11 @@ impl DeadlineStraggler {
             } else {
                 self.state_rng.bernoulli(self.p_slow)
             };
+            if cur && !self.slow[k] {
+                ends += 1;
+            }
         }
+        self.stats.burst_ends += ends;
     }
 }
 
@@ -1189,6 +1229,15 @@ mod tests {
                 "P(burst > {k}) = {surv:.3}, geometric predicts {want:.3}"
             );
         }
+        // the dwell diagnostics agree: degraded / burst_ends estimates the
+        // same geometric mean across all chains (they share p_bg)
+        let st = ge.take_stats();
+        assert!(st.burst_ends > 3_000, "too few burst ends tallied: {}", st.burst_ends);
+        let dwell = st.mean_burst_dwell();
+        assert!(
+            (dwell - want_mean).abs() < 0.2,
+            "stats dwell {dwell:.3} vs geometric mean {want_mean:.3}"
+        );
     }
 
     #[test]
@@ -1304,6 +1353,7 @@ mod tests {
             degraded_denom: 10,
             deadline_hits: 4,
             deadline_total: 5,
+            burst_ends: 1,
         };
         a.merge(ChannelStats {
             samples: 1,
@@ -1311,13 +1361,16 @@ mod tests {
             degraded_denom: 10,
             deadline_hits: 1,
             deadline_total: 5,
+            burst_ends: 1,
         });
         assert_eq!(a.samples, 3);
         assert!((a.degraded_frac() - 0.2).abs() < 1e-12);
         assert!((a.deadline_hit_rate() - 0.5).abs() < 1e-12);
+        assert!((a.mean_burst_dwell() - 2.0).abs() < 1e-12);
         let empty = ChannelStats::default();
         assert_eq!(empty.degraded_frac(), 0.0);
         assert_eq!(empty.deadline_hit_rate(), 1.0);
+        assert_eq!(empty.mean_burst_dwell(), 0.0);
     }
 
     #[test]

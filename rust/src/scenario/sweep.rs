@@ -9,11 +9,12 @@
 //! per-round tally — is bit-identical at any `--threads` value.
 
 use super::adversary::{AdversaryModel, ADVERSARY_STREAM};
-use super::channel::{ChannelStats, CHANNEL_STREAM};
+use super::channel::{ChannelModel, ChannelStats, CHANNEL_STREAM};
 use super::registry::Scenario;
 use crate::gc::{BinaryCode, CodeFamily, FrCode};
 use crate::parallel::{parallel_map, Accumulate, MonteCarlo};
 use crate::sim::{self, AdvReport, Outcome};
+use crate::telemetry;
 
 /// Tallies of one round index across all episodes (all integer fields, so
 /// per-worker instances merge exactly).
@@ -45,6 +46,12 @@ pub struct RoundTally {
     pub excised: usize,
     /// Honest rows among the excised (false-alarm cost).
     pub false_excised: usize,
+    /// GC⁺ rows recovered by the peeling fast path at this round across
+    /// episodes (dense cyclic engines only; always 0 on the binary and
+    /// sparse FR paths, whose decoders have no peeling stage).
+    pub peeled: usize,
+    /// GC⁺ rows forwarded to the dense RREF engine at this round.
+    pub forwarded: usize,
 }
 
 impl RoundTally {
@@ -86,7 +93,28 @@ impl Accumulate for RoundTally {
         self.poisoned += other.poisoned;
         self.excised += other.excised;
         self.false_excised += other.false_excised;
+        self.peeled += other.peeled;
+        self.forwarded += other.forwarded;
     }
+}
+
+// Named shard projections of the pooled episode scratches — plain `fn`
+// items (not closures) so [`MonteCarlo::run_scratch_tel`] can take them as
+// ordinary function pointers.
+fn cyclic_shard(s: &mut (Box<dyn ChannelModel>, sim::SimScratch)) -> Option<&mut telemetry::Shard> {
+    Some(s.1.tel_mut())
+}
+
+fn binary_shard(
+    s: &mut (Box<dyn ChannelModel>, sim::BinSimScratch),
+) -> Option<&mut telemetry::Shard> {
+    Some(s.1.tel_mut())
+}
+
+fn adv_shard(
+    s: &mut (Box<dyn ChannelModel>, sim::AdvSimScratch, AdversaryModel),
+) -> Option<&mut telemetry::Shard> {
+    Some(s.1.tel_mut())
 }
 
 /// The per-round time series of a scenario sweep (index = round).
@@ -141,9 +169,10 @@ fn run_scenario_binary(sc: &Scenario, trials: usize, mc: &MonteCarlo) -> RoundSe
     let net = sc.net.build();
     let proto = sc.channel.build();
     let code = BinaryCode::new(net.m, sc.s).expect("scenario validated for the binary family");
-    let mut series: RoundSeries = mc.run_scratch(
+    let mut series: RoundSeries = mc.run_scratch_tel(
         trials,
         || (proto.clone_box(), sim::BinSimScratch::new()),
+        binary_shard,
         |t, rng, acc: &mut RoundSeries, (ch, scratch)| {
             ch.reset(&net, mc.substream_seed(CHANNEL_STREAM, t));
             acc.ensure_len(sc.rounds);
@@ -157,6 +186,7 @@ fn run_scenario_binary(sc: &Scenario, trials: usize, mc: &MonteCarlo) -> RoundSe
                     rng,
                     scratch,
                 );
+                scratch.harvest();
                 let tally = &mut acc.rounds[r];
                 tally.trials += 1;
                 match round.outcome {
@@ -166,7 +196,9 @@ fn run_scenario_binary(sc: &Scenario, trials: usize, mc: &MonteCarlo) -> RoundSe
                     Outcome::None => tally.none += 1,
                 }
                 tally.transmissions += round.transmissions;
-                tally.channel.merge(ch.take_stats());
+                let st = ch.take_stats();
+                scratch.tel_mut().absorb_channel(&st);
+                tally.channel.merge(st);
             }
         },
     );
@@ -184,9 +216,10 @@ fn run_scenario_cyclic(sc: &Scenario, trials: usize, mc: &MonteCarlo) -> RoundSe
     let net = sc.net.build();
     let proto = sc.channel.build();
     let m = net.m;
-    let mut series: RoundSeries = mc.run_scratch(
+    let mut series: RoundSeries = mc.run_scratch_tel(
         trials,
         || (proto.clone_box(), sim::SimScratch::new()),
+        cyclic_shard,
         |t, rng, acc: &mut RoundSeries, (ch, scratch)| {
             ch.reset(&net, mc.substream_seed(CHANNEL_STREAM, t));
             acc.ensure_len(sc.rounds);
@@ -201,8 +234,12 @@ fn run_scenario_cyclic(sc: &Scenario, trials: usize, mc: &MonteCarlo) -> RoundSe
                     rng,
                     scratch,
                 );
+                scratch.harvest();
                 let tally = &mut acc.rounds[r];
                 tally.trials += 1;
+                let (peeled, forwarded) = scratch.peel_split();
+                tally.peeled += peeled;
+                tally.forwarded += forwarded;
                 match round.outcome {
                     Outcome::Standard { .. } => tally.standard += 1,
                     Outcome::Full => tally.full += 1,
@@ -210,7 +247,9 @@ fn run_scenario_cyclic(sc: &Scenario, trials: usize, mc: &MonteCarlo) -> RoundSe
                     Outcome::None => tally.none += 1,
                 }
                 tally.transmissions += round.transmissions;
-                tally.channel.merge(ch.take_stats());
+                let st = ch.take_stats();
+                scratch.tel_mut().absorb_channel(&st);
+                tally.channel.merge(st);
             }
         },
     );
@@ -289,9 +328,11 @@ fn run_scenario_cyclic_adv(sc: &Scenario, trials: usize, mc: &MonteCarlo) -> Rou
     let net = sc.net.build();
     let proto = sc.channel.build();
     let m = net.m;
-    let mut series: RoundSeries = mc.run_scratch(
+    let detect = spec.detect;
+    let mut series: RoundSeries = mc.run_scratch_tel(
         trials,
         || (proto.clone_box(), sim::AdvSimScratch::new(), AdversaryModel::new(spec.clone())),
+        adv_shard,
         |t, rng, acc: &mut RoundSeries, (ch, scratch, adv)| {
             ch.reset(&net, mc.substream_seed(CHANNEL_STREAM, t));
             adv.reset(m, mc.substream_seed(ADVERSARY_STREAM, t));
@@ -308,8 +349,20 @@ fn run_scenario_cyclic_adv(sc: &Scenario, trials: usize, mc: &MonteCarlo) -> Rou
                     rng,
                     scratch,
                 );
+                scratch.harvest();
+                {
+                    use telemetry::metric;
+                    let tel = scratch.tel_mut();
+                    if detect {
+                        tel.inc(metric::AUDIT_CHECKS);
+                    }
+                    tel.add(metric::AUDIT_EXCISIONS, rep.excised as u64);
+                }
                 let tally = &mut acc.rounds[r];
                 tally.trials += 1;
+                let (peeled, forwarded) = scratch.peel_split();
+                tally.peeled += peeled;
+                tally.forwarded += forwarded;
                 match round.outcome {
                     Outcome::Standard { .. } => tally.standard += 1,
                     Outcome::Full => tally.full += 1,
@@ -317,7 +370,9 @@ fn run_scenario_cyclic_adv(sc: &Scenario, trials: usize, mc: &MonteCarlo) -> Rou
                     Outcome::None => tally.none += 1,
                 }
                 tally.transmissions += round.transmissions;
-                tally.channel.merge(ch.take_stats());
+                let st = ch.take_stats();
+                scratch.tel_mut().absorb_channel(&st);
+                tally.channel.merge(st);
                 tally.absorb_adv(&rep);
             }
         },
@@ -550,6 +605,19 @@ mod tests {
         let sum = |f: fn(&RoundTally) -> usize| want.rounds.iter().map(f).sum::<usize>();
         assert!(sum(|t| t.corrupted) > 0);
         assert!(sum(|t| t.detected) > 0, "the FR plurality vote should raise alarms");
+    }
+
+    #[test]
+    fn cyclic_sweep_accumulates_peel_split_tallies() {
+        // GC⁺ smoke rounds push rows, so the peel/forward split must fill
+        let sc = registry::find("smoke").unwrap();
+        let series = run_scenario(&sc, 6, &MonteCarlo::new(9));
+        let pushed: usize = series.rounds.iter().map(|t| t.peeled + t.forwarded).sum();
+        assert!(pushed > 0, "GC⁺ rounds must route rows through the decoder");
+        // the binary engine has no peeling stage — its columns stay 0
+        let sc = binary_smoke();
+        let series = run_scenario(&sc, 6, &MonteCarlo::new(9));
+        assert!(series.rounds.iter().all(|t| t.peeled == 0 && t.forwarded == 0));
     }
 
     #[test]

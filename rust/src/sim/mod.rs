@@ -27,6 +27,7 @@ use crate::linalg::Matrix;
 use crate::network::{Network, Realization, SparseRealization};
 use crate::parallel::{Accumulate, MonteCarlo};
 use crate::scenario::{ChannelModel, CHANNEL_STREAM};
+use crate::telemetry;
 use crate::util::rng::Rng;
 
 /// Outcome of one simulated round.
@@ -81,6 +82,10 @@ pub struct SimScratch {
     /// Start row of each attempt's block inside `sums`.
     starts: Vec<usize>,
     dec: gc::GcPlusDecoder,
+    /// Pooled telemetry shard (flat integer arrays — part of the
+    /// zero-allocation scratch contract). The sweep engine merges worker
+    /// shards into the global registry in index order.
+    tel: telemetry::Shard,
 }
 
 impl SimScratch {
@@ -92,7 +97,25 @@ impl SimScratch {
             sums: Matrix::zeros(0, 0),
             starts: Vec::new(),
             dec: gc::GcPlusDecoder::new(0),
+            tel: telemetry::Shard::new(),
         }
+    }
+
+    /// Peeling fast-path vs dense-forwarded row split of the round just
+    /// simulated (the decoder keeps its state until the next round resets
+    /// it) — the armed-only per-round sweep CSV columns read this.
+    pub fn peel_split(&self) -> (usize, usize) {
+        self.dec.peel_split()
+    }
+
+    /// Record the round just simulated into the pooled telemetry shard.
+    pub fn harvest(&mut self) {
+        self.dec.harvest(&mut self.tel);
+    }
+
+    /// The pooled shard (engine projection + caller-side audit counters).
+    pub fn tel_mut(&mut self) -> &mut telemetry::Shard {
+        &mut self.tel
     }
 }
 
@@ -300,6 +323,8 @@ pub struct BinSimScratch {
     ibuf: Vec<i64>,
     /// Extraction-weight buffer (one decodable row at a time).
     wbuf: Vec<f64>,
+    /// Pooled telemetry shard (see [`SimScratch`]).
+    tel: telemetry::Shard,
 }
 
 impl BinSimScratch {
@@ -314,7 +339,19 @@ impl BinSimScratch {
             ieng: IntRref::new(0),
             ibuf: Vec::new(),
             wbuf: Vec::new(),
+            tel: telemetry::Shard::new(),
         }
+    }
+
+    /// Record the round just simulated (exact integer decode path) into
+    /// the pooled telemetry shard.
+    pub fn harvest(&mut self) {
+        self.tel.absorb_int_engine(self.ieng.rows() as u64, self.ieng.rank() as u64);
+    }
+
+    /// The pooled shard (engine projection + caller-side counters).
+    pub fn tel_mut(&mut self) -> &mut telemetry::Shard {
+        &mut self.tel
     }
 }
 
@@ -683,6 +720,22 @@ pub struct AdvSimScratch {
 impl AdvSimScratch {
     pub fn new() -> AdvSimScratch {
         AdvSimScratch::default()
+    }
+
+    /// Peel/forward split of the round just simulated (see
+    /// [`SimScratch::peel_split`]).
+    pub fn peel_split(&self) -> (usize, usize) {
+        self.sim.peel_split()
+    }
+
+    /// Record the round just simulated into the pooled telemetry shard.
+    pub fn harvest(&mut self) {
+        self.sim.harvest();
+    }
+
+    /// The pooled shard (audit counters are bumped here by the sweep).
+    pub fn tel_mut(&mut self) -> &mut telemetry::Shard {
+        self.sim.tel_mut()
     }
 }
 

@@ -1,0 +1,740 @@
+//! Deterministic telemetry: sharded hot-path counters, phase timing, and
+//! decode/channel introspection across the whole simulator.
+//!
+//! Design contract (mirrors the parallel engine's determinism scheme):
+//!
+//! - **Hot path = plain integer bumps on a per-worker [`Shard`]** pooled
+//!   inside the existing scratch structs (`TrialScratch`, `SimScratch`,
+//!   worker scratch factories) — no atomics, no locks, no allocations,
+//!   armed or disarmed (`tests/telemetry_alloc.rs` pins this).
+//! - **Deterministic section**: shards hold only counters, max-gauges and
+//!   fixed-bucket log₂ histograms. Every merge is a commutative integer
+//!   operation and the engine merges worker shards in worker-index order
+//!   ([`crate::parallel::MonteCarlo::run_scratch_tel`]), so the merged
+//!   registry values are bit-identical at any `--threads` even though the
+//!   chunk→worker assignment is racy.
+//! - **Non-deterministic section**: wall-clock phase scopes ([`phase`])
+//!   and per-worker throughput ([`record_worker`]) are recorded only when
+//!   the registry is [`armed`] and are exported under a separate,
+//!   clearly-marked `non_deterministic` JSON key, so the CSV/JSON
+//!   byte-equality guarantees of the determinism tests survive arming.
+//!
+//! Export: [`export_json`] backs `--telemetry <out.json>` on `scenario
+//! run`, `train`, and the figure subcommands; [`summary_table`] renders a
+//! human-readable end-of-run table through [`crate::metrics::Table`]; and
+//! [`render_prometheus`] is the text-format seam for the future
+//! `cogc serve` scrape endpoint (ROADMAP). [`check_json`] is the
+//! dependency-free sanity check behind `cogc telemetry check`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::json::{self, Json};
+
+/// Metric identifiers: a fixed layout so a [`Shard`] is a handful of flat
+/// arrays and `inc`/`add`/`observe` are plain index bumps on the hot path.
+pub mod metric {
+    // -- counters ---------------------------------------------------------
+    /// Float coefficient rows pushed into `GcPlusDecoder`.
+    pub const DEC_ROWS_PUSHED: usize = 0;
+    /// Rows resolved by the degree-one peeling fast path.
+    pub const DEC_ROWS_PEELED: usize = 1;
+    /// Rows forwarded past peeling into the dense elimination.
+    pub const DEC_ROWS_FORWARDED: usize = 2;
+    /// Integer rows pushed into the exact `IntRref` engine (binary family).
+    pub const DEC_INT_ROWS_PUSHED: usize = 3;
+    /// Decode episodes harvested (one per simulated round / trial block).
+    pub const DEC_EPISODES: usize = 4;
+    /// Byzantine parity-audit invocations.
+    pub const AUDIT_CHECKS: usize = 5;
+    /// Rows excised by the Byzantine audit.
+    pub const AUDIT_EXCISIONS: usize = 6;
+    /// Channel link samples drawn (dense entries or sparse support slots).
+    pub const CH_SAMPLES: usize = 7;
+    /// Samples drawn while the sampled chain was in a degraded state.
+    pub const CH_DEGRADED: usize = 8;
+    /// Denominator for state occupancy (chain steps observed).
+    pub const CH_DEGRADED_DENOM: usize = 9;
+    /// Degraded→healthy chain transitions (burst/fade/straggle spells
+    /// ended); mean dwell = `ch_degraded / ch_burst_ends`.
+    pub const CH_BURST_ENDS: usize = 10;
+    /// Deadline-straggler deliveries that met the round deadline.
+    pub const CH_DEADLINE_HITS: usize = 11;
+    /// Deadline-straggler deliveries attempted.
+    pub const CH_DEADLINE_TOTAL: usize = 12;
+    /// Monte-Carlo trials executed through the engine.
+    pub const MC_TRIALS: usize = 13;
+    /// Monte-Carlo chunks drained from the work queue.
+    pub const MC_CHUNKS: usize = 14;
+    /// Items mapped through `parallel_map`.
+    pub const PM_ITEMS: usize = 15;
+    /// Number of counters; `COUNTER_NAMES` must match.
+    pub const COUNTERS: usize = 16;
+    pub const COUNTER_NAMES: [&str; COUNTERS] = [
+        "dec_rows_pushed",
+        "dec_rows_peeled",
+        "dec_rows_forwarded",
+        "dec_int_rows_pushed",
+        "dec_episodes",
+        "audit_checks",
+        "audit_excisions",
+        "ch_samples",
+        "ch_degraded",
+        "ch_degraded_denom",
+        "ch_burst_ends",
+        "ch_deadline_hits",
+        "ch_deadline_total",
+        "mc_trials",
+        "mc_chunks",
+        "pm_items",
+    ];
+
+    // -- max-gauges -------------------------------------------------------
+    /// Highest stacked-matrix rank seen in any decode episode.
+    pub const DEC_MAX_RANK: usize = 0;
+    /// Most coefficient rows stacked in any decode episode.
+    pub const DEC_MAX_ROWS: usize = 1;
+    pub const GAUGES: usize = 2;
+    pub const GAUGE_NAMES: [&str; GAUGES] = ["dec_max_rank", "dec_max_rows"];
+
+    // -- log₂ histograms --------------------------------------------------
+    /// Final rank per decode episode.
+    pub const H_DEC_RANK: usize = 0;
+    /// Rows pushed per decode episode.
+    pub const H_DEC_ROWS: usize = 1;
+    /// Rows peeled per decode episode.
+    pub const H_DEC_PEELED: usize = 2;
+    pub const HISTS: usize = 3;
+    pub const HIST_NAMES: [&str; HISTS] = ["dec_rank", "dec_rows", "dec_peeled"];
+    /// Bucket `0` holds exactly the value 0; bucket `k ≥ 1` holds values in
+    /// `[2^(k-1), 2^k)`; the last bucket absorbs everything larger.
+    pub const HIST_BUCKETS: usize = 16;
+}
+
+/// log₂ bucket index for a histogram observation (see [`metric::HIST_BUCKETS`]).
+#[inline]
+pub fn bucket(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        ((64 - v.leading_zeros()) as usize).min(metric::HIST_BUCKETS - 1)
+    }
+}
+
+/// One worker's private metric arrays: the only thing trial bodies touch.
+///
+/// All fields are fixed-size integer arrays, so `clone` is a memcpy
+/// (no heap), `merge` is element-wise add/max (commutative — the basis of
+/// the thread-count invariance), and every recording method is a plain
+/// index bump. Pool one of these per worker scratch; the engine snapshots
+/// and merges them in worker-index order after the join.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Shard {
+    counters: [u64; metric::COUNTERS],
+    gauges: [u64; metric::GAUGES],
+    hist: [[u64; metric::HIST_BUCKETS]; metric::HISTS],
+    hist_sum: [u64; metric::HISTS],
+}
+
+impl Shard {
+    pub const fn new() -> Shard {
+        Shard {
+            counters: [0; metric::COUNTERS],
+            gauges: [0; metric::GAUGES],
+            hist: [[0; metric::HIST_BUCKETS]; metric::HISTS],
+            hist_sum: [0; metric::HISTS],
+        }
+    }
+
+    /// Zero every metric, keeping the (stack-only) storage.
+    pub fn clear(&mut self) {
+        *self = Shard::new();
+    }
+
+    #[inline]
+    pub fn inc(&mut self, c: usize) {
+        self.counters[c] += 1;
+    }
+
+    #[inline]
+    pub fn add(&mut self, c: usize, n: u64) {
+        self.counters[c] += n;
+    }
+
+    #[inline]
+    pub fn gauge_max(&mut self, g: usize, v: u64) {
+        if v > self.gauges[g] {
+            self.gauges[g] = v;
+        }
+    }
+
+    #[inline]
+    pub fn observe(&mut self, h: usize, v: u64) {
+        self.hist[h][bucket(v)] += 1;
+        self.hist_sum[h] += v;
+    }
+
+    pub fn counter(&self, c: usize) -> u64 {
+        self.counters[c]
+    }
+
+    pub fn gauge(&self, g: usize) -> u64 {
+        self.gauges[g]
+    }
+
+    /// Observations recorded into histogram `h`.
+    pub fn hist_count(&self, h: usize) -> u64 {
+        self.hist[h].iter().sum()
+    }
+
+    /// Element-wise merge: counter/histogram adds, gauge maxes. Commutative
+    /// and associative, so any merge order yields identical values.
+    pub fn merge(&mut self, other: &Shard) {
+        for (a, b) in self.counters.iter_mut().zip(other.counters.iter()) {
+            *a += b;
+        }
+        for (a, b) in self.gauges.iter_mut().zip(other.gauges.iter()) {
+            *a = (*a).max(*b);
+        }
+        for (ha, hb) in self.hist.iter_mut().zip(other.hist.iter()) {
+            for (a, b) in ha.iter_mut().zip(hb.iter()) {
+                *a += b;
+            }
+        }
+        for (a, b) in self.hist_sum.iter_mut().zip(other.hist_sum.iter()) {
+            *a += b;
+        }
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self == &Shard::new()
+    }
+
+    /// Fold one round's channel diagnostics into the channel counters.
+    pub fn absorb_channel(&mut self, st: &crate::scenario::ChannelStats) {
+        self.add(metric::CH_SAMPLES, st.samples as u64);
+        self.add(metric::CH_DEGRADED, st.degraded as u64);
+        self.add(metric::CH_DEGRADED_DENOM, st.degraded_denom as u64);
+        self.add(metric::CH_BURST_ENDS, st.burst_ends as u64);
+        self.add(metric::CH_DEADLINE_HITS, st.deadline_hits as u64);
+        self.add(metric::CH_DEADLINE_TOTAL, st.deadline_total as u64);
+    }
+
+    /// Fold one exact-integer decode episode ([`IntRref`]-based paths)
+    /// into the shard: `rows` pushed rows, `rank` the final rank.
+    ///
+    /// [`IntRref`]: crate::gc::IntRref
+    pub fn absorb_int_engine(&mut self, rows: u64, rank: u64) {
+        self.inc(metric::DEC_EPISODES);
+        self.add(metric::DEC_INT_ROWS_PUSHED, rows);
+        self.observe(metric::H_DEC_ROWS, rows);
+        self.observe(metric::H_DEC_RANK, rank);
+        self.gauge_max(metric::DEC_MAX_RANK, rank);
+        self.gauge_max(metric::DEC_MAX_ROWS, rows);
+    }
+}
+
+impl Default for Shard {
+    fn default() -> Shard {
+        Shard::new()
+    }
+}
+
+/// Shard projection for scratch types that carry no shard — the plain
+/// [`run_scratch`](crate::parallel::MonteCarlo::run_scratch) path.
+pub fn no_shard<S>(_: &mut S) -> Option<&mut Shard> {
+    None
+}
+
+// ---------------------------------------------------------------------------
+// Global registry
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug, Default)]
+struct PhaseStat {
+    count: u64,
+    total_ns: u64,
+    max_ns: u64,
+}
+
+#[derive(Clone, Debug)]
+struct WorkerStat {
+    pool: &'static str,
+    worker: usize,
+    items: u64,
+    elapsed_ns: u64,
+}
+
+struct Inner {
+    shard: Shard,
+    phases: BTreeMap<&'static str, PhaseStat>,
+    workers: Vec<WorkerStat>,
+}
+
+/// Whether wall-clock capture + export are requested (`--telemetry`).
+static ARMED: AtomicBool = AtomicBool::new(false);
+static INNER: Mutex<Inner> =
+    Mutex::new(Inner { shard: Shard::new(), phases: BTreeMap::new(), workers: Vec::new() });
+
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+pub fn arm() {
+    ARMED.store(true, Ordering::Relaxed);
+}
+
+pub fn disarm() {
+    ARMED.store(false, Ordering::Relaxed);
+}
+
+/// Clear every registered value (tests and multi-run CLI sessions).
+pub fn reset() {
+    let mut inner = INNER.lock().unwrap();
+    inner.shard.clear();
+    inner.phases.clear();
+    inner.workers.clear();
+}
+
+/// Merge a worker shard into the registry. The engine calls this in
+/// worker-index order after the join; the serial path calls it once.
+pub fn merge_shard(shard: &Shard) {
+    if shard.is_empty() {
+        return;
+    }
+    INNER.lock().unwrap().shard.merge(shard);
+}
+
+/// Bump a registry counter directly (for engine-level deterministic counts
+/// that have no scratch shard, e.g. `parallel_map` item totals). Armed
+/// only: callers sit outside per-trial bodies but may still be per-round.
+pub fn count(c: usize, n: u64) {
+    if armed() && n > 0 {
+        INNER.lock().unwrap().shard.add(c, n);
+    }
+}
+
+/// Record one worker's throughput (non-deterministic section; armed only).
+pub fn record_worker(pool: &'static str, worker: usize, items: u64, elapsed: Duration) {
+    if !armed() {
+        return;
+    }
+    INNER.lock().unwrap().workers.push(WorkerStat {
+        pool,
+        worker,
+        items,
+        elapsed_ns: elapsed.as_nanos() as u64,
+    });
+}
+
+/// Record one completed phase scope (non-deterministic section).
+pub fn record_phase(name: &'static str, elapsed: Duration) {
+    let ns = elapsed.as_nanos() as u64;
+    let mut inner = INNER.lock().unwrap();
+    let st = inner.phases.entry(name).or_default();
+    st.count += 1;
+    st.total_ns += ns;
+    st.max_ns = st.max_ns.max(ns);
+}
+
+/// RAII wall-clock scope. Disarmed it is a no-op shell: no clock read, no
+/// lock, no allocation — safe to drop into hot-ish paths.
+pub struct PhaseGuard {
+    name: &'static str,
+    start: Option<Instant>,
+}
+
+/// Open a named phase scope; elapsed time is recorded on drop when armed.
+pub fn phase(name: &'static str) -> PhaseGuard {
+    PhaseGuard { name, start: if armed() { Some(Instant::now()) } else { None } }
+}
+
+impl Drop for PhaseGuard {
+    fn drop(&mut self) {
+        if let Some(t0) = self.start {
+            record_phase(self.name, t0.elapsed());
+        }
+    }
+}
+
+/// Snapshot of the merged deterministic section (tests assert equality
+/// across `--threads`; the export paths render from it).
+pub fn snapshot() -> Shard {
+    INNER.lock().unwrap().shard.clone()
+}
+
+/// Serializes registry-touching unit tests across modules: the registry is
+/// process-global and cargo runs test fns on parallel threads.
+#[cfg(test)]
+pub(crate) static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+// ---------------------------------------------------------------------------
+// Export: JSON / Prometheus text / summary table
+// ---------------------------------------------------------------------------
+
+const SCHEMA_VERSION: f64 = 1.0;
+const NONDET_NOTE: &str =
+    "wall-clock values; vary run to run and are excluded from determinism guarantees";
+
+/// Render the full registry. Deterministic metrics and wall-clock values
+/// live under separate top-level keys; serialization order is fixed
+/// (BTreeMap), so the `deterministic` subtree is byte-stable across runs.
+pub fn export_json() -> Json {
+    let inner = INNER.lock().unwrap();
+    let sh = &inner.shard;
+    let counters = Json::Obj(
+        metric::COUNTER_NAMES
+            .iter()
+            .zip(sh.counters.iter())
+            .map(|(n, v)| (n.to_string(), json::num(*v as f64)))
+            .collect(),
+    );
+    let gauges = Json::Obj(
+        metric::GAUGE_NAMES
+            .iter()
+            .zip(sh.gauges.iter())
+            .map(|(n, v)| (n.to_string(), json::num(*v as f64)))
+            .collect(),
+    );
+    let hists = Json::Obj(
+        metric::HIST_NAMES
+            .iter()
+            .enumerate()
+            .map(|(h, n)| {
+                let buckets = Json::Arr(sh.hist[h].iter().map(|&b| json::num(b as f64)).collect());
+                (
+                    n.to_string(),
+                    json::obj(vec![
+                        ("buckets", buckets),
+                        ("count", json::num(sh.hist_count(h) as f64)),
+                        ("sum", json::num(sh.hist_sum[h] as f64)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    let phases = Json::Obj(
+        inner
+            .phases
+            .iter()
+            .map(|(name, st)| {
+                (
+                    name.to_string(),
+                    json::obj(vec![
+                        ("count", json::num(st.count as f64)),
+                        ("total_s", json::num(st.total_ns as f64 * 1e-9)),
+                        ("max_s", json::num(st.max_ns as f64 * 1e-9)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    let workers = Json::Arr(
+        inner
+            .workers
+            .iter()
+            .map(|w| {
+                json::obj(vec![
+                    ("pool", json::s(w.pool)),
+                    ("worker", json::num(w.worker as f64)),
+                    ("items", json::num(w.items as f64)),
+                    ("elapsed_s", json::num(w.elapsed_ns as f64 * 1e-9)),
+                ])
+            })
+            .collect(),
+    );
+    json::obj(vec![
+        ("version", json::num(SCHEMA_VERSION)),
+        (
+            "deterministic",
+            json::obj(vec![("counters", counters), ("gauges", gauges), ("histograms", hists)]),
+        ),
+        (
+            "non_deterministic",
+            json::obj(vec![
+                ("note", json::s(NONDET_NOTE)),
+                ("phases", phases),
+                ("workers", workers),
+            ]),
+        ),
+    ])
+}
+
+/// Write [`export_json`] to `path` with a trailing newline.
+pub fn write_json(path: &std::path::Path) -> std::io::Result<()> {
+    let mut text = export_json().serialize();
+    text.push('\n');
+    std::fs::write(path, text)
+}
+
+/// Prometheus text exposition of the registry — the scrape-format seam for
+/// the future `cogc serve` endpoint. Counter/gauge names are prefixed
+/// `cogc_`; histograms render cumulative `_bucket{le=...}` series with
+/// power-of-two upper bounds; phase wall-clock renders as labelled
+/// counters in seconds.
+pub fn render_prometheus() -> String {
+    use std::fmt::Write as _;
+    let inner = INNER.lock().unwrap();
+    let sh = &inner.shard;
+    let mut out = String::new();
+    for (n, v) in metric::COUNTER_NAMES.iter().zip(sh.counters.iter()) {
+        let _ = writeln!(out, "# TYPE cogc_{n} counter\ncogc_{n} {v}");
+    }
+    for (n, v) in metric::GAUGE_NAMES.iter().zip(sh.gauges.iter()) {
+        let _ = writeln!(out, "# TYPE cogc_{n} gauge\ncogc_{n} {v}");
+    }
+    for (h, n) in metric::HIST_NAMES.iter().enumerate() {
+        let _ = writeln!(out, "# TYPE cogc_{n} histogram");
+        let mut cum = 0u64;
+        for (k, b) in sh.hist[h].iter().enumerate() {
+            cum += b;
+            // bucket k ≥ 1 holds [2^(k-1), 2^k): inclusive upper bound 2^k - 1
+            let le = if k == 0 { 0 } else { (1u64 << k) - 1 };
+            let _ = writeln!(out, "cogc_{n}_bucket{{le=\"{le}\"}} {cum}");
+        }
+        let _ = writeln!(out, "cogc_{n}_bucket{{le=\"+Inf\"}} {cum}");
+        let _ = writeln!(out, "cogc_{n}_sum {}\ncogc_{n}_count {cum}", sh.hist_sum[h]);
+    }
+    let _ = writeln!(out, "# TYPE cogc_phase_seconds_total counter");
+    for (name, st) in inner.phases.iter() {
+        let _ = writeln!(
+            out,
+            "cogc_phase_seconds_total{{phase=\"{name}\"}} {:.9}",
+            st.total_ns as f64 * 1e-9
+        );
+    }
+    out
+}
+
+/// Human-readable end-of-run summary (nonzero metrics + phase timings),
+/// rendered through the shared CSV table type.
+pub fn summary_table() -> crate::metrics::Table {
+    let inner = INNER.lock().unwrap();
+    let sh = &inner.shard;
+    let mut t = crate::metrics::Table::new(
+        "telemetry summary: deterministic counters/gauges, then wall-clock phases",
+        &["metric", "value"],
+    );
+    for (n, v) in metric::COUNTER_NAMES.iter().zip(sh.counters.iter()) {
+        if *v > 0 {
+            t.row(&[n.to_string(), v.to_string()]);
+        }
+    }
+    for (n, v) in metric::GAUGE_NAMES.iter().zip(sh.gauges.iter()) {
+        if *v > 0 {
+            t.row(&[n.to_string(), v.to_string()]);
+        }
+    }
+    for (h, n) in metric::HIST_NAMES.iter().enumerate() {
+        let cnt = sh.hist_count(h);
+        if cnt > 0 {
+            t.row(&[format!("{n}_count"), cnt.to_string()]);
+            t.row(&[format!("{n}_mean"), format!("{:.3}", sh.hist_sum[h] as f64 / cnt as f64)]);
+        }
+    }
+    for (name, st) in inner.phases.iter() {
+        t.row(&[format!("phase/{name}/count"), st.count.to_string()]);
+        t.row(&[format!("phase/{name}/total_s"), format!("{:.6}", st.total_ns as f64 * 1e-9)]);
+    }
+    for w in inner.workers.iter() {
+        t.row(&[
+            format!("worker/{}/{}/items", w.pool, w.worker),
+            format!("{} in {:.6}s", w.items, w.elapsed_ns as f64 * 1e-9),
+        ]);
+    }
+    t
+}
+
+/// Validate an exported telemetry JSON file (the `cogc telemetry check`
+/// subcommand — a jq-free CI sanity gate). Returns a one-line summary on
+/// success, a diagnostic on failure.
+pub fn check_json(text: &str) -> Result<String, String> {
+    let v = Json::parse(text).map_err(|e| e.to_string())?;
+    let version =
+        v.get("version").and_then(Json::as_f64).ok_or("missing numeric \"version\"")?;
+    if version != SCHEMA_VERSION {
+        return Err(format!("unsupported telemetry schema version {version}"));
+    }
+    let det = v.get("deterministic").ok_or("missing \"deterministic\" section")?;
+    let counters = det
+        .get("counters")
+        .and_then(Json::as_obj)
+        .ok_or("missing \"deterministic.counters\" object")?;
+    if counters.len() != metric::COUNTERS {
+        return Err(format!(
+            "expected {} counters, found {}",
+            metric::COUNTERS,
+            counters.len()
+        ));
+    }
+    for (k, val) in counters {
+        let x = val.as_f64().ok_or_else(|| format!("counter {k:?} is not a number"))?;
+        if x < 0.0 || x.fract() != 0.0 {
+            return Err(format!("counter {k:?} is not a non-negative integer: {x}"));
+        }
+    }
+    let hists = det
+        .get("histograms")
+        .and_then(Json::as_obj)
+        .ok_or("missing \"deterministic.histograms\" object")?;
+    for (k, hv) in hists {
+        let buckets = hv
+            .get("buckets")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("histogram {k:?} has no bucket array"))?;
+        if buckets.len() != metric::HIST_BUCKETS {
+            return Err(format!("histogram {k:?} has {} buckets", buckets.len()));
+        }
+        let total: f64 = buckets.iter().filter_map(Json::as_f64).sum();
+        let count = hv.get("count").and_then(Json::as_f64).unwrap_or(-1.0);
+        if total != count {
+            return Err(format!("histogram {k:?} count {count} != bucket sum {total}"));
+        }
+    }
+    let nondet = v.get("non_deterministic").ok_or("missing \"non_deterministic\" section")?;
+    let phases = nondet
+        .get("phases")
+        .and_then(Json::as_obj)
+        .ok_or("missing \"non_deterministic.phases\" object")?;
+    Ok(format!(
+        "telemetry ok: {} counters, {} histograms, {} phases, {} worker rows",
+        counters.len(),
+        hists.len(),
+        phases.len(),
+        nondet.get("workers").and_then(Json::as_arr).map(<[Json]>::len).unwrap_or(0)
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_shard(rng: &mut Rng) -> Shard {
+        let mut sh = Shard::new();
+        for c in 0..metric::COUNTERS {
+            sh.add(c, rng.range(0, 100) as u64);
+        }
+        for g in 0..metric::GAUGES {
+            sh.gauge_max(g, rng.range(0, 1000) as u64);
+        }
+        for h in 0..metric::HISTS {
+            for _ in 0..rng.range(0, 20) {
+                sh.observe(h, rng.range(0, 100_000) as u64);
+            }
+        }
+        sh
+    }
+
+    #[test]
+    fn bucket_edges() {
+        assert_eq!(bucket(0), 0);
+        assert_eq!(bucket(1), 1);
+        assert_eq!(bucket(2), 2);
+        assert_eq!(bucket(3), 2);
+        assert_eq!(bucket(4), 3);
+        assert_eq!(bucket((1 << 14) - 1), 14);
+        assert_eq!(bucket(1 << 14), 15);
+        assert_eq!(bucket(u64::MAX), 15);
+    }
+
+    #[test]
+    fn merge_is_order_independent() {
+        let mut rng = Rng::new(0x7e1e_0007);
+        for _ in 0..20 {
+            let shards: Vec<Shard> = (0..6).map(|_| random_shard(&mut rng)).collect();
+            let mut fwd = Shard::new();
+            for s in &shards {
+                fwd.merge(s);
+            }
+            let mut rev = Shard::new();
+            for s in shards.iter().rev() {
+                rev.merge(s);
+            }
+            let mut rot = Shard::new();
+            for i in 0..shards.len() {
+                rot.merge(&shards[(i + 3) % shards.len()]);
+            }
+            assert_eq!(fwd, rev, "forward vs reverse merge differ");
+            assert_eq!(fwd, rot, "forward vs rotated merge differ");
+        }
+    }
+
+    #[test]
+    fn phase_guard_respects_armed_flag() {
+        let _lock = TEST_LOCK.lock().unwrap();
+        disarm();
+        reset();
+        {
+            let _g = phase("test/disarmed");
+        }
+        assert!(export_json()
+            .get("non_deterministic")
+            .unwrap()
+            .get("phases")
+            .unwrap()
+            .as_obj()
+            .unwrap()
+            .is_empty());
+        arm();
+        {
+            let _g = phase("test/armed");
+        }
+        disarm();
+        let j = export_json();
+        let phases = j.get("non_deterministic").unwrap().get("phases").unwrap();
+        assert_eq!(
+            phases.get("test/armed").unwrap().get("count").unwrap().as_usize(),
+            Some(1)
+        );
+        reset();
+    }
+
+    #[test]
+    fn export_roundtrips_and_checks() {
+        let _lock = TEST_LOCK.lock().unwrap();
+        disarm();
+        reset();
+        let mut rng = Rng::new(11);
+        merge_shard(&random_shard(&mut rng));
+        let text = export_json().serialize();
+        let msg = check_json(&text).expect("fresh export must validate");
+        assert!(msg.starts_with("telemetry ok"));
+        // parse → serialize is stable (BTreeMap ordering)
+        assert_eq!(Json::parse(&text).unwrap().serialize(), text);
+        let prom = render_prometheus();
+        assert!(prom.contains("# TYPE cogc_dec_rows_pushed counter"));
+        assert!(prom.contains("cogc_dec_rank_bucket{le=\"+Inf\"}"));
+        let table = summary_table().to_csv();
+        assert!(table.contains("metric,value"));
+        reset();
+    }
+
+    #[test]
+    fn check_rejects_malformed() {
+        assert!(check_json("{").is_err());
+        assert!(check_json("{\"version\": 9}").is_err());
+        assert!(check_json("{\"version\": 1}").is_err());
+    }
+
+    #[test]
+    fn shard_merge_into_registry_is_visible() {
+        let _lock = TEST_LOCK.lock().unwrap();
+        disarm();
+        reset();
+        let mut sh = Shard::new();
+        sh.add(metric::DEC_ROWS_PUSHED, 5);
+        sh.observe(metric::H_DEC_RANK, 7);
+        merge_shard(&sh);
+        merge_shard(&sh);
+        let snap = snapshot();
+        assert_eq!(snap.counter(metric::DEC_ROWS_PUSHED), 10);
+        assert_eq!(snap.hist_count(metric::H_DEC_RANK), 2);
+        reset();
+        assert!(snapshot().is_empty());
+    }
+}

@@ -17,16 +17,44 @@ pub enum Level {
 
 static LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialized
 
+/// Parse a `COGC_LOG` value; `None` means unrecognized (caller warns).
+fn parse_level(v: &str) -> Option<Level> {
+    match v {
+        "error" => Some(Level::Error),
+        "warn" => Some(Level::Warn),
+        "info" => Some(Level::Info),
+        "debug" => Some(Level::Debug),
+        "trace" => Some(Level::Trace),
+        _ => None,
+    }
+}
+
 fn init_level() -> u8 {
-    let lvl = match std::env::var("COGC_LOG").as_deref() {
-        Ok("error") => Level::Error,
-        Ok("warn") => Level::Warn,
-        Ok("debug") => Level::Debug,
-        Ok("trace") => Level::Trace,
-        _ => Level::Info,
-    } as u8;
-    LEVEL.store(lvl, Ordering::Relaxed);
-    lvl
+    let var = std::env::var("COGC_LOG");
+    let (lvl, invalid) = match var.as_deref() {
+        Ok(v) => match parse_level(v) {
+            Some(l) => (l, None),
+            // Typos must not silently demote to info without a trace —
+            // warn once (below), then fall back.
+            None => (Level::Info, Some(v.to_string())),
+        },
+        Err(_) => (Level::Info, None),
+    };
+    let lvl = lvl as u8;
+    // One-shot: only the thread that wins the 255→lvl race may warn, so a
+    // bad value prints exactly one line no matter how many threads log.
+    match LEVEL.compare_exchange(255, lvl, Ordering::Relaxed, Ordering::Relaxed) {
+        Ok(_) => {
+            if let Some(bad) = invalid {
+                eprintln!(
+                    "[cogc] warning: COGC_LOG={bad:?} is not one of \
+                     error|warn|info|debug|trace; defaulting to info"
+                );
+            }
+            lvl
+        }
+        Err(current) => current,
+    }
 }
 
 pub fn level() -> u8 {
@@ -82,6 +110,18 @@ mod tests {
         assert!(Level::Error < Level::Warn);
         assert!(Level::Warn < Level::Info);
         assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn parse_level_recognizes_all_names_and_rejects_typos() {
+        assert_eq!(parse_level("error"), Some(Level::Error));
+        assert_eq!(parse_level("warn"), Some(Level::Warn));
+        assert_eq!(parse_level("info"), Some(Level::Info));
+        assert_eq!(parse_level("debug"), Some(Level::Debug));
+        assert_eq!(parse_level("trace"), Some(Level::Trace));
+        assert_eq!(parse_level("inf0"), None);
+        assert_eq!(parse_level("INFO"), None);
+        assert_eq!(parse_level(""), None);
     }
 
     #[test]

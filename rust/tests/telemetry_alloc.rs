@@ -1,0 +1,92 @@
+//! Allocation contract of the telemetry hot path (ISSUE 9 acceptance
+//! criterion): disabled telemetry adds **zero** allocations to trial
+//! bodies, and the shard plumbing itself never allocates per trial.
+//!
+//! Counts allocator *calls* under a counting `#[global_allocator]` (the
+//! same pattern as the peak-tracking allocator of `tests/fr_large_m.rs`):
+//! per-trial regressions show up as a count that scales with the trial
+//! count, which the doubling assertion below catches exactly. Everything
+//! runs inside ONE test fn — a second concurrently-running test thread
+//! would bleed its allocations into the global counter and turn the
+//! exact-zero asserts flaky.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use cogc::parallel::MonteCarlo;
+use cogc::telemetry::{self, metric};
+
+struct CountAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, layout: Layout) {
+        System.dealloc(p, layout);
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountAlloc = CountAlloc;
+
+fn shard_of(s: &mut telemetry::Shard) -> Option<&mut telemetry::Shard> {
+    Some(s)
+}
+
+/// Allocator calls of a serial `run_scratch_tel` sweep with an
+/// instrumented trial body, telemetry disarmed.
+fn sweep_allocs(trials: usize) -> usize {
+    let mc = MonteCarlo::new(11).with_threads(1).with_chunk(64);
+    let before = ALLOCS.load(Ordering::Relaxed);
+    let total: usize = mc.run_scratch_tel(
+        trials,
+        telemetry::Shard::default,
+        shard_of,
+        |_t, rng, acc: &mut usize, sh| {
+            sh.inc(metric::DEC_EPISODES);
+            sh.observe(metric::H_DEC_ROWS, rng.range(0, 64) as u64);
+            *acc += 1;
+        },
+    );
+    assert_eq!(total, trials);
+    ALLOCS.load(Ordering::Relaxed) - before
+}
+
+#[test]
+fn disabled_telemetry_hot_path_allocates_nothing_per_trial() {
+    telemetry::disarm();
+    telemetry::reset();
+
+    // The raw shard primitives and the disarmed phase guard are pure
+    // integer work: exactly zero allocator calls across 10⁴ iterations.
+    let mut sh = telemetry::Shard::new();
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for i in 0..10_000u64 {
+        sh.inc(metric::DEC_EPISODES);
+        sh.add(metric::DEC_ROWS_PUSHED, i & 7);
+        sh.observe(metric::H_DEC_RANK, i);
+        sh.gauge_max(metric::DEC_MAX_RANK, i);
+        let _p = telemetry::phase("alloc-probe"); // disarmed: no clock read
+    }
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(after - before, 0, "telemetry primitives must not touch the allocator");
+    assert_eq!(sh.counter(metric::DEC_EPISODES), 10_000);
+
+    // Doubling the trial count of a serial engine sweep must not change
+    // the allocator-call count: every allocation is per-run (pool setup),
+    // none is per-trial or per-chunk. A single leaked per-trial
+    // allocation fails the assert by ≥ 2000.
+    let _warm = sweep_allocs(2_000); // registry/pool warm-up
+    let base = sweep_allocs(2_000);
+    let doubled = sweep_allocs(4_000);
+    assert_eq!(
+        base, doubled,
+        "allocator calls scale with trials: the telemetry hot path allocates per trial"
+    );
+    telemetry::reset();
+}
