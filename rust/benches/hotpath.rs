@@ -23,8 +23,8 @@ use cogc::linalg::{rref_with_transform, IncrementalRref, Matrix, PeelingDecoder}
 use cogc::network::{Network, Realization, SparseRealization};
 use cogc::outage::exact::poisson_binomial_pmf;
 use cogc::outage::mc::{
-    estimate_outage, estimate_outage_adv, fr_recovery, fr_recovery_adv, gcplus_recovery,
-    gcplus_recovery_adv, RecoveryMode,
+    estimate_outage, estimate_outage_adv, estimate_outage_tri, fr_recovery, fr_recovery_adv,
+    gcplus_recovery, gcplus_recovery_adv, gcplus_recovery_approx, RecoveryMode,
 };
 use cogc::parallel::{available_threads, MonteCarlo};
 use cogc::runtime::native::kernels;
@@ -337,6 +337,65 @@ fn main() {
                 ));
             },
         );
+    }
+
+    // ── degraded-mode decode: the lstsq fallback at the paper shapes ────
+    // The rescue prices one Gram/Cholesky least-squares solve over the
+    // delivered rows. The solve-only row isolates it; the MC rows run the
+    // approx-aware estimators on the same seeds as the exact fig4/fig6
+    // rows above, so the delta over those rows is the full price of the
+    // fallback (it only fires on would-be-outage trials).
+    {
+        let net3 = Network::fig6_setting(3, 10);
+        let mut arng = Rng::new(4242);
+        let mut dec = gc::GcPlusDecoder::new(10);
+        while dec.rows() < 8 {
+            let c = GcCode::generate(10, 7, &mut arng);
+            let att = gc::Attempt::observe(&c, &Realization::sample(&net3, &mut arng));
+            dec.push_attempt(&att);
+        }
+        suite.bench(&format!("lstsq approx_sum M=10 ({} rows)", dec.rows()), || {
+            let sol = gc::approx_sum(&dec);
+            cogc::bench::black_box(sol.map(|s| gc::relative_residual(&s, 10)));
+        });
+        for &threads in &thread_counts {
+            let mc = MonteCarlo::new(13).with_threads(threads);
+            suite.bench_throughput(
+                &format!(
+                    "mc gc+ recovery approx fig6-shape, {recovery_trials} trials ({threads} thr)"
+                ),
+                recovery_trials as f64,
+                "rounds",
+                || {
+                    cogc::bench::black_box(gcplus_recovery_approx(
+                        &net,
+                        &Iid,
+                        10,
+                        7,
+                        RecoveryMode::FixedTr(2),
+                        f64::INFINITY,
+                        recovery_trials,
+                        &mc,
+                    ));
+                },
+            );
+            let mc4 = MonteCarlo::new(11).with_threads(threads);
+            suite.bench_throughput(
+                &format!("mc outage tri fig4-shape, {outage_trials} trials ({threads} thr)"),
+                outage_trials as f64,
+                "rounds",
+                || {
+                    cogc::bench::black_box(estimate_outage_tri(
+                        &net,
+                        &code,
+                        &Iid,
+                        f64::INFINITY,
+                        outage_trials,
+                        &mc4,
+                    ));
+                },
+            );
+        }
     }
 
     // ── telemetry overhead: armed vs disabled, same shapes ──────────────

@@ -18,6 +18,11 @@ pub enum Aggregator {
     CoGc { design: Design, attempts: usize },
     /// CoGC with the GC⁺ complementary decoder (§VI, Algorithm 1).
     GcPlus { tr: usize, until_decode: bool, max_blocks: usize },
+    /// GC⁺ with the degraded-mode rescue: when a round ends with nothing
+    /// exactly decodable, the PS applies the least-squares approximate
+    /// aggregate over the delivered coded rows (relative residual logged
+    /// per round) instead of skipping the update. Dense families only.
+    Approx { tr: usize, until_decode: bool, max_blocks: usize },
     /// Tandon-style dataset-replication GC: partial sums are computed from
     /// replicated data (no client-to-client erasure exposure, (s+1)× the
     /// local compute), uplinks still fail. The paper's Fig. 1 baseline.
@@ -108,6 +113,7 @@ impl TrainConfig {
             Aggregator::CoGc { design: Design::RetryUntilSuccess, .. } => "cogc_d1".into(),
             Aggregator::CoGc { design: Design::SkipRound, .. } => "cogc".into(),
             Aggregator::GcPlus { .. } => "gcplus".into(),
+            Aggregator::Approx { .. } => "approx".into(),
             Aggregator::TandonReplicated { .. } => "tandon".into(),
         }
     }

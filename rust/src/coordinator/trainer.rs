@@ -30,6 +30,9 @@ struct AggResult {
     k4: usize,
     attempts: usize,
     transmissions: usize,
+    /// Relative residual of the applied aggregate (0 for exact decodes,
+    /// positive when the least-squares fallback supplied the update).
+    residual: f64,
 }
 
 /// Relative f32 tolerance for cross-combinator decode comparison: two
@@ -82,6 +85,12 @@ impl Trainer {
         let man = backend.manifest();
         anyhow::ensure!(net.m == man.m, "network M={} but backend built for M={}", net.m, man.m);
         cfg.code.validate(man.m, cfg.s)?;
+        anyhow::ensure!(
+            !(matches!(cfg.aggregator, Aggregator::Approx { .. })
+                && cfg.code == CodeFamily::FractionalRepetition),
+            "--agg approx needs a dense code family (cyclic/binary): the FR decoder \
+             delivers group indicators, not stackable coded rows to least-square over"
+        );
         let model = backend.load_model(&cfg.model)?;
         let coded = backend.coded(&model.spec, cfg.combine)?;
         let mut rng = Rng::new(cfg.seed ^ 0xC0_6C);
@@ -313,6 +322,7 @@ impl Trainer {
             train_loss,
             test_loss,
             test_acc,
+            residual: agg.residual,
         })
     }
 
@@ -372,6 +382,7 @@ impl Trainer {
                         k4: 0,
                         attempts: 1,
                         transmissions: tx,
+                        residual: 0.0,
                     })
                 } else if self.uplink_adversary_active() {
                     // uncoded uplinks: a malicious client's update arrives
@@ -410,10 +421,18 @@ impl Trainer {
             },
             Aggregator::GcPlus { tr, until_decode, max_blocks } => match self.cfg.code {
                 CodeFamily::Cyclic | CodeFamily::Binary => {
-                    self.agg_gcplus(deltas, tr, until_decode, max_blocks)
+                    self.agg_gcplus(deltas, tr, until_decode, max_blocks, false)
                 }
                 CodeFamily::FractionalRepetition => {
                     self.agg_gcplus_fr(deltas, tr, until_decode, max_blocks)
+                }
+            },
+            Aggregator::Approx { tr, until_decode, max_blocks } => match self.cfg.code {
+                CodeFamily::Cyclic | CodeFamily::Binary => {
+                    self.agg_gcplus(deltas, tr, until_decode, max_blocks, true)
+                }
+                CodeFamily::FractionalRepetition => {
+                    anyhow::bail!("approx aggregator with FR is rejected in Trainer::new")
                 }
             },
         }
@@ -492,6 +511,7 @@ impl Trainer {
             k4: subset.len(),
             attempts: 1,
             transmissions,
+            residual: 0.0,
         }
     }
 
@@ -585,6 +605,7 @@ impl Trainer {
                 k4: self.m,
                 attempts: attempt + 1,
                 transmissions: tx,
+                residual: 0.0,
             });
         }
         Ok(AggResult {
@@ -593,17 +614,22 @@ impl Trainer {
             k4: 0,
             attempts: max_attempts,
             transmissions: tx,
+            residual: 0.0,
         })
     }
 
     /// GC⁺ (§VI, Algorithm 1): stack complete *and* incomplete partial sums
-    /// across attempts; decode every recoverable local update.
+    /// across attempts; decode every recoverable local update. With
+    /// `approx`, a round that would end "none" instead applies the
+    /// least-squares aggregate over the delivered rows (the degraded-mode
+    /// rescue — outcome "approx", residual logged per round).
     fn agg_gcplus(
         &mut self,
         deltas: &[f32],
         tr: usize,
         until_decode: bool,
         max_blocks: usize,
+        approx: bool,
     ) -> anyhow::Result<AggResult> {
         let blocks = if until_decode { max_blocks.max(1) } else { 1 };
         let mut tx = 0usize;
@@ -702,6 +728,7 @@ impl Trainer {
                             k4: self.m,
                             attempts: attempts_used,
                             transmissions: tx,
+                            residual: 0.0,
                         });
                     }
                 }
@@ -860,15 +887,54 @@ impl Trainer {
                 k4: dec.k4.len(),
                 attempts: attempts_used,
                 transmissions: tx,
+                residual: 0.0,
             });
         }
         harvest(&decoder, &ieng);
+        // degraded-mode rescue: nothing decoded exactly across the whole
+        // budget — least-square 𝟙 over the delivered coefficient rows and
+        // apply the approximate mean rather than skipping the update. The
+        // decoder's row stack and `payload_rows` are in lockstep (both fed
+        // per delivered row, both rebuilt together on audit excision), so
+        // `sol.weights[i]` weighs `payload_rows[i]`.
+        if approx && decoder.rank() > 0 {
+            if let Some(sol) = gc::approx_sum(&decoder) {
+                let rel = gc::relative_residual(&sol, self.m);
+                let mut delta = vec![0.0f32; self.d];
+                for (i, row) in payload_rows.iter().enumerate() {
+                    let w = sol.weights[i] as f32;
+                    if w != 0.0 {
+                        for (o, v) in delta.iter_mut().zip(row) {
+                            *o += w * v;
+                        }
+                    }
+                }
+                let inv = 1.0 / self.m as f32;
+                for o in &mut delta {
+                    *o *= inv;
+                }
+                if telemetry::armed() {
+                    let mut sh = telemetry::Shard::new();
+                    sh.inc(telemetry::metric::APPROX_FALLBACKS);
+                    telemetry::merge_shard(&sh);
+                }
+                return Ok(AggResult {
+                    delta: Some(delta),
+                    outcome: "approx",
+                    k4: 0,
+                    attempts: attempts_used,
+                    transmissions: tx,
+                    residual: rel,
+                });
+            }
+        }
         Ok(AggResult {
             delta: None,
             outcome: "none",
             k4: 0,
             attempts: attempts_used,
             transmissions: tx,
+            residual: 0.0,
         })
     }
 
@@ -965,6 +1031,7 @@ impl Trainer {
                 k4: self.m,
                 attempts: attempt + 1,
                 transmissions: tx,
+                residual: 0.0,
             });
         }
         Ok(AggResult {
@@ -973,6 +1040,7 @@ impl Trainer {
             k4: 0,
             attempts: max_attempts,
             transmissions: tx,
+            residual: 0.0,
         })
     }
 
@@ -1054,6 +1122,7 @@ impl Trainer {
                         k4: self.m,
                         attempts: attempts_used,
                         transmissions: tx,
+                        residual: 0.0,
                     });
                 }
                 FrCode::union_covered(&mut acc, &covered);
@@ -1097,6 +1166,7 @@ impl Trainer {
                 k4,
                 attempts: attempts_used,
                 transmissions: tx,
+                residual: 0.0,
             });
         }
         Ok(AggResult {
@@ -1105,6 +1175,7 @@ impl Trainer {
             k4: 0,
             attempts: attempts_used,
             transmissions: tx,
+            residual: 0.0,
         })
     }
 }

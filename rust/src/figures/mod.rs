@@ -444,7 +444,7 @@ pub fn scenario_sweep(sc: &Scenario, trials: usize, seed: u64, threads: usize) -
     let series = crate::scenario::run_scenario(sc, trials, &mc);
     let attempts_per_round = match sc.decoder {
         crate::sim::Decoder::Standard { attempts } => attempts.max(1),
-        crate::sim::Decoder::GcPlus { tr } => tr.max(1),
+        crate::sim::Decoder::GcPlus { tr } | crate::sim::Decoder::Approx { tr } => tr.max(1),
     };
     let window = sc.channel.build().round_duration() * attempts_per_round as f64;
     // non-default code families are flagged in the comment; cyclic output
@@ -459,6 +459,18 @@ pub fn scenario_sweep(sc: &Scenario, trials: usize, seed: u64, threads: usize) -
     let adv_tag = match &sc.adversary {
         None => String::new(),
         Some(spec) => format!(" adversary={}", spec.summary()),
+    };
+    // degraded-mode scenarios (approximate decoder, or a recovery policy
+    // with the exact→approx fallback armed) grow the approx-acceptance
+    // column plus the relative-residual histogram; active policies grow the
+    // retransmission/fault accounting. Plain scenarios keep the exact
+    // pre-existing column set, byte-identical.
+    let degraded = matches!(sc.decoder, crate::sim::Decoder::Approx { .. })
+        || sc.policy.as_ref().is_some_and(|p| p.fallback);
+    let policied = sc.policy.as_ref().is_some_and(|p| !p.is_passive());
+    let policy_tag = match &sc.policy {
+        Some(p) if !p.is_passive() => format!(" {}", p.summary()),
+        _ => String::new(),
     };
     let mut header = vec![
         "round",
@@ -481,6 +493,16 @@ pub fn scenario_sweep(sc: &Scenario, trials: usize, seed: u64, threads: usize) -
             "mean_false_excised",
         ]);
     }
+    if degraded {
+        header.push("p_approx");
+        header.extend([
+            "resid_b0", "resid_b1", "resid_b2", "resid_b3", "resid_b4", "resid_b5", "resid_b6",
+            "resid_b7",
+        ]);
+    }
+    if policied {
+        header.extend(["mean_retries", "mean_recovered", "mean_budget_exhausted", "mean_killed"]);
+    }
     // armed telemetry appends the GC⁺ peel/forward split per round; clean
     // (disarmed) CSVs stay byte-identical — the determinism contract of
     // `tests/telemetry.rs`
@@ -490,7 +512,7 @@ pub fn scenario_sweep(sc: &Scenario, trials: usize, seed: u64, threads: usize) -
     }
     let mut t = Table::new(
         &format!(
-            "scenario {}: {}\nchannel={} net={} decoder={:?} s={}{code_tag}{adv_tag} trials={trials}",
+            "scenario {}: {}\nchannel={} net={} decoder={:?} s={}{code_tag}{adv_tag}{policy_tag} trials={trials}",
             sc.name,
             sc.description,
             sc.channel.name(),
@@ -523,10 +545,108 @@ pub fn scenario_sweep(sc: &Scenario, trials: usize, seed: u64, threads: usize) -
                 tally.false_excised as f64 / n,
             ]);
         }
+        if degraded {
+            row.push(tally.approx as f64 / n);
+            row.extend(tally.residual_hist.iter().map(|&c| c as f64 / n));
+        }
+        if policied {
+            row.extend([
+                tally.retries as f64 / n,
+                tally.recovered as f64 / n,
+                tally.budget_exhausted as f64 / n,
+                tally.killed as f64 / n,
+            ]);
+        }
         if armed {
             row.extend([tally.peeled as f64 / n, tally.forwarded as f64 / n]);
         }
         t.rowf(&row);
+    }
+    t
+}
+
+/// Error-vs-communication-budget sweep across the scenario registry: every
+/// clean (non-adversarial) built-in scenario is re-run under three decode
+/// regimes — exact GC⁺, the least-squares approximate decoder, and exact
+/// GC⁺ under a bounded-retransmission policy with the exact→approx
+/// fallback armed — and each regime's update-miss rate is tabled against
+/// the communication it spent (transmissions per round, retransmissions
+/// included). Each (scenario, regime) cell runs on its own derived seed,
+/// so the table is bit-identical at every `threads` value.
+pub fn error_vs_budget(trials: usize, seed: u64, threads: usize) -> Table {
+    use crate::scenario::RecoveryPolicy;
+    use crate::sim::Decoder;
+    let mut t = Table::new(
+        "error_vs_budget: update-miss rate vs communication spend per decode regime\n\
+         exact: GC+ only | approx: least-squares fallback accepted at any residual |\n\
+         retry_approx: 2 bounded retransmits (backoff 2.0) then approx at rel-residual <= 0.5",
+        &[
+            "scenario",
+            "regime",
+            "p_update",
+            "p_exact",
+            "p_approx",
+            "p_miss",
+            "tx_per_round",
+            "retries_per_round",
+        ],
+    );
+    let retry_policy = RecoveryPolicy {
+        retries: 2,
+        backoff: 2.0,
+        deadline: 6.0,
+        fallback: true,
+        fallback_residual: 0.5,
+        ..RecoveryPolicy::default()
+    };
+    for (si, base) in crate::scenario::builtin().into_iter().enumerate() {
+        // the degraded pipeline needs a dense clean realization: skip
+        // adversarial scenarios and the sparse fr family
+        if base.adversary.is_some()
+            || base.code == crate::gc::CodeFamily::FractionalRepetition
+        {
+            continue;
+        }
+        let tr = match base.decoder {
+            Decoder::Standard { attempts } => attempts.max(1),
+            Decoder::GcPlus { tr } | Decoder::Approx { tr } => tr.max(1),
+        };
+        let regimes: [(&str, Decoder, Option<RecoveryPolicy>); 3] = [
+            ("exact", Decoder::GcPlus { tr }, None),
+            ("approx", Decoder::Approx { tr }, None),
+            ("retry_approx", Decoder::GcPlus { tr }, Some(retry_policy.clone())),
+        ];
+        for (ri, (regime, decoder, policy)) in regimes.into_iter().enumerate() {
+            let mut sc = base.clone();
+            sc.decoder = decoder;
+            sc.policy = policy;
+            let mc = MonteCarlo::new(derive_seed(seed, (si * 8 + ri) as u64))
+                .with_threads(threads);
+            let series = crate::scenario::run_scenario(&sc, trials, &mc);
+            let (mut n, mut exact, mut approx, mut none, mut tx, mut retries) =
+                (0usize, 0usize, 0usize, 0usize, 0usize, 0usize);
+            for tally in &series.rounds {
+                n += tally.trials;
+                exact += tally.standard + tally.full + tally.partial;
+                approx += tally.approx;
+                none += tally.none;
+                tx += tally.transmissions;
+                retries += tally.retries;
+            }
+            let n = n.max(1) as f64;
+            let rounds = series.rounds.len().max(1) as f64;
+            let per_round = trials.max(1) as f64;
+            t.row(&[
+                base.name.clone(),
+                regime.to_string(),
+                format!("{:.4}", (exact + approx) as f64 / n),
+                format!("{:.4}", exact as f64 / n),
+                format!("{:.4}", approx as f64 / n),
+                format!("{:.4}", none as f64 / n),
+                format!("{:.2}", tx as f64 / (rounds * per_round)),
+                format!("{:.3}", retries as f64 / (rounds * per_round)),
+            ]);
+        }
     }
     t
 }
@@ -558,9 +678,8 @@ pub fn outage_split_summary(
             outage::estimate_outage_fr_adv(&net, &code, ch.as_ref(), spec, trials, &mc)
         }
         crate::gc::CodeFamily::Binary => {
-            // Scenario::validate rejects binary + adversary, so this is
-            // unreachable through the CLI; keep it an error, not a panic
-            anyhow::bail!("the binary family does not support adversarial sweeps yet")
+            let code = crate::gc::BinaryCode::new(net.m, sc.s)?;
+            outage::estimate_outage_binary_adv(&net, code, ch.as_ref(), spec, trials, &mc)
         }
     };
     let n = split.trials.max(1) as f64;

@@ -1,0 +1,140 @@
+//! Degraded-mode approximate aggregation: when the complementary decoder
+//! reports the gradient-sum row unreachable (`K₄ = ∅` and no standard
+//! decode), the delivered coded rows still pin the *closest* reachable
+//! combination. This module bridges the GC⁺ decoder state to the
+//! least-squares solver in [`crate::linalg::lstsq`] and standardizes the
+//! diagnostics (relative residual, residual buckets) the sweep/outage/
+//! trainer layers report upstream.
+//!
+//! The naming is deliberate: [`crate::gc::gcplus::decode_approx`] is the
+//! paper's Algorithm 2 (an *exact* decode over a full-rank block); the
+//! functions here are the lossy fallback and always carry a residual.
+
+use crate::gc::GcPlusDecoder;
+use crate::linalg::{lstsq_ones, Lstsq};
+
+/// Number of relative-residual buckets reported by sweeps and figures.
+pub const RESIDUAL_BUCKETS: usize = 8;
+
+/// Optimal least-squares weights for the gradient-*sum* target (`𝟙ᵀ·G`)
+/// over everything pushed into the decoder so far. `None` when the Gram
+/// solve is numerically degenerate — callers treat that as a true outage.
+pub fn approx_sum(dec: &GcPlusDecoder) -> Option<Lstsq> {
+    lstsq_ones(dec.engine())
+}
+
+/// Relative residual `‖𝟙 − w·A‖ / ‖𝟙‖ = residual / √M` — 0 means the
+/// exact decoder would also have succeeded, 1 means nothing was recovered.
+pub fn relative_residual(sol: &Lstsq, m: usize) -> f64 {
+    if m == 0 {
+        return 0.0;
+    }
+    sol.residual / (m as f64).sqrt()
+}
+
+/// Fixed bucketing of the relative residual for associative histograms:
+/// bucket 0 is "exact to rounding", the top bucket is "recovered almost
+/// nothing". Thresholds are constants so tallies merge bit-identically at
+/// any thread count.
+pub fn residual_bucket(rel: f64) -> usize {
+    const EDGES: [f64; RESIDUAL_BUCKETS - 1] =
+        [1e-6, 0.01, 0.05, 0.1, 0.25, 0.5, 0.75];
+    EDGES.iter().position(|&e| rel < e).unwrap_or(RESIDUAL_BUCKETS - 1)
+}
+
+/// Combine stacked payload rows with least-squares weights into the
+/// approximate gradient *mean*: `(Σ wᵢ · rowᵢ) / M`. Rows are in stack
+/// (push) order, matching `sol.weights`.
+pub fn combine_mean(weights: &[f64], rows: &[Vec<f64>], m: usize, out: &mut Vec<f64>) {
+    assert_eq!(weights.len(), rows.len(), "approx combine arity mismatch");
+    let dim = rows.first().map_or(0, |r| r.len());
+    out.clear();
+    out.resize(dim, 0.0);
+    for (w, row) in weights.iter().zip(rows) {
+        if *w == 0.0 {
+            continue;
+        }
+        for (o, &v) in out.iter_mut().zip(row.iter()) {
+            *o += w * v;
+        }
+    }
+    let inv = 1.0 / m as f64;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gc::{Attempt, GcCode};
+    use crate::linalg::Matrix;
+    use crate::network::Realization;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn full_rank_stack_matches_exact_gcplus_decode() {
+        // ISSUE acceptance: on a full-rank delivery the approx weights
+        // reproduce the exact decode against the dense oracle at M ≤ 12.
+        let mut rng = Rng::new(5);
+        for m in [3usize, 6, 9, 12] {
+            let s = (m / 2).max(1);
+            let mut dec = GcPlusDecoder::new(m);
+            let mut stack = Matrix::zeros(0, m);
+            while dec.rank() < m {
+                let code = GcCode::generate(m, s, &mut rng);
+                let att = Attempt::observe(&code, &Realization::perfect(m));
+                for &r in &att.delivered {
+                    dec.push_row(att.perturbed.row(r));
+                    stack.push_row(att.perturbed.row(r));
+                }
+            }
+            let sol = approx_sum(&dec).expect("full-rank gram must solve");
+            assert!(sol.residual < 1e-8, "m={m} residual {}", sol.residual);
+            assert_eq!(sol.covered, m);
+            assert_eq!(residual_bucket(relative_residual(&sol, m)), 0);
+            // w·A must be the all-ones row the exact decoder reaches
+            for j in 0..m {
+                let got: f64 = sol
+                    .weights
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &w)| w * stack.row(i)[j])
+                    .sum();
+                assert!((got - 1.0).abs() < 1e-8, "m={m} col {j}: {got}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_decoder_reports_total_loss() {
+        let dec = GcPlusDecoder::new(6);
+        let sol = approx_sum(&dec).unwrap();
+        assert_eq!(sol.covered, 0);
+        let rel = relative_residual(&sol, 6);
+        assert!((rel - 1.0).abs() < 1e-12, "rel {rel}");
+        assert_eq!(residual_bucket(rel), RESIDUAL_BUCKETS - 1);
+    }
+
+    #[test]
+    fn residual_buckets_are_monotone_and_in_range() {
+        let mut prev = 0;
+        for i in 0..=100 {
+            let rel = i as f64 / 100.0;
+            let b = residual_bucket(rel);
+            assert!(b < RESIDUAL_BUCKETS);
+            assert!(b >= prev, "bucket not monotone at rel={rel}");
+            prev = b;
+        }
+        assert_eq!(residual_bucket(0.0), 0);
+        assert_eq!(residual_bucket(2.0), RESIDUAL_BUCKETS - 1);
+    }
+
+    #[test]
+    fn combine_mean_weights_payload_rows() {
+        let rows = vec![vec![2.0, 4.0], vec![1.0, -1.0]];
+        let mut out = Vec::new();
+        combine_mean(&[0.5, 1.0], &rows, 2, &mut out);
+        assert_eq!(out, vec![1.0, 0.5]);
+    }
+}

@@ -32,6 +32,7 @@
 //! plain-engine reference; detection rates are pinned equal by the
 //! differential tests here and in `tests/decode_equivalence.rs`.
 
+use crate::gc::binary::IntRref;
 use crate::linalg::{IncrementalRref, PeelingDecoder};
 use crate::linalg::Matrix;
 
@@ -79,6 +80,12 @@ trait CheckEngine {
     fn reset(&mut self, cols: usize);
     fn push_row(&mut self, row: &[f64]) -> Option<usize>;
     fn null_transform(&self) -> &[f64];
+    /// Structural support of a harvested check. The float engines apply
+    /// the relative tolerance; the exact integer engine overrides this
+    /// with the exact non-zero test (its combos carry no rounding noise).
+    fn check_support(&self, combo: &[f64]) -> Vec<usize> {
+        combo_support(combo)
+    }
 }
 
 impl CheckEngine for IncrementalRref {
@@ -141,6 +148,63 @@ where
     audit_rows_with(&mut eng, coeffs, check_fails)
 }
 
+/// [`CheckEngine`] over the exact integer eliminator: rows arrive as
+/// integer-valued `f64`s (the binary family's ±1 coefficients), the
+/// elimination runs in i128 rationals, and check supports are the exact
+/// non-zero sets — no tolerance anywhere, so the audit can neither drop a
+/// small-but-real check coefficient nor hallucinate one from rounding.
+struct IntCheckEngine {
+    eng: IntRref,
+    ibuf: Vec<i64>,
+    combo: Vec<f64>,
+}
+
+impl CheckEngine for IntCheckEngine {
+    fn reset(&mut self, cols: usize) {
+        self.eng.reset(cols);
+    }
+    fn push_row(&mut self, row: &[f64]) -> Option<usize> {
+        self.ibuf.clear();
+        self.ibuf.extend(row.iter().map(|&v| {
+            debug_assert_eq!(v, v.trunc(), "integer audit fed a non-integer coefficient");
+            v as i64
+        }));
+        let pivot = self.eng.push_row(&self.ibuf);
+        if pivot.is_none() {
+            self.eng.null_transform_f64(&mut self.combo);
+        }
+        pivot
+    }
+    fn null_transform(&self) -> &[f64] {
+        &self.combo
+    }
+    fn check_support(&self, combo: &[f64]) -> Vec<usize> {
+        // exact rationals: an entry is zero iff its i128 numerator is zero
+        combo
+            .iter()
+            .enumerate()
+            .filter(|(_, &x)| x != 0.0)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+/// [`audit_rows`] in exact i128 arithmetic for integer-valued code
+/// families (the ±1 `binary` family): elimination, harvested checks, and
+/// their supports are all exact, so the audit verdict has no numerical
+/// failure mode. Rows must hold exactly representable integers.
+pub fn audit_rows_int<F>(coeffs: &Matrix, check_fails: F) -> Audit
+where
+    F: FnMut(&[f64], &[usize]) -> bool,
+{
+    let mut eng = IntCheckEngine {
+        eng: IntRref::new(coeffs.cols),
+        ibuf: Vec::with_capacity(coeffs.cols),
+        combo: Vec::new(),
+    };
+    audit_rows_with(&mut eng, coeffs, check_fails)
+}
+
 fn audit_rows_with<E, F>(eng: &mut E, coeffs: &Matrix, mut check_fails: F) -> Audit
 where
     E: CheckEngine,
@@ -160,7 +224,8 @@ where
                 let combo = eng.null_transform();
                 debug_assert_eq!(combo.len(), local + 1);
                 let fails = check_fails(combo, &audit.kept[..=local]);
-                pass_checks.push((fails, combo_support(combo)));
+                let support = eng.check_support(combo);
+                pass_checks.push((fails, support));
             }
         }
         audit.checks += pass_checks.len();
@@ -240,6 +305,13 @@ pub fn payload_check_fails(combo: &[f64], kept: &[usize], sums: &Matrix) -> bool
 /// identity the dense-oracle tests pin down.
 pub fn symbolic_check_fails(combo: &[f64], kept: &[usize], corrupted: &[bool]) -> bool {
     combo_support(combo).iter().any(|&i| corrupted[kept[i]])
+}
+
+/// [`symbolic_check_fails`] with exact support: any non-zero combo entry
+/// counts. Pair with [`audit_rows_int`], whose combos are exact rationals
+/// (zero iff the i128 numerator is zero).
+pub fn symbolic_check_fails_exact(combo: &[f64], kept: &[usize], corrupted: &[bool]) -> bool {
+    combo.iter().zip(kept).any(|(&x, &k)| x != 0.0 && corrupted[k])
 }
 
 /// Whether a decode weight row (aligned with `kept` stack indices) places
@@ -396,6 +468,64 @@ mod tests {
                 assert_eq!(peel, pure, "symbolic audit m={m} s={s} trial {trial}");
             }
         }
+    }
+
+    #[test]
+    fn int_audit_matches_float_audit_on_binary_double_stacks() {
+        // satellite differential: the exact i128 audit and the float audit
+        // must agree — alarms, checks, excisions, survivors, bit for bit —
+        // on ±1 binary stacks, where every float combo is exactly the
+        // rational one (pinned by int_rref_matches_float_engine_verdicts).
+        use crate::gc::BinaryCode;
+        let mut rng = Rng::new(17);
+        for (m, s) in [(6usize, 2usize), (10, 4), (14, 6)] {
+            let code = BinaryCode::new(m, s).unwrap();
+            let b = code.dense_b();
+            let mut coeffs = Matrix::zeros(0, m);
+            for r in 0..m {
+                coeffs.push_row(b.row(r));
+            }
+            for r in 0..m {
+                coeffs.push_row(b.row(r));
+            }
+            for trial in 0..15 {
+                let mut corrupted = vec![false; coeffs.rows];
+                for c in corrupted.iter_mut() {
+                    *c = rng.bernoulli(0.2);
+                }
+                let float =
+                    audit_rows(&coeffs, |c, k| symbolic_check_fails(c, k, &corrupted));
+                let exact = audit_rows_int(&coeffs, |c, k| {
+                    symbolic_check_fails_exact(c, k, &corrupted)
+                });
+                assert_eq!(float, exact, "m={m} s={s} trial={trial}");
+            }
+        }
+    }
+
+    #[test]
+    fn int_audit_excises_flipped_binary_payload_row() {
+        // payload-evaluator end of the int audit: duplicate the ±1 stack,
+        // flip one payload row's sign, and the exact audit must excise it
+        use crate::gc::BinaryCode;
+        let mut rng = Rng::new(29);
+        let code = BinaryCode::new(8, 2).unwrap();
+        let b = code.dense_b();
+        let payload = Matrix::from_fn(8, 4, |_, _| rng.normal());
+        let mut coeffs = Matrix::zeros(0, 8);
+        for r in 0..8 {
+            coeffs.push_row(b.row(r));
+        }
+        for r in 0..8 {
+            coeffs.push_row(b.row(r));
+        }
+        let mut sums = coeffs.matmul(&payload);
+        for x in sums.row_mut(5) {
+            *x = -*x;
+        }
+        let audit = audit_rows_int(&coeffs, |c, k| payload_check_fails(c, k, &sums));
+        assert!(audit.alarm);
+        assert!(audit.excised.contains(&5), "excised: {:?}", audit.excised);
     }
 
     #[test]

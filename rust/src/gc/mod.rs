@@ -4,6 +4,7 @@
 //! peeling front-end, and the rank analyses that underpin the paper's
 //! reliability results.
 
+pub mod approx;
 pub mod binary;
 pub mod byzantine;
 pub mod codes;
@@ -12,9 +13,11 @@ pub mod family;
 pub mod gcplus;
 pub mod rank;
 
+pub use approx::{approx_sum, combine_mean, relative_residual, residual_bucket, RESIDUAL_BUCKETS};
 pub use binary::{BinaryCode, IntRref};
 pub use byzantine::{
-    audit_rows, audit_rows_pure, payload_check_fails, symbolic_check_fails, Audit,
+    audit_rows, audit_rows_int, audit_rows_pure, payload_check_fails, symbolic_check_fails,
+    symbolic_check_fails_exact, Audit,
 };
 pub use codes::GcCode;
 pub use combinator::{apply_combinator, find_combinator};

@@ -1,0 +1,246 @@
+//! Least-squares solves over delivered coded stacks — the degraded-mode
+//! complement to the exact RREF decode.
+//!
+//! When the stacked coefficient rows cannot reach a target combination
+//! exactly (GC outage, GC⁺ empty `K₄`), the delivered rows still pin the
+//! *closest* reachable combination: the orthogonal projection of the
+//! target onto the row space. [`lstsq_rows`] computes the optimal weights
+//! `w` minimizing `‖wᵀA − target‖₂` straight from the incremental
+//! engine's reduced state — no re-factorization of the stack:
+//!
+//! - the engine's stored rows `e_i` are a basis of `rowspace(A)` with
+//!   known transforms `t_i` (`t_i · A = e_i`), so the projection solve
+//!   collapses to the `rank × rank` Gram system `G α = E·target`,
+//!   `G[i][j] = e_i · e_j`, solved by Cholesky;
+//! - the stack-row weights are then `w = Σ αᵢ t_i`, and the residual norm
+//!   `‖target − proj‖₂` comes from the same inner products
+//!   (`‖t‖² − bᵀα`), so the whole solve is `O(rank²·M + rank³)`.
+//!
+//! On a full-rank delivery the row space is all of `ℝᴹ`, the projection
+//! is the target itself, and the weights reproduce the exact decode to
+//! machine precision (pinned against the dense oracle in tests). The
+//! residual norm and the effective-coverage count (how many clients the
+//! row space touches at all) are the two diagnostics the degraded-mode
+//! pipeline reports upstream.
+
+use crate::linalg::rref::IncrementalRref;
+
+/// One least-squares solve over a delivered stack.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Lstsq {
+    /// Optimal stack-row weights, one per pushed row (stack order):
+    /// `weights · A` is the closest reachable combination to the target.
+    pub weights: Vec<f64>,
+    /// `‖target − weights·A‖₂` — 0 (to rounding) iff the target lies in
+    /// the row space, i.e. the exact decoder would also have succeeded.
+    pub residual: f64,
+    /// Effective coverage: columns (clients) the row space touches at
+    /// all. Columns outside it contribute their full target weight to the
+    /// residual no matter what.
+    pub covered: usize,
+}
+
+/// Solve the `n × n` SPD system `G x = b` in place by Cholesky
+/// (`g` row-major, overwritten with the factor; `b` overwritten with the
+/// solution). Returns `false` when a pivot collapses (G not numerically
+/// positive definite).
+fn cholesky_solve(g: &mut [f64], n: usize, b: &mut [f64]) -> bool {
+    for j in 0..n {
+        let mut d = g[j * n + j];
+        for k in 0..j {
+            d -= g[j * n + k] * g[j * n + k];
+        }
+        if !(d > 0.0) || !d.is_finite() {
+            return false;
+        }
+        let l = d.sqrt();
+        g[j * n + j] = l;
+        for i in j + 1..n {
+            let mut v = g[i * n + j];
+            for k in 0..j {
+                v -= g[i * n + k] * g[j * n + k];
+            }
+            g[i * n + j] = v / l;
+        }
+    }
+    for i in 0..n {
+        let mut v = b[i];
+        for k in 0..i {
+            v -= g[i * n + k] * b[k];
+        }
+        b[i] = v / g[i * n + i];
+    }
+    for i in (0..n).rev() {
+        let mut v = b[i];
+        for k in i + 1..n {
+            v -= g[k * n + i] * b[k];
+        }
+        b[i] = v / g[i * n + i];
+    }
+    true
+}
+
+/// Optimal least-squares combination of the rows pushed into `eng` so
+/// far: weights `w` (one per pushed row) minimizing `‖w·A − target‖₂`,
+/// where `A` is the pushed stack. `None` when the Gram system is
+/// numerically degenerate (callers treat this as an outage); a rank-0
+/// engine returns the all-zero weights with `residual = ‖target‖`.
+pub fn lstsq_rows(eng: &IncrementalRref, target: &[f64]) -> Option<Lstsq> {
+    assert_eq!(target.len(), eng.cols(), "lstsq target width mismatch");
+    let r = eng.rank();
+    let n = eng.rows();
+    let t_norm2: f64 = target.iter().map(|&x| x * x).sum();
+    let covered = eng.nonzero_col_count();
+    if r == 0 {
+        return Some(Lstsq {
+            weights: vec![0.0; n],
+            residual: t_norm2.sqrt(),
+            covered,
+        });
+    }
+    // Gram matrix of the stored basis rows and the target inner products.
+    let mut g = vec![0.0f64; r * r];
+    let mut alpha = vec![0.0f64; r];
+    for i in 0..r {
+        let ei = eng.e_row(i);
+        for j in i..r {
+            let ej = eng.e_row(j);
+            let dot: f64 = ei.iter().zip(ej).map(|(&a, &b)| a * b).sum();
+            g[i * r + j] = dot;
+            g[j * r + i] = dot;
+        }
+        alpha[i] = ei.iter().zip(target).map(|(&a, &b)| a * b).sum();
+    }
+    let b = alpha.clone();
+    if !cholesky_solve(&mut g, r, &mut alpha) {
+        return None;
+    }
+    // residual² = ‖target‖² − bᵀα  (projection shrinks the norm; clamp
+    // the rounding tail so a full-rank solve reports exactly 0-ish).
+    let proj2: f64 = b.iter().zip(&alpha).map(|(&x, &y)| x * y).sum();
+    let residual = (t_norm2 - proj2).max(0.0).sqrt();
+    // map the basis combination back to stack-row weights through the
+    // stored transforms: w = Σ αᵢ tᵢ
+    let mut weights = vec![0.0f64; n];
+    for (i, &a) in alpha.iter().enumerate() {
+        if a == 0.0 {
+            continue;
+        }
+        for (w, &t) in weights.iter_mut().zip(eng.t_row(i)) {
+            *w += a * t;
+        }
+    }
+    Some(Lstsq { weights, residual, covered })
+}
+
+/// [`lstsq_rows`] against the all-ones target — the gradient-*sum*
+/// combination the GC decode chases (`𝟙ᵀ · G`). This is the degraded-mode
+/// fallback's workhorse form.
+pub fn lstsq_ones(eng: &IncrementalRref) -> Option<Lstsq> {
+    let ones = vec![1.0f64; eng.cols()];
+    lstsq_rows(eng, &ones)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::util::rng::Rng;
+
+    fn engine_of(a: &Matrix) -> IncrementalRref {
+        let mut eng = IncrementalRref::with_capacity(a.cols, a.rows);
+        eng.push_matrix(a);
+        eng
+    }
+
+    /// First-order optimality: the residual vector `w·A − target` must be
+    /// orthogonal to every row of `A` (else some perturbation of `w`
+    /// strictly improves the fit).
+    fn assert_optimal(a: &Matrix, target: &[f64], sol: &Lstsq) {
+        let m = a.cols;
+        let mut res = vec![0.0f64; m];
+        for j in 0..m {
+            let mut acc = -target[j];
+            for (i, &w) in sol.weights.iter().enumerate() {
+                acc += w * a.row(i)[j];
+            }
+            res[j] = acc;
+        }
+        let norm: f64 = res.iter().map(|&x| x * x).sum::<f64>().sqrt();
+        assert!(
+            (norm - sol.residual).abs() < 1e-7 * (1.0 + norm),
+            "reported residual {} vs recomputed {norm}",
+            sol.residual
+        );
+        let scale = 1.0
+            + a.data.iter().fold(0.0f64, |mx, &x| mx.max(x.abs()))
+            + norm;
+        for i in 0..a.rows {
+            let dot: f64 = res.iter().zip(a.row(i)).map(|(&x, &y)| x * y).sum();
+            assert!(dot.abs() < 1e-7 * scale, "row {i} not orthogonal: {dot}");
+        }
+    }
+
+    #[test]
+    fn full_rank_delivery_reaches_the_target_exactly() {
+        let mut rng = Rng::new(11);
+        for m in [3usize, 6, 12] {
+            let a = Matrix::from_fn(m + 2, m, |_, _| rng.normal());
+            let eng = engine_of(&a);
+            assert_eq!(eng.rank(), m);
+            let target: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            let sol = lstsq_rows(&eng, &target).unwrap();
+            assert!(sol.residual < 1e-9, "residual {}", sol.residual);
+            assert_eq!(sol.covered, m);
+            for j in 0..m {
+                let got: f64 =
+                    sol.weights.iter().enumerate().map(|(i, &w)| w * a.row(i)[j]).sum();
+                assert!((got - target[j]).abs() < 1e-9, "col {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn rank_deficient_stacks_project_optimally() {
+        let mut rng = Rng::new(23);
+        for trial in 0..30 {
+            let m = 4 + rng.below(9);
+            let r = 1 + rng.below(m - 1);
+            // random rank-r stack with duplicated/combined rows
+            let basis = Matrix::from_fn(r, m, |_, _| rng.normal());
+            let n = r + 1 + rng.below(4);
+            let a = Matrix::from_fn(n, m, |i, j| {
+                if i < r {
+                    basis[(i, j)]
+                } else {
+                    basis[(i % r, j)] + 0.5 * basis[((i + 1) % r, j)]
+                }
+            });
+            let eng = engine_of(&a);
+            let ones = vec![1.0f64; m];
+            let sol = lstsq_rows(&eng, &ones).unwrap_or_else(|| panic!("trial {trial}"));
+            assert_optimal(&a, &ones, &sol);
+        }
+    }
+
+    #[test]
+    fn rank_zero_engine_returns_zero_weights() {
+        let eng = IncrementalRref::new(5);
+        let sol = lstsq_ones(&eng).unwrap();
+        assert!(sol.weights.is_empty());
+        assert!((sol.residual - 5.0f64.sqrt()).abs() < 1e-12);
+        assert_eq!(sol.covered, 0);
+    }
+
+    #[test]
+    fn coverage_counts_touched_columns() {
+        // two rows touching columns {0,1} only: column 2 is uncovered and
+        // its target weight survives in the residual
+        let a = Matrix::from_rows(&[vec![1.0, 1.0, 0.0], vec![1.0, -1.0, 0.0]]);
+        let eng = engine_of(&a);
+        let sol = lstsq_ones(&eng).unwrap();
+        assert_eq!(sol.covered, 2);
+        assert!((sol.residual - 1.0).abs() < 1e-9, "residual {}", sol.residual);
+        assert_optimal(&a, &[1.0, 1.0, 1.0], &sol);
+    }
+}

@@ -4,10 +4,12 @@
 //! incremental engine ([`IncrementalRref`]) behind the degree-one peeling
 //! front-end ([`PeelingDecoder`]) is the until-decode hot path.
 
+pub mod lstsq;
 pub mod matrix;
 pub mod peeling;
 pub mod rref;
 
+pub use lstsq::{lstsq_ones, lstsq_rows, Lstsq};
 pub use matrix::Matrix;
 pub use peeling::PeelingDecoder;
 pub use rref::{

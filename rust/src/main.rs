@@ -19,6 +19,7 @@
 //! cogc attack [--fraction 0.3]               convergence under attack curves
 //! cogc scenario list                         built-in channel-scenario catalog
 //! cogc scenario run <name> [--trials 2000]   per-round time-series CSV
+//! cogc error-budget [--trials 2000]          error vs communication budget
 //! cogc train --model M --agg A [...]         single training run (CSV log)
 //! cogc telemetry check <file.json>           validate a --telemetry export
 //! cogc info                                  backend / model inventory
@@ -73,6 +74,8 @@ fn parse_agg(a: &Args) -> anyhow::Result<Aggregator> {
         }
         "gcplus" => Aggregator::GcPlus { tr, until_decode: false, max_blocks: 1 },
         "gcplus-until" => Aggregator::GcPlus { tr, until_decode: true, max_blocks: 25 },
+        "approx" => Aggregator::Approx { tr, until_decode: false, max_blocks: 1 },
+        "approx-until" => Aggregator::Approx { tr, until_decode: true, max_blocks: 25 },
         "tandon" => Aggregator::TandonReplicated { attempts },
         other => anyhow::bail!("unknown --agg {other:?}"),
     })
@@ -222,6 +225,34 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
                         };
                         revalidate = true;
                     }
+                    // --agg standard|gcplus|approx swaps the scenario's
+                    // decoder in place, keeping its per-round attempt budget
+                    if let Some(agg) = args.get("agg") {
+                        use cogc::sim::Decoder;
+                        let budget = match sc.decoder {
+                            Decoder::Standard { attempts } => attempts,
+                            Decoder::GcPlus { tr } | Decoder::Approx { tr } => tr,
+                        };
+                        sc.decoder = match agg {
+                            "standard" => Decoder::Standard { attempts: budget.max(1) },
+                            "gcplus" => Decoder::GcPlus { tr: budget.max(1) },
+                            "approx" => Decoder::Approx { tr: budget.max(1) },
+                            other => anyhow::bail!(
+                                "unknown scenario --agg {other:?} (standard|gcplus|approx)"
+                            ),
+                        };
+                        revalidate = true;
+                    }
+                    // --policy retry:<n>[:...] (or none) overrides the
+                    // scenario's recovery policy in place
+                    if let Some(spec) = args.get("policy") {
+                        sc.policy = if spec == "none" {
+                            None
+                        } else {
+                            Some(scenario::RecoveryPolicy::parse_cli(spec)?)
+                        };
+                        revalidate = true;
+                    }
                     if revalidate {
                         sc.validate()?;
                     }
@@ -247,6 +278,9 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
                 }
                 other => anyhow::bail!("unknown scenario action {other:?} (list|run)"),
             }
+        }
+        "error-budget" => {
+            figures::error_vs_budget(args.usize_opt("trials", 2_000)?, seed, threads).print()
         }
         "design" => figures::design_table(
             args.f64_opt("p", 0.1)?,
@@ -302,6 +336,13 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
                 eprintln!(
                     "adversary: {} malicious clients, {} audit alarms, {} rows/copies excised",
                     adv_log.malicious, adv_log.detected, adv_log.excised
+                );
+            }
+            if log.approx_updates() > 0 {
+                eprintln!(
+                    "degraded-mode fallback supplied {} of {} updates",
+                    log.approx_updates(),
+                    log.updates()
                 );
             }
             eprintln!(
@@ -397,11 +438,33 @@ scenarios (stateful channels: bursty / correlated / straggler links):
                                   binary family (needs even s); --m/--s
                                   retarget the scenario's federation size in
                                   place (default scenario: smoke)
+        [--agg standard|gcplus|approx]  swap the scenario's decoder in place
+                                  (approx = GC+ with the least-squares
+                                  degraded-mode fallback when nothing
+                                  decodes exactly; adds p_approx + residual
+                                  histogram columns)
+        [--policy <spec>]         recovery policy override (or `none`):
+                                  retry:<n>[:backoff=<b>][:deadline=<d>]
+                                  [:approx[=<thr>]][:kill_up=<i,...>]
+                                  [:kill_c2c=<i-j,...>][:crash=<c>@<r>+<n>]
+                                  e.g. retry:2:deadline=6:approx=0.5, or
+                                  retry:0:kill_up=0,3:crash=1@5+10 for
+                                  link-fault injection
   scenario run --file spec.json   run a custom JSON scenario spec
+
+degraded-mode decoding (see the README section of the same name):
+  error-budget [--trials N]       error vs communication budget across the
+                                  non-adversarial dense builtins: exact GC+,
+                                  pure approx, and retry+fallback policy
+                                  regimes side by side (p_exact / p_approx /
+                                  p_miss / tx and retries per round)
 
 training:
   train --model mnist_cnn|cifar_cnn|transformer
         --agg ideal|intermittent|cogc|cogc-d1|gcplus|gcplus-until|tandon
+              |approx|approx-until  (approx = gcplus + the least-squares
+                     fallback update on rounds that decode nothing exactly;
+                     per-round relative residual lands in the CSV log)
         --net perfect|homogeneous|paper1|paper2|paper3|good|moderate|poor
         [--rounds N] [--seed S] [--p-ps P] [--p-cc P] [--tr T] [--attempts A]
         [--channel iid|<scenario>]  link dynamics: iid or the channel model

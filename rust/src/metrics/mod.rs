@@ -37,6 +37,11 @@ pub struct RoundRecord {
     pub test_acc: f64,
     /// Test loss of the PS global model (NaN when not evaluated).
     pub test_loss: f64,
+    /// Relative residual `‖𝟙 − w·A‖/√M` of the round's aggregate: 0 for an
+    /// exact decode (or no update), positive when the degraded-mode
+    /// least-squares fallback supplied the update — the per-round
+    /// gradient-error series of the `approx` aggregator.
+    pub residual: f64,
 }
 
 /// Accumulates per-round records and renders CSV.
@@ -63,6 +68,12 @@ impl RunLog {
     /// Number of rounds with a successful global update.
     pub fn updates(&self) -> usize {
         self.rounds.iter().filter(|r| r.updated).count()
+    }
+
+    /// Rounds whose update came from the degraded-mode least-squares
+    /// fallback rather than an exact decode.
+    pub fn approx_updates(&self) -> usize {
+        self.rounds.iter().filter(|r| r.outcome == "approx").count()
     }
 
     /// Final test accuracy (last evaluated round).
@@ -98,12 +109,12 @@ impl RunLog {
         let _ = writeln!(out, "# run: {}", self.name);
         let _ = writeln!(
             out,
-            "round,updated,outcome,k4,attempts,transmissions,train_loss,test_loss,test_acc"
+            "round,updated,outcome,k4,attempts,transmissions,train_loss,test_loss,test_acc,residual"
         );
         for r in &self.rounds {
             let _ = writeln!(
                 out,
-                "{},{},{},{},{},{},{:.6},{:.6},{:.4}",
+                "{},{},{},{},{},{},{:.6},{:.6},{:.4},{:.6}",
                 r.round,
                 r.updated as u8,
                 r.outcome,
@@ -112,7 +123,8 @@ impl RunLog {
                 r.transmissions,
                 r.train_loss,
                 r.test_loss,
-                r.test_acc
+                r.test_acc,
+                r.residual
             );
         }
         out
@@ -177,6 +189,7 @@ mod tests {
             train_loss: 1.0,
             test_loss: 0.5,
             test_acc: acc,
+            residual: 0.0,
         }
     }
 

@@ -140,6 +140,14 @@ pub struct RecoveryStats {
     pub excised: usize,
     /// Honest rows among the excised (false-alarm cost).
     pub false_excised: usize,
+    /// Trials rescued by the least-squares approximate aggregator after
+    /// GC⁺ reported nothing decodable (approx-aware estimators only;
+    /// 0 otherwise, as is the histogram below). Approx trials are *not*
+    /// counted in `k4_hist` — they recover no individual model.
+    pub approx: usize,
+    /// Relative-residual histogram of the accepted approximate trials
+    /// (bucket edges in [`gc::residual_bucket`]).
+    pub residual_hist: [usize; gc::RESIDUAL_BUCKETS],
 }
 
 impl RecoveryStats {
@@ -169,6 +177,11 @@ impl RecoveryStats {
     pub fn p_poisoned(&self) -> f64 {
         self.poisoned as f64 / self.trials.max(1) as f64
     }
+
+    /// Fraction of trials rescued by the approximate aggregator.
+    pub fn p_approx(&self) -> f64 {
+        self.approx as f64 / self.trials.max(1) as f64
+    }
 }
 
 impl Accumulate for RecoveryStats {
@@ -185,7 +198,32 @@ impl Accumulate for RecoveryStats {
         self.poisoned += other.poisoned;
         self.excised += other.excised;
         self.false_excised += other.false_excised;
+        self.approx += other.approx;
+        for (a, b) in self.residual_hist.iter_mut().zip(other.residual_hist) {
+            *a += b;
+        }
     }
+}
+
+/// Degraded-mode rescue at the would-be-outage point: least-squares over
+/// everything the decoder stacked, accepted iff the relative residual
+/// clears `max_rel`. Consumes no randomness, so an approx-aware trial is
+/// draw-for-draw identical to the plain one.
+fn try_approx(
+    dec: &gc::GcPlusDecoder,
+    m: usize,
+    max_rel: f64,
+    stats: &mut RecoveryStats,
+) -> bool {
+    if let Some(sol) = gc::approx_sum(dec) {
+        let rel = gc::relative_residual(&sol, m);
+        if rel <= max_rel {
+            stats.approx += 1;
+            stats.residual_hist[gc::residual_bucket(rel)] += 1;
+            return true;
+        }
+    }
+    false
 }
 
 /// One GC⁺ round: run the decoding pipeline (coefficients only, no
@@ -196,11 +234,17 @@ impl Accumulate for RecoveryStats {
 /// test is the allocation-free `decodable_count()` — bit-identical to
 /// batch-decoding the stacked rows (see `tests/incremental_rref.rs`), but
 /// `O(rank · M)` per new row instead of a full re-factor per block.
+///
+/// `approx_rel = Some(max_rel)` arms the degraded-mode tri-state: a trial
+/// that would classify `none` first offers its stacked rows to the
+/// least-squares aggregator ([`try_approx`]). `None` reproduces the plain
+/// estimator bit-for-bit.
 fn recovery_trial(
     net: &Network,
     m: usize,
     s: usize,
     mode: RecoveryMode,
+    approx_rel: Option<f64>,
     rng: &mut Rng,
     stats: &mut RecoveryStats,
     scratch: &mut TrialScratch,
@@ -244,8 +288,12 @@ fn recovery_trial(
     match outcome {
         Some(usize::MAX) => {} // standard, already recorded
         Some(0) | None => {
-            stats.none += 1;
-            stats.k4_hist[0] += 1;
+            if approx_rel.is_some_and(|max_rel| try_approx(&scratch.dec, m, max_rel, stats)) {
+                scratch.tel.inc(telemetry::metric::APPROX_FALLBACKS);
+            } else {
+                stats.none += 1;
+                stats.k4_hist[0] += 1;
+            }
         }
         Some(k) if k == m => {
             stats.full += 1;
@@ -271,13 +319,46 @@ pub fn gcplus_recovery(
     trials: usize,
     mc: &MonteCarlo,
 ) -> RecoveryStats {
+    gcplus_recovery_inner(net, ch, m, s, mode, None, trials, mc)
+}
+
+/// Approx-aware [`gcplus_recovery`]: trials that end with nothing
+/// decodable run the least-squares fallback and count as `approx` when
+/// their relative residual is at most `max_rel` (tri-state
+/// exact / approx-with-error / outage). Pass `f64::INFINITY` to accept
+/// every solvable fallback. Identical draws to the plain estimator, so
+/// the exact tallies (`standard`/`full`/`partial`) match it bit-for-bit.
+pub fn gcplus_recovery_approx(
+    net: &Network,
+    ch: &dyn ChannelModel,
+    m: usize,
+    s: usize,
+    mode: RecoveryMode,
+    max_rel: f64,
+    trials: usize,
+    mc: &MonteCarlo,
+) -> RecoveryStats {
+    gcplus_recovery_inner(net, ch, m, s, mode, Some(max_rel), trials, mc)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gcplus_recovery_inner(
+    net: &Network,
+    ch: &dyn ChannelModel,
+    m: usize,
+    s: usize,
+    mode: RecoveryMode,
+    approx_rel: Option<f64>,
+    trials: usize,
+    mc: &MonteCarlo,
+) -> RecoveryStats {
     let mut stats: RecoveryStats = mc.run_scratch_tel(
         trials,
         || TrialScratch::new(ch, m),
         trial_shard,
         |t, rng, acc: &mut RecoveryStats, scratch| {
             scratch.ch.reset(net, mc.substream_seed(CHANNEL_STREAM, t));
-            recovery_trial(net, m, s, mode, rng, acc, scratch);
+            recovery_trial(net, m, s, mode, approx_rel, rng, acc, scratch);
             scratch.dec.harvest(&mut scratch.tel);
         },
     );
@@ -297,6 +378,9 @@ struct BinTrialScratch {
     bridge: GcCode,
     ieng: IntRref,
     ibuf: Vec<i64>,
+    /// Float shadow of the integer stack, fed only by the approx-aware
+    /// estimator: the least-squares fallback needs the float engine.
+    fdec: gc::GcPlusDecoder,
     tel: telemetry::Shard,
 }
 
@@ -309,6 +393,7 @@ impl BinTrialScratch {
             bridge: code.to_gc_code(),
             ieng: IntRref::new(code.m),
             ibuf: Vec::with_capacity(code.m),
+            fdec: gc::GcPlusDecoder::new(code.m),
             tel: telemetry::Shard::new(),
         }
     }
@@ -326,6 +411,7 @@ fn binary_recovery_trial(
     net: &Network,
     code: BinaryCode,
     mode: RecoveryMode,
+    approx_rel: Option<f64>,
     rng: &mut Rng,
     stats: &mut RecoveryStats,
     scratch: &mut BinTrialScratch,
@@ -341,6 +427,9 @@ fn binary_recovery_trial(
     };
     stats.trials += 1;
     scratch.ieng.reset(m);
+    if approx_rel.is_some() {
+        scratch.fdec.reset(m);
+    }
     let mut outcome: Option<usize> = None; // |K4| of the decode
     'blocks: for _ in 0..max_blocks {
         for _ in 0..tr {
@@ -362,6 +451,9 @@ fn binary_recovery_trial(
                     .ibuf
                     .extend(scratch.att.perturbed.row(r).iter().map(|&v| v as i64));
                 scratch.ieng.push_row(&scratch.ibuf);
+                if approx_rel.is_some() {
+                    scratch.fdec.push_row(scratch.att.perturbed.row(r));
+                }
             }
         }
         let k4 = scratch.ieng.decodable_count();
@@ -377,8 +469,12 @@ fn binary_recovery_trial(
     match outcome {
         Some(usize::MAX) => {} // standard, already recorded
         Some(0) | None => {
-            stats.none += 1;
-            stats.k4_hist[0] += 1;
+            if approx_rel.is_some_and(|max_rel| try_approx(&scratch.fdec, m, max_rel, stats)) {
+                scratch.tel.inc(telemetry::metric::APPROX_FALLBACKS);
+            } else {
+                stats.none += 1;
+                stats.k4_hist[0] += 1;
+            }
         }
         Some(k) if k == m => {
             stats.full += 1;
@@ -401,6 +497,33 @@ pub fn binary_recovery(
     trials: usize,
     mc: &MonteCarlo,
 ) -> RecoveryStats {
+    binary_recovery_inner(net, ch, code, mode, None, trials, mc)
+}
+
+/// Approx-aware [`binary_recovery`] (see [`gcplus_recovery_approx`]): the
+/// integer engine still rules on exact decodability; only a would-be
+/// outage consults the float least-squares fallback.
+pub fn binary_recovery_approx(
+    net: &Network,
+    ch: &dyn ChannelModel,
+    code: BinaryCode,
+    mode: RecoveryMode,
+    max_rel: f64,
+    trials: usize,
+    mc: &MonteCarlo,
+) -> RecoveryStats {
+    binary_recovery_inner(net, ch, code, mode, Some(max_rel), trials, mc)
+}
+
+fn binary_recovery_inner(
+    net: &Network,
+    ch: &dyn ChannelModel,
+    code: BinaryCode,
+    mode: RecoveryMode,
+    approx_rel: Option<f64>,
+    trials: usize,
+    mc: &MonteCarlo,
+) -> RecoveryStats {
     let m = code.m;
     let mut stats: RecoveryStats = mc.run_scratch_tel(
         trials,
@@ -408,7 +531,7 @@ pub fn binary_recovery(
         bin_trial_shard,
         |t, rng, acc: &mut RecoveryStats, scratch| {
             scratch.ch.reset(net, mc.substream_seed(CHANNEL_STREAM, t));
-            binary_recovery_trial(net, code, mode, rng, acc, scratch);
+            binary_recovery_trial(net, code, mode, approx_rel, rng, acc, scratch);
             scratch.tel.absorb_int_engine(scratch.ieng.rows() as u64, scratch.ieng.rank() as u64);
         },
     );
@@ -558,6 +681,94 @@ pub fn fr_recovery(
     stats
 }
 
+// ── Degraded-mode (tri-state) estimators ────────────────────────────────
+
+/// Tri-state refinement of the binary outage verdict: a trial is `exact`
+/// (standard GC decodes), `approx` (the least-squares fallback clears the
+/// residual threshold), or a true `outage`. The classic outage probability
+/// is `(approx + outage) / trials`; the degraded-mode miss rate is
+/// `outage / trials`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TriSplit {
+    pub trials: usize,
+    /// Standard GC decoded the exact gradient sum.
+    pub exact: usize,
+    /// Rescued by the least-squares aggregator within the residual budget.
+    pub approx: usize,
+    /// Nothing acceptable — a degraded-mode outage.
+    pub outage: usize,
+    /// Relative-residual histogram of the accepted approximate trials.
+    pub residual_hist: [usize; gc::RESIDUAL_BUCKETS],
+}
+
+impl TriSplit {
+    pub fn p_exact(&self) -> f64 {
+        self.exact as f64 / self.trials.max(1) as f64
+    }
+
+    pub fn p_approx(&self) -> f64 {
+        self.approx as f64 / self.trials.max(1) as f64
+    }
+
+    pub fn p_outage(&self) -> f64 {
+        self.outage as f64 / self.trials.max(1) as f64
+    }
+}
+
+impl Accumulate for TriSplit {
+    fn merge(&mut self, other: Self) {
+        self.trials += other.trials;
+        self.exact += other.exact;
+        self.approx += other.approx;
+        self.outage += other.outage;
+        for (a, b) in self.residual_hist.iter_mut().zip(other.residual_hist) {
+            *a += b;
+        }
+    }
+}
+
+/// Tri-state [`estimate_outage`]: the same single-attempt draws, but a
+/// trial that misses the standard `M − s` complete-sums bar offers its
+/// delivered rows to the least-squares aggregator before being declared
+/// an outage. `max_rel < 0` disables the rescue, reproducing the plain
+/// outage count exactly (asserted in the tests below).
+pub fn estimate_outage_tri(
+    net: &Network,
+    code: &GcCode,
+    ch: &dyn ChannelModel,
+    max_rel: f64,
+    trials: usize,
+    mc: &MonteCarlo,
+) -> TriSplit {
+    mc.run_scratch_tel(
+        trials,
+        || TrialScratch::new(ch, net.m),
+        trial_shard,
+        |t, rng, acc: &mut TriSplit, s| {
+            s.ch.reset(net, mc.substream_seed(CHANNEL_STREAM, t));
+            s.ch.sample_into(net, rng, &mut s.real);
+            gc::Attempt::observe_into(code, &s.real, &mut s.att);
+            acc.trials += 1;
+            if s.att.complete.len() >= net.m - code.s {
+                acc.exact += 1;
+                return;
+            }
+            s.dec.reset(net.m);
+            s.dec.push_attempt(&s.att);
+            if let Some(sol) = gc::approx_sum(&s.dec) {
+                let rel = gc::relative_residual(&sol, net.m);
+                if rel <= max_rel {
+                    acc.approx += 1;
+                    acc.residual_hist[gc::residual_bucket(rel)] += 1;
+                    s.tel.inc(telemetry::metric::APPROX_FALLBACKS);
+                    return;
+                }
+            }
+            acc.outage += 1;
+        },
+    )
+}
+
 // ── Byzantine-adversarial estimators (symbolic / payload-free) ──────────
 //
 // These mirror the plain estimators but track which stacked rows carry
@@ -655,6 +866,53 @@ pub fn estimate_outage_adv(
     )
 }
 
+/// Adversarial single-attempt split for the binary {±1} family: the
+/// standard decode is *tested* with the exact rational combinator solve
+/// (the family carries no any-(M−s)-rows guarantee), and a decode is
+/// poisoned iff some complete row with **nonzero** combinator weight
+/// embeds corrupted data — the exact-arithmetic analogue of
+/// [`estimate_outage_adv`]'s generic-position rule, sharpened: a
+/// corrupted row the combinator provably ignores cannot poison the sum.
+pub fn estimate_outage_binary_adv(
+    net: &Network,
+    code: BinaryCode,
+    ch: &dyn ChannelModel,
+    spec: &AdversarySpec,
+    trials: usize,
+    mc: &MonteCarlo,
+) -> OutageSplit {
+    mc.run_scratch(
+        trials,
+        || (BinTrialScratch::new(ch, code), AdversaryModel::new(spec.clone())),
+        |t, rng, acc: &mut OutageSplit, (s, adv)| {
+            s.ch.reset(net, mc.substream_seed(CHANNEL_STREAM, t));
+            adv.reset(code.m, mc.substream_seed(ADVERSARY_STREAM, t));
+            s.ch.sample_into(net, rng, &mut s.real);
+            gc::Attempt::observe_into(&s.bridge, &s.real, &mut s.att);
+            acc.trials += 1;
+            let weights = if s.att.complete.len() >= code.m - code.s {
+                code.combinator_weights(&s.att.complete)
+            } else {
+                None
+            };
+            match weights {
+                None => acc.outage += 1,
+                Some(w) => {
+                    let poisoned = adv.any()
+                        && s.att.complete.iter().zip(&w).any(|(&r, &wr)| {
+                            wr != 0.0 && row_corrupted(adv, s.att.perturbed.row(r), r)
+                        });
+                    if poisoned {
+                        acc.decoded_poisoned += 1;
+                    } else {
+                        acc.decoded_clean += 1;
+                    }
+                }
+            }
+        },
+    )
+}
+
 /// Pooled buffers of [`gcplus_recovery_adv`]: the plain scratch plus the
 /// raw coefficient stack and per-row corruption flags the audit consumes.
 struct TrialScratchAdv {
@@ -683,7 +941,7 @@ fn recovery_trial_adv(
     sc: &mut TrialScratchAdv,
 ) {
     if !sc.adv.any() {
-        recovery_trial(net, m, s, mode, rng, stats, &mut sc.base);
+        recovery_trial(net, m, s, mode, None, rng, stats, &mut sc.base);
         return;
     }
     if stats.k4_hist.len() < m + 1 {
@@ -1445,5 +1703,117 @@ mod tests {
             let got = gcplus_recovery_adv(&net, &Iid, &spec, 10, 7, mode, 600, &mc);
             assert_eq!(want, got, "threads={threads}");
         }
+    }
+
+    // ── degraded-mode (approx / tri-state) estimators ───────────────────
+
+    #[test]
+    fn approx_recovery_reclassifies_only_the_none_arm() {
+        // poor links + fixed t_r so plain GC⁺ leaves plenty of outages
+        let net = Network::fig6_setting(3, 10);
+        let mode = RecoveryMode::FixedTr(2);
+        let plain = gcplus_recovery(&net, &Iid, 10, 7, mode, 400, &MonteCarlo::new(33));
+        let ap =
+            gcplus_recovery_approx(&net, &Iid, 10, 7, mode, f64::INFINITY, 400, &MonteCarlo::new(33));
+        // identical draws: the exact tallies must match bit-for-bit and
+        // the rescue can only drain the none bucket
+        assert_eq!(plain.standard, ap.standard);
+        assert_eq!(plain.full, ap.full);
+        assert_eq!(plain.partial, ap.partial);
+        assert_eq!(plain.attempts, ap.attempts);
+        assert_eq!(plain.none, ap.none + ap.approx);
+        assert!(ap.approx > 0, "no trial was rescued on a p=0.75 network");
+        assert_eq!(ap.residual_hist.iter().sum::<usize>(), ap.approx);
+        assert_eq!(ap.standard + ap.full + ap.partial + ap.none + ap.approx, ap.trials);
+        assert_eq!(ap.k4_hist.iter().sum::<usize>() + ap.approx, ap.trials);
+        // the plain estimator never touches the new fields
+        assert_eq!(plain.approx, 0);
+        assert_eq!(plain.residual_hist, [0; gc::RESIDUAL_BUCKETS]);
+    }
+
+    #[test]
+    fn approx_recovery_residual_threshold_is_monotone() {
+        let net = Network::fig6_setting(3, 10);
+        let mode = RecoveryMode::FixedTr(2);
+        let mut prev = 0usize;
+        for max_rel in [0.0, 0.1, 0.5, f64::INFINITY] {
+            let st = gcplus_recovery_approx(&net, &Iid, 10, 7, mode, max_rel, 400,
+                &MonteCarlo::new(33));
+            assert!(st.approx >= prev, "tightening the budget gained trials");
+            prev = st.approx;
+        }
+    }
+
+    #[test]
+    fn binary_approx_recovery_partition_and_thread_invariance() {
+        let net = Network::fig6_setting(3, 10);
+        let code = BinaryCode::new(10, 4).unwrap();
+        let mode = RecoveryMode::FixedTr(2);
+        let plain = binary_recovery(&net, &Iid, code, mode, 400, &MonteCarlo::new(21));
+        let want =
+            binary_recovery_approx(&net, &Iid, code, mode, f64::INFINITY, 400, &MonteCarlo::new(21));
+        assert_eq!(plain.standard, want.standard);
+        assert_eq!(plain.none, want.none + want.approx);
+        assert!(want.approx > 0);
+        assert_eq!(want.residual_hist.iter().sum::<usize>(), want.approx);
+        assert_eq!(
+            want.standard + want.full + want.partial + want.none + want.approx,
+            want.trials
+        );
+        for threads in [2usize, 8] {
+            let mc = MonteCarlo::new(21).with_threads(threads);
+            let got = binary_recovery_approx(&net, &Iid, code, mode, f64::INFINITY, 400, &mc);
+            assert_eq!(want, got, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn tri_split_disabled_rescue_matches_plain_outage_exactly() {
+        let net = Network::fig6_setting(2, 10);
+        let code = GcCode::generate(10, 7, &mut Rng::new(3));
+        let po = estimate_outage(&net, &code, &Iid, 3_000, &MonteCarlo::new(9));
+        // max_rel < 0 never accepts: same draws, so the outage count is
+        // the plain estimator's, bit-for-bit
+        let tri = estimate_outage_tri(&net, &code, &Iid, -1.0, 3_000, &MonteCarlo::new(9));
+        assert_eq!(tri.trials, 3_000);
+        assert_eq!(tri.approx, 0);
+        assert_eq!(tri.exact + tri.outage, tri.trials);
+        assert_eq!(po.to_bits(), tri.p_outage().to_bits());
+    }
+
+    #[test]
+    fn tri_split_rescues_and_stays_thread_invariant() {
+        let net = Network::fig6_setting(3, 10);
+        let code = GcCode::generate(10, 7, &mut Rng::new(3));
+        let mc1 = MonteCarlo::new(0xABAD).with_threads(1);
+        let want = estimate_outage_tri(&net, &code, &Iid, f64::INFINITY, 2_000, &mc1);
+        assert_eq!(want.exact + want.approx + want.outage, want.trials);
+        assert!(want.approx > 0, "no single-attempt rescue on a p=0.75 network");
+        assert_eq!(want.residual_hist.iter().sum::<usize>(), want.approx);
+        for threads in [2usize, 8] {
+            let mc = MonteCarlo::new(0xABAD).with_threads(threads);
+            let got = estimate_outage_tri(&net, &code, &Iid, f64::INFINITY, 2_000, &mc);
+            assert_eq!(want, got, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn binary_adv_outage_split_partitions_and_poisons() {
+        let code = BinaryCode::new(8, 2).unwrap();
+        // near-perfect links: decodes always happen, so flippers must
+        // surface as decoded-but-poisoned
+        let net = Network::homogeneous(8, 0.02, 0.02);
+        let spec = AdversarySpec::fraction(Attack::SignFlip, 0.3);
+        let split =
+            estimate_outage_binary_adv(&net, code, &Iid, &spec, 2_000, &MonteCarlo::new(41));
+        assert_eq!(split.decoded_clean + split.decoded_poisoned + split.outage, split.trials);
+        assert!(split.decoded_poisoned > 200, "poisoned = {}", split.decoded_poisoned);
+
+        // fraction 0 never poisons
+        let clean_spec = AdversarySpec::fraction(Attack::SignFlip, 0.0);
+        let clean =
+            estimate_outage_binary_adv(&net, code, &Iid, &clean_spec, 2_000, &MonteCarlo::new(41));
+        assert_eq!(clean.decoded_poisoned, 0);
+        assert_eq!(clean.decoded_clean + clean.outage, clean.trials);
     }
 }

@@ -10,7 +10,8 @@ pub mod theory;
 pub use design::{cost_efficient_s, sweep, sweep_mc, DesignPoint};
 pub use exact::{incomplete_probs, overall_outage, subcase_probs};
 pub use mc::{
-    binary_recovery, estimate_outage, estimate_outage_adv, estimate_outage_fr,
-    estimate_outage_fr_adv, fr_recovery, fr_recovery_adv, gcplus_recovery, gcplus_recovery_adv,
-    OutageSplit, RecoveryMode, RecoveryStats,
+    binary_recovery, binary_recovery_approx, estimate_outage, estimate_outage_adv,
+    estimate_outage_binary_adv, estimate_outage_fr, estimate_outage_fr_adv, estimate_outage_tri,
+    fr_recovery, fr_recovery_adv, gcplus_recovery, gcplus_recovery_adv, gcplus_recovery_approx,
+    OutageSplit, RecoveryMode, RecoveryStats, TriSplit,
 };

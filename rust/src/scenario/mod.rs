@@ -16,6 +16,11 @@
 //!   [`AdversaryModel`] (malicious-client selection × attack strategy ×
 //!   corruption surface), sampled per trial on its own substream so a
 //!   fraction-0 adversary is byte-identical to no adversary at all;
+//! - [`policy`] — degraded-mode recovery: [`RecoveryPolicy`] (bounded
+//!   retransmission with backoff and a round deadline budget, the
+//!   exact→approximate decode fallback threshold, and deterministic
+//!   link-fault injection) applied by the [`PolicyChannel`] wrapper on a
+//!   private substream, so a passive policy is byte-identical to none;
 //! - [`registry`] — the declarative, JSON-round-trippable [`Scenario`]
 //!   spec (network × channel × decoder × schedule) and the built-in
 //!   catalog (`cogc scenario list`);
@@ -29,6 +34,7 @@
 
 pub mod adversary;
 pub mod channel;
+pub mod policy;
 pub mod registry;
 pub mod sweep;
 
@@ -40,5 +46,6 @@ pub use channel::{
     ChannelModel, ChannelSpec, ChannelStats, CorrelatedFading, DeadlineStraggler, GilbertElliott,
     Iid, CHANNEL_STREAM,
 };
+pub use policy::{Crash, PolicyChannel, PolicyStats, RecoveryPolicy, POLICY_STREAM};
 pub use registry::{builtin, find, NetworkSpec, Scenario};
 pub use sweep::{run_scenario, run_scenario_fr, RoundSeries, RoundTally};

@@ -1,0 +1,759 @@
+//! Declarative recovery policies: bounded per-link retransmission with
+//! exponential backoff, per-round deadline budgets, an exact→approximate
+//! decode fallback threshold, and deterministic link-fault injection
+//! (forced uplink/c2c kill lists, mid-round crash-and-rejoin).
+//!
+//! # Determinism contract
+//!
+//! Retransmission success draws come from a **private policy stream**
+//! (seeded per trial from the [`POLICY_STREAM`] substream), never from the
+//! emission stream. The wrapped inner channel consumes its emission and
+//! state draws exactly as it would unwrapped, so a passive policy
+//! ([`RecoveryPolicy::is_passive`]) reproduces every existing scenario
+//! tally byte-for-byte — the sweep layer dispatches passive configs to the
+//! unwrapped code paths, and `tests/` assert the equivalence.
+//!
+//! Fault injection (kills, crash windows) is applied *after* the inner
+//! sample and consumes no draws at all; retransmission then runs over the
+//! post-fault realization, skipping the forced-down links.
+
+use super::channel::{ChannelModel, ChannelStats};
+use crate::network::{Network, Realization, SparseRealization, SparseSupport};
+use crate::parallel::Accumulate;
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+/// Tag of the per-trial policy substream (retransmission success draws).
+/// Distinct from `CHANNEL_STREAM` and `ADVERSARY_STREAM` so enabling a
+/// policy never perturbs channel or adversary randomness.
+pub const POLICY_STREAM: u64 = 0x9E7C_11CE;
+
+/// A mid-episode crash-and-rejoin fault: `client` drops off the network
+/// (uplink and every c2c link touching it) for rounds
+/// `[at_round, at_round + down_rounds)`, then rejoins.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Crash {
+    pub client: usize,
+    pub at_round: usize,
+    pub down_rounds: usize,
+}
+
+/// Declarative degraded-mode recovery policy. The default value is
+/// *passive*: no retries, no fallback, no faults — and the sweep layer
+/// guarantees a passive policy is byte-identical to no policy at all.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RecoveryPolicy {
+    /// Max retransmit attempts per failed link per communication attempt.
+    pub retries: usize,
+    /// Exponential backoff base: the k-th retry of a link costs
+    /// `backoff^(k-1)` channel time-steps against the round's budget.
+    pub backoff: f64,
+    /// Per-round retransmission time budget in channel time-steps;
+    /// `0` means unlimited.
+    pub deadline: f64,
+    /// Switch exact→approximate decoding when GC⁺ reports the sum row
+    /// unreachable (runs the round under [`crate::sim::Decoder::Approx`]).
+    pub fallback: bool,
+    /// Accept an approximate round only when its relative residual
+    /// (`‖𝟙 − w·A‖/√M`) is at most this; rejected rounds tally as outages.
+    pub fallback_residual: f64,
+    /// Uplinks forced down every attempt (fault injection).
+    pub kill_uplinks: Vec<usize>,
+    /// c2c links `(dst, src)` forced down every attempt (fault injection).
+    pub kill_c2c: Vec<(usize, usize)>,
+    /// Optional mid-episode crash-and-rejoin fault.
+    pub crash: Option<Crash>,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> RecoveryPolicy {
+        RecoveryPolicy {
+            retries: 0,
+            backoff: 2.0,
+            deadline: 0.0,
+            fallback: false,
+            fallback_residual: 1.0,
+            kill_uplinks: Vec::new(),
+            kill_c2c: Vec::new(),
+            crash: None,
+        }
+    }
+}
+
+impl RecoveryPolicy {
+    /// True when the policy changes nothing: no retries, no fallback, no
+    /// injected faults. Passive configs must (and do) reproduce the
+    /// policy-free code paths bit-for-bit.
+    pub fn is_passive(&self) -> bool {
+        self.retries == 0
+            && !self.fallback
+            && self.kill_uplinks.is_empty()
+            && self.kill_c2c.is_empty()
+            && self.crash.is_none()
+    }
+
+    /// One-line human summary for table comments.
+    pub fn summary(&self) -> String {
+        let mut parts = vec![format!("retry={}", self.retries)];
+        if self.retries > 0 {
+            parts.push(format!("backoff={}", self.backoff));
+            if self.deadline > 0.0 {
+                parts.push(format!("deadline={}", self.deadline));
+            }
+        }
+        if self.fallback {
+            parts.push(format!("approx<={}", self.fallback_residual));
+        }
+        if !self.kill_uplinks.is_empty() {
+            parts.push(format!("kill_up={:?}", self.kill_uplinks));
+        }
+        if !self.kill_c2c.is_empty() {
+            parts.push(format!("kill_c2c={:?}", self.kill_c2c));
+        }
+        if let Some(c) = &self.crash {
+            parts.push(format!("crash={}@{}+{}", c.client, c.at_round, c.down_rounds));
+        }
+        format!("policy({})", parts.join(", "))
+    }
+
+    /// Validate against a network size `m` (0 skips the index checks —
+    /// used before the topology is known).
+    pub fn validate(&self, m: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.backoff.is_finite() && self.backoff >= 1.0,
+            "policy backoff must be >= 1, got {} (each retry must cost at least one time-step)",
+            self.backoff
+        );
+        anyhow::ensure!(
+            self.deadline.is_finite() && self.deadline >= 0.0,
+            "policy deadline must be >= 0 (0 = unlimited), got {}",
+            self.deadline
+        );
+        anyhow::ensure!(
+            self.fallback_residual.is_finite() && (0.0..=1.0).contains(&self.fallback_residual),
+            "policy fallback threshold must be in [0, 1], got {} \
+             (it bounds the relative residual |1 - w*A|/sqrt(M))",
+            self.fallback_residual
+        );
+        if m > 0 {
+            for &i in &self.kill_uplinks {
+                anyhow::ensure!(i < m, "policy kill_uplinks index {i} out of range for M={m}");
+            }
+            for &(i, j) in &self.kill_c2c {
+                anyhow::ensure!(
+                    i < m && j < m && i != j,
+                    "policy kill_c2c link ({i}, {j}) invalid for M={m} \
+                     (need dst != src, both < M)"
+                );
+            }
+            if let Some(c) = &self.crash {
+                anyhow::ensure!(
+                    c.client < m,
+                    "policy crash client {} out of range for M={m}",
+                    c.client
+                );
+            }
+        }
+        if let Some(c) = &self.crash {
+            anyhow::ensure!(
+                c.down_rounds > 0,
+                "policy crash down_rounds must be > 0 (a 0-round crash is no crash)"
+            );
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![("retries", json::num(self.retries as f64))];
+        // defaults are omitted so minimal specs stay minimal
+        if self.backoff != 2.0 {
+            fields.push(("backoff", json::num(self.backoff)));
+        }
+        if self.deadline != 0.0 {
+            fields.push(("deadline", json::num(self.deadline)));
+        }
+        if self.fallback {
+            fields.push(("fallback", Json::Bool(true)));
+        }
+        if self.fallback_residual != 1.0 {
+            fields.push(("fallback_residual", json::num(self.fallback_residual)));
+        }
+        if !self.kill_uplinks.is_empty() {
+            fields.push((
+                "kill_uplinks",
+                Json::Arr(self.kill_uplinks.iter().map(|&i| json::num(i as f64)).collect()),
+            ));
+        }
+        if !self.kill_c2c.is_empty() {
+            fields.push((
+                "kill_c2c",
+                Json::Arr(
+                    self.kill_c2c
+                        .iter()
+                        .map(|&(i, j)| Json::Arr(vec![json::num(i as f64), json::num(j as f64)]))
+                        .collect(),
+                ),
+            ));
+        }
+        if let Some(c) = &self.crash {
+            fields.push((
+                "crash",
+                json::obj(vec![
+                    ("client", json::num(c.client as f64)),
+                    ("at_round", json::num(c.at_round as f64)),
+                    ("down_rounds", json::num(c.down_rounds as f64)),
+                ]),
+            ));
+        }
+        json::obj(fields)
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<RecoveryPolicy> {
+        let usize_field = |v: &Json, key: &str| -> anyhow::Result<usize> {
+            v.req(key)?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("policy field {key:?} must be a non-negative integer"))
+        };
+        let mut p = RecoveryPolicy { retries: usize_field(v, "retries")?, ..Default::default() };
+        if let Some(x) = v.get("backoff") {
+            p.backoff = x
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("policy backoff must be a number"))?;
+        }
+        if let Some(x) = v.get("deadline") {
+            p.deadline = x
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("policy deadline must be a number"))?;
+        }
+        if let Some(x) = v.get("fallback") {
+            p.fallback = x
+                .as_bool()
+                .ok_or_else(|| anyhow::anyhow!("policy fallback must be a bool"))?;
+        }
+        if let Some(x) = v.get("fallback_residual") {
+            p.fallback_residual = x
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("policy fallback_residual must be a number"))?;
+        }
+        if let Some(arr) = v.get("kill_uplinks") {
+            let arr = arr
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("policy kill_uplinks must be an array"))?;
+            for x in arr {
+                p.kill_uplinks.push(x.as_usize().ok_or_else(|| {
+                    anyhow::anyhow!("policy kill_uplinks entries must be integers")
+                })?);
+            }
+        }
+        if let Some(arr) = v.get("kill_c2c") {
+            let arr = arr
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("policy kill_c2c must be an array"))?;
+            for pair in arr {
+                let pair = pair.as_arr().filter(|a| a.len() == 2).ok_or_else(|| {
+                    anyhow::anyhow!("policy kill_c2c entries must be [dst, src] pairs")
+                })?;
+                let i = pair[0]
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("policy kill_c2c indices must be integers"))?;
+                let j = pair[1]
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("policy kill_c2c indices must be integers"))?;
+                p.kill_c2c.push((i, j));
+            }
+        }
+        if let Some(c) = v.get("crash") {
+            p.crash = Some(Crash {
+                client: usize_field(c, "client")?,
+                at_round: usize_field(c, "at_round")?,
+                down_rounds: usize_field(c, "down_rounds")?,
+            });
+        }
+        p.validate(0)?;
+        Ok(p)
+    }
+
+    /// Parse the compact CLI form
+    /// `retry:<n>[:backoff=<b>][:deadline=<d>][:approx[=<thr>]]`
+    /// `[:kill_up=<i,...>][:kill_c2c=<i-j,...>][:crash=<c>@<r>+<n>]`,
+    /// e.g. `retry:2`, `retry:3:deadline=8:approx=0.5`,
+    /// `retry:0:kill_up=0,3:crash=1@5+10`.
+    pub fn parse_cli(text: &str) -> anyhow::Result<RecoveryPolicy> {
+        let mut it = text.split(':');
+        let head = it.next().unwrap_or("");
+        anyhow::ensure!(
+            head == "retry",
+            "policy spec must start with retry:<n>, got {text:?}"
+        );
+        let retries: usize = it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("policy spec needs retry:<n>, got {text:?}"))?
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad policy retry count in {text:?}"))?;
+        let mut p = RecoveryPolicy { retries, ..Default::default() };
+        for tok in it {
+            let (key, val) = match tok.split_once('=') {
+                Some((k, v)) => (k, Some(v)),
+                None => (tok, None),
+            };
+            match (key, val) {
+                ("approx", None) => p.fallback = true,
+                ("approx", Some(v)) => {
+                    p.fallback = true;
+                    p.fallback_residual = v
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad approx threshold in {text:?}"))?;
+                }
+                ("backoff", Some(v)) => {
+                    p.backoff =
+                        v.parse().map_err(|_| anyhow::anyhow!("bad backoff in {text:?}"))?;
+                }
+                ("deadline", Some(v)) => {
+                    p.deadline =
+                        v.parse().map_err(|_| anyhow::anyhow!("bad deadline in {text:?}"))?;
+                }
+                ("kill_up", Some(v)) => {
+                    for part in v.split(',') {
+                        p.kill_uplinks.push(part.parse().map_err(|_| {
+                            anyhow::anyhow!("bad kill_up index {part:?} in {text:?}")
+                        })?);
+                    }
+                }
+                ("kill_c2c", Some(v)) => {
+                    for part in v.split(',') {
+                        let (i, j) = part.split_once('-').ok_or_else(|| {
+                            anyhow::anyhow!("kill_c2c wants <dst>-<src> pairs, got {part:?}")
+                        })?;
+                        let i = i.parse().map_err(|_| {
+                            anyhow::anyhow!("bad kill_c2c index {i:?} in {text:?}")
+                        })?;
+                        let j = j.parse().map_err(|_| {
+                            anyhow::anyhow!("bad kill_c2c index {j:?} in {text:?}")
+                        })?;
+                        p.kill_c2c.push((i, j));
+                    }
+                }
+                ("crash", Some(v)) => {
+                    let (client, rest) = v.split_once('@').ok_or_else(|| {
+                        anyhow::anyhow!("crash wants <client>@<round>+<down>, got {v:?}")
+                    })?;
+                    let (at, down) = rest.split_once('+').ok_or_else(|| {
+                        anyhow::anyhow!("crash wants <client>@<round>+<down>, got {v:?}")
+                    })?;
+                    let parse = |s: &str, what: &str| -> anyhow::Result<usize> {
+                        s.parse().map_err(|_| anyhow::anyhow!("bad crash {what} in {text:?}"))
+                    };
+                    p.crash = Some(Crash {
+                        client: parse(client, "client")?,
+                        at_round: parse(at, "round")?,
+                        down_rounds: parse(down, "down count")?,
+                    });
+                }
+                _ => anyhow::bail!("bad policy spec token {tok:?} in {text:?}"),
+            }
+        }
+        p.validate(0)?;
+        Ok(p)
+    }
+}
+
+/// Per-round retransmission diagnostics (all integer tallies — merges
+/// exactly under the parallel engine).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PolicyStats {
+    /// Retransmission attempts drawn.
+    pub retries: usize,
+    /// Links brought up by a retransmission.
+    pub recovered: usize,
+    /// Link-retry sequences cut short by the round deadline budget.
+    pub budget_exhausted: usize,
+    /// Link-attempts forced down by kills or an active crash window.
+    pub killed: usize,
+}
+
+impl Accumulate for PolicyStats {
+    fn merge(&mut self, other: Self) {
+        self.retries += other.retries;
+        self.recovered += other.recovered;
+        self.budget_exhausted += other.budget_exhausted;
+        self.killed += other.killed;
+    }
+}
+
+/// [`ChannelModel`] wrapper that applies a [`RecoveryPolicy`] on top of an
+/// inner model: the inner sample happens first and consumes its emission
+/// and state draws unchanged; faults and retransmissions post-process the
+/// realization using only the private policy stream.
+///
+/// Drive it per trial with [`reset`](ChannelModel::reset) (inner state,
+/// `CHANNEL_STREAM` seed) **and** [`PolicyChannel::reset_policy`]
+/// (`POLICY_STREAM` seed), then [`PolicyChannel::set_round`] before each
+/// round to roll the crash window and refill the deadline budget.
+pub struct PolicyChannel {
+    policy: RecoveryPolicy,
+    inner: Box<dyn ChannelModel>,
+    rng: Rng,
+    /// Remaining retransmission time budget for the current round.
+    budget_left: f64,
+    /// Current round's crash victim, if the crash window is active.
+    crashed: Option<usize>,
+    stats: PolicyStats,
+}
+
+impl PolicyChannel {
+    pub fn new(policy: RecoveryPolicy, inner: Box<dyn ChannelModel>) -> PolicyChannel {
+        PolicyChannel {
+            policy,
+            inner,
+            rng: Rng::new(0),
+            budget_left: 0.0,
+            crashed: None,
+            stats: PolicyStats::default(),
+        }
+    }
+
+    /// Seed the private retransmission stream for a new trial. Derive
+    /// `seed` from the [`POLICY_STREAM`] substream.
+    pub fn reset_policy(&mut self, seed: u64) {
+        self.rng = Rng::new(seed);
+        self.budget_left = 0.0;
+        self.crashed = None;
+        self.stats = PolicyStats::default();
+    }
+
+    /// Enter round `r` of the episode: refill the retransmission budget
+    /// and roll the crash window.
+    pub fn set_round(&mut self, r: usize) {
+        self.budget_left = if self.policy.deadline > 0.0 { self.policy.deadline } else { f64::INFINITY };
+        self.crashed = self.policy.crash.as_ref().and_then(|c| {
+            (r >= c.at_round && r < c.at_round + c.down_rounds).then_some(c.client)
+        });
+    }
+
+    /// Drain the retransmission diagnostics accumulated since last call.
+    pub fn take_policy_stats(&mut self) -> PolicyStats {
+        std::mem::take(&mut self.stats)
+    }
+
+    /// Retry a single failed link with success probability `1 - p_out`.
+    /// Returns true when a retransmission got through.
+    fn retry_link(&mut self, p_out: f64) -> bool {
+        for k in 0..self.policy.retries {
+            let cost = self.policy.backoff.powi(k as i32);
+            if cost > self.budget_left {
+                self.stats.budget_exhausted += 1;
+                return false;
+            }
+            self.budget_left -= cost;
+            self.stats.retries += 1;
+            if !self.rng.bernoulli(p_out) {
+                self.stats.recovered += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    fn apply(&mut self, net: &Network, out: &mut Realization) {
+        let m = net.m;
+        // 1) fault injection: forced kills and the crash window
+        for &i in &self.policy.kill_uplinks {
+            if out.tau[i] {
+                self.stats.killed += 1;
+            }
+            out.tau[i] = false;
+        }
+        for &(i, j) in &self.policy.kill_c2c {
+            if out.t[i][j] {
+                self.stats.killed += 1;
+            }
+            out.t[i][j] = false;
+        }
+        if let Some(c) = self.crashed {
+            if out.tau[c] {
+                self.stats.killed += 1;
+            }
+            out.tau[c] = false;
+            for i in 0..m {
+                if i == c {
+                    continue;
+                }
+                // the crashed client neither sends nor receives
+                self.stats.killed += (out.t[i][c] as usize) + (out.t[c][i] as usize);
+                out.t[i][c] = false;
+                out.t[c][i] = false;
+            }
+        }
+        if self.policy.retries == 0 {
+            return;
+        }
+        // 2) retransmission: fixed scan order (uplinks, then c2c row-major)
+        //    so the policy stream is consumed identically at any thread
+        //    count; killed/crashed links are not retried.
+        for i in 0..m {
+            if out.tau[i]
+                || self.crashed == Some(i)
+                || self.policy.kill_uplinks.contains(&i)
+            {
+                continue;
+            }
+            if self.retry_link(net.p_c2s[i]) {
+                out.tau[i] = true;
+            }
+        }
+        for i in 0..m {
+            for j in 0..m {
+                if i == j
+                    || out.t[i][j]
+                    || self.crashed == Some(i)
+                    || self.crashed == Some(j)
+                    || self.policy.kill_c2c.contains(&(i, j))
+                {
+                    continue;
+                }
+                if self.retry_link(net.p_c2c(i, j)) {
+                    out.t[i][j] = true;
+                }
+            }
+        }
+    }
+}
+
+impl Clone for PolicyChannel {
+    fn clone(&self) -> PolicyChannel {
+        PolicyChannel {
+            policy: self.policy.clone(),
+            inner: self.inner.clone(),
+            rng: self.rng.clone(),
+            budget_left: self.budget_left,
+            crashed: self.crashed,
+            stats: self.stats.clone(),
+        }
+    }
+}
+
+impl ChannelModel for PolicyChannel {
+    fn name(&self) -> &'static str {
+        "policy"
+    }
+
+    fn reset(&mut self, net: &Network, state_seed: u64) {
+        self.inner.reset(net, state_seed);
+    }
+
+    fn sample_into(&mut self, net: &Network, rng: &mut Rng, out: &mut Realization) {
+        self.inner.sample_into(net, rng, out);
+        self.apply(net, out);
+    }
+
+    fn reset_sparse(&mut self, sup: &SparseSupport, net: &Network, state_seed: u64) {
+        // the sparse (FR) path never carries a policy — Scenario::validate
+        // rejects the combination — so this is pure delegation
+        self.inner.reset_sparse(sup, net, state_seed);
+    }
+
+    fn sample_sparse_into(
+        &mut self,
+        sup: &SparseSupport,
+        net: &Network,
+        rng: &mut Rng,
+        out: &mut SparseRealization,
+    ) {
+        self.inner.sample_sparse_into(sup, net, rng, out);
+    }
+
+    fn take_stats(&mut self) -> ChannelStats {
+        self.inner.take_stats()
+    }
+
+    fn round_duration(&self) -> f64 {
+        self.inner.round_duration()
+    }
+
+    fn clone_box(&self) -> Box<dyn ChannelModel> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::Iid;
+
+    fn sample(ch: &mut PolicyChannel, net: &Network, seed: u64) -> Realization {
+        let mut rng = Rng::new(seed);
+        let mut out = Realization::perfect(net.m);
+        ch.set_round(0);
+        ch.sample_into(net, &mut rng, &mut out);
+        out
+    }
+
+    #[test]
+    fn passive_policy_is_draw_identical_to_the_inner_model() {
+        let net = Network::homogeneous(6, 0.4, 0.4);
+        let mut plain = Iid;
+        let mut wrapped = PolicyChannel::new(RecoveryPolicy::default(), Box::new(Iid));
+        wrapped.reset_policy(99);
+        assert!(wrapped.policy.is_passive());
+        for seed in 0..20u64 {
+            let mut ra = Rng::new(seed);
+            let mut rb = Rng::new(seed);
+            let mut a = Realization::perfect(net.m);
+            let mut b = Realization::perfect(net.m);
+            plain.sample_into(&net, &mut ra, &mut a);
+            wrapped.set_round(0);
+            wrapped.sample_into(&net, &mut rb, &mut b);
+            assert_eq!(a.t, b.t, "seed {seed}");
+            assert_eq!(a.tau, b.tau, "seed {seed}");
+            // the emission stream advanced identically
+            assert_eq!(ra.next_u64(), rb.next_u64(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn kill_lists_force_links_down() {
+        let net = Network::perfect(5);
+        let policy = RecoveryPolicy {
+            kill_uplinks: vec![1, 3],
+            kill_c2c: vec![(0, 2), (4, 0)],
+            ..Default::default()
+        };
+        policy.validate(5).unwrap();
+        let mut ch = PolicyChannel::new(policy, Box::new(Iid));
+        ch.reset_policy(7);
+        let out = sample(&mut ch, &net, 1);
+        assert!(!out.tau[1] && !out.tau[3]);
+        assert!(out.tau[0] && out.tau[2] && out.tau[4]);
+        assert!(!out.t[0][2] && !out.t[4][0]);
+        assert!(out.t[2][0], "only the listed direction dies");
+        let st = ch.take_policy_stats();
+        assert_eq!(st.killed, 4);
+        assert_eq!(st.retries, 0);
+    }
+
+    #[test]
+    fn crash_window_isolates_the_client_then_rejoins() {
+        let net = Network::perfect(4);
+        let policy = RecoveryPolicy {
+            crash: Some(Crash { client: 2, at_round: 1, down_rounds: 2 }),
+            ..Default::default()
+        };
+        let mut ch = PolicyChannel::new(policy, Box::new(Iid));
+        ch.reset_policy(3);
+        for round in 0..4 {
+            let mut rng = Rng::new(round as u64);
+            let mut out = Realization::perfect(4);
+            ch.set_round(round);
+            ch.sample_into(&net, &mut rng, &mut out);
+            let down = round == 1 || round == 2;
+            assert_eq!(out.tau[2], !down, "round {round}");
+            assert_eq!(out.t[0][2], !down, "round {round}");
+            assert_eq!(out.t[2][0], !down, "round {round}");
+            assert!(out.t[2][2], "diagonal survives the crash");
+            assert!(out.tau[0] && out.t[1][0], "others unaffected");
+        }
+    }
+
+    #[test]
+    fn retries_recover_links_and_respect_the_budget() {
+        // deterministic inner: all links always down, policy always
+        // succeeds on retry (p_out = 0 in the retry draw ⇒ bernoulli(0)
+        // never fires) — every link comes back up until the budget runs
+        // out.
+        let net = Network::homogeneous(4, 0.0, 0.0); // p_out = 0 ⇒ retry always succeeds
+        let all_down = Network::homogeneous(4, 1.0, 1.0);
+        let policy = RecoveryPolicy { retries: 2, backoff: 2.0, ..Default::default() };
+        let mut ch = PolicyChannel::new(policy, Box::new(Iid));
+        ch.reset_policy(11);
+        let mut rng = Rng::new(5);
+        let mut out = Realization::perfect(4);
+        ch.set_round(0);
+        // inner samples from the all-down network, retries draw against
+        // the perfect network's p_out = 0
+        ch.inner.sample_into(&all_down, &mut rng, &mut out);
+        ch.apply(&net, &mut out);
+        assert!(out.tau.iter().all(|&x| x), "unlimited budget recovers every uplink");
+        assert!((0..4).all(|i| (0..4).all(|j| out.t[i][j])));
+        let st = ch.take_policy_stats();
+        assert_eq!(st.recovered, 4 + 12, "4 uplinks + 12 off-diagonal links");
+        assert_eq!(st.retries, st.recovered, "first retry always succeeds here");
+
+        // now a budget that only covers the first few links
+        let policy = RecoveryPolicy { retries: 1, backoff: 1.0, deadline: 3.0, ..Default::default() };
+        let mut ch = PolicyChannel::new(policy, Box::new(Iid));
+        ch.reset_policy(11);
+        let mut out = Realization::perfect(4);
+        ch.inner.sample_into(&all_down, &mut Rng::new(5), &mut out);
+        ch.set_round(0);
+        ch.apply(&net, &mut out);
+        let st = ch.take_policy_stats();
+        assert_eq!(st.retries, 3, "budget of 3 unit-cost retries");
+        assert_eq!(st.recovered, 3);
+        assert!(st.budget_exhausted > 0);
+        assert_eq!(out.tau.iter().filter(|&&x| x).count(), 3);
+    }
+
+    #[test]
+    fn policy_stream_is_independent_of_the_emission_stream() {
+        // identical emission seeds, different policy seeds ⇒ the inner
+        // realization (pre-policy) is identical while recoveries differ;
+        // identical policy seeds ⇒ everything is identical.
+        let net = Network::homogeneous(6, 0.7, 0.7);
+        let policy = RecoveryPolicy { retries: 1, ..Default::default() };
+        let run = |pseed: u64| {
+            let mut ch = PolicyChannel::new(policy.clone(), Box::new(Iid));
+            ch.reset_policy(pseed);
+            sample(&mut ch, &net, 42)
+        };
+        let a = run(1);
+        let b = run(1);
+        assert_eq!(a.t, b.t);
+        assert_eq!(a.tau, b.tau);
+        let c = run(2);
+        assert!(
+            a.t != c.t || a.tau != c.tau,
+            "different policy seeds should recover different links at p=0.7"
+        );
+    }
+
+    #[test]
+    fn cli_roundtrips_through_json() {
+        for text in [
+            "retry:2",
+            "retry:3:backoff=1.5:deadline=8:approx=0.5",
+            "retry:0:kill_up=0,3:kill_c2c=1-2,4-0:crash=1@5+10",
+            "retry:1:approx",
+        ] {
+            let p = RecoveryPolicy::parse_cli(text).unwrap();
+            let back = RecoveryPolicy::from_json(&p.to_json()).unwrap();
+            assert_eq!(p, back, "{text}");
+        }
+        assert!(RecoveryPolicy::parse_cli("retry:2").unwrap().is_passive() == false);
+        assert!(RecoveryPolicy::parse_cli("retry:0").unwrap().is_passive());
+    }
+
+    #[test]
+    fn bad_specs_are_rejected_with_messages() {
+        for text in [
+            "retries:2",          // wrong head
+            "retry",              // missing count
+            "retry:x",            // non-numeric count
+            "retry:2:bogus=1",    // unknown key
+            "retry:2:approx=2.0", // threshold out of range
+            "retry:2:backoff=0.5",
+            "retry:0:crash=1@5",  // malformed crash
+            "retry:0:kill_c2c=12",
+        ] {
+            assert!(RecoveryPolicy::parse_cli(text).is_err(), "{text:?} should fail");
+        }
+        let err = RecoveryPolicy { backoff: 0.0, ..Default::default() }.validate(0).unwrap_err();
+        assert!(err.to_string().contains("backoff"), "{err}");
+        let err = RecoveryPolicy {
+            kill_uplinks: vec![9],
+            ..Default::default()
+        }
+        .validate(4)
+        .unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+    }
+}

@@ -10,6 +10,7 @@
 
 use super::adversary::{AdversarySpec, Attack, Selection, Surface};
 use super::channel::ChannelSpec;
+use super::policy::{Crash, RecoveryPolicy};
 use crate::gc::CodeFamily;
 use crate::network::Network;
 use crate::sim::Decoder;
@@ -109,6 +110,9 @@ fn decoder_to_json(d: Decoder) -> Json {
         Decoder::GcPlus { tr } => {
             json::obj(vec![("kind", json::s("gcplus")), ("tr", json::num(tr as f64))])
         }
+        Decoder::Approx { tr } => {
+            json::obj(vec![("kind", json::s("approx")), ("tr", json::num(tr as f64))])
+        }
     }
 }
 
@@ -125,7 +129,8 @@ fn decoder_from_json(v: &Json) -> anyhow::Result<Decoder> {
     Ok(match kind {
         "standard" => Decoder::Standard { attempts: n("attempts")? },
         "gcplus" => Decoder::GcPlus { tr: n("tr")? },
-        other => anyhow::bail!("unknown decoder kind {other:?} (standard|gcplus)"),
+        "approx" => Decoder::Approx { tr: n("tr")? },
+        other => anyhow::bail!("unknown decoder kind {other:?} (standard|gcplus|approx)"),
     })
 }
 
@@ -152,6 +157,10 @@ pub struct Scenario {
     /// Byzantine adversary, sampled per trial alongside the channel.
     /// `None` keeps the run byte-identical to the pre-adversary engine.
     pub adversary: Option<AdversarySpec>,
+    /// Degraded-mode recovery policy (retransmission, decode fallback,
+    /// fault injection). `None` — or a passive policy — keeps the run
+    /// byte-identical to the policy-free engine.
+    pub policy: Option<RecoveryPolicy>,
 }
 
 impl Scenario {
@@ -177,6 +186,10 @@ impl Scenario {
         // stays byte-identical
         if let Some(adv) = &self.adversary {
             fields.push(("adversary", adv.to_json()));
+        }
+        // likewise "policy": omitted when absent
+        if let Some(policy) = &self.policy {
+            fields.push(("policy", policy.to_json()));
         }
         json::obj(fields)
     }
@@ -218,6 +231,10 @@ impl Scenario {
                 None => None,
                 Some(a) => Some(AdversarySpec::from_json(a)?),
             },
+            policy: match v.get("policy") {
+                None => None,
+                Some(p) => Some(RecoveryPolicy::from_json(p)?),
+            },
         };
         sc.validate()?;
         Ok(sc)
@@ -253,23 +270,52 @@ impl Scenario {
             Decoder::Standard { attempts } => {
                 anyhow::ensure!(attempts >= 1, "scenario {:?}: attempts must be ≥ 1", self.name)
             }
-            Decoder::GcPlus { tr } => {
+            Decoder::GcPlus { tr } | Decoder::Approx { tr } => {
                 anyhow::ensure!(tr >= 1, "scenario {:?}: tr must be ≥ 1", self.name)
             }
+        }
+        if matches!(self.decoder, Decoder::Approx { .. }) {
+            // FR coverage is all-or-nothing per group: there is no partial
+            // row to project onto, so the least-squares fallback cannot
+            // apply — ask for gcplus instead
+            anyhow::ensure!(
+                self.code != CodeFamily::FractionalRepetition,
+                "scenario {:?}: the fr family has no approx fallback (use decoder \"gcplus\")",
+                self.name
+            );
         }
         self.channel
             .validate()
             .map_err(|e| anyhow::anyhow!("scenario {:?}: {e}", self.name))?;
         if let Some(adv) = &self.adversary {
             adv.validate().map_err(|e| anyhow::anyhow!("scenario {:?}: {e}", self.name))?;
-            // the parity-audit machinery runs on the float decode path;
-            // the binary family decodes in exact integer arithmetic and
-            // has no audit port yet (see README "Code families")
-            anyhow::ensure!(
-                self.code != CodeFamily::Binary,
-                "scenario {:?}: the binary family does not support adversarial sweeps yet",
-                self.name
-            );
+        }
+        if let Some(policy) = &self.policy {
+            policy.validate(m).map_err(|e| anyhow::anyhow!("scenario {:?}: {e}", self.name))?;
+            if !policy.is_passive() {
+                // active policies post-process dense realizations; the
+                // sparse FR path never materializes one
+                anyhow::ensure!(
+                    self.code != CodeFamily::FractionalRepetition,
+                    "scenario {:?}: recovery policies need a dense family \
+                     (cyclic or binary), not fr",
+                    self.name
+                );
+                anyhow::ensure!(
+                    self.adversary.is_none(),
+                    "scenario {:?}: recovery policies cannot be combined with an \
+                     adversary yet (drop \"policy\" or \"adversary\")",
+                    self.name
+                );
+                if policy.fallback {
+                    anyhow::ensure!(
+                        !matches!(self.decoder, Decoder::Standard { .. }),
+                        "scenario {:?}: the approx fallback needs the gcplus or approx \
+                         decoder, not standard",
+                        self.name
+                    );
+                }
+            }
         }
         self.net.validate().map_err(|e| anyhow::anyhow!("scenario {:?}: {e}", self.name))?;
         self.net.build().validate()
@@ -294,6 +340,7 @@ fn scenario(
         payload_dim: 8,
         rounds: 60,
         adversary: None,
+        policy: None,
     }
 }
 
@@ -486,6 +533,65 @@ pub fn builtin() -> Vec<Scenario> {
         ),
     ];
     v.extend(byz_grid);
+
+    // ── Degraded-mode grid: approx fallback × recovery policy ───────────
+    // Bases are reused the same way as the byzantine grid so the
+    // error-vs-budget figure compares like channel regimes.
+    let derive = |base: &str| {
+        v.iter().find(|s| s.name == base).expect("degraded grid bases are defined above").clone()
+    };
+    let mut approx_mod = derive("iid-moderate");
+    approx_mod.name = "approx-moderate".to_string();
+    approx_mod.description =
+        "iid-moderate with the least-squares fallback: outages become approx updates".to_string();
+    approx_mod.decoder = Decoder::Approx { tr: 2 };
+    v.push(approx_mod);
+
+    let mut approx_bursty = derive("bursty-c2c");
+    approx_bursty.name = "approx-bursty".to_string();
+    approx_bursty.description =
+        "c2c bursts with the least-squares fallback (degraded-mode headline case)".to_string();
+    approx_bursty.decoder = Decoder::Approx { tr: 2 };
+    v.push(approx_bursty);
+
+    let mut pol_retry = derive("bursty-c2c");
+    pol_retry.name = "policy-retry-bursty".to_string();
+    pol_retry.description =
+        "c2c bursts with 2 retransmits per link (backoff 2, deadline 6) and approx fallback"
+            .to_string();
+    pol_retry.policy = Some(RecoveryPolicy {
+        retries: 2,
+        backoff: 2.0,
+        deadline: 6.0,
+        fallback: true,
+        fallback_residual: 0.5,
+        ..Default::default()
+    });
+    v.push(pol_retry);
+
+    let mut pol_faults = derive("smoke");
+    pol_faults.name = "policy-faults-smoke".to_string();
+    pol_faults.description =
+        "CI fault injection: one dead uplink, one dead c2c link, a mid-episode crash".to_string();
+    pol_faults.policy = Some(RecoveryPolicy {
+        retries: 1,
+        fallback: true,
+        kill_uplinks: vec![0],
+        kill_c2c: vec![(1, 2)],
+        crash: Some(Crash { client: 3, at_round: 2, down_rounds: 2 }),
+        ..Default::default()
+    });
+    v.push(pol_faults);
+
+    // binary family under an adversary: the exact-i128 parity audit
+    let mut byz_binary = derive("byz-smoke");
+    byz_binary.name = "byz-binary".to_string();
+    byz_binary.description =
+        "binary ±1 family vs 30% sign-flippers: parity audit in exact i128 arithmetic"
+            .to_string();
+    byz_binary.code = CodeFamily::Binary;
+    byz_binary.s = 2; // binary needs even s
+    v.push(byz_binary);
     v
 }
 
@@ -615,5 +721,83 @@ mod tests {
         let mut sc = find("smoke").unwrap();
         sc.decoder = Decoder::GcPlus { tr: 0 };
         assert!(Scenario::from_json_str(&sc.to_json().serialize()).is_err());
+    }
+
+    #[test]
+    fn approx_decoder_and_policy_roundtrip_and_omission() {
+        // approx decoder round-trips through its own kind
+        let sc = find("approx-moderate").unwrap();
+        assert_eq!(sc.decoder, Decoder::Approx { tr: 2 });
+        let text = sc.to_json().serialize();
+        assert!(text.contains("\"approx\""), "{text}");
+        assert_eq!(Scenario::from_json_str(&text).unwrap(), sc);
+        // policy-free scenarios serialize without the key (byte-identity
+        // of pre-existing JSON)
+        let text = find("smoke").unwrap().to_json().serialize();
+        assert!(!text.contains("\"policy\""), "{text}");
+        // policy scenarios round-trip, kills and crash included
+        for name in ["policy-retry-bursty", "policy-faults-smoke"] {
+            let sc = find(name).unwrap();
+            assert!(sc.policy.is_some());
+            let back = Scenario::from_json_str(&sc.to_json().serialize()).unwrap();
+            assert_eq!(back, sc, "{name}");
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_bad_policy_and_decoder_specs() {
+        let smoke = find("smoke").unwrap();
+        // malformed policy: non-numeric retries
+        let text = smoke
+            .to_json()
+            .serialize()
+            .replace("\"rounds\":5", "\"rounds\":5,\"policy\":{\"retries\":\"two\"}");
+        let err = Scenario::from_json_str(&text).unwrap_err().to_string();
+        assert!(err.contains("retries"), "error should name the bad field: {err}");
+        // policy with an out-of-range kill index errors (never panics)
+        let mut sc = smoke.clone();
+        sc.policy = Some(RecoveryPolicy { kill_uplinks: vec![99], ..Default::default() });
+        let err = Scenario::from_json_str(&sc.to_json().serialize()).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        // fallback threshold out of range
+        let mut sc = smoke.clone();
+        sc.policy = Some(RecoveryPolicy {
+            fallback: true,
+            fallback_residual: 3.0,
+            ..Default::default()
+        });
+        let err = Scenario::from_json_str(&sc.to_json().serialize()).unwrap_err().to_string();
+        assert!(err.contains("threshold"), "{err}");
+        // active policy over the sparse fr family is rejected
+        let mut sc = smoke.clone();
+        sc.code = CodeFamily::FractionalRepetition;
+        sc.s = 2;
+        sc.policy = Some(RecoveryPolicy { retries: 1, ..Default::default() });
+        let err = sc.validate().unwrap_err().to_string();
+        assert!(err.contains("dense family"), "{err}");
+        // approx decoder over fr likewise
+        let mut sc = smoke.clone();
+        sc.code = CodeFamily::FractionalRepetition;
+        sc.s = 2;
+        sc.decoder = Decoder::Approx { tr: 2 };
+        let err = sc.validate().unwrap_err().to_string();
+        assert!(err.contains("approx fallback"), "{err}");
+        // policy + adversary is rejected with an actionable message
+        let mut sc = find("byz-smoke").unwrap();
+        sc.policy = Some(RecoveryPolicy { retries: 1, ..Default::default() });
+        let err = sc.validate().unwrap_err().to_string();
+        assert!(err.contains("adversary"), "{err}");
+    }
+
+    #[test]
+    fn binary_adversarial_scenarios_now_validate() {
+        // re-filed from the PR-8 satellite: the exact i128 audit port
+        // lifted the binary+adversary rejection
+        let sc = find("byz-binary").unwrap();
+        assert_eq!(sc.code, CodeFamily::Binary);
+        assert!(sc.adversary.is_some());
+        sc.validate().unwrap();
+        let back = Scenario::from_json_str(&sc.to_json().serialize()).unwrap();
+        assert_eq!(back, sc);
     }
 }

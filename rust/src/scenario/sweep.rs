@@ -10,8 +10,9 @@
 
 use super::adversary::{AdversaryModel, ADVERSARY_STREAM};
 use super::channel::{ChannelModel, ChannelStats, CHANNEL_STREAM};
+use super::policy::{PolicyChannel, PolicyStats, RecoveryPolicy, POLICY_STREAM};
 use super::registry::Scenario;
-use crate::gc::{BinaryCode, CodeFamily, FrCode};
+use crate::gc::{BinaryCode, CodeFamily, FrCode, RESIDUAL_BUCKETS};
 use crate::parallel::{parallel_map, Accumulate, MonteCarlo};
 use crate::sim::{self, AdvReport, Outcome};
 use crate::telemetry;
@@ -30,7 +31,17 @@ pub struct RoundTally {
     pub partial: usize,
     /// Rounds with nothing decodable.
     pub none: usize,
-    /// Transmissions consumed at this round across episodes.
+    /// Rounds recovered *approximately*: the exact decoders failed and the
+    /// accepted update is the least-squares combination of the delivered
+    /// rows ([`Decoder::Approx`](sim::Decoder::Approx), or a policy's
+    /// exact→approx fallback). Always 0 under the exact decoders.
+    pub approx: usize,
+    /// Accepted approximate rounds bucketed by relative residual
+    /// (`residual/√M`, [`crate::gc::residual_bucket`] edges): bucket 0 is
+    /// "exact to rounding", the top bucket "recovered almost nothing".
+    pub residual_hist: [usize; RESIDUAL_BUCKETS],
+    /// Transmissions consumed at this round across episodes (includes one
+    /// per policy retransmission when a recovery policy is active).
     pub transmissions: usize,
     /// Channel diagnostics at this round across episodes.
     pub channel: ChannelStats,
@@ -52,12 +63,29 @@ pub struct RoundTally {
     pub peeled: usize,
     /// GC⁺ rows forwarded to the dense RREF engine at this round.
     pub forwarded: usize,
+    /// Link retransmissions attempted by the recovery policy (policy
+    /// sweeps only; always 0 otherwise — as are the three tallies below).
+    pub retries: usize,
+    /// Retransmissions that brought a link back up.
+    pub recovered: usize,
+    /// Retry ladders cut short by the round's deadline budget.
+    pub budget_exhausted: usize,
+    /// Links forced down by the policy's fault injection (kill lists and
+    /// crash windows).
+    pub killed: usize,
 }
 
 impl RoundTally {
-    /// Fraction of episodes that produced *some* global update this round.
+    /// Fraction of episodes that produced *some* global update this round
+    /// (exact or accepted-approximate).
     pub fn p_update(&self) -> f64 {
-        (self.standard + self.full + self.partial) as f64 / self.trials.max(1) as f64
+        (self.standard + self.full + self.partial + self.approx) as f64
+            / self.trials.max(1) as f64
+    }
+
+    /// Fraction of episodes whose update this round was approximate.
+    pub fn p_approx(&self) -> f64 {
+        self.approx as f64 / self.trials.max(1) as f64
     }
 
     /// Detection rate among rounds where corruption reached the PS.
@@ -77,6 +105,41 @@ impl RoundTally {
         self.excised += rep.excised;
         self.false_excised += rep.false_excised;
     }
+
+    /// Classify one round outcome. `max_rel` is the acceptance threshold
+    /// on the relative residual (`residual/√M`, see
+    /// [`crate::gc::relative_residual`]): approximate rounds above it
+    /// tally as outages. Non-policy paths pass `f64::INFINITY`, accepting
+    /// every approximate round. Returns whether an approximate round was
+    /// accepted (the caller bumps the fallback telemetry counter).
+    fn absorb_outcome(&mut self, outcome: &Outcome, m: usize, max_rel: f64) -> bool {
+        match outcome {
+            Outcome::Standard { .. } => self.standard += 1,
+            Outcome::Full => self.full += 1,
+            Outcome::Partial { .. } => self.partial += 1,
+            Outcome::Approx { residual } => {
+                let rel = if m == 0 { 0.0 } else { residual / (m as f64).sqrt() };
+                if rel <= max_rel {
+                    self.approx += 1;
+                    self.residual_hist[crate::gc::residual_bucket(rel)] += 1;
+                    return true;
+                }
+                self.none += 1;
+            }
+            Outcome::None => self.none += 1,
+        }
+        false
+    }
+
+    /// Fold one round's policy stats in. Every retransmission is a real
+    /// channel use, so retries also bill the transmission tally.
+    fn absorb_policy(&mut self, ps: &PolicyStats) {
+        self.retries += ps.retries;
+        self.recovered += ps.recovered;
+        self.budget_exhausted += ps.budget_exhausted;
+        self.killed += ps.killed;
+        self.transmissions += ps.retries;
+    }
 }
 
 impl Accumulate for RoundTally {
@@ -86,6 +149,10 @@ impl Accumulate for RoundTally {
         self.full += other.full;
         self.partial += other.partial;
         self.none += other.none;
+        self.approx += other.approx;
+        for (a, b) in self.residual_hist.iter_mut().zip(other.residual_hist) {
+            *a += b;
+        }
         self.transmissions += other.transmissions;
         self.channel.merge(other.channel);
         self.corrupted += other.corrupted;
@@ -95,6 +162,10 @@ impl Accumulate for RoundTally {
         self.false_excised += other.false_excised;
         self.peeled += other.peeled;
         self.forwarded += other.forwarded;
+        self.retries += other.retries;
+        self.recovered += other.recovered;
+        self.budget_exhausted += other.budget_exhausted;
+        self.killed += other.killed;
     }
 }
 
@@ -113,6 +184,22 @@ fn binary_shard(
 
 fn adv_shard(
     s: &mut (Box<dyn ChannelModel>, sim::AdvSimScratch, AdversaryModel),
+) -> Option<&mut telemetry::Shard> {
+    Some(s.1.tel_mut())
+}
+
+fn binary_adv_shard(
+    s: &mut (Box<dyn ChannelModel>, sim::BinAdvScratch, AdversaryModel),
+) -> Option<&mut telemetry::Shard> {
+    Some(s.1.tel_mut())
+}
+
+fn policy_cyclic_shard(s: &mut (PolicyChannel, sim::SimScratch)) -> Option<&mut telemetry::Shard> {
+    Some(s.1.tel_mut())
+}
+
+fn policy_binary_shard(
+    s: &mut (PolicyChannel, sim::BinSimScratch),
 ) -> Option<&mut telemetry::Shard> {
     Some(s.1.tel_mut())
 }
@@ -148,15 +235,21 @@ impl Accumulate for RoundSeries {
 /// before the family abstraction existed); fractional-repetition episodes
 /// go through the sparse O(M·(s+1)) path ([`run_scenario_fr`]).
 pub fn run_scenario(sc: &Scenario, trials: usize, mc: &MonteCarlo) -> RoundSeries {
-    match (&sc.adversary, sc.code) {
-        (None, CodeFamily::Cyclic) => run_scenario_cyclic(sc, trials, mc),
-        (None, CodeFamily::FractionalRepetition) => run_scenario_fr(sc, trials, mc),
-        (None, CodeFamily::Binary) => run_scenario_binary(sc, trials, mc),
-        (Some(_), CodeFamily::Cyclic) => run_scenario_cyclic_adv(sc, trials, mc),
-        (Some(_), CodeFamily::FractionalRepetition) => run_scenario_fr_adv(sc, trials, mc),
-        (Some(_), CodeFamily::Binary) => {
-            unreachable!("Scenario::validate rejects adversarial binary scenarios")
+    // a passive policy must be byte-identical to no policy at all, so it
+    // dispatches to the unwrapped code paths verbatim
+    let active_policy = sc.policy.as_ref().filter(|p| !p.is_passive()).is_some();
+    match (active_policy, &sc.adversary, sc.code) {
+        (true, None, CodeFamily::Cyclic) => run_scenario_cyclic_policy(sc, trials, mc),
+        (true, None, CodeFamily::Binary) => run_scenario_binary_policy(sc, trials, mc),
+        (true, _, _) => {
+            unreachable!("Scenario::validate rejects this policy combination")
         }
+        (false, None, CodeFamily::Cyclic) => run_scenario_cyclic(sc, trials, mc),
+        (false, None, CodeFamily::FractionalRepetition) => run_scenario_fr(sc, trials, mc),
+        (false, None, CodeFamily::Binary) => run_scenario_binary(sc, trials, mc),
+        (false, Some(_), CodeFamily::Cyclic) => run_scenario_cyclic_adv(sc, trials, mc),
+        (false, Some(_), CodeFamily::FractionalRepetition) => run_scenario_fr_adv(sc, trials, mc),
+        (false, Some(_), CodeFamily::Binary) => run_scenario_binary_adv(sc, trials, mc),
     }
 }
 
@@ -189,11 +282,8 @@ fn run_scenario_binary(sc: &Scenario, trials: usize, mc: &MonteCarlo) -> RoundSe
                 scratch.harvest();
                 let tally = &mut acc.rounds[r];
                 tally.trials += 1;
-                match round.outcome {
-                    Outcome::Standard { .. } => tally.standard += 1,
-                    Outcome::Full => tally.full += 1,
-                    Outcome::Partial { .. } => tally.partial += 1,
-                    Outcome::None => tally.none += 1,
+                if tally.absorb_outcome(&round.outcome, net.m, f64::INFINITY) {
+                    scratch.tel_mut().inc(telemetry::metric::APPROX_FALLBACKS);
                 }
                 tally.transmissions += round.transmissions;
                 let st = ch.take_stats();
@@ -240,11 +330,8 @@ fn run_scenario_cyclic(sc: &Scenario, trials: usize, mc: &MonteCarlo) -> RoundSe
                 let (peeled, forwarded) = scratch.peel_split();
                 tally.peeled += peeled;
                 tally.forwarded += forwarded;
-                match round.outcome {
-                    Outcome::Standard { .. } => tally.standard += 1,
-                    Outcome::Full => tally.full += 1,
-                    Outcome::Partial { .. } => tally.partial += 1,
-                    Outcome::None => tally.none += 1,
+                if tally.absorb_outcome(&round.outcome, m, f64::INFINITY) {
+                    scratch.tel_mut().inc(telemetry::metric::APPROX_FALLBACKS);
                 }
                 tally.transmissions += round.transmissions;
                 let st = ch.take_stats();
@@ -278,39 +365,46 @@ pub fn run_scenario_fr(sc: &Scenario, trials: usize, mc: &MonteCarlo) -> RoundSe
     // leftover cores go to the in-episode group scans when episodes are few
     let decode_threads = (mc.threads / trials.max(1)).max(1);
     let episodes: Vec<u64> = (0..trials as u64).collect();
-    let per_episode: Vec<RoundSeries> = parallel_map(&episodes, mc.threads, |_, &t| {
-        let mut ch = proto.clone_box();
-        let mut scratch = sim::FrSimScratch::new();
-        let mut rng = mc.trial_rng(t);
-        ch.reset_sparse(&sup, &net, mc.substream_seed(CHANNEL_STREAM, t));
-        let mut series = RoundSeries::default();
-        series.ensure_len(sc.rounds);
-        for r in 0..sc.rounds {
-            let round = sim::simulate_round_fr(
-                &code,
-                &net,
-                &mut *ch,
-                sc.decoder,
-                decode_threads,
-                &mut rng,
-                &mut scratch,
-            );
-            let tally = &mut series.rounds[r];
-            tally.trials += 1;
-            match round.outcome {
-                sim::FrOutcome::Standard { .. } => tally.standard += 1,
-                sim::FrOutcome::Full => tally.full += 1,
-                sim::FrOutcome::Partial { .. } => tally.partial += 1,
-                sim::FrOutcome::None => tally.none += 1,
-            }
-            tally.transmissions += round.transmissions;
-            tally.channel.merge(ch.take_stats());
-        }
-        series
-    });
+    // Episodes stream through bounded batches: each batch's per-episode
+    // series merge (in episode order, so the fold stays bit-identical at
+    // any thread count) before the next batch runs, keeping peak memory
+    // O(threads · rounds) instead of O(trials · rounds).
+    let batch = mc.threads.max(1) * 4;
     let mut total = RoundSeries::default();
-    for series in per_episode {
-        total.merge(series);
+    for chunk in episodes.chunks(batch) {
+        let per_episode: Vec<RoundSeries> = parallel_map(chunk, mc.threads, |_, &t| {
+            let mut ch = proto.clone_box();
+            let mut scratch = sim::FrSimScratch::new();
+            let mut rng = mc.trial_rng(t);
+            ch.reset_sparse(&sup, &net, mc.substream_seed(CHANNEL_STREAM, t));
+            let mut series = RoundSeries::default();
+            series.ensure_len(sc.rounds);
+            for r in 0..sc.rounds {
+                let round = sim::simulate_round_fr(
+                    &code,
+                    &net,
+                    &mut *ch,
+                    sc.decoder,
+                    decode_threads,
+                    &mut rng,
+                    &mut scratch,
+                );
+                let tally = &mut series.rounds[r];
+                tally.trials += 1;
+                match round.outcome {
+                    sim::FrOutcome::Standard { .. } => tally.standard += 1,
+                    sim::FrOutcome::Full => tally.full += 1,
+                    sim::FrOutcome::Partial { .. } => tally.partial += 1,
+                    sim::FrOutcome::None => tally.none += 1,
+                }
+                tally.transmissions += round.transmissions;
+                tally.channel.merge(ch.take_stats());
+            }
+            series
+        });
+        for series in per_episode {
+            total.merge(series);
+        }
     }
     total.ensure_len(sc.rounds); // trials == 0 edge case
     total
@@ -363,11 +457,8 @@ fn run_scenario_cyclic_adv(sc: &Scenario, trials: usize, mc: &MonteCarlo) -> Rou
                 let (peeled, forwarded) = scratch.peel_split();
                 tally.peeled += peeled;
                 tally.forwarded += forwarded;
-                match round.outcome {
-                    Outcome::Standard { .. } => tally.standard += 1,
-                    Outcome::Full => tally.full += 1,
-                    Outcome::Partial { .. } => tally.partial += 1,
-                    Outcome::None => tally.none += 1,
+                if tally.absorb_outcome(&round.outcome, m, f64::INFINITY) {
+                    scratch.tel_mut().inc(telemetry::metric::APPROX_FALLBACKS);
                 }
                 tally.transmissions += round.transmissions;
                 let st = ch.take_stats();
@@ -392,46 +483,227 @@ fn run_scenario_fr_adv(sc: &Scenario, trials: usize, mc: &MonteCarlo) -> RoundSe
     let sup = code.sparse_support();
     let decode_threads = (mc.threads / trials.max(1)).max(1);
     let episodes: Vec<u64> = (0..trials as u64).collect();
-    let per_episode: Vec<RoundSeries> = parallel_map(&episodes, mc.threads, |_, &t| {
-        let mut ch = proto.clone_box();
-        let mut scratch = sim::FrAdvScratch::new();
-        let mut adv = AdversaryModel::new(spec.clone());
-        let mut rng = mc.trial_rng(t);
-        ch.reset_sparse(&sup, &net, mc.substream_seed(CHANNEL_STREAM, t));
-        adv.reset(net.m, mc.substream_seed(ADVERSARY_STREAM, t));
-        let mut series = RoundSeries::default();
-        series.ensure_len(sc.rounds);
-        for r in 0..sc.rounds {
-            let (round, rep) = sim::simulate_round_fr_adv(
-                &code,
-                &net,
-                &mut *ch,
-                &mut adv,
-                sc.decoder,
-                decode_threads,
-                &mut rng,
-                &mut scratch,
-            );
-            let tally = &mut series.rounds[r];
-            tally.trials += 1;
-            match round.outcome {
-                sim::FrOutcome::Standard { .. } => tally.standard += 1,
-                sim::FrOutcome::Full => tally.full += 1,
-                sim::FrOutcome::Partial { .. } => tally.partial += 1,
-                sim::FrOutcome::None => tally.none += 1,
-            }
-            tally.transmissions += round.transmissions;
-            tally.channel.merge(ch.take_stats());
-            tally.absorb_adv(&rep);
-        }
-        series
-    });
+    // bounded-batch streaming, same scheme as [`run_scenario_fr`]
+    let batch = mc.threads.max(1) * 4;
     let mut total = RoundSeries::default();
-    for series in per_episode {
-        total.merge(series);
+    for chunk in episodes.chunks(batch) {
+        let per_episode: Vec<RoundSeries> = parallel_map(chunk, mc.threads, |_, &t| {
+            let mut ch = proto.clone_box();
+            let mut scratch = sim::FrAdvScratch::new();
+            let mut adv = AdversaryModel::new(spec.clone());
+            let mut rng = mc.trial_rng(t);
+            ch.reset_sparse(&sup, &net, mc.substream_seed(CHANNEL_STREAM, t));
+            adv.reset(net.m, mc.substream_seed(ADVERSARY_STREAM, t));
+            let mut series = RoundSeries::default();
+            series.ensure_len(sc.rounds);
+            for r in 0..sc.rounds {
+                let (round, rep) = sim::simulate_round_fr_adv(
+                    &code,
+                    &net,
+                    &mut *ch,
+                    &mut adv,
+                    sc.decoder,
+                    decode_threads,
+                    &mut rng,
+                    &mut scratch,
+                );
+                let tally = &mut series.rounds[r];
+                tally.trials += 1;
+                match round.outcome {
+                    sim::FrOutcome::Standard { .. } => tally.standard += 1,
+                    sim::FrOutcome::Full => tally.full += 1,
+                    sim::FrOutcome::Partial { .. } => tally.partial += 1,
+                    sim::FrOutcome::None => tally.none += 1,
+                }
+                tally.transmissions += round.transmissions;
+                tally.channel.merge(ch.take_stats());
+                tally.absorb_adv(&rep);
+            }
+            series
+        });
+        for series in per_episode {
+            total.merge(series);
+        }
     }
     total.ensure_len(sc.rounds);
     total
+}
+
+/// Binary {±1} episode engine under a Byzantine adversary — the exact
+/// integer analogue of [`run_scenario_cyclic_adv`]: the decode-path audit
+/// runs in i128 rational arithmetic ([`crate::gc::audit_rows_int`]), so
+/// parity violations are detected without a float tolerance band.
+fn run_scenario_binary_adv(sc: &Scenario, trials: usize, mc: &MonteCarlo) -> RoundSeries {
+    let spec = sc.adversary.clone().expect("dispatched on Some");
+    let net = sc.net.build();
+    let proto = sc.channel.build();
+    let code = BinaryCode::new(net.m, sc.s).expect("scenario validated for the binary family");
+    let m = net.m;
+    let detect = spec.detect;
+    let mut series: RoundSeries = mc.run_scratch_tel(
+        trials,
+        || (proto.clone_box(), sim::BinAdvScratch::new(), AdversaryModel::new(spec.clone())),
+        binary_adv_shard,
+        |t, rng, acc: &mut RoundSeries, (ch, scratch, adv)| {
+            ch.reset(&net, mc.substream_seed(CHANNEL_STREAM, t));
+            adv.reset(m, mc.substream_seed(ADVERSARY_STREAM, t));
+            acc.ensure_len(sc.rounds);
+            for r in 0..sc.rounds {
+                let (round, rep) = sim::simulate_round_binary_adv(
+                    &net,
+                    &mut **ch,
+                    adv,
+                    code,
+                    sc.payload_dim,
+                    sc.decoder,
+                    rng,
+                    scratch,
+                );
+                scratch.harvest();
+                {
+                    use telemetry::metric;
+                    let tel = scratch.tel_mut();
+                    if detect {
+                        tel.inc(metric::AUDIT_CHECKS);
+                    }
+                    tel.add(metric::AUDIT_EXCISIONS, rep.excised as u64);
+                }
+                let tally = &mut acc.rounds[r];
+                tally.trials += 1;
+                if tally.absorb_outcome(&round.outcome, m, f64::INFINITY) {
+                    scratch.tel_mut().inc(telemetry::metric::APPROX_FALLBACKS);
+                }
+                tally.transmissions += round.transmissions;
+                let st = ch.take_stats();
+                scratch.tel_mut().absorb_channel(&st);
+                tally.channel.merge(st);
+                tally.absorb_adv(&rep);
+            }
+        },
+    );
+    series.ensure_len(sc.rounds);
+    series
+}
+
+/// The per-episode decoder and acceptance threshold of a recovery policy.
+/// With the fallback enabled, exact GC⁺ episodes run under
+/// [`Decoder::Approx`](sim::Decoder::Approx) (the exact path is tried
+/// first and unchanged; only would-be outages fall through to least
+/// squares), and approximate rounds above the residual threshold still
+/// tally as outages.
+fn policy_decode(sc: &Scenario, policy: &RecoveryPolicy) -> (sim::Decoder, f64) {
+    if policy.fallback {
+        let decoder = match sc.decoder {
+            sim::Decoder::GcPlus { tr } => sim::Decoder::Approx { tr },
+            other => other,
+        };
+        (decoder, policy.fallback_residual)
+    } else {
+        (sc.decoder, f64::INFINITY)
+    }
+}
+
+/// Dense cyclic episode engine under a [`RecoveryPolicy`]: the channel is
+/// wrapped in a [`PolicyChannel`] (faults, then bounded retransmission on
+/// the private [`POLICY_STREAM`] substream), the round loop feeds the
+/// per-round deadline budget and crash window via `set_round`, and the
+/// policy's retry/recovery/budget tallies land in the round tally.
+fn run_scenario_cyclic_policy(sc: &Scenario, trials: usize, mc: &MonteCarlo) -> RoundSeries {
+    let policy = sc.policy.clone().expect("dispatched on an active policy");
+    let net = sc.net.build();
+    let proto = sc.channel.build();
+    let m = net.m;
+    let (decoder, max_rel) = policy_decode(sc, &policy);
+    let mut series: RoundSeries = mc.run_scratch_tel(
+        trials,
+        || (PolicyChannel::new(policy.clone(), proto.clone_box()), sim::SimScratch::new()),
+        policy_cyclic_shard,
+        |t, rng, acc: &mut RoundSeries, (ch, scratch)| {
+            ch.reset(&net, mc.substream_seed(CHANNEL_STREAM, t));
+            ch.reset_policy(mc.substream_seed(POLICY_STREAM, t));
+            acc.ensure_len(sc.rounds);
+            for r in 0..sc.rounds {
+                ch.set_round(r);
+                let round = sim::simulate_round_scratch(
+                    &net,
+                    &mut *ch,
+                    m,
+                    sc.s,
+                    sc.payload_dim,
+                    decoder,
+                    rng,
+                    scratch,
+                );
+                scratch.harvest();
+                let tally = &mut acc.rounds[r];
+                tally.trials += 1;
+                let (peeled, forwarded) = scratch.peel_split();
+                tally.peeled += peeled;
+                tally.forwarded += forwarded;
+                if tally.absorb_outcome(&round.outcome, m, max_rel) {
+                    scratch.tel_mut().inc(telemetry::metric::APPROX_FALLBACKS);
+                }
+                tally.transmissions += round.transmissions;
+                let ps = ch.take_policy_stats();
+                scratch.tel_mut().add(telemetry::metric::POLICY_RETRIES, ps.retries as u64);
+                tally.absorb_policy(&ps);
+                let st = ch.take_stats();
+                scratch.tel_mut().absorb_channel(&st);
+                tally.channel.merge(st);
+            }
+        },
+    );
+    series.ensure_len(sc.rounds);
+    series
+}
+
+/// Binary {±1} episode engine under a [`RecoveryPolicy`] — same wrapping
+/// and stream discipline as [`run_scenario_cyclic_policy`] over the exact
+/// integer decode path.
+fn run_scenario_binary_policy(sc: &Scenario, trials: usize, mc: &MonteCarlo) -> RoundSeries {
+    let policy = sc.policy.clone().expect("dispatched on an active policy");
+    let net = sc.net.build();
+    let proto = sc.channel.build();
+    let code = BinaryCode::new(net.m, sc.s).expect("scenario validated for the binary family");
+    let m = net.m;
+    let (decoder, max_rel) = policy_decode(sc, &policy);
+    let mut series: RoundSeries = mc.run_scratch_tel(
+        trials,
+        || (PolicyChannel::new(policy.clone(), proto.clone_box()), sim::BinSimScratch::new()),
+        policy_binary_shard,
+        |t, rng, acc: &mut RoundSeries, (ch, scratch)| {
+            ch.reset(&net, mc.substream_seed(CHANNEL_STREAM, t));
+            ch.reset_policy(mc.substream_seed(POLICY_STREAM, t));
+            acc.ensure_len(sc.rounds);
+            for r in 0..sc.rounds {
+                ch.set_round(r);
+                let round = sim::simulate_round_binary_scratch(
+                    &net,
+                    &mut *ch,
+                    code,
+                    sc.payload_dim,
+                    decoder,
+                    rng,
+                    scratch,
+                );
+                scratch.harvest();
+                let tally = &mut acc.rounds[r];
+                tally.trials += 1;
+                if tally.absorb_outcome(&round.outcome, m, max_rel) {
+                    scratch.tel_mut().inc(telemetry::metric::APPROX_FALLBACKS);
+                }
+                tally.transmissions += round.transmissions;
+                let ps = ch.take_policy_stats();
+                scratch.tel_mut().add(telemetry::metric::POLICY_RETRIES, ps.retries as u64);
+                tally.absorb_policy(&ps);
+                let st = ch.take_stats();
+                scratch.tel_mut().absorb_channel(&st);
+                tally.channel.merge(st);
+            }
+        },
+    );
+    series.ensure_len(sc.rounds);
+    series
 }
 
 #[cfg(test)]
@@ -447,7 +719,7 @@ mod tests {
             for (r, tally) in series.rounds.iter().enumerate() {
                 assert_eq!(tally.trials, 4, "{} round {r}", sc.name);
                 assert_eq!(
-                    tally.standard + tally.full + tally.partial + tally.none,
+                    tally.standard + tally.full + tally.partial + tally.approx + tally.none,
                     tally.trials,
                     "{} round {r}: outcomes must partition",
                     sc.name
@@ -490,7 +762,7 @@ mod tests {
         for (r, tally) in series.rounds.iter().enumerate() {
             assert_eq!(tally.trials, 8, "round {r}");
             assert_eq!(
-                tally.standard + tally.full + tally.partial + tally.none,
+                tally.standard + tally.full + tally.partial + tally.approx + tally.none,
                 tally.trials,
                 "round {r}: outcomes must partition"
             );
@@ -536,7 +808,7 @@ mod tests {
         for (r, tally) in series.rounds.iter().enumerate() {
             assert_eq!(tally.trials, 8, "round {r}");
             assert_eq!(
-                tally.standard + tally.full + tally.partial + tally.none,
+                tally.standard + tally.full + tally.partial + tally.approx + tally.none,
                 tally.trials,
                 "round {r}: outcomes must partition"
             );
@@ -579,7 +851,7 @@ mod tests {
         assert!(sum(|t| t.excised) >= detected, "detections excise rows");
         // outcome partition still holds under the adversary
         for (r, t) in series.rounds.iter().enumerate() {
-            assert_eq!(t.standard + t.full + t.partial + t.none, t.trials, "round {r}");
+            assert_eq!(t.standard + t.full + t.partial + t.approx + t.none, t.trials, "round {r}");
         }
         // audit off: same attack, now it lands — poisoned rounds appear
         // and nothing is ever detected
@@ -626,6 +898,112 @@ mod tests {
         let series = run_scenario(&sc, 0, &MonteCarlo::new(1));
         assert_eq!(series.rounds.len(), sc.rounds);
         assert!(series.rounds.iter().all(|t| t.trials == 0));
+    }
+
+    #[test]
+    fn passive_policy_is_byte_identical_to_no_policy() {
+        // ISSUE acceptance: a policy-off / passive config reproduces every
+        // existing tally bit-for-bit, at any thread count.
+        for name in ["smoke", "bursty-c2c"] {
+            let plain = registry::find(name).unwrap();
+            let mut with = plain.clone();
+            with.policy = Some(RecoveryPolicy::default());
+            with.validate().unwrap();
+            for threads in [1usize, 2, 8] {
+                let want = run_scenario(&plain, 6, &MonteCarlo::new(21).with_threads(threads));
+                let got = run_scenario(&with, 6, &MonteCarlo::new(21).with_threads(threads));
+                assert_eq!(got, want, "{name} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn approx_scenarios_reclassify_outages_and_fill_the_histogram() {
+        // Same emission stream: the approx decoder must reproduce every
+        // exact tally and only reclassify would-be outages.
+        let sc = registry::find("approx-moderate").unwrap();
+        let mut exact = sc.clone();
+        exact.decoder = sim::Decoder::GcPlus { tr: 2 };
+        let a = run_scenario(&sc, 10, &MonteCarlo::new(3));
+        let b = run_scenario(&exact, 10, &MonteCarlo::new(3));
+        for (r, (ta, tb)) in a.rounds.iter().zip(&b.rounds).enumerate() {
+            assert_eq!(ta.standard, tb.standard, "round {r}");
+            assert_eq!(ta.full, tb.full, "round {r}");
+            assert_eq!(ta.partial, tb.partial, "round {r}");
+            assert_eq!(ta.transmissions, tb.transmissions, "round {r}");
+            assert_eq!(tb.none, ta.none + ta.approx, "round {r}");
+        }
+        let approx: usize = a.rounds.iter().map(|t| t.approx).sum();
+        let hist: usize = a.rounds.iter().flat_map(|t| t.residual_hist.iter()).sum();
+        assert!(approx > 0, "moderate erasures should trigger some fallbacks");
+        assert_eq!(hist, approx, "each accepted approx round fills exactly one bucket");
+    }
+
+    #[test]
+    fn policy_retries_lift_update_rate_and_stay_thread_invariant() {
+        let sc = registry::find("policy-retry-bursty").unwrap();
+        let want = run_scenario(&sc, 8, &MonteCarlo::new(19).with_threads(1));
+        for threads in [2usize, 8] {
+            let got = run_scenario(&sc, 8, &MonteCarlo::new(19).with_threads(threads));
+            assert_eq!(got, want, "threads={threads}");
+        }
+        let sum = |f: fn(&RoundTally) -> usize| want.rounds.iter().map(f).sum::<usize>();
+        assert!(sum(|t| t.retries) > 0, "the retry policy must attempt retransmissions");
+        assert!(sum(|t| t.recovered) > 0, "some retransmissions should succeed");
+        assert!(sum(|t| t.recovered) <= sum(|t| t.retries));
+        for (r, t) in want.rounds.iter().enumerate() {
+            assert_eq!(t.standard + t.full + t.partial + t.approx + t.none, t.trials, "round {r}");
+        }
+        // retransmission only flips failed links up and the fallback only
+        // reclassifies outages, so the update count cannot drop vs the
+        // policy-free run on the same emission stream
+        let mut base = sc.clone();
+        base.policy = None;
+        let plain = run_scenario(&base, 8, &MonteCarlo::new(19).with_threads(1));
+        let updates = |s: &RoundSeries| {
+            s.rounds.iter().map(|t| t.standard + t.full + t.partial + t.approx).sum::<usize>()
+        };
+        assert!(
+            updates(&want) >= updates(&plain),
+            "policy lost updates: {} < {}",
+            updates(&want),
+            updates(&plain)
+        );
+    }
+
+    #[test]
+    fn policy_fault_injection_kills_links_and_partitions() {
+        let sc = registry::find("policy-faults-smoke").unwrap();
+        let series = run_scenario(&sc, 6, &MonteCarlo::new(7));
+        let sum = |f: fn(&RoundTally) -> usize| series.rounds.iter().map(f).sum::<usize>();
+        assert!(sum(|t| t.killed) > 0, "kill lists and the crash window must force links down");
+        for (r, t) in series.rounds.iter().enumerate() {
+            assert_eq!(t.trials, 6, "round {r}");
+            assert_eq!(t.standard + t.full + t.partial + t.approx + t.none, t.trials, "round {r}");
+        }
+        // the crash window [2, 4) forces extra kills in those rounds
+        assert!(
+            series.rounds[2].killed > series.rounds[0].killed,
+            "crash rounds must kill more links than pre-crash rounds"
+        );
+    }
+
+    #[test]
+    fn binary_adversarial_sweep_audits_exactly_and_stays_thread_invariant() {
+        let sc = registry::find("byz-binary").unwrap();
+        let want = run_scenario(&sc, 10, &MonteCarlo::new(5).with_threads(1));
+        for threads in [2usize, 8] {
+            let got = run_scenario(&sc, 10, &MonteCarlo::new(5).with_threads(threads));
+            assert_eq!(got, want, "threads={threads}");
+        }
+        let sum = |f: fn(&RoundTally) -> usize| want.rounds.iter().map(f).sum::<usize>();
+        assert!(sum(|t| t.corrupted) > 0, "30% flippers must corrupt something");
+        assert!(sum(|t| t.detected) > 0, "the exact parity audit should fire");
+        assert!(sum(|t| t.detected) <= sum(|t| t.corrupted));
+        assert!(sum(|t| t.excised) >= sum(|t| t.detected));
+        for (r, t) in want.rounds.iter().enumerate() {
+            assert_eq!(t.standard + t.full + t.partial + t.approx + t.none, t.trials, "round {r}");
+        }
     }
 
     #[test]

@@ -39,6 +39,11 @@ pub enum Outcome {
     Full,
     /// GC⁺ recovered a proper subset.
     Partial { k4: Vec<usize> },
+    /// Degraded mode: nothing decoded exactly, but the least-squares
+    /// fallback combined the delivered rows into an approximate sum.
+    /// `residual` is the coefficient-space miss `‖𝟙 − w·A‖₂` (0 would mean
+    /// the exact decoder had succeeded; `√M` means nothing was recovered).
+    Approx { residual: f64 },
     /// Nothing decodable.
     None,
 }
@@ -52,7 +57,9 @@ pub struct SimRound {
     /// Ground-truth mean over all M payloads.
     pub true_mean: Vec<f64>,
     /// Max |aggregate − achievable target| (exact mean for Standard/Full,
-    /// subset mean for Partial) — the numerical decode error.
+    /// subset mean for Partial) — the numerical decode error. For
+    /// [`Outcome::Approx`] rounds this is instead the *gradient* error
+    /// |aggregate − true mean|: the approximation cost, not rounding.
     pub decode_err: f64,
     pub transmissions: usize,
 }
@@ -64,6 +71,11 @@ pub enum Decoder {
     Standard { attempts: usize },
     /// GC⁺ over `tr` stacked attempts (complete + incomplete sums uplinked).
     GcPlus { tr: usize },
+    /// GC⁺ with the degraded-mode fallback: identical round structure and
+    /// draws to [`Decoder::GcPlus`], but when nothing decodes exactly the
+    /// round returns the optimal least-squares combine of the delivered
+    /// rows ([`Outcome::Approx`]) instead of a hard outage.
+    Approx { tr: usize },
 }
 
 /// Reusable per-worker buffers of [`simulate_round_scratch`]: the channel
@@ -174,7 +186,7 @@ pub fn simulate_round_scratch(
 
     let attempts_n = match decoder {
         Decoder::Standard { attempts } => attempts,
-        Decoder::GcPlus { tr } => tr,
+        Decoder::GcPlus { tr } | Decoder::Approx { tr } => tr,
     };
 
     sc.dec.reset(m);
@@ -199,7 +211,7 @@ pub fn simulate_round_scratch(
         // uplink: standard GC sends only complete sums; GC+ sends all
         transmissions += match decoder {
             Decoder::Standard { .. } => att.complete.len(),
-            Decoder::GcPlus { .. } => m, // every client attempts its uplink
+            Decoder::GcPlus { .. } | Decoder::Approx { .. } => m, // every client uplinks
         };
         // partial sums of the *delivered* rows only, pushed in stack order
         sc.starts.push(sc.sums.rows);
@@ -217,7 +229,7 @@ pub fn simulate_round_scratch(
                     *o += c * p;
                 }
             }
-            if matches!(decoder, Decoder::GcPlus { .. }) {
+            if matches!(decoder, Decoder::GcPlus { .. } | Decoder::Approx { .. }) {
                 sc.dec.push_row(att.perturbed.row(r));
             }
         }
@@ -271,6 +283,32 @@ pub fn simulate_round_scratch(
     // 2) GC+ complementary decode: the incremental engine already holds
     // the reduced form of every delivered coefficient row
     if sc.dec.decodable_count() == 0 {
+        // degraded mode: under the approx decoder, fall back to the
+        // optimal least-squares combine of whatever rows did arrive
+        if matches!(decoder, Decoder::Approx { .. }) && sc.dec.rank() > 0 {
+            if let Some(sol) = gc::approx_sum(&sc.dec) {
+                let mut agg = vec![0.0f64; d];
+                for (i, &w) in sol.weights.iter().enumerate() {
+                    if w == 0.0 {
+                        continue;
+                    }
+                    for (o, v) in agg.iter_mut().zip(sc.sums.row(i)) {
+                        *o += w * v;
+                    }
+                }
+                for a in agg.iter_mut() {
+                    *a /= m as f64;
+                }
+                let err = max_abs_diff(&agg, &true_mean);
+                return SimRound {
+                    outcome: Outcome::Approx { residual: sol.residual },
+                    aggregate: Some(agg),
+                    true_mean,
+                    decode_err: err,
+                    transmissions,
+                };
+            }
+        }
         return SimRound {
             outcome: Outcome::None,
             aggregate: None,
@@ -319,6 +357,10 @@ pub struct BinSimScratch {
     sums: Matrix,
     starts: Vec<usize>,
     ieng: IntRref,
+    /// Float mirror of the stack, fed only under [`Decoder::Approx`]: the
+    /// least-squares fallback runs on the float engine's reduced state
+    /// (the exact engine stays the decode authority for unit rows).
+    fdec: gc::GcPlusDecoder,
     /// Integer row buffer for pushes into the exact engine.
     ibuf: Vec<i64>,
     /// Extraction-weight buffer (one decodable row at a time).
@@ -337,6 +379,7 @@ impl BinSimScratch {
             sums: Matrix::zeros(0, 0),
             starts: Vec::new(),
             ieng: IntRref::new(0),
+            fdec: gc::GcPlusDecoder::new(0),
             ibuf: Vec::new(),
             wbuf: Vec::new(),
             tel: telemetry::Shard::new(),
@@ -412,7 +455,7 @@ pub fn simulate_round_binary_scratch(
 
     let attempts_n = match decoder {
         Decoder::Standard { attempts } => attempts,
-        Decoder::GcPlus { tr } => tr,
+        Decoder::GcPlus { tr } | Decoder::Approx { tr } => tr,
     };
 
     if !matches!(&sc.bridge, Some((c, _)) if *c == code) {
@@ -421,6 +464,9 @@ pub fn simulate_round_binary_scratch(
     let gc_code = &sc.bridge.as_ref().expect("bridge built above").1;
 
     sc.ieng.reset(m);
+    if matches!(decoder, Decoder::Approx { .. }) {
+        sc.fdec.reset(m);
+    }
     if sc.sums.cols != d {
         sc.sums = Matrix::zeros(0, d);
     } else {
@@ -439,7 +485,7 @@ pub fn simulate_round_binary_scratch(
         transmissions += s * m;
         transmissions += match decoder {
             Decoder::Standard { .. } => att.complete.len(),
-            Decoder::GcPlus { .. } => m,
+            Decoder::GcPlus { .. } | Decoder::Approx { .. } => m,
         };
         sc.starts.push(sc.sums.rows);
         for &r in &att.delivered {
@@ -456,7 +502,7 @@ pub fn simulate_round_binary_scratch(
                     *o += c * p;
                 }
             }
-            if matches!(decoder, Decoder::GcPlus { .. }) {
+            if matches!(decoder, Decoder::GcPlus { .. } | Decoder::Approx { .. }) {
                 // the perturbed entries are exactly 0.0 / ±1.0
                 sc.ibuf.clear();
                 sc.ibuf.extend(att.perturbed.row(r).iter().map(|&v| {
@@ -464,6 +510,9 @@ pub fn simulate_round_binary_scratch(
                     v as i64
                 }));
                 sc.ieng.push_row(&sc.ibuf);
+                if matches!(decoder, Decoder::Approx { .. }) {
+                    sc.fdec.push_row(att.perturbed.row(r));
+                }
             }
         }
     }
@@ -518,6 +567,31 @@ pub fn simulate_round_binary_scratch(
     // 2) GC⁺ complementary decode on the exact engine
     let k4_n = sc.ieng.decodable_count();
     if k4_n == 0 {
+        // degraded mode: least-squares fallback over the float mirror
+        if matches!(decoder, Decoder::Approx { .. }) && sc.fdec.rank() > 0 {
+            if let Some(sol) = gc::approx_sum(&sc.fdec) {
+                let mut agg = vec![0.0f64; d];
+                for (i, &w) in sol.weights.iter().enumerate() {
+                    if w == 0.0 {
+                        continue;
+                    }
+                    for (o, v) in agg.iter_mut().zip(sc.sums.row(i)) {
+                        *o += w * v;
+                    }
+                }
+                for a in agg.iter_mut() {
+                    *a /= m as f64;
+                }
+                let err = max_abs_diff(&agg, &true_mean);
+                return SimRound {
+                    outcome: Outcome::Approx { residual: sol.residual },
+                    aggregate: Some(agg),
+                    true_mean,
+                    decode_err: err,
+                    transmissions,
+                };
+            }
+        }
         return SimRound {
             outcome: Outcome::None,
             aggregate: None,
@@ -628,9 +702,11 @@ pub fn simulate_round_fr(
     let sup = code.sparse_support();
     let (m, s) = (code.m, code.s);
     debug_assert_eq!(net.m, m);
+    // FR has no least-squares fallback (coverage is all-or-nothing per
+    // group), so Approx degrades to plain GC⁺ semantics here.
     let attempts_n = match decoder {
         Decoder::Standard { attempts } => attempts,
-        Decoder::GcPlus { tr } => tr,
+        Decoder::GcPlus { tr } | Decoder::Approx { tr } => tr,
     };
     sc.acc.clear();
     sc.acc.resize(code.groups(), false);
@@ -646,7 +722,7 @@ pub fn simulate_round_fr(
             Decoder::Standard { .. } => {
                 (0..m).filter(|&r| sc.real.row_delivered_complete(r)).count()
             }
-            Decoder::GcPlus { .. } => m,
+            Decoder::GcPlus { .. } | Decoder::Approx { .. } => m,
         };
         let covered = code.covered(&sc.real, decode_threads);
         if standard_at.is_none() && FrCode::all_covered(&covered) {
@@ -798,7 +874,7 @@ pub fn simulate_round_adv(
 
     let attempts_n = match decoder {
         Decoder::Standard { attempts } => attempts,
-        Decoder::GcPlus { tr } => tr,
+        Decoder::GcPlus { tr } | Decoder::Approx { tr } => tr,
     };
     if sc.sim.sums.cols != d {
         sc.sim.sums = Matrix::zeros(0, d);
@@ -826,7 +902,7 @@ pub fn simulate_round_adv(
         transmissions += s * m;
         transmissions += match decoder {
             Decoder::Standard { .. } => att.complete.len(),
-            Decoder::GcPlus { .. } => m,
+            Decoder::GcPlus { .. } | Decoder::Approx { .. } => m,
         };
         sc.sim.starts.push(sc.sim.sums.rows);
         for &r in &att.delivered {
@@ -850,7 +926,7 @@ pub fn simulate_round_adv(
             // an uplink-tampering client corrupts only sums it actually
             // uplinks: all delivered rows under GC⁺, complete rows under
             // standard GC (incomplete sums never reach the PS there)
-            let uplinked = matches!(decoder, Decoder::GcPlus { .. })
+            let uplinked = matches!(decoder, Decoder::GcPlus { .. } | Decoder::Approx { .. })
                 || att.complete.binary_search(&r).is_ok();
             let row_corrupt = match surface {
                 Surface::Uplink => {
@@ -967,6 +1043,37 @@ pub fn simulate_round_adv(
         sc.sim.dec.push_row(sc.coeffs.row(r));
     }
     if sc.sim.dec.decodable_count() == 0 {
+        // Degraded mode: least-squares over the surviving rows. Poisoning
+        // is classified symbolically (any corrupted row with nonzero
+        // weight taints the combination) — the approx error itself cannot
+        // be thresholded because it is nonzero even on clean rounds.
+        if matches!(decoder, Decoder::Approx { .. }) && sc.sim.dec.rank() > 0 {
+            if let Some(sol) = gc::approx_sum(&sc.sim.dec) {
+                report.poisoned =
+                    gc::byzantine::weights_touch_corrupted(&sol.weights, &kept, &sc.corrupted);
+                let mut agg = vec![0.0f64; d];
+                for (i, &w) in sol.weights.iter().enumerate() {
+                    if w == 0.0 {
+                        continue;
+                    }
+                    for (o, v) in agg.iter_mut().zip(sc.sim.sums.row(kept[i])) {
+                        *o += w * v;
+                    }
+                }
+                for a in agg.iter_mut() {
+                    *a /= m as f64;
+                }
+                let err = max_abs_diff(&agg, &true_mean);
+                let round = SimRound {
+                    outcome: Outcome::Approx { residual: sol.residual },
+                    aggregate: Some(agg),
+                    true_mean,
+                    decode_err: err,
+                    transmissions,
+                };
+                return (round, report);
+            }
+        }
         let round = SimRound {
             outcome: Outcome::None,
             aggregate: None,
@@ -989,6 +1096,333 @@ pub fn simulate_round_adv(
         .collect();
     let outcome =
         if dec.k4.len() == m { Outcome::Full } else { Outcome::Partial { k4: dec.k4 } };
+    let round = SimRound {
+        outcome,
+        aggregate: Some(aggregate),
+        true_mean,
+        decode_err: err,
+        transmissions,
+    };
+    (round, report)
+}
+
+/// Per-worker buffers of [`simulate_round_binary_adv`]: the binary scratch
+/// plus the audit staging (coefficient stack, corruption flags, received
+/// rows) mirroring [`AdvSimScratch`].
+#[derive(Default)]
+pub struct BinAdvScratch {
+    bin: BinSimScratch,
+    /// Received coded rows in exact stack order (masked ±1 entries).
+    coeffs: Matrix,
+    corrupted: Vec<bool>,
+    uplinked: Vec<usize>,
+    adv_payload: Matrix,
+}
+
+impl BinAdvScratch {
+    pub fn new() -> BinAdvScratch {
+        BinAdvScratch::default()
+    }
+
+    /// Record the round just simulated into the pooled telemetry shard.
+    pub fn harvest(&mut self) {
+        self.bin.harvest();
+    }
+
+    /// The pooled shard (audit counters are bumped here by the sweep).
+    pub fn tel_mut(&mut self) -> &mut telemetry::Shard {
+        self.bin.tel_mut()
+    }
+}
+
+/// [`simulate_round_binary_scratch`] under a Byzantine adversary — the
+/// exact-arithmetic analogue of [`simulate_round_adv`]. The audit runs in
+/// i128 rational arithmetic ([`gc::audit_rows_int`]): binary rows are
+/// integer vectors, so every parity combination is exact and the support
+/// test has no float tolerance band. Standard decode re-solves the exact
+/// combinator on the surviving complete rows; GC⁺ rebuilds the [`IntRref`]
+/// on the surviving stack (plus the float mirror when the decoder is
+/// [`Decoder::Approx`], for the least-squares fallback).
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_round_binary_adv(
+    net: &Network,
+    ch: &mut dyn ChannelModel,
+    adv: &mut crate::scenario::AdversaryModel,
+    code: BinaryCode,
+    d: usize,
+    decoder: Decoder,
+    rng: &mut Rng,
+    sc: &mut BinAdvScratch,
+) -> (SimRound, AdvReport) {
+    if !adv.any() {
+        let round = simulate_round_binary_scratch(net, ch, code, d, decoder, rng, &mut sc.bin);
+        return (round, AdvReport::default());
+    }
+    use crate::scenario::Surface;
+    let (m, s) = (code.m, code.s);
+    debug_assert_eq!(net.m, m);
+    let surface = adv.spec.surface;
+    let detect = adv.spec.detect;
+
+    // emission phase: identical draw order to the plain binary path
+    if sc.bin.payload.rows != m || sc.bin.payload.cols != d {
+        sc.bin.payload = Matrix::zeros(m, d);
+    }
+    for x in &mut sc.bin.payload.data {
+        *x = rng.normal();
+    }
+    let true_mean: Vec<f64> = (0..d)
+        .map(|j| (0..m).map(|i| sc.bin.payload[(i, j)]).sum::<f64>() / m as f64)
+        .collect();
+    if surface == Surface::C2c {
+        sc.adv_payload = sc.bin.payload.clone();
+        for k in 0..m {
+            if adv.is_malicious(k) {
+                adv.corrupt_row(sc.adv_payload.row_mut(k));
+            }
+        }
+    }
+
+    let attempts_n = match decoder {
+        Decoder::Standard { attempts } => attempts,
+        Decoder::GcPlus { tr } | Decoder::Approx { tr } => tr,
+    };
+    if !matches!(&sc.bin.bridge, Some((c, _)) if *c == code) {
+        sc.bin.bridge = Some((code, code.to_gc_code()));
+    }
+    if sc.bin.sums.cols != d {
+        sc.bin.sums = Matrix::zeros(0, d);
+    } else {
+        sc.bin.sums.clear_rows();
+    }
+    if sc.coeffs.cols != m {
+        sc.coeffs = Matrix::zeros(0, m);
+    } else {
+        sc.coeffs.clear_rows();
+    }
+    sc.corrupted.clear();
+    sc.uplinked.clear();
+    sc.bin.starts.clear();
+    let mut transmissions = 0usize;
+
+    for a in 0..attempts_n {
+        ch.sample_into(net, rng, &mut sc.bin.real);
+        if sc.bin.attempts.len() <= a {
+            sc.bin.attempts.push(gc::Attempt::empty());
+        }
+        let gc_code = &sc.bin.bridge.as_ref().expect("bridge built above").1;
+        let att = &mut sc.bin.attempts[a];
+        gc::Attempt::observe_into(gc_code, &sc.bin.real, att);
+        transmissions += s * m;
+        transmissions += match decoder {
+            Decoder::Standard { .. } => att.complete.len(),
+            Decoder::GcPlus { .. } | Decoder::Approx { .. } => m,
+        };
+        sc.bin.starts.push(sc.bin.sums.rows);
+        for &r in &att.delivered {
+            let start = sc.bin.sums.data.len();
+            sc.bin.sums.data.resize(start + d, 0.0);
+            sc.bin.sums.rows += 1;
+            let payload =
+                if surface == Surface::C2c { &sc.adv_payload } else { &sc.bin.payload };
+            let orow = &mut sc.bin.sums.data[start..start + d];
+            let mut touches_malicious = false;
+            for k in 0..m {
+                let c = att.perturbed[(r, k)];
+                if c == 0.0 {
+                    continue;
+                }
+                touches_malicious |= adv.is_malicious(k);
+                for (o, p) in orow.iter_mut().zip(payload.row(k)) {
+                    *o += c * p;
+                }
+            }
+            let uplinked = matches!(decoder, Decoder::GcPlus { .. } | Decoder::Approx { .. })
+                || att.complete.binary_search(&r).is_ok();
+            let row_corrupt = match surface {
+                Surface::Uplink => {
+                    if adv.is_malicious(r) && uplinked {
+                        adv.corrupt_row(orow);
+                        true
+                    } else {
+                        false
+                    }
+                }
+                Surface::C2c => touches_malicious,
+            };
+            sc.coeffs.push_row(att.perturbed.row(r));
+            sc.corrupted.push(row_corrupt);
+            if uplinked {
+                sc.uplinked.push(sc.coeffs.rows - 1);
+            }
+        }
+    }
+    let mut report = AdvReport {
+        active: sc.uplinked.iter().any(|&i| sc.corrupted[i]),
+        ..AdvReport::default()
+    };
+
+    // decode-path audit in exact arithmetic (see simulate_round_adv for
+    // the repeat-redundancy argument — it holds verbatim here)
+    let mut kept_mask = vec![true; sc.coeffs.rows];
+    if detect && !sc.uplinked.is_empty() {
+        let audit_coeffs = sc.coeffs.select_rows(&sc.uplinked);
+        let audit = gc::audit_rows_int(&audit_coeffs, |combo, kept| {
+            let orig: Vec<usize> = kept.iter().map(|&j| sc.uplinked[j]).collect();
+            gc::payload_check_fails(combo, &orig, &sc.bin.sums)
+        });
+        report.detected = audit.alarm;
+        report.excised = audit.excised.len();
+        for &j in &audit.excised {
+            let stack_row = sc.uplinked[j];
+            kept_mask[stack_row] = false;
+            if !sc.corrupted[stack_row] {
+                report.false_excised += 1;
+            }
+        }
+    }
+
+    // 1) standard decode: exact combinator over the surviving complete rows
+    for (i, att) in sc.bin.attempts[..attempts_n].iter().enumerate() {
+        if att.complete.len() < m - s {
+            continue;
+        }
+        let mut kept_clients: Vec<usize> = Vec::with_capacity(att.complete.len());
+        {
+            let mut ci = 0usize;
+            for (off, &r) in att.delivered.iter().enumerate() {
+                if ci < att.complete.len() && att.complete[ci] == r {
+                    if kept_mask[sc.bin.starts[i] + off] {
+                        kept_clients.push(r);
+                    }
+                    ci += 1;
+                }
+            }
+        }
+        let Some(a) = code.combinator_weights(&kept_clients) else {
+            continue;
+        };
+        let mut got = vec![0.0f64; d];
+        let mut next = 0usize;
+        for (off, &r) in att.delivered.iter().enumerate() {
+            // kept_clients ⊆ complete ⊆ delivered, all ascending
+            if next >= kept_clients.len() || kept_clients[next] != r {
+                continue;
+            }
+            let coef = a[next];
+            next += 1;
+            if coef == 0.0 {
+                continue;
+            }
+            for (o, v) in got.iter_mut().zip(sc.bin.sums.row(sc.bin.starts[i] + off)) {
+                *o += coef * v;
+            }
+        }
+        let target: Vec<f64> = true_mean.iter().map(|x| x * m as f64).collect();
+        let err = max_abs_diff(&got, &target);
+        report.poisoned = err > POISON_TOL;
+        let aggregate: Vec<f64> = got.iter().map(|x| x / m as f64).collect();
+        let round = SimRound {
+            outcome: Outcome::Standard { attempt: i },
+            aggregate: Some(aggregate),
+            true_mean,
+            decode_err: err,
+            transmissions,
+        };
+        return (round, report);
+    }
+
+    if let Decoder::Standard { .. } = decoder {
+        let round = SimRound {
+            outcome: Outcome::None,
+            aggregate: None,
+            true_mean,
+            decode_err: 0.0,
+            transmissions,
+        };
+        return (round, report);
+    }
+
+    // 2) GC⁺: rebuild the exact engine on the audit's survivors
+    let kept: Vec<usize> = (0..sc.coeffs.rows).filter(|&r| kept_mask[r]).collect();
+    sc.bin.ieng.reset(m);
+    if matches!(decoder, Decoder::Approx { .. }) {
+        sc.bin.fdec.reset(m);
+    }
+    for &r in &kept {
+        sc.bin.ibuf.clear();
+        sc.bin.ibuf.extend(sc.coeffs.row(r).iter().map(|&v| {
+            debug_assert_eq!(v, v as i64 as f64);
+            v as i64
+        }));
+        sc.bin.ieng.push_row(&sc.bin.ibuf);
+        if matches!(decoder, Decoder::Approx { .. }) {
+            sc.bin.fdec.push_row(sc.coeffs.row(r));
+        }
+    }
+    let k4_n = sc.bin.ieng.decodable_count();
+    if k4_n == 0 {
+        // degraded mode over the float mirror; poisoning is symbolic (any
+        // surviving corrupted row with nonzero weight taints the mean)
+        if matches!(decoder, Decoder::Approx { .. }) && sc.bin.fdec.rank() > 0 {
+            if let Some(sol) = gc::approx_sum(&sc.bin.fdec) {
+                report.poisoned =
+                    gc::byzantine::weights_touch_corrupted(&sol.weights, &kept, &sc.corrupted);
+                let mut agg = vec![0.0f64; d];
+                for (i, &w) in sol.weights.iter().enumerate() {
+                    if w == 0.0 {
+                        continue;
+                    }
+                    for (o, v) in agg.iter_mut().zip(sc.bin.sums.row(kept[i])) {
+                        *o += w * v;
+                    }
+                }
+                for x in agg.iter_mut() {
+                    *x /= m as f64;
+                }
+                let err = max_abs_diff(&agg, &true_mean);
+                let round = SimRound {
+                    outcome: Outcome::Approx { residual: sol.residual },
+                    aggregate: Some(agg),
+                    true_mean,
+                    decode_err: err,
+                    transmissions,
+                };
+                return (round, report);
+            }
+        }
+        let round = SimRound {
+            outcome: Outcome::None,
+            aggregate: None,
+            true_mean,
+            decode_err: 0.0,
+            transmissions,
+        };
+        return (round, report);
+    }
+    let mut k4 = Vec::with_capacity(k4_n);
+    let mut err = 0.0f64;
+    let mut agg = vec![0.0f64; d];
+    for (client, row) in sc.bin.ieng.decodable() {
+        k4.push(client);
+        sc.bin.ieng.t_row_f64(row, &mut sc.bin.wbuf);
+        let mut decoded = vec![0.0f64; d];
+        for (i, &w) in sc.bin.wbuf.iter().enumerate() {
+            if w == 0.0 {
+                continue;
+            }
+            for (o, v) in decoded.iter_mut().zip(sc.bin.sums.row(kept[i])) {
+                *o += w * v;
+            }
+        }
+        err = err.max(max_abs_diff(&decoded, sc.bin.payload.row(client)));
+        for (x, v) in agg.iter_mut().zip(&decoded) {
+            *x += v;
+        }
+    }
+    report.poisoned = err > POISON_TOL;
+    let aggregate: Vec<f64> = agg.iter().map(|x| x / k4.len() as f64).collect();
+    let outcome = if k4.len() == m { Outcome::Full } else { Outcome::Partial { k4 } };
     let round = SimRound {
         outcome,
         aggregate: Some(aggregate),
@@ -1042,7 +1476,9 @@ pub fn simulate_round_fr_adv(
     let detect = adv.spec.detect;
     let attempts_n = match decoder {
         Decoder::Standard { attempts } => attempts,
-        Decoder::GcPlus { tr } => tr,
+        // FR coverage is all-or-nothing per group — no least-squares
+        // fallback exists, so Approx degrades to plain GC⁺ semantics.
+        Decoder::GcPlus { tr } | Decoder::Approx { tr } => tr,
     };
     sc.acc.clear();
     sc.acc.resize(code.groups(), GroupVerdict::Uncovered);
@@ -1057,7 +1493,7 @@ pub fn simulate_round_fr_adv(
             Decoder::Standard { .. } => {
                 (0..m).filter(|&r| sc.fr.real.row_delivered_complete(r)).count()
             }
-            Decoder::GcPlus { .. } => m,
+            Decoder::GcPlus { .. } | Decoder::Approx { .. } => m,
         };
         let audit = adv.fr_attempt_verdicts(code, &sc.fr.real, &mut sc.verdicts);
         report.active |= audit.active;
@@ -1113,16 +1549,25 @@ pub struct SweepStats {
     pub partial: usize,
     /// Rounds with nothing decodable.
     pub none: usize,
+    /// Rounds recovered by the degraded-mode least-squares fallback
+    /// ([`Decoder::Approx`] only; always 0 for the other decoders).
+    pub approx: usize,
     /// Total transmissions consumed across all rounds.
     pub transmissions: usize,
-    /// Worst numerical decode error observed over all decoding rounds.
+    /// Worst numerical decode error observed over all *exact* decoding
+    /// rounds (standard / full / partial).
     pub max_decode_err: f64,
+    /// Worst gradient error |approx aggregate − true mean| over the
+    /// approx-recovered rounds. Tracked separately: it is a modelling
+    /// error, not a numerical one, and would swamp `max_decode_err`.
+    pub max_approx_err: f64,
 }
 
 impl SweepStats {
-    /// Fraction of rounds that produced *some* global update.
+    /// Fraction of rounds that produced *some* global update (approx
+    /// rounds count — the PS applies the degraded aggregate).
     pub fn p_update(&self) -> f64 {
-        (self.standard + self.full + self.partial) as f64 / self.trials as f64
+        (self.standard + self.full + self.partial + self.approx) as f64 / self.trials as f64
     }
 
     pub fn mean_transmissions(&self) -> f64 {
@@ -1137,8 +1582,10 @@ impl Accumulate for SweepStats {
         self.full += other.full;
         self.partial += other.partial;
         self.none += other.none;
+        self.approx += other.approx;
         self.transmissions += other.transmissions;
         self.max_decode_err = self.max_decode_err.max(other.max_decode_err);
+        self.max_approx_err = self.max_approx_err.max(other.max_approx_err);
     }
 }
 
@@ -1172,10 +1619,15 @@ pub fn sweep(
                 Outcome::Standard { .. } => acc.standard += 1,
                 Outcome::Full => acc.full += 1,
                 Outcome::Partial { .. } => acc.partial += 1,
+                Outcome::Approx { .. } => acc.approx += 1,
                 Outcome::None => acc.none += 1,
             }
             acc.transmissions += r.transmissions;
-            acc.max_decode_err = acc.max_decode_err.max(r.decode_err);
+            if matches!(r.outcome, Outcome::Approx { .. }) {
+                acc.max_approx_err = acc.max_approx_err.max(r.decode_err);
+            } else {
+                acc.max_decode_err = acc.max_decode_err.max(r.decode_err);
+            }
         },
     )
 }
@@ -1271,6 +1723,187 @@ mod tests {
         let want = run(1);
         for threads in [2usize, 8] {
             assert_eq!(run(threads), want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn approx_only_reclassifies_gcplus_outage_rounds() {
+        // Approx draws identically to GC⁺ (same code draws, same channel
+        // realizations, same transmission accounting); the only divergence
+        // is that some None rounds become Approx. Everything else must be
+        // bit-identical.
+        let net = Network::homogeneous(8, 0.6, 0.6);
+        let mc = MonteCarlo::new(23);
+        let exact = sweep(&net, &Iid, 8, 3, 5, Decoder::GcPlus { tr: 2 }, 500, &mc);
+        let approx = sweep(&net, &Iid, 8, 3, 5, Decoder::Approx { tr: 2 }, 500, &mc);
+        assert_eq!(exact.standard, approx.standard);
+        assert_eq!(exact.full, approx.full);
+        assert_eq!(exact.partial, approx.partial);
+        assert_eq!(exact.transmissions, approx.transmissions);
+        assert_eq!(exact.approx, 0);
+        assert_eq!(exact.none, approx.none + approx.approx);
+        assert_eq!(exact.max_decode_err.to_bits(), approx.max_decode_err.to_bits());
+        assert!(approx.approx > 0, "lossy net never exercised the fallback");
+        assert!(approx.max_approx_err > 0.0);
+    }
+
+    #[test]
+    fn approx_sweep_is_thread_count_invariant() {
+        let net = Network::homogeneous(8, 0.55, 0.55);
+        let run = |threads: usize| {
+            sweep(
+                &net,
+                &Iid,
+                8,
+                3,
+                5,
+                Decoder::Approx { tr: 2 },
+                400,
+                &MonteCarlo::new(31).with_threads(threads),
+            )
+        };
+        let want = run(1);
+        assert!(want.approx > 0, "fallback never fired");
+        for threads in [2usize, 8] {
+            assert_eq!(run(threads), want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn binary_approx_round_recovers_or_matches_gcplus() {
+        // Binary family under Approx: the float mirror decoder feeds the
+        // least-squares fallback while the exact engine keeps decode
+        // authority. On each round the outcome either matches the GC⁺ run
+        // exactly or upgrades a None to an Approx with a finite residual.
+        let code = crate::gc::BinaryCode::new(8, 2).unwrap();
+        let net = Network::homogeneous(8, 0.6, 0.6);
+        let (mut upgraded, mut matched) = (0usize, 0usize);
+        for trial in 0..200u64 {
+            let mut ra = Rng::new(7 ^ trial);
+            let mut rb = Rng::new(7 ^ trial);
+            let exact =
+                simulate_round_binary(&net, &mut Iid, code, 5, Decoder::GcPlus { tr: 2 }, &mut ra);
+            let approx =
+                simulate_round_binary(&net, &mut Iid, code, 5, Decoder::Approx { tr: 2 }, &mut rb);
+            assert_eq!(exact.transmissions, approx.transmissions);
+            match (&exact.outcome, &approx.outcome) {
+                (Outcome::None, Outcome::Approx { residual }) => {
+                    assert!(residual.is_finite() && *residual >= 0.0);
+                    assert!(approx.aggregate.is_some());
+                    upgraded += 1;
+                }
+                (a, b) => {
+                    assert_eq!(a, b, "trial {trial}");
+                    matched += 1;
+                }
+            }
+        }
+        assert!(upgraded > 0, "fallback never fired ({matched} matched)");
+    }
+
+    fn byz_spec(detect: bool) -> crate::scenario::AdversarySpec {
+        crate::scenario::AdversarySpec {
+            attack: crate::scenario::Attack::SignFlip,
+            selection: crate::scenario::Selection::Fraction(0.4),
+            surface: crate::scenario::Surface::Uplink,
+            detect,
+        }
+    }
+
+    #[test]
+    fn binary_adv_exact_audit_detects_and_report_is_consistent() {
+        // Exact i128 audit over the deterministic ±1 code: with repeats
+        // (tr = 2) the parity checks must fire on sign-flipped uplinks,
+        // and the integrity report must stay internally consistent.
+        let code = crate::gc::BinaryCode::new(8, 2).unwrap();
+        let net = Network::homogeneous(8, 0.2, 0.2);
+        let mut on = crate::scenario::AdversaryModel::new(byz_spec(true));
+        let mut off = crate::scenario::AdversaryModel::new(byz_spec(false));
+        let mut sc_on = BinAdvScratch::new();
+        let mut sc_off = BinAdvScratch::new();
+        let (mut active, mut detected, mut poisoned_on, mut poisoned_off) = (0, 0, 0, 0);
+        for trial in 0..300u64 {
+            on.reset(8, 0xAD ^ trial);
+            off.reset(8, 0xAD ^ trial);
+            let mut ra = Rng::new(11 ^ trial);
+            let mut rb = Rng::new(11 ^ trial);
+            let (r_on, rep_on) = simulate_round_binary_adv(
+                &net,
+                &mut Iid,
+                &mut on,
+                code,
+                4,
+                Decoder::GcPlus { tr: 2 },
+                &mut ra,
+                &mut sc_on,
+            );
+            let (r_off, rep_off) = simulate_round_binary_adv(
+                &net,
+                &mut Iid,
+                &mut off,
+                code,
+                4,
+                Decoder::GcPlus { tr: 2 },
+                &mut rb,
+                &mut sc_off,
+            );
+            // the attack and audit never change the communication bill
+            assert_eq!(r_on.transmissions, r_off.transmissions, "trial {trial}");
+            assert!(rep_on.false_excised <= rep_on.excised);
+            if !rep_on.active {
+                // no corrupted data reached the PS: honest rows satisfy
+                // every exact parity check, so nothing fires
+                assert!(!rep_on.detected && !rep_on.poisoned && rep_on.excised == 0);
+            }
+            assert!(!rep_off.detected && rep_off.excised == 0);
+            active += rep_on.active as usize;
+            detected += rep_on.detected as usize;
+            poisoned_on += rep_on.poisoned as usize;
+            poisoned_off += rep_off.poisoned as usize;
+        }
+        assert!(active > 0, "attack never reached the PS");
+        assert!(detected > 0, "exact audit never fired");
+        assert!(poisoned_off > 0, "undetected sign flips must poison decodes");
+        assert!(
+            poisoned_on < poisoned_off,
+            "excision should cut poisoning ({poisoned_on} vs {poisoned_off})"
+        );
+    }
+
+    #[test]
+    fn binary_adv_without_malicious_clients_matches_plain_path() {
+        // Fraction-0 adversary: every trial delegates to the plain binary
+        // path on the same rng stream — rounds must be byte-identical.
+        let code = crate::gc::BinaryCode::new(8, 2).unwrap();
+        let net = Network::homogeneous(8, 0.5, 0.5);
+        let mut adv = crate::scenario::AdversaryModel::new(crate::scenario::AdversarySpec {
+            selection: crate::scenario::Selection::Fraction(0.0),
+            ..byz_spec(true)
+        });
+        let mut sc = BinAdvScratch::new();
+        for trial in 0..50u64 {
+            adv.reset(8, 0xAD ^ trial);
+            assert!(!adv.any());
+            let mut ra = Rng::new(17 ^ trial);
+            let mut rb = Rng::new(17 ^ trial);
+            let (got, rep) = simulate_round_binary_adv(
+                &net,
+                &mut Iid,
+                &mut adv,
+                code,
+                4,
+                Decoder::Approx { tr: 2 },
+                &mut ra,
+                &mut sc,
+            );
+            let want =
+                simulate_round_binary(&net, &mut Iid, code, 4, Decoder::Approx { tr: 2 }, &mut rb);
+            assert_eq!(rep, AdvReport::default());
+            assert_eq!(got.outcome, want.outcome, "trial {trial}");
+            assert_eq!(got.transmissions, want.transmissions);
+            assert_eq!(got.decode_err.to_bits(), want.decode_err.to_bits());
+            assert_eq!(got.aggregate, want.aggregate);
+            assert_eq!(ra.next_u64(), rb.next_u64(), "rng streams diverged");
         }
     }
 

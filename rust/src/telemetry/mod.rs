@@ -70,8 +70,12 @@ pub mod metric {
     pub const MC_CHUNKS: usize = 14;
     /// Items mapped through `parallel_map`.
     pub const PM_ITEMS: usize = 15;
+    /// Degraded-mode rounds accepted via the least-squares fallback.
+    pub const APPROX_FALLBACKS: usize = 16;
+    /// Link retransmissions attempted by recovery policies.
+    pub const POLICY_RETRIES: usize = 17;
     /// Number of counters; `COUNTER_NAMES` must match.
-    pub const COUNTERS: usize = 16;
+    pub const COUNTERS: usize = 18;
     pub const COUNTER_NAMES: [&str; COUNTERS] = [
         "dec_rows_pushed",
         "dec_rows_peeled",
@@ -89,6 +93,8 @@ pub mod metric {
         "mc_trials",
         "mc_chunks",
         "pm_items",
+        "approx_fallbacks",
+        "policy_retries",
     ];
 
     // -- max-gauges -------------------------------------------------------
